@@ -1,0 +1,55 @@
+//! Cell decomposition at scale (paper §2 "Managing Working Sets" +
+//! Table 3): train on a covtype-like set large enough that a single
+//! full-Gram SVM would be painful, using the recursive-partition cells
+//! (voronoi=6) that make the cost linear in n.
+//!
+//! Also demonstrates the XLA backend: pass `--backend xla` (after
+//! `make artifacts`) to route the Gram hot spot through the AOT
+//! Pallas/PJRT artifacts instead of the CPU loops.
+//!
+//! Run: `cargo run --release --example cells_large [-- --backend xla]`
+
+use liquid_svm::cells::CellStrategy;
+use liquid_svm::coordinator::config::BackendChoice;
+use liquid_svm::data::synth;
+use liquid_svm::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let backend = if std::env::args().any(|a| a == "xla") || std::env::args().any(|a| a == "--backend-xla")
+        || std::env::args().collect::<Vec<_>>().windows(2).any(|w| w[0] == "--backend" && w[1] == "xla")
+    {
+        BackendChoice::Xla
+    } else {
+        BackendChoice::Blocked
+    };
+
+    let n = 20_000;
+    let train = synth::by_name("covtype", n, 11).unwrap();
+    let test = synth::by_name("covtype", 4000, 12).unwrap();
+
+    println!("covtype-sim n={n} d={} backend={backend:?}", train.dim());
+
+    let cfg = Config::default()
+        .display(1)
+        .folds(5)
+        .voronoi(CellStrategy::RecursiveTree { max_size: 1000 })
+        .backend(backend);
+    let t0 = std::time::Instant::now();
+    let model = svm_binary(&train, 0.5, &cfg)?;
+    let train_time = t0.elapsed();
+    let res = model.test(&test);
+
+    println!("\n  cells        : {}", model.partition.n_cells());
+    println!("  grid points  : {}", model.points_evaluated);
+    println!("  train time   : {:.2}s", train_time.as_secs_f64());
+    println!("  test time    : {:.2}s", res.test_time.as_secs_f64());
+    println!("  test error   : {:.4}", res.error);
+    println!(
+        "  throughput   : {:.0} train samples/s, {:.0} predictions/s",
+        n as f64 / train_time.as_secs_f64(),
+        4000.0 / res.test_time.as_secs_f64().max(1e-9)
+    );
+    assert!(res.error < 0.25, "cells error {}", res.error);
+    println!("\nOK");
+    Ok(())
+}

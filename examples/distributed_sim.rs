@@ -1,0 +1,71 @@
+//! END-TO-END DRIVER — the full system on a realistic workload
+//! (paper §4 Table 4 / Appendix B.3, scaled to this machine).
+//!
+//! Reproduces the whole distributed pipeline on a covtype-like
+//! workload: driver samples the data and places coarse Voronoi centers
+//! → shuffle assigns every coarse cell to a worker → each worker runs
+//! the single-node engine (fine recursive cells, integrated 5-fold CV
+//! on the default grid, warm starts, kernel reuse) → test points route
+//! coarse cell → fine cell → fold-averaged SVM.  Reports the paper's
+//! Table-4 quantities: distributed vs single-node (modelled) time,
+//! speedup, and test error.  Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example distributed_sim`
+
+use liquid_svm::data::synth;
+use liquid_svm::distributed::{train_distributed, ClusterSpec};
+use liquid_svm::prelude::*;
+use liquid_svm::tasks::TaskSpec;
+
+fn main() -> anyhow::Result<()> {
+    let n = 40_000;
+    let train = synth::by_name("covtype", n, 21).unwrap();
+    let test = synth::by_name("covtype", 6000, 22).unwrap();
+
+    let cluster = ClusterSpec {
+        workers: 14,          // the paper's worker count
+        coarse_size: 4000,    // paper: 20 000 (scaled to this machine)
+        fine_size: 1000,      // paper: 2000
+        driver_sample: 6000,
+    };
+    let cfg = Config::default().display(1).folds(5);
+
+    println!(
+        "distributed covtype-sim: n={n} d={} workers={} coarse={} fine={}",
+        train.dim(),
+        cluster.workers,
+        cluster.coarse_size,
+        cluster.fine_size
+    );
+
+    let t0 = std::time::Instant::now();
+    let model = train_distributed(&train, &TaskSpec::Binary { w: 0.5 }, &cfg, &cluster)?;
+    let wall = t0.elapsed();
+    let err = model.test_error(&test);
+
+    let s = &model.stats;
+    println!("\n  coarse cells      : {}", s.n_coarse_cells);
+    println!("  driver phase      : {:.2}s", s.driver_time.as_secs_f64());
+    println!("  shuffle phase     : {:.2}s", s.shuffle_time.as_secs_f64());
+    println!("  wall time (1 core): {:.2}s", wall.as_secs_f64());
+    println!(
+        "  distributed time  : {:.2}s   (modelled critical path over {} workers)",
+        s.distributed_time.as_secs_f64(),
+        s.workers
+    );
+    println!(
+        "  single-node time  : {:.2}s   (modelled sequential + CLI overhead)",
+        s.single_node_time.as_secs_f64()
+    );
+    println!("  speedup           : {:.1}x", s.speedup());
+    println!("  test error        : {:.4}", err);
+    println!(
+        "  throughput        : {:.0} samples/s end-to-end",
+        n as f64 / wall.as_secs_f64()
+    );
+
+    assert!(err < 0.25, "distributed error {err}");
+    assert!(s.speedup() > 2.0, "speedup {}", s.speedup());
+    println!("\nOK — full three-layer stack exercised end to end");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Neyman-Pearson classification (`nplSVM`) — "classification with a
+//! constraint on the false alarm rate" (paper §1): sweep weighted
+//! machines, then select the one whose validation false-alarm rate
+//! stays below α while maximizing detection.
+//!
+//! Run: `cargo run --release --example npl_classification`
+
+use liquid_svm::coordinator::npl::{operating_points, select_npl_task};
+use liquid_svm::data::synth;
+use liquid_svm::metrics::Confusion;
+use liquid_svm::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let alpha = 0.10; // max false-alarm rate
+    let train = synth::by_name("thyroid-ann", 1200, 3).unwrap();
+    let val = synth::by_name("thyroid-ann", 600, 4).unwrap();
+    let test = synth::by_name("thyroid-ann", 800, 5).unwrap();
+
+    let cfg = Config::default().display(1).folds(3);
+    let model = npl_svm(&train, alpha, &cfg)?;
+
+    // operating points on held-out validation data
+    let val_scores = model.decision_values(&val.x);
+    let pts = operating_points(&val.y, &val_scores);
+    println!("\nNPL sweep (alpha = {alpha}):");
+    for (t, (fa, det)) in pts.iter().enumerate() {
+        println!("  machine {t}: false-alarm {fa:.3}  detection {det:.3}");
+    }
+    let chosen = select_npl_task(&val.y, &val_scores, alpha);
+    println!("  -> selected machine {chosen}");
+
+    // evaluate the selected machine on the test set
+    let test_scores = model.decision_values(&test.x);
+    let c = Confusion::from_scores(&test.y, &test_scores[chosen]);
+    println!(
+        "\ntest: false-alarm {:.3} (bound {alpha}), detection {:.3}, error {:.3}",
+        c.false_alarm_rate(),
+        c.detection_rate(),
+        c.error()
+    );
+    assert!(
+        c.false_alarm_rate() <= alpha * 2.0 + 0.05,
+        "false alarm rate blew past the constraint"
+    );
+    println!("OK");
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! Quickstart — the paper's Appendix A demo (`mc-svm.sh banana-mc 1 2`
+//! / `mcSVM(Y ~ ., d$train, display=1, threads=2)`) in this port.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use liquid_svm::data::synth;
+use liquid_svm::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // d <- liquidData('banana-mc')
+    let d = synth::banana_mc(2000, 1000, 42);
+
+    // model <- mcSVM(Y ~ ., d$train, display=1, threads=2)
+    let cfg = Config::default().display(1).threads(2);
+    let model = mc_svm(&d.train, &cfg)?;
+
+    // result <- test(model, d$test)
+    let result = model.test(&d.test);
+
+    println!("\nbanana-mc multiclass (4 classes, OvA decomposition)");
+    println!("  train samples : {}", d.train.len());
+    println!("  tasks trained : {}", model.n_tasks);
+    println!("  train time    : {:.2}s", model.train_time.as_secs_f64());
+    println!("  test error    : {:.4}", result.error);
+    for (cell, task, gamma, lambda) in model.selected_params().iter().take(4) {
+        println!("  unit cell={cell} task={task}: gamma={gamma:.3} lambda={lambda:.2e}");
+    }
+    assert!(result.error < 0.2, "quickstart should reach <20% error");
+    println!("\nOK");
+    Ok(())
+}

@@ -1,0 +1,158 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+xla_extension 0.5.1 bundled with the published ``xla`` crate rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact per shape bucket; the Rust side zero-pads its data up to the
+nearest bucket (padding is exact for every graph here, see kernels/*.py)
+and slices the result.  ``manifest.json`` records name -> shapes so the
+Rust artifact registry can pick buckets without parsing HLO.
+
+Run: ``cd python && python -m compile.aot --out ../artifacts``
+(re-running is cheap and idempotent; the Makefile skips it when inputs
+are unchanged).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Number of gammas baked into the multi-gamma Gram artifacts.  Matches
+# the paper's default 10x10 grid; larger grids are tiled by the Rust
+# side in chunks of GAMMA_CHUNK.
+GAMMA_CHUNK = 10
+# Prediction artifacts: coefficient columns per call (lambda grid slots
+# or tasks); Rust pads/tiles to this.
+T_COLS = 8
+
+# (rows, cols, dim) buckets for Gram artifacts — sized for the paper's
+# cell regime (fine cells <= 2000 samples, d up to 256 for WEBSPAM-sim).
+GRAM_BUCKETS = [
+    (256, 256, 16),
+    (256, 256, 64),
+    (1024, 1024, 16),
+    (1024, 1024, 64),
+    (1024, 1024, 256),
+    (2048, 2048, 16),
+    (2048, 2048, 64),
+    (2048, 2048, 256),
+]
+# (m_test, n_sv, dim) buckets for the fused predict artifact.
+PREDICT_BUCKETS = [
+    (1024, 1024, 16),
+    (1024, 1024, 64),
+    (1024, 2048, 16),
+    (1024, 2048, 64),
+    (1024, 1024, 256),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_entries():
+    """(name, lowered) pairs + manifest rows for every artifact."""
+    entries = []
+    manifest = {"gamma_chunk": GAMMA_CHUNK, "t_cols": T_COLS, "artifacts": []}
+
+    for n, m, d in GRAM_BUCKETS:
+        name = f"gram10_{n}x{m}x{d}"
+        low = jax.jit(model.cross_gram).lower(f32(n, d), f32(m, d), f32(GAMMA_CHUNK))
+        entries.append((name, low))
+        manifest["artifacts"].append(
+            {"name": name, "op": "gram_multi", "rows": n, "cols": m, "dim": d,
+             "gammas": GAMMA_CHUNK}
+        )
+
+    for m, n, d in PREDICT_BUCKETS:
+        name = f"predict_{m}x{n}x{d}x{T_COLS}"
+        low = jax.jit(model.predict_ls).lower(
+            f32(m, d), f32(n, d), f32(n, T_COLS), f32()
+        )
+        entries.append((name, low))
+        manifest["artifacts"].append(
+            {"name": name, "op": "predict", "rows": m, "cols": n, "dim": d,
+             "t_cols": T_COLS}
+        )
+
+    return entries, manifest
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources, for Makefile-style skipping."""
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    stamp = os.path.join(args.out, "stamp.txt")
+    fp = input_fingerprint()
+    if not args.force and os.path.exists(stamp):
+        with open(stamp) as f:
+            if f.read().strip() == fp:
+                print("artifacts up to date")
+                return
+
+    entries, manifest = build_entries()
+    for name, low in entries:
+        text = to_hlo_text(low)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    # TSV twin of the manifest: the Rust side has no JSON dependency in
+    # this offline image, so it reads this instead.
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        f.write(f"gamma_chunk\t{GAMMA_CHUNK}\tt_cols\t{T_COLS}\n")
+        for row in manifest["artifacts"]:
+            f.write(
+                "\t".join(
+                    str(v)
+                    for v in (
+                        row["name"], row["op"], row["rows"], row["cols"],
+                        row["dim"], row.get("gammas", 0), row.get("t_cols", 0),
+                    )
+                )
+                + "\n"
+            )
+    with open(stamp, "w") as f:
+        f.write(fp)
+    print(f"{len(entries)} artifacts -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

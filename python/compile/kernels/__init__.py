@@ -1,0 +1,3 @@
+# L1: Pallas kernels for liquidSVM's compute hot-spots
+# (Gram matrices + fused prediction), validated against ref.py.
+from . import predict, rbf, ref  # noqa: F401

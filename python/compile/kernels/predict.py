@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: fused SVM prediction.
+
+Decision values for T models that share a support-vector set:
+
+    out[i,t] = sum_j k_gamma(x_i, sv_j) * alpha[j,t]
+
+The kernel tile k(x_block, sv_block) is computed exactly as in rbf.py
+(MXU matmul + fused exponential epilogue) and immediately contracted
+against the coefficient block — the Gram tile lives only in VMEM and is
+never materialized in HBM.  The sv/grid axis is the innermost
+(sequential) grid dimension, so the output block accumulates across it
+(classic Pallas reduction pattern with an @pl.when(j == 0) init).
+
+This fuses liquidSVM's "evaluating the SVM models on the test data"
+routine (paper §3, SIMD/CUDA accelerated) into a single pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import rbf
+
+
+def _predict_kernel(x_ref, sv_ref, a_ref, g_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d2 = rbf._tile_sq_dists(x_ref[...], sv_ref[...])     # [bm,bn]
+    g = g_ref[0]
+    k = jnp.exp(-d2 / (g * g))
+    o_ref[...] += jnp.dot(k, a_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def predict(x, sv, alpha, gamma, *, block=rbf.DEFAULT_BLOCK):
+    """x: [m,d], sv: [n,d], alpha: [n,T], gamma scalar -> [m,T] float32.
+
+    Zero-padding sv/alpha rows is exact (padded alpha rows are zero, so
+    their kernel values contribute nothing), hence arbitrary shapes work.
+    """
+    m, d = x.shape
+    n = sv.shape[0]
+    t = alpha.shape[1]
+    mp, np_ = rbf._ceil_to(m, block), rbf._ceil_to(n, block)
+    xp = rbf._pad_to(x.astype(jnp.float32), mp)
+    svp = rbf._pad_to(sv.astype(jnp.float32), np_)
+    ap = rbf._pad_to(alpha.astype(jnp.float32), np_)
+    g = jnp.asarray(gamma, jnp.float32).reshape((1,))
+    out = pl.pallas_call(
+        _predict_kernel,
+        grid=(mp // block, np_ // block),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, t), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, t), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, t), jnp.float32),
+        interpret=rbf.INTERPRET,
+    )(xp, svp, ap, g)
+    return out[:m]

@@ -1,0 +1,125 @@
+"""L1 Pallas kernels: tiled Gram-matrix computation.
+
+This is the liquidSVM hot spot ("routines for computing the kernel
+matrices ... are parallelized ... Cuda implementations ... exist",
+paper §3) re-thought for a TPU-shaped accelerator:
+
+  * the pairwise squared-distance tile is `||x||^2 + ||y||^2 - 2 x.y^T`,
+    i.e. one MXU matmul (bf16/f32) plus two rank-1 broadcasts;
+  * BlockSpec tiles X rows and Y rows into VMEM (the scratchpad), one
+    (block_m x block_n) Gram tile per grid step — this replaces the
+    paper's SSE/AVX inner loops and CUDA threadblocks;
+  * the exp(-d2/gamma^2) epilogue is fused in-register, so the distance
+    tile never round-trips through HBM;
+  * the multi-gamma variant reuses one distance tile for the WHOLE gamma
+    grid (the paper's kernel-matrix-reuse CV trick): gamma enters as a
+    [G] vector and the epilogue broadcasts over it.
+
+Kernels are lowered with interpret=True (CPU image; real-TPU lowering
+emits Mosaic custom-calls the CPU PJRT plugin cannot execute).  All
+public wrappers pad inputs to block multiples and slice the result, so
+any (m, n, d) works.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+# Set by aot.py / tests; interpret=True is mandatory on this image.
+INTERPRET = True
+
+
+def _pad_to(a, rows, cols=None):
+    """Zero-pad a 2-d array up to (rows, cols)."""
+    pr = rows - a.shape[0]
+    pc = 0 if cols is None else cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def _ceil_to(x, b):
+    return ((x + b - 1) // b) * b
+
+
+def _tile_sq_dists(x, y):
+    """Distance tile: [bm,d] x [bn,d] -> [bm,bn], MXU matmul + broadcasts."""
+    xn = jnp.sum(x * x, axis=1, keepdims=True)          # [bm,1]
+    yn = jnp.sum(y * y, axis=1, keepdims=True)          # [bn,1]
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    return jnp.maximum(xn + yn.T - 2.0 * xy, 0.0)
+
+
+def _gram_kernel(x_ref, y_ref, g_ref, o_ref, *, laplace):
+    d2 = _tile_sq_dists(x_ref[...], y_ref[...])
+    g = g_ref[0]
+    if laplace:
+        o_ref[...] = jnp.exp(-jnp.sqrt(d2) / g)
+    else:
+        o_ref[...] = jnp.exp(-d2 / (g * g))
+
+
+def _gram_multi_kernel(x_ref, y_ref, g_ref, o_ref):
+    d2 = _tile_sq_dists(x_ref[...], y_ref[...])          # [bm,bn]
+    g2 = g_ref[...] * g_ref[...]                         # [G]
+    # one distance tile, G exponentiations — the CV reuse trick fused.
+    o_ref[...] = jnp.exp(-d2[None, :, :] / g2[:, None, None])
+
+
+@functools.partial(jax.jit, static_argnames=("block", "laplace"))
+def gram(x, y, gamma, *, block=DEFAULT_BLOCK, laplace=False):
+    """Gram matrix K[i,j] = k_gamma(x_i, y_j), liquidSVM parameterization.
+
+    x: [m,d], y: [n,d], gamma: scalar -> [m,n] float32.
+    """
+    m, d = x.shape
+    n = y.shape[0]
+    mp, np_ = _ceil_to(m, block), _ceil_to(n, block)
+    xp = _pad_to(x.astype(jnp.float32), mp)
+    yp = _pad_to(y.astype(jnp.float32), np_)
+    g = jnp.asarray(gamma, jnp.float32).reshape((1,))
+    out = pl.pallas_call(
+        functools.partial(_gram_kernel, laplace=laplace),
+        grid=(mp // block, np_ // block),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=INTERPRET,
+    )(xp, yp, g)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gram_multi(x, y, gammas, *, block=DEFAULT_BLOCK):
+    """Gram matrices for a whole gamma grid: [G] -> [G,m,n] float32.
+
+    One distance tile per grid step serves all G gammas — the Pallas
+    form of liquidSVM's kernel-matrix reuse across the CV grid.
+    """
+    m, d = x.shape
+    n = y.shape[0]
+    G = gammas.shape[0]
+    mp, np_ = _ceil_to(m, block), _ceil_to(n, block)
+    xp = _pad_to(x.astype(jnp.float32), mp)
+    yp = _pad_to(y.astype(jnp.float32), np_)
+    out = pl.pallas_call(
+        _gram_multi_kernel,
+        grid=(mp // block, np_ // block),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((G,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((G, block, block), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((G, mp, np_), jnp.float32),
+        interpret=INTERPRET,
+    )(xp, yp, gammas.astype(jnp.float32))
+    return out[:, :m, :n]

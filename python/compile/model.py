@@ -1,0 +1,51 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the Rust runtime.
+
+liquidSVM has no neural "model"; its L2-equivalents are the dense linear
+algebra blocks of the training/selection/test cycle, each calling the L1
+Pallas kernels:
+
+  * ``cv_gram``      — multi-gamma Gram matrix over a fold (training-phase
+                       hot spot; one distance computation serves the whole
+                       gamma grid).
+  * ``predict_ls``   — decision values for T models sharing support
+                       vectors (test phase / validation-error evaluation).
+  * ``val_predict``  — validation-fold decision values for ALL gammas at
+                       once: [G,mv,n] Gram x [G,n,T] coefficients, the
+                       selection-phase hot spot.
+
+Every function is shape-static; aot.py lowers one HLO artifact per shape
+bucket and the Rust side pads its data to the nearest bucket.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import predict as pk
+from .kernels import rbf
+
+
+def cv_gram(x, gammas):
+    """Symmetric training Gram stack: x [n,d], gammas [G] -> [G,n,n]."""
+    return rbf.gram_multi(x, x, gammas)
+
+
+def cross_gram(x, y, gammas):
+    """Rectangular Gram stack (validation rows vs training columns)."""
+    return rbf.gram_multi(x, y, gammas)
+
+
+def predict_ls(x, sv, alpha, gamma):
+    """Fused test-phase prediction: [m,d],[n,d],[n,T] -> [m,T]."""
+    return pk.predict(x, sv, alpha, gamma)
+
+
+def val_predict(xv, xt, alphas, gammas):
+    """Selection-phase: decision values on a validation fold for the whole
+    gamma grid in one shot.
+
+    xv: [mv,d] validation fold, xt: [n,d] training fold,
+    alphas: [G,n,T] coefficients (T = lambda grid x tasks columns),
+    gammas: [G] -> [G,mv,T].
+    """
+    k = rbf.gram_multi(xv, xt, gammas)            # [G,mv,n]
+    return jnp.einsum("gmn,gnt->gmt", k, alphas)

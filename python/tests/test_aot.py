@@ -1,0 +1,49 @@
+"""AOT artifact tests: manifest consistency + HLO text round-trips."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_fingerprint_is_stable():
+    assert aot.input_fingerprint() == aot.input_fingerprint()
+
+
+def test_bucket_lists_sane():
+    for n, m, d in aot.GRAM_BUCKETS:
+        assert n % 128 == 0 and m % 128 == 0 and d > 0
+    for m, n, d in aot.PREDICT_BUCKETS:
+        assert m % 128 == 0 and n % 128 == 0
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run make artifacts)")
+def test_manifest_matches_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["gamma_chunk"] == aot.GAMMA_CHUNK
+    for row in man["artifacts"]:
+        path = os.path.join(ART, row["name"] + ".hlo.txt")
+        assert os.path.exists(path), row["name"]
+        head = open(path).read(200)
+        assert "HloModule" in head
+
+
+def test_build_entries_cover_buckets():
+    entries, man = aot.build_entries()
+    assert len(entries) == len(aot.GRAM_BUCKETS) + len(aot.PREDICT_BUCKETS)
+    names = {e[0] for e in entries}
+    assert len(names) == len(entries)  # unique artifact names
+
+
+def test_hlo_text_lowering_smoke():
+    import jax, jax.numpy as jnp
+    low = jax.jit(lambda x: (x + 1.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(low)
+    assert "HloModule" in text

@@ -1,0 +1,60 @@
+"""Hypothesis sweeps: randomized shapes/dtypes/scales for the Pallas
+kernels against the jnp oracle (the property-based half of L1 testing)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import predict as pk
+from compile.kernels import rbf, ref
+
+SET = settings(max_examples=25, deadline=None)
+
+dims = st.integers(min_value=1, max_value=40)
+rows = st.integers(min_value=1, max_value=200)
+gammas = st.floats(min_value=0.05, max_value=16.0)
+scales = st.sampled_from([0.1, 1.0, 10.0])
+dtypes = st.sampled_from([np.float32, np.float64])
+
+
+def make(rng, m, d, scale, dtype):
+    return jnp.asarray(rng.normal(scale=scale, size=(m, d)).astype(dtype))
+
+
+@SET
+@given(m=rows, n=rows, d=dims, g=gammas, scale=scales, dtype=dtypes,
+       seed=st.integers(0, 2**31))
+def test_gram_sweep(m, n, d, g, scale, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x, y = make(rng, m, d, scale, dtype), make(rng, n, d, scale, dtype)
+    got = np.asarray(rbf.gram(x, y, g))
+    want = np.asarray(ref.gram_rbf(x.astype(jnp.float32),
+                                   y.astype(jnp.float32), g))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-5)
+    assert got.shape == (m, n)
+    assert got.min() >= 0.0 and got.max() <= 1.0 + 1e-5
+
+
+@SET
+@given(m=rows, n=rows, d=dims, seed=st.integers(0, 2**31),
+       g_count=st.integers(1, 12))
+def test_gram_multi_sweep(m, n, d, seed, g_count):
+    rng = np.random.default_rng(seed)
+    x, y = make(rng, m, d, 1.0, np.float32), make(rng, n, d, 1.0, np.float32)
+    gs = jnp.asarray(np.geomspace(0.1, 10.0, g_count), jnp.float32)
+    got = np.asarray(rbf.gram_multi(x, y, gs))
+    want = np.asarray(ref.gram_rbf_multi(x, y, gs))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-5)
+    assert got.shape == (g_count, m, n)
+
+
+@SET
+@given(m=st.integers(1, 80), n=st.integers(1, 300), d=dims,
+       t=st.integers(1, 8), g=gammas, seed=st.integers(0, 2**31))
+def test_predict_sweep(m, n, d, t, g, seed):
+    rng = np.random.default_rng(seed)
+    x, sv = make(rng, m, d, 1.0, np.float32), make(rng, n, d, 1.0, np.float32)
+    a = make(rng, n, t, 1.0, np.float32)
+    got = np.asarray(pk.predict(x, sv, a, g))
+    want = np.asarray(ref.predict(x, sv, a, g))
+    np.testing.assert_allclose(got, want, rtol=4e-4, atol=4e-4)

@@ -1,0 +1,116 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import predict as pk
+from compile.kernels import rbf, ref
+
+RNG = np.random.default_rng(12345)
+
+
+def rand(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(scale=scale, size=shape), jnp.float32)
+
+
+def assert_close(a, b, rtol=2e-5, atol=2e-6):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- gram
+
+
+@pytest.mark.parametrize("m,n,d", [(4, 4, 2), (128, 128, 16), (37, 53, 9),
+                                   (129, 127, 3), (200, 1, 5), (1, 200, 5)])
+@pytest.mark.parametrize("gamma", [0.25, 1.0, 4.0])
+def test_gram_rbf_matches_ref(m, n, d, gamma):
+    x, y = rand(m, d), rand(n, d)
+    assert_close(rbf.gram(x, y, gamma), ref.gram_rbf(x, y, gamma))
+
+
+@pytest.mark.parametrize("m,n,d", [(64, 64, 8), (37, 53, 9), (130, 70, 21)])
+def test_gram_laplace_matches_ref(m, n, d):
+    x, y = rand(m, d), rand(n, d)
+    # sqrt near 0 is non-smooth: slightly looser atol on the diagonal-ish
+    # entries where d2 ~ 0 and round-off flips across the clamp.
+    assert_close(rbf.gram(x, y, 0.7, laplace=True),
+                 ref.gram_laplace(x, y, 0.7), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("g_count", [1, 3, 10])
+def test_gram_multi_matches_ref(g_count):
+    x, y = rand(90, 7), rand(110, 7)
+    gammas = jnp.asarray(np.geomspace(0.1, 8.0, g_count), jnp.float32)
+    assert_close(rbf.gram_multi(x, y, gammas), ref.gram_rbf_multi(x, y, gammas))
+
+
+def test_gram_symmetric_unit_diagonal():
+    x = rand(77, 5)
+    k = np.asarray(rbf.gram(x, x, 1.7))
+    np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.diag(k), 1.0, rtol=1e-5, atol=1e-5)
+
+
+def test_gram_values_in_unit_interval():
+    x, y = rand(60, 4, scale=3.0), rand(80, 4, scale=3.0)
+    k = np.asarray(rbf.gram(x, y, 0.3))
+    assert k.min() >= 0.0 and k.max() <= 1.0 + 1e-6
+
+
+def test_gram_block_size_invariance():
+    x, y = rand(100, 6), rand(140, 6)
+    a = rbf.gram(x, y, 1.1, block=32)
+    b = rbf.gram(x, y, 1.1, block=128)
+    assert_close(a, b)
+
+
+def test_multi_gamma_consistent_with_single():
+    x, y = rand(50, 8), rand(66, 8)
+    gammas = jnp.asarray([0.5, 2.0], jnp.float32)
+    multi = rbf.gram_multi(x, y, gammas)
+    for i, g in enumerate([0.5, 2.0]):
+        assert_close(multi[i], rbf.gram(x, y, g))
+
+
+def test_libsvm_parameterization_bridge():
+    # liquidSVM k = exp(-d2/g^2); libsvm k = exp(-g_lib*d2).
+    # g = 1/sqrt(g_lib) must give identical matrices.
+    x, y = rand(40, 5), rand(30, 5)
+    g_lib = 0.125
+    ours = rbf.gram(x, y, 1.0 / np.sqrt(g_lib))
+    theirs = jnp.exp(-g_lib * ref.sq_dists(x, y))
+    assert_close(ours, theirs)
+
+
+# ------------------------------------------------------------- predict
+
+
+@pytest.mark.parametrize("m,n,d,t", [(64, 64, 8, 1), (100, 130, 5, 4),
+                                     (129, 257, 12, 8), (1, 50, 3, 2)])
+def test_predict_matches_ref(m, n, d, t):
+    x, sv, a = rand(m, d), rand(n, d), rand(n, t)
+    assert_close(pk.predict(x, sv, a, 1.3), ref.predict(x, sv, a, 1.3),
+                 rtol=2e-4, atol=2e-5)
+
+
+def test_predict_zero_alpha_is_zero():
+    x, sv = rand(30, 4), rand(40, 4)
+    a = jnp.zeros((40, 2), jnp.float32)
+    out = np.asarray(pk.predict(x, sv, a, 1.0))
+    assert np.all(out == 0.0)
+
+
+def test_predict_linear_in_alpha():
+    x, sv, a = rand(30, 4), rand(40, 4), rand(40, 3)
+    one = np.asarray(pk.predict(x, sv, a, 0.9))
+    two = np.asarray(pk.predict(x, sv, 2.0 * a, 0.9))
+    np.testing.assert_allclose(two, 2.0 * one, rtol=2e-4, atol=2e-5)
+
+
+def test_predict_accumulation_over_sv_blocks():
+    # n spanning several 128-blocks exercises the @pl.when init +
+    # accumulate reduction path.
+    x, sv, a = rand(10, 6), rand(400, 6), rand(400, 2)
+    assert_close(pk.predict(x, sv, a, 1.5), ref.predict(x, sv, a, 1.5),
+                 rtol=2e-4, atol=2e-5)

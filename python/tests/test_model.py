@@ -1,0 +1,46 @@
+"""L2 graph shape/numerics tests (the functions aot.py lowers)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def rand(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+def test_cv_gram_is_symmetric_stack():
+    x = rand(70, 6)
+    gs = jnp.asarray([0.5, 1.0, 2.0], jnp.float32)
+    k = np.asarray(model.cv_gram(x, gs))
+    assert k.shape == (3, 70, 70)
+    for i in range(3):
+        np.testing.assert_allclose(k[i], k[i].T, rtol=1e-5, atol=1e-6)
+
+
+def test_cross_gram_matches_ref():
+    xv, xt = rand(30, 5), rand(50, 5)
+    gs = jnp.asarray([0.7, 3.0], jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(model.cross_gram(xv, xt, gs)),
+        np.asarray(ref.gram_rbf_multi(xv, xt, gs)), rtol=2e-5, atol=2e-6)
+
+
+def test_val_predict_matches_composition():
+    xv, xt = rand(20, 4), rand(35, 4)
+    gs = jnp.asarray([0.5, 1.5], jnp.float32)
+    alphas = rand(2, 35, 3)
+    got = np.asarray(model.val_predict(xv, xt, alphas, gs))
+    assert got.shape == (2, 20, 3)
+    for i in range(2):
+        want = np.asarray(ref.gram_rbf(xv, xt, float(gs[i]))) @ np.asarray(alphas[i])
+        np.testing.assert_allclose(got[i], want, rtol=2e-4, atol=2e-4)
+
+
+def test_predict_ls_shape():
+    out = model.predict_ls(rand(11, 3), rand(17, 3), rand(17, 5), 1.0)
+    assert out.shape == (11, 5)

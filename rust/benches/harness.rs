@@ -1,0 +1,99 @@
+//! Shared micro-harness for the paper-table benches.
+//!
+//! criterion is not in this image's offline registry, so benches are
+//! `harness = false` binaries using this minimal timer: median of R
+//! repetitions after a warm-up, plus a fixed-width table printer that
+//! mirrors the paper's layout (relative times + absolute seconds +
+//! errors).
+//!
+//! Scale knob: `BENCH_SCALE=smoke|default|full` (smoke for CI-speed
+//! runs, full for paper-scale sizes).
+
+#![allow(dead_code)]
+
+use std::time::{Duration, Instant};
+
+/// Benchmark scale from the environment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Default,
+    Full,
+}
+
+pub fn scale() -> Scale {
+    match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("smoke") => Scale::Smoke,
+        Ok("full") => Scale::Full,
+        _ => Scale::Default,
+    }
+}
+
+/// Pick a size by scale.
+pub fn sized(smoke: usize, default: usize, full: usize) -> usize {
+    match scale() {
+        Scale::Smoke => smoke,
+        Scale::Default => default,
+        Scale::Full => full,
+    }
+}
+
+/// Time one invocation (the benches here are long-running end-to-end
+/// pipelines; medians over many reps would take hours, matching the
+/// paper's own single-run-per-cell methodology for the big tables).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Median of `reps` timed runs (for cheap kernels).
+pub fn time_median<T>(reps: usize, mut f: impl FnMut() -> T) -> Duration {
+    let mut times: Vec<Duration> = Vec::with_capacity(reps);
+    let mut sink = None;
+    for _ in 0..reps {
+        let (out, dt) = time_once(&mut f);
+        sink = Some(out);
+        times.push(dt);
+    }
+    std::hint::black_box(sink);
+    times.sort();
+    times[times.len() / 2]
+}
+
+/// Fixed-width row printer.
+pub struct Table {
+    pub widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(header: &[&str], widths: &[usize]) -> Table {
+        let t = Table { widths: widths.to_vec() };
+        t.row(header);
+        let line: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let refs: Vec<&str> = line.iter().map(String::as_str).collect();
+        t.row(&refs);
+        t
+    }
+
+    pub fn row(&self, cells: &[&str]) {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            let w = self.widths.get(i).copied().unwrap_or(12);
+            line.push_str(&format!("{c:>w$}  "));
+        }
+        println!("{}", line.trim_end());
+    }
+}
+
+pub fn secs(d: Duration) -> String {
+    format!("{:.2}s", d.as_secs_f64())
+}
+
+pub fn rel(d: Duration, base: Duration) -> String {
+    format!("x{:.1}", d.as_secs_f64() / base.as_secs_f64().max(1e-9))
+}
+
+pub fn pct(e: f32) -> String {
+    format!("{:.2}%", e * 100.0)
+}

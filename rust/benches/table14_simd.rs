@@ -1,0 +1,91 @@
+//! Tables 14–17 reproduction: the vectorization ladder of the Gram
+//! hot spot.  The paper compares SSE2 / AVX / AVX2 compile targets;
+//! this port's equivalent rungs are
+//!
+//!   scalar   — naive per-pair loops            (paper's SSE2 column)
+//!   blocked  — norm-trick + unrolled dots      (paper's AVX/AVX2)
+//!   xla      — AOT Pallas/XLA artifact (PJRT)  (the accelerator rung)
+//!
+//! Measured two ways: the raw multi-γ Gram kernel (10 γ, the CV hot
+//! spot) and a full small training run per backend.
+//!
+//! Paper shape: each rung up is faster; the gap grows with dimension
+//! (d=8 barely moves, d=54/254 clearly does).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use harness::{sized, time_median, time_once, Table};
+use liquid_svm::coordinator::config::BackendChoice;
+use liquid_svm::data::synth;
+use liquid_svm::kernel::{GramBackend, KernelKind};
+use liquid_svm::prelude::*;
+use liquid_svm::runtime::{default_artifact_dir, XlaRuntime};
+
+fn main() {
+    let n = sized(256, 1000, 2000);
+    println!("\n=== Tables 14-17: Gram backend ladder (n={n}, 10 gammas) ===\n");
+
+    let xla = XlaRuntime::open(default_artifact_dir()).ok().map(Arc::new);
+    if xla.is_none() {
+        println!("(artifacts missing — run `make artifacts` to include the xla rung)\n");
+    }
+
+    let gammas: Vec<f32> = (1..=10).map(|i| 0.3 * i as f32).collect();
+    let t = Table::new(
+        &["dataset", "dim", "scalar", "blocked", "xla", "blocked-speedup", "xla-speedup"],
+        &[14, 5, 9, 9, 9, 16, 12],
+    );
+
+    for name in ["cod-rna", "thyroid-ann", "covtype", "webspam"] {
+        let d = synth::by_name(name, n, 9).unwrap();
+        let reps = if n <= 300 { 3 } else { 2 };
+        let t_scalar =
+            time_median(reps, || GramBackend::Scalar.gram_multi(&d.x, &d.x, &gammas, KernelKind::Gauss));
+        let t_blocked =
+            time_median(reps, || GramBackend::Blocked.gram_multi(&d.x, &d.x, &gammas, KernelKind::Gauss));
+        let (t_xla_str, xla_speed) = match &xla {
+            Some(rt) => {
+                let be = GramBackend::Xla(rt.clone());
+                // warm the executable cache, then measure
+                let _ = be.gram_multi(&d.x, &d.x, &gammas, KernelKind::Gauss);
+                let t_xla = time_median(reps, || be.gram_multi(&d.x, &d.x, &gammas, KernelKind::Gauss));
+                (
+                    format!("{:.3}s", t_xla.as_secs_f64()),
+                    format!("x{:.1}", t_scalar.as_secs_f64() / t_xla.as_secs_f64().max(1e-9)),
+                )
+            }
+            None => ("-".into(), "-".into()),
+        };
+        t.row(&[
+            name,
+            &d.dim().to_string(),
+            &format!("{:.3}s", t_scalar.as_secs_f64()),
+            &format!("{:.3}s", t_blocked.as_secs_f64()),
+            &t_xla_str,
+            &format!("x{:.1}", t_scalar.as_secs_f64() / t_blocked.as_secs_f64().max(1e-9)),
+            &xla_speed,
+        ]);
+    }
+
+    // end-to-end: full training run per backend on one dataset
+    println!("\n--- end-to-end training, covtype n={} ---\n", n.min(1000));
+    let train = synth::by_name("covtype", n.min(1000), 10).unwrap();
+    let t2 = Table::new(&["backend", "train time", "error"], &[10, 11, 8]);
+    for (label, be) in [("scalar", BackendChoice::Scalar), ("blocked", BackendChoice::Blocked), ("xla", BackendChoice::Xla)] {
+        if be == BackendChoice::Xla && xla.is_none() {
+            continue;
+        }
+        let cfg = Config::default().folds(3).backend(be);
+        let (m, dt) = time_once(|| svm_binary(&train, 0.5, &cfg).unwrap());
+        let test = synth::by_name("covtype", 500, 11).unwrap();
+        t2.row(&[
+            label,
+            &format!("{:.2}s", dt.as_secs_f64()),
+            &format!("{:.3}", m.test(&test).error),
+        ]);
+    }
+    println!("\npaper shape: each vectorization rung up is faster, gap grows with dim.");
+}

@@ -1,0 +1,55 @@
+//! Table 2 reproduction: multiclass OvA least-squares — liquidSVM's
+//! integrated LS-CV vs the GURLS-style baseline (fresh Cholesky per λ,
+//! quartile-heuristic bandwidth, hold-out λ selection).
+//!
+//! Paper shape: liquidSVM 7–35× faster with equal-or-better error.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{pct, secs, sized, time_once, Table};
+use liquid_svm::baselines::gurls::train_gurls;
+use liquid_svm::coordinator::scenarios::mc_svm_type;
+use liquid_svm::data::synth;
+use liquid_svm::prelude::*;
+use liquid_svm::tasks::TaskSpec;
+
+fn main() {
+    let n = sized(300, 600, 3000);
+    println!("\n=== Table 2: OvA least-squares vs GURLS (n={n}) ===\n");
+    let t = Table::new(
+        &["dataset", "classes", "ours(s)", "gurls(s)", "factor", "err-ours", "err-gurls"],
+        &[10, 8, 9, 9, 8, 9, 10],
+    );
+
+    for name in ["optdigit", "landsat", "pendigit", "covtype"] {
+        let train = synth::by_name(name, n, 7).unwrap();
+        let test = synth::by_name(name, n / 2, 8).unwrap();
+        let classes = train.classes().len();
+
+        // ours: OvA with the least-squares solver, integrated CV
+        let cfg = Config::default().folds(5);
+        let (model, t_ours) = time_once(|| {
+            liquid_svm::coordinator::train(&train, &TaskSpec::MultiClassOvALs, &cfg).unwrap()
+        });
+        let err_ours = model.test(&test).error;
+
+        // GURLS: per-λ factorizations
+        let lambdas = [1e-2f32, 1e-3, 1e-4, 1e-5, 1e-6];
+        let (g, t_gurls) = time_once(|| train_gurls(&train, &lambdas, 7));
+        let err_gurls = g.test_error(&test);
+
+        t.row(&[
+            name,
+            &classes.to_string(),
+            &secs(t_ours),
+            &secs(t_gurls),
+            &format!("x{:.1}", t_gurls.as_secs_f64() / t_ours.as_secs_f64().max(1e-9)),
+            &pct(err_ours),
+            &pct(err_gurls),
+        ]);
+        // binary covtype appears in the paper's Table 2 as the last row
+        let _ = mc_svm_type; // (kept for API parity; OvA-LS used above)
+    }
+    println!("\npaper shape: ours faster by x7-x35 with comparable-or-better error.");
+}

@@ -1,0 +1,92 @@
+//! SVMlight-through-klaR baseline shape (Table 1's slowest column).
+//!
+//! klaR wraps the SVMlight *command line*, so every single grid point
+//! round-trips the fold data through files on disk before the solver
+//! even starts ("SVMlight is quite slow here due to disk accesses in
+//! the wrapper").  This baseline reproduces that tax honestly: for each
+//! (γ, cost, fold) it writes train+validation sets in LIBSVM text
+//! format, re-reads and re-parses them, and only then trains (with the
+//! same SMO core as the libsvm baseline — the wrapper overhead, not the
+//! solver, is what distinguishes the column).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::dataset::Dataset;
+use crate::data::folds::{make_folds, FoldKind};
+use crate::data::io::{read_libsvm, write_libsvm};
+use crate::kernel::{GramBackend, KernelKind};
+use crate::metrics::Loss;
+
+use super::naive_cv::OuterCvResult;
+use super::smo::train_smo;
+
+/// Grid search with per-point disk round-trips.
+pub fn disk_wrapper_cv(
+    data: &Dataset,
+    gammas_lib: &[f32],
+    costs: &[f32],
+    folds: usize,
+    seed: u64,
+    work_dir: &PathBuf,
+) -> Result<OuterCvResult> {
+    std::fs::create_dir_all(work_dir)?;
+    let f = make_folds(data, folds, FoldKind::Stratified, seed);
+    let mut best = (f32::NAN, f32::NAN, f32::INFINITY);
+    let mut gram_computations = 0usize;
+    for &gl in gammas_lib {
+        let gamma = KernelKind::from_libsvm_gamma(gl);
+        for &c in costs {
+            let mut loss_sum = 0.0f32;
+            for fi in 0..folds {
+                // === the klaR wrapper tax: write → spawn → read =====
+                let tr_path = work_dir.join(format!("train-{fi}.light"));
+                let va_path = work_dir.join(format!("val-{fi}.light"));
+                write_libsvm(&tr_path, &data.subset(&f.train_indices(fi)))?;
+                write_libsvm(&va_path, &data.subset(f.val_indices(fi)))?;
+                let tr = read_libsvm(&tr_path, data.dim())?;
+                let va = read_libsvm(&va_path, data.dim())?;
+                // ====================================================
+                let kt = GramBackend::Blocked.gram(&tr.x, &tr.x, gamma, KernelKind::Gauss);
+                let kv = GramBackend::Blocked.gram(&va.x, &tr.x, gamma, KernelKind::Gauss);
+                gram_computations += 2;
+                let m = train_smo(&kt, &tr.y, c, 1e-3, 200_000);
+                let preds = m.decision_values(&kv);
+                loss_sum += Loss::Classification.mean(&va.y, &preds);
+            }
+            let mean = loss_sum / folds as f32;
+            if mean < best.2 {
+                best = (gamma, c, mean);
+            }
+        }
+    }
+    Ok(OuterCvResult {
+        best_gamma: best.0,
+        best_cost_or_lambda: best.1,
+        best_val_loss: best.2,
+        gram_computations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn disk_wrapper_works_and_is_slower() {
+        let d = synth::banana_binary(120, 3);
+        let dir = std::env::temp_dir().join(format!("liquidsvm-dw-{}", std::process::id()));
+        let t0 = std::time::Instant::now();
+        let r = disk_wrapper_cv(&d, &[1.0], &[1.0], 3, 1, &dir).unwrap();
+        let disk_time = t0.elapsed();
+        assert!(r.best_val_loss < 0.4);
+        let t1 = std::time::Instant::now();
+        let _ = super::super::naive_cv::outer_cv_smo(&d, &[1.0], &[1.0], 3, 1);
+        let mem_time = t1.elapsed();
+        // the wrapper must pay a measurable tax over the in-memory loop
+        assert!(disk_time > mem_time, "{disk_time:?} <= {mem_time:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

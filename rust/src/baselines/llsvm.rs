@@ -1,0 +1,167 @@
+//! BudgetedSVM-style baseline (Table 3 "Bsvm"): **LLSVM** — low-rank
+//! linearization.  The budget is `k` landmark points; samples are
+//! mapped to the k-dimensional feature φ(x) = K_z⁻½ · k(x, Z) (Nyström
+//! feature space) and a *linear* SVM is trained there by SGD (Pegasos
+//! shape), exactly the algorithmic family BudgetedSVM's LLSVM
+//! implements.  Quality is capped by the budget (Table 9: Bsvm errors
+//! well above the cell-split errors at equal k), while cost scales with
+//! n·k instead of n².
+
+use crate::data::dataset::Dataset;
+use crate::data::matrix::Matrix;
+use crate::data::rng::Rng;
+use crate::kernel::{GramBackend, KernelKind};
+use crate::metrics::Confusion;
+
+use super::gurls::cholesky;
+
+/// Trained LLSVM model.
+pub struct LlsvmModel {
+    pub landmarks: Matrix,
+    /// K_z^{-1/2}-ish mapping: we store the Cholesky factor of
+    /// (K_z + εI) and map via triangular solve (equivalent feature
+    /// space up to rotation, which a linear SVM is invariant to)
+    chol: Matrix,
+    pub w: Vec<f32>,
+    pub bias: f32,
+    pub gamma: f32,
+}
+
+/// Nyström feature for one row: solve L f = k(x, Z).
+fn nystrom_feature(chol: &Matrix, kz: &[f32]) -> Vec<f32> {
+    let n = chol.rows();
+    let mut f = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = kz[i];
+        for k in 0..i {
+            s -= chol.get(i, k) * f[k];
+        }
+        f[i] = s / chol.get(i, i);
+    }
+    f
+}
+
+/// Train LLSVM with `budget` landmarks and Pegasos SGD.
+pub fn train_llsvm(
+    data: &Dataset,
+    budget: usize,
+    gamma: f32,
+    lambda: f32,
+    epochs: usize,
+    seed: u64,
+) -> LlsvmModel {
+    let n = data.len();
+    let k = budget.min(n);
+    let mut rng = Rng::new(seed ^ 0x11a4d);
+    let picks = rng.sample_indices(n, k);
+    let landmarks = data.x.select_rows(&picks);
+
+    // landmark kernel matrix + ridge for stability
+    let mut kz = GramBackend::Blocked.gram(&landmarks, &landmarks, gamma, KernelKind::Gauss);
+    for i in 0..k {
+        kz.set(i, i, kz.get(i, i) + 1e-4);
+    }
+    let chol = cholesky(&kz).expect("K_z + εI SPD");
+
+    // features for all training points (n × k kernel evaluations — the
+    // budget model's cost profile)
+    let kx = GramBackend::Blocked.gram(&data.x, &landmarks, gamma, KernelKind::Gauss);
+    let feats: Vec<Vec<f32>> = (0..n).map(|i| nystrom_feature(&chol, kx.row(i))).collect();
+
+    // Pegasos: hinge SGD with step 1/(λ t)
+    let mut w = vec![0.0f32; k];
+    let mut bias = 0.0f32;
+    let mut t = 1usize;
+    for _ in 0..epochs {
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for &i in &order {
+            let eta = 1.0 / (lambda * t as f32);
+            let f = &feats[i];
+            let margin = data.y[i]
+                * (f.iter().zip(&w).map(|(&a, &b)| a * b).sum::<f32>() + bias);
+            // shrink
+            let shrink = 1.0 - eta * lambda;
+            for wj in &mut w {
+                *wj *= shrink;
+            }
+            if margin < 1.0 {
+                for (wj, &fj) in w.iter_mut().zip(f) {
+                    *wj += eta * data.y[i] * fj;
+                }
+                bias += eta * data.y[i] * 0.1; // damped bias update
+            }
+            t += 1;
+        }
+    }
+    LlsvmModel { landmarks, chol, w, bias, gamma }
+}
+
+impl LlsvmModel {
+    pub fn decision_values(&self, x: &Matrix) -> Vec<f32> {
+        let kx = GramBackend::Blocked.gram(x, &self.landmarks, self.gamma, KernelKind::Gauss);
+        (0..x.rows())
+            .map(|i| {
+                let f = nystrom_feature(&self.chol, kx.row(i));
+                f.iter().zip(&self.w).map(|(&a, &b)| a * b).sum::<f32>() + self.bias
+            })
+            .collect()
+    }
+
+    pub fn test_error(&self, test: &Dataset) -> f32 {
+        Confusion::from_scores(&test.y, &self.decision_values(&test.x)).error()
+    }
+}
+
+/// Grid-search wrapper (BudgetedSVM is tuned by outer scripts too).
+pub fn llsvm_grid_cv(
+    data: &Dataset,
+    budget: usize,
+    gammas: &[f32],
+    lambdas: &[f32],
+    seed: u64,
+) -> (LlsvmModel, f32) {
+    let split = data.split(data.len() * 4 / 5, seed);
+    let mut best: Option<(LlsvmModel, f32)> = None;
+    for &g in gammas {
+        for &l in lambdas {
+            let m = train_llsvm(&split.train, budget, g, l, 3, seed);
+            let err = m.test_error(&split.test);
+            if best.as_ref().map_or(true, |(_, be)| err < *be) {
+                best = Some((m, err));
+            }
+        }
+    }
+    best.expect("non-empty grid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn llsvm_learns_banana() {
+        let d = synth::banana_binary(400, 1);
+        let m = train_llsvm(&d, 60, 1.0, 1e-4, 5, 2);
+        let test = synth::banana_binary(200, 3);
+        let err = m.test_error(&test);
+        assert!(err < 0.25, "llsvm error {err}");
+    }
+
+    #[test]
+    fn budget_caps_quality() {
+        let d = synth::by_name("covtype", 700, 4).unwrap();
+        let test = synth::by_name("covtype", 400, 5).unwrap();
+        let tiny = train_llsvm(&d, 8, 2.0, 1e-4, 4, 6).test_error(&test);
+        let big = train_llsvm(&d, 128, 2.0, 1e-4, 4, 6).test_error(&test);
+        assert!(big <= tiny + 0.02, "budget 128 ({big}) vs 8 ({tiny})");
+    }
+
+    #[test]
+    fn grid_cv_returns_best() {
+        let d = synth::banana_binary(300, 7);
+        let (_, err) = llsvm_grid_cv(&d, 40, &[0.5, 2.0], &[1e-3, 1e-5], 8);
+        assert!(err < 0.35);
+    }
+}

@@ -1,0 +1,21 @@
+//! Comparator implementations for the paper's benchmark tables.
+//!
+//! Every package liquidSVM is compared against is re-implemented here
+//! at the *algorithmic-family* level, so the benchmarks measure the
+//! same structural differences the paper measures (integrated CV vs
+//! wrapped loops, offset vs no offset, budget vs cells, disk wrappers
+//! vs in-memory — see DESIGN.md §Substitutions):
+//!
+//! * [`smo`]          — libsvm / e1071: C-SVC with offset (SMO)
+//! * [`naive_cv`]     — e1071::tune-style outer grid loops
+//! * [`disk_wrapper`] — klaR/SVMlight: per-grid-point disk round-trips
+//! * [`gurls`]        — GURLS: OvA kernel ridge, Cholesky per λ
+//! * [`llsvm`]        — BudgetedSVM: landmark low-rank + linear SGD
+//! * [`ensemble`]     — EnsembleSVM: bagged subsample SVMs, voting
+
+pub mod disk_wrapper;
+pub mod ensemble;
+pub mod gurls;
+pub mod llsvm;
+pub mod naive_cv;
+pub mod smo;

@@ -1,0 +1,309 @@
+//! Spatial data decomposition into **cells** (paper §2, Bottou & Vapnik
+//! 1992, Thomann et al. 2016): the strategy that makes liquidSVM scale
+//! to millions of samples.  Training cost on a cell of size k is
+//! O(k²)–O(k³); splitting n samples into n/k cells turns a hopeless
+//! O(n²) problem into (n/k)·O(k²) = O(nk) — two orders of magnitude for
+//! the paper's mid-size benchmarks (Table 3).
+//!
+//! Strategies (Appendix C `voronoi=` parameter):
+//! * random chunks              — the BudgetedSVM/EnsembleSVM-style baseline
+//! * Voronoi partition          — sampled centers, nearest-center cells
+//! * overlapping Voronoi (=5)   — cells grow into their neighbours;
+//!                                prediction still routes to the owner
+//! * recursive partition (=6)   — median splits on the widest dimension
+//!                                until cells fit `max_size`
+
+use crate::data::dataset::Dataset;
+use crate::data::matrix::{sq_dist, Matrix};
+use crate::data::rng::Rng;
+
+/// Cell creation strategy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CellStrategy {
+    /// single cell = no decomposition
+    None,
+    /// random partition into chunks of ~`size`
+    RandomChunks { size: usize },
+    /// Voronoi partition from ~n/size sampled centers
+    Voronoi { size: usize },
+    /// voronoi=5: Voronoi cells enlarged by `overlap`·size of the
+    /// nearest foreign samples
+    OverlappingVoronoi { size: usize, overlap: f32 },
+    /// voronoi=6: recursive median splits until ≤ `max_size`
+    RecursiveTree { max_size: usize },
+}
+
+/// Routing structure mapping a test point to its cell(s).
+#[derive(Clone, Debug)]
+pub enum CellRouter {
+    /// everything goes to cell 0
+    Single,
+    /// nearest of the stored centers
+    Centers(Matrix),
+    /// recursive split tree
+    Tree(Box<TreeNode>),
+    /// random chunks have no geometry: every cell predicts and the
+    /// ensemble averages (stored: number of cells)
+    Broadcast(usize),
+}
+
+/// Node of the recursive-partition tree.
+#[derive(Clone, Debug)]
+pub enum TreeNode {
+    Leaf { cell: usize },
+    Split { dim: usize, threshold: f32, left: Box<TreeNode>, right: Box<TreeNode> },
+}
+
+/// A materialized decomposition of a working set.
+#[derive(Clone, Debug)]
+pub struct CellPartition {
+    /// training indices per cell (may overlap for voronoi=5)
+    pub cells: Vec<Vec<usize>>,
+    pub router: CellRouter,
+}
+
+impl CellPartition {
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Cells a test point should be evaluated in.
+    pub fn route(&self, x: &[f32]) -> Vec<usize> {
+        match &self.router {
+            CellRouter::Single => vec![0],
+            CellRouter::Broadcast(k) => (0..*k).collect(),
+            CellRouter::Centers(centers) => vec![nearest_center(centers, x)],
+            CellRouter::Tree(root) => vec![walk_tree(root, x)],
+        }
+    }
+}
+
+fn nearest_center(centers: &Matrix, x: &[f32]) -> usize {
+    let mut best = (0usize, f32::INFINITY);
+    for c in 0..centers.rows() {
+        let d = sq_dist(centers.row(c), x);
+        if d < best.1 {
+            best = (c, d);
+        }
+    }
+    best.0
+}
+
+fn walk_tree(node: &TreeNode, x: &[f32]) -> usize {
+    match node {
+        TreeNode::Leaf { cell } => *cell,
+        TreeNode::Split { dim, threshold, left, right } => {
+            if x[*dim] <= *threshold {
+                walk_tree(left, x)
+            } else {
+                walk_tree(right, x)
+            }
+        }
+    }
+}
+
+/// Build the decomposition of `data` for a strategy.
+pub fn make_cells(data: &Dataset, strategy: &CellStrategy, seed: u64) -> CellPartition {
+    let n = data.len();
+    match strategy {
+        CellStrategy::None => CellPartition {
+            cells: vec![(0..n).collect()],
+            router: CellRouter::Single,
+        },
+        CellStrategy::RandomChunks { size } => {
+            let k = n.div_ceil((*size).max(1)).max(1);
+            let mut idx: Vec<usize> = (0..n).collect();
+            Rng::new(seed).shuffle(&mut idx);
+            let mut cells = vec![Vec::new(); k];
+            for (pos, &i) in idx.iter().enumerate() {
+                cells[pos % k].push(i);
+            }
+            CellPartition { cells, router: CellRouter::Broadcast(k) }
+        }
+        CellStrategy::Voronoi { size } => {
+            let (cells, centers) = voronoi_cells(data, *size, seed);
+            CellPartition { cells, router: CellRouter::Centers(centers) }
+        }
+        CellStrategy::OverlappingVoronoi { size, overlap } => {
+            let (mut cells, centers) = voronoi_cells(data, *size, seed);
+            // enlarge every cell by its nearest foreign samples
+            for c in 0..cells.len() {
+                let extra = ((*size as f32) * overlap) as usize;
+                if extra == 0 {
+                    continue;
+                }
+                let member: std::collections::HashSet<usize> =
+                    cells[c].iter().copied().collect();
+                let mut foreign: Vec<(f32, usize)> = (0..n)
+                    .filter(|i| !member.contains(i))
+                    .map(|i| (sq_dist(centers.row(c), data.x.row(i)), i))
+                    .collect();
+                foreign.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                cells[c].extend(foreign.iter().take(extra).map(|&(_, i)| i));
+            }
+            CellPartition { cells, router: CellRouter::Centers(centers) }
+        }
+        CellStrategy::RecursiveTree { max_size } => {
+            let mut cells: Vec<Vec<usize>> = Vec::new();
+            let idx: Vec<usize> = (0..n).collect();
+            let root = build_tree(data, idx, (*max_size).max(8), &mut cells);
+            CellPartition { cells, router: CellRouter::Tree(Box::new(root)) }
+        }
+    }
+}
+
+/// Sample ~n/size centers, assign every sample to the nearest center,
+/// drop empty cells (re-indexing the center matrix accordingly).
+fn voronoi_cells(data: &Dataset, size: usize, seed: u64) -> (Vec<Vec<usize>>, Matrix) {
+    let n = data.len();
+    let k = n.div_ceil(size.max(1)).max(1);
+    let mut rng = Rng::new(seed ^ 0xce11);
+    let picks = rng.sample_indices(n, k.min(n));
+    let centers = data.x.select_rows(&picks);
+    let mut cells: Vec<Vec<usize>> = vec![Vec::new(); centers.rows()];
+    for i in 0..n {
+        cells[nearest_center(&centers, data.x.row(i))].push(i);
+    }
+    // drop empties
+    let keep: Vec<usize> = (0..cells.len()).filter(|&c| !cells[c].is_empty()).collect();
+    let centers = centers.select_rows(&keep);
+    let cells: Vec<Vec<usize>> = keep.into_iter().map(|c| std::mem::take(&mut cells[c])).collect();
+    (cells, centers)
+}
+
+/// Recursive median split on the dimension with the largest spread.
+fn build_tree(
+    data: &Dataset,
+    idx: Vec<usize>,
+    max_size: usize,
+    cells: &mut Vec<Vec<usize>>,
+) -> TreeNode {
+    if idx.len() <= max_size {
+        let cell = cells.len();
+        cells.push(idx);
+        return TreeNode::Leaf { cell };
+    }
+    let d = data.dim();
+    // widest dimension by range
+    let mut best = (0usize, f32::NEG_INFINITY);
+    for j in 0..d {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &i in &idx {
+            let v = data.x.get(i, j);
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if hi - lo > best.1 {
+            best = (j, hi - lo);
+        }
+    }
+    let dim = best.0;
+    let mut vals: Vec<f32> = idx.iter().map(|&i| data.x.get(i, dim)).collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let threshold = vals[vals.len() / 2];
+    let (mut left, mut right): (Vec<usize>, Vec<usize>) =
+        idx.iter().partition(|&&i| data.x.get(i, dim) <= threshold);
+    // degenerate split (all values equal): cut by count instead
+    if left.is_empty() || right.is_empty() {
+        let mid = idx.len() / 2;
+        left = idx[..mid].to_vec();
+        right = idx[mid..].to_vec();
+    }
+    TreeNode::Split {
+        dim,
+        threshold,
+        left: Box::new(build_tree(data, left, max_size, cells)),
+        right: Box::new(build_tree(data, right, max_size, cells)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn data(n: usize) -> Dataset {
+        synth::by_name("cod-rna", n, 3).unwrap()
+    }
+
+    fn assert_partition(cells: &[Vec<usize>], n: usize) {
+        let mut seen = vec![0u8; n];
+        for cell in cells {
+            for &i in cell {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "not a disjoint cover");
+    }
+
+    #[test]
+    fn none_is_single_cell() {
+        let d = data(50);
+        let p = make_cells(&d, &CellStrategy::None, 0);
+        assert_eq!(p.n_cells(), 1);
+        assert_eq!(p.route(d.x.row(3)), vec![0]);
+    }
+
+    #[test]
+    fn random_chunks_partition_and_broadcast() {
+        let d = data(250);
+        let p = make_cells(&d, &CellStrategy::RandomChunks { size: 64 }, 1);
+        assert_partition(&p.cells, 250);
+        assert_eq!(p.n_cells(), 4);
+        assert_eq!(p.route(d.x.row(0)).len(), 4);
+    }
+
+    #[test]
+    fn voronoi_partitions_and_routes_members_home() {
+        let d = data(400);
+        let p = make_cells(&d, &CellStrategy::Voronoi { size: 100 }, 2);
+        assert_partition(&p.cells, 400);
+        // every training sample routes to the cell that contains it
+        for (c, cell) in p.cells.iter().enumerate() {
+            for &i in cell.iter().take(5) {
+                assert_eq!(p.route(d.x.row(i)), vec![c]);
+            }
+        }
+    }
+
+    #[test]
+    fn overlapping_cells_grow() {
+        let d = data(300);
+        let base = make_cells(&d, &CellStrategy::Voronoi { size: 100 }, 3);
+        let over = make_cells(
+            &d,
+            &CellStrategy::OverlappingVoronoi { size: 100, overlap: 0.5 },
+            3,
+        );
+        assert_eq!(base.n_cells(), over.n_cells());
+        let total_base: usize = base.cells.iter().map(Vec::len).sum();
+        let total_over: usize = over.cells.iter().map(Vec::len).sum();
+        assert!(total_over > total_base, "{total_over} <= {total_base}");
+    }
+
+    #[test]
+    fn tree_cells_respect_max_size() {
+        let d = data(500);
+        let p = make_cells(&d, &CellStrategy::RecursiveTree { max_size: 80 }, 4);
+        assert_partition(&p.cells, 500);
+        for cell in &p.cells {
+            assert!(cell.len() <= 80);
+        }
+        // routing lands every training point in its own cell
+        for (c, cell) in p.cells.iter().enumerate() {
+            for &i in cell.iter().take(3) {
+                assert_eq!(p.route(d.x.row(i)), vec![c]);
+            }
+        }
+    }
+
+    #[test]
+    fn tree_handles_duplicate_points() {
+        use crate::data::matrix::Matrix;
+        // 40 identical points: median split degenerates, count-split saves it
+        let x = Matrix::from_vec(vec![1.0; 40 * 2], 40, 2);
+        let d = Dataset::new(x, vec![1.0; 40]);
+        let p = make_cells(&d, &CellStrategy::RecursiveTree { max_size: 16 }, 5);
+        assert_partition(&p.cells, 40);
+    }
+}

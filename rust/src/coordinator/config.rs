@@ -1,0 +1,169 @@
+//! The configuration surface — mirrors liquidSVM's documented options
+//! (Appendix C: `threads`, `grid_choice`, `adaptivity_control`,
+//! `voronoi`, plus folds/kernel/display) with this port's additions
+//! (Gram back-end selection, artifact directory).
+
+use crate::cells::CellStrategy;
+use crate::cv::SelectMethod;
+use crate::data::folds::FoldKind;
+use crate::data::scale::ScaleKind;
+use crate::kernel::KernelKind;
+use crate::solver::SolverParams;
+
+/// Which Gram back-end to use (the SIMD/accelerator ladder).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// naive scalar loops (the "SSE2" rung of Tables 14–17)
+    Scalar,
+    /// blocked/unrolled CPU loops (the "AVX2" rung) — default
+    Blocked,
+    /// AOT Pallas/XLA artifacts via PJRT (the CUDA/TPU rung)
+    Xla,
+}
+
+/// Global configuration (liquidSVM's `Config` in the bindings).
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// verbosity 0..2 (liquidSVM `display`)
+    pub display: u8,
+    /// worker threads for the (cell × task) scheduler (`threads`)
+    pub threads: usize,
+    /// 0 ⇒ 10×10 default grid, 1 ⇒ 15×15, 2 ⇒ 20×20 (`grid_choice`);
+    /// `use_libsvm_grid` overrides with the 10×11 libsvm grid
+    pub grid_choice: u8,
+    pub use_libsvm_grid: bool,
+    /// 0/1/2 (`adaptivity_control`)
+    pub adaptivity_control: u8,
+    /// data decomposition (`voronoi` + cell size)
+    pub cells: CellStrategy,
+    /// k of k-fold CV
+    pub folds: usize,
+    pub fold_kind: FoldKind,
+    pub kernel: KernelKind,
+    pub scale: Option<ScaleKind>,
+    pub select: SelectMethod,
+    pub solver_params: SolverParams,
+    pub backend: BackendChoice,
+    /// artifact directory for the Xla backend
+    pub artifact_dir: Option<std::path::PathBuf>,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            display: 0,
+            threads: 1,
+            grid_choice: 0,
+            use_libsvm_grid: false,
+            adaptivity_control: 0,
+            cells: CellStrategy::None,
+            folds: 5,
+            fold_kind: FoldKind::Stratified,
+            kernel: KernelKind::Gauss,
+            scale: Some(ScaleKind::MinMax),
+            select: SelectMethod::FoldAverage,
+            solver_params: SolverParams::default(),
+            backend: BackendChoice::Blocked,
+            artifact_dir: None,
+            seed: 42,
+        }
+    }
+}
+
+impl Config {
+    /// Builder-style helpers mirroring `Config().display(1).threads(2)`
+    /// from the Java/Python bindings.
+    pub fn display(mut self, v: u8) -> Self {
+        self.display = v;
+        self
+    }
+
+    pub fn threads(mut self, v: usize) -> Self {
+        self.threads = v.max(1);
+        self
+    }
+
+    pub fn grid_choice(mut self, v: u8) -> Self {
+        self.grid_choice = v;
+        self
+    }
+
+    pub fn libsvm_grid(mut self, v: bool) -> Self {
+        self.use_libsvm_grid = v;
+        self
+    }
+
+    pub fn adaptivity(mut self, v: u8) -> Self {
+        self.adaptivity_control = v;
+        self
+    }
+
+    pub fn voronoi(mut self, strategy: CellStrategy) -> Self {
+        self.cells = strategy;
+        self
+    }
+
+    pub fn folds(mut self, k: usize) -> Self {
+        self.folds = k.max(2);
+        self
+    }
+
+    pub fn backend(mut self, b: BackendChoice) -> Self {
+        self.backend = b;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Parse the Appendix-C style `voronoi=c(5,1000)` CLI syntax:
+    /// "5" / "6" / "5,1000" / "6,1000" / "0" (none) / "chunks,500".
+    pub fn parse_voronoi(text: &str) -> Option<CellStrategy> {
+        let parts: Vec<&str> = text.split(',').map(str::trim).collect();
+        let size = parts.get(1).and_then(|s| s.parse::<usize>().ok()).unwrap_or(2000);
+        match parts[0] {
+            "0" => Some(CellStrategy::None),
+            "chunks" => Some(CellStrategy::RandomChunks { size }),
+            "1" | "voronoi" => Some(CellStrategy::Voronoi { size }),
+            "5" => Some(CellStrategy::OverlappingVoronoi { size, overlap: 0.25 }),
+            "6" => Some(CellStrategy::RecursiveTree { max_size: size }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let c = Config::default().display(1).threads(2).grid_choice(1).adaptivity(2);
+        assert_eq!(c.display, 1);
+        assert_eq!(c.threads, 2);
+        assert_eq!(c.grid_choice, 1);
+        assert_eq!(c.adaptivity_control, 2);
+    }
+
+    #[test]
+    fn voronoi_syntax() {
+        assert_eq!(Config::parse_voronoi("0"), Some(CellStrategy::None));
+        assert_eq!(
+            Config::parse_voronoi("6,1000"),
+            Some(CellStrategy::RecursiveTree { max_size: 1000 })
+        );
+        assert!(matches!(
+            Config::parse_voronoi("5").unwrap(),
+            CellStrategy::OverlappingVoronoi { size: 2000, .. }
+        ));
+        assert_eq!(Config::parse_voronoi("bogus"), None);
+    }
+
+    #[test]
+    fn threads_floor_at_one() {
+        assert_eq!(Config::default().threads(0).threads, 1);
+    }
+}

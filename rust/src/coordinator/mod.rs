@@ -1,0 +1,12 @@
+//! L3 coordinator: configuration, the (cell × task) scheduler, the
+//! train/select/test pipeline, and the pre-defined learning scenarios.
+
+pub mod config;
+pub mod model;
+pub mod npl;
+pub mod persist;
+pub mod pool;
+pub mod scenarios;
+
+pub use config::{BackendChoice, Config};
+pub use model::{train, SvmModel, TestResult, TrainedUnit};

@@ -1,0 +1,382 @@
+//! The train → select → test pipeline (paper §2: "an application cycle
+//! is divided into a training phase, ... a selection phase, ... and a
+//! test phase").  This module is the top of the L3 coordinator: it
+//! crosses cells with tasks, schedules the per-working-set CV runs on
+//! the thread pool, and owns the trained model used by the test phase.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::cells::{make_cells, CellPartition, CellRouter};
+use crate::coordinator::config::{BackendChoice, Config};
+use crate::coordinator::pool::run_parallel;
+use crate::cv::{run_cv, predict_average, CvConfig, CvResult, Grid};
+use crate::data::dataset::Dataset;
+use crate::data::scale::Scaler;
+use crate::kernel::GramBackend;
+use crate::metrics::{multiclass_error, Confusion, Loss};
+use crate::runtime::{default_artifact_dir, XlaRuntime};
+use crate::tasks::{combine_predictions, create_tasks_for_classes, TaskSpec};
+
+/// One trained (cell × task) unit: the CV outcome plus the data the
+/// fold models expand over.
+#[derive(Clone, Debug)]
+pub struct TrainedUnit {
+    pub cell: usize,
+    pub task: usize,
+    /// the task's working set inside the cell (already label-transformed)
+    pub data: Dataset,
+    pub cv: Option<CvResult>,
+}
+
+/// A trained liquidSVM model.
+pub struct SvmModel {
+    pub config: Config,
+    pub spec: TaskSpec,
+    pub scaler: Option<Scaler>,
+    pub partition: CellPartition,
+    /// global class list (classification) — combination order
+    pub classes: Vec<f32>,
+    pub n_tasks: usize,
+    pub units: Vec<TrainedUnit>,
+    pub train_time: Duration,
+    /// total grid points solved across all units (perf accounting)
+    pub points_evaluated: usize,
+    backend: GramBackend,
+}
+
+/// Resolve the configured backend into a concrete GramBackend.
+pub fn make_backend(cfg: &Config) -> Result<GramBackend> {
+    Ok(match cfg.backend {
+        BackendChoice::Scalar => GramBackend::Scalar,
+        BackendChoice::Blocked => GramBackend::Blocked,
+        BackendChoice::Xla => {
+            let dir = cfg.artifact_dir.clone().unwrap_or_else(default_artifact_dir);
+            GramBackend::Xla(Arc::new(XlaRuntime::open(dir)?))
+        }
+    })
+}
+
+/// Train a model for a task spec under a config — the whole training +
+/// selection phase.
+pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> {
+    let t0 = Instant::now();
+    if data.is_empty() {
+        return Err(anyhow!("empty training set"));
+    }
+    let backend = make_backend(cfg)?;
+
+    // scaling fitted on the training set only (paper §B.1)
+    let mut scaled = data.clone();
+    let scaler = cfg.scale.map(|kind| {
+        let s = Scaler::fit(&scaled.x, kind);
+        s.apply(&mut scaled.x);
+        s
+    });
+
+    let classes = scaled.classes();
+    let partition = make_cells(&scaled, &cfg.cells, cfg.seed);
+    let n_cells = partition.n_cells();
+
+    // build the (cell × task) working sets
+    let mut jobs: Vec<Box<dyn FnOnce() -> TrainedUnit + Send>> = Vec::new();
+    let mut n_tasks = 0usize;
+    for (c, cell_idx) in partition.cells.iter().enumerate() {
+        let cell_data = scaled.subset(cell_idx);
+        let tasks = create_tasks_for_classes(&cell_data, spec, &classes);
+        n_tasks = n_tasks.max(tasks.len());
+        for (t, task) in tasks.into_iter().enumerate() {
+            let ws = Dataset::new(cell_data.x.select_rows(&task.indices), task.y.clone());
+            let cfg = cfg.clone();
+            let backend = backend.clone();
+            let seed = cfg.seed ^ ((c as u64) << 20) ^ t as u64;
+            jobs.push(Box::new(move || {
+                let cv = train_unit(&ws, task.solver, task.val_loss, &cfg, backend, seed);
+                TrainedUnit { cell: c, task: t, data: ws, cv }
+            }));
+        }
+    }
+    if cfg.display > 0 {
+        eprintln!(
+            "[train] {} cells x {} tasks = {} working sets ({} threads)",
+            n_cells,
+            n_tasks,
+            jobs.len(),
+            cfg.threads
+        );
+    }
+    let units = run_parallel(cfg.threads, jobs);
+    let points_evaluated = units
+        .iter()
+        .filter_map(|u| u.cv.as_ref().map(|c| c.points_evaluated))
+        .sum();
+
+    let model = SvmModel {
+        config: cfg.clone(),
+        spec: spec.clone(),
+        scaler,
+        partition,
+        classes,
+        n_tasks,
+        units,
+        train_time: t0.elapsed(),
+        points_evaluated,
+        backend,
+    };
+    if cfg.display > 0 {
+        eprintln!(
+            "[train] done in {:.2}s ({} grid points solved)",
+            model.train_time.as_secs_f64(),
+            model.points_evaluated
+        );
+    }
+    Ok(model)
+}
+
+/// CV on one working set, with degenerate-size fallbacks:
+/// * too few samples for k folds ⇒ shrink k;
+/// * single-class / tiny sets ⇒ no model (constant-zero predictor).
+fn train_unit(
+    ws: &Dataset,
+    solver: crate::solver::SolverKind,
+    val_loss: Loss,
+    cfg: &Config,
+    backend: GramBackend,
+    seed: u64,
+) -> Option<CvResult> {
+    let n = ws.len();
+    if n < 8 {
+        return None;
+    }
+    let folds = cfg.folds.min(n / 2).max(2);
+    let n_fold = n - n / folds;
+    let grid = if cfg.use_libsvm_grid {
+        Grid::libsvm(n_fold)
+    } else {
+        Grid::default_grid(cfg.grid_choice, n_fold, ws.dim())
+    };
+    let mut cv_cfg = CvConfig::new(grid, solver, val_loss);
+    cv_cfg.folds = folds;
+    cv_cfg.fold_kind = cfg.fold_kind;
+    cv_cfg.kernel = cfg.kernel;
+    cv_cfg.adaptivity = cfg.adaptivity_control;
+    cv_cfg.select = cfg.select;
+    cv_cfg.params = cfg.solver_params;
+    cv_cfg.backend = backend;
+    cv_cfg.seed = seed;
+    Some(run_cv(ws, &cv_cfg))
+}
+
+/// Test-phase result.
+#[derive(Clone, Debug)]
+pub struct TestResult {
+    /// combined predictions (labels for classification, values for
+    /// regression; per-task curves are in `task_scores`)
+    pub predictions: Vec<f32>,
+    /// `task_scores[t][i]` = raw decision value of task t on sample i
+    pub task_scores: Vec<Vec<f32>>,
+    /// scenario-appropriate headline error (0-1 error / MSE / pinball)
+    pub error: f32,
+    pub test_time: Duration,
+}
+
+impl SvmModel {
+    /// Reassemble a model from persisted parts (see
+    /// [`crate::coordinator::persist`]).  The backend is resolved from
+    /// `cfg` (it is a runtime choice, not part of the solution).
+    pub fn from_parts(
+        cfg: Config,
+        spec: TaskSpec,
+        scaler: Option<Scaler>,
+        partition: CellPartition,
+        classes: Vec<f32>,
+        n_tasks: usize,
+        units: Vec<TrainedUnit>,
+    ) -> anyhow::Result<SvmModel> {
+        let backend = make_backend(&cfg)?;
+        let points_evaluated =
+            units.iter().filter_map(|u| u.cv.as_ref().map(|c| c.points_evaluated)).sum();
+        Ok(SvmModel {
+            config: cfg,
+            spec,
+            scaler,
+            partition,
+            classes,
+            n_tasks,
+            units,
+            train_time: Duration::ZERO,
+            points_evaluated,
+            backend,
+        })
+    }
+
+    /// Decision values of every task on `x` (unscaled input).
+    pub fn decision_values(&self, x: &crate::data::matrix::Matrix) -> Vec<Vec<f32>> {
+        let xs = match &self.scaler {
+            Some(s) => s.transform(x),
+            None => x.clone(),
+        };
+        let m = xs.rows();
+        let mut scores = vec![vec![0.0f32; m]; self.n_tasks];
+        let mut counts = vec![vec![0u32; m]; self.n_tasks];
+
+        // group test points by cell to batch kernel evaluations
+        let broadcast = matches!(self.partition.router, CellRouter::Broadcast(_));
+        let mut routed: Vec<Vec<usize>> = vec![Vec::new(); self.partition.n_cells()];
+        for i in 0..m {
+            for c in self.partition.route(xs.row(i)) {
+                routed[c].push(i);
+            }
+        }
+
+        for unit in &self.units {
+            let Some(cv) = &unit.cv else { continue };
+            let pts = &routed[unit.cell];
+            if pts.is_empty() || unit.data.is_empty() {
+                continue;
+            }
+            let sub = xs.select_rows(pts);
+            let preds = predict_average(
+                &cv.models,
+                &unit.data,
+                &sub,
+                cv.best_gamma,
+                self.config.kernel,
+                &self.backend,
+            );
+            for (j, &i) in pts.iter().enumerate() {
+                scores[unit.task][i] += preds[j];
+                counts[unit.task][i] += 1;
+            }
+        }
+        // broadcast routing (random chunks) averages the cell ensemble
+        if broadcast {
+            for t in 0..self.n_tasks {
+                for i in 0..m {
+                    if counts[t][i] > 1 {
+                        scores[t][i] /= counts[t][i] as f32;
+                    }
+                }
+            }
+        }
+        scores
+    }
+
+    /// Predict combined outputs for raw inputs.
+    pub fn predict(&self, x: &crate::data::matrix::Matrix) -> Vec<f32> {
+        let scores = self.decision_values(x);
+        combine_predictions(&self.spec, &self.classes, &scores)
+    }
+
+    /// Full test phase: predictions + scenario error.
+    pub fn test(&self, test: &Dataset) -> TestResult {
+        let t0 = Instant::now();
+        let task_scores = self.decision_values(&test.x);
+        let predictions = combine_predictions(&self.spec, &self.classes, &task_scores);
+        let error = match &self.spec {
+            TaskSpec::Binary { .. } | TaskSpec::NeymanPearson { .. } => {
+                Confusion::from_scores(&test.y, &task_scores[0]).error()
+            }
+            TaskSpec::MultiClassOvA | TaskSpec::MultiClassOvALs | TaskSpec::MultiClassAvA => {
+                multiclass_error(&test.y, &predictions)
+            }
+            TaskSpec::LeastSquares => Loss::LeastSquares.mean(&test.y, &predictions),
+            TaskSpec::MultiQuantile { taus } => {
+                // mean pinball across levels
+                let mut s = 0.0;
+                for (t, &tau) in taus.iter().enumerate() {
+                    s += Loss::Pinball { tau }.mean(&test.y, &task_scores[t]);
+                }
+                s / taus.len().max(1) as f32
+            }
+            TaskSpec::MultiExpectile { taus } => {
+                let mut s = 0.0;
+                for (t, &tau) in taus.iter().enumerate() {
+                    s += Loss::Expectile { tau }.mean(&test.y, &task_scores[t]);
+                }
+                s / taus.len().max(1) as f32
+            }
+        };
+        TestResult { predictions, task_scores, error, test_time: t0.elapsed() }
+    }
+
+    /// Selected hyper-parameters of every unit (for inspection/tests).
+    pub fn selected_params(&self) -> Vec<(usize, usize, f32, f32)> {
+        self.units
+            .iter()
+            .filter_map(|u| u.cv.as_ref().map(|c| (u.cell, u.task, c.best_gamma, c.best_lambda)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::CellStrategy;
+    use crate::data::synth;
+
+    #[test]
+    fn binary_pipeline_end_to_end() {
+        let d = synth::banana_binary(300, 1);
+        let cfg = Config::default().folds(3);
+        let m = train(&d, &TaskSpec::Binary { w: 0.5 }, &cfg).unwrap();
+        let test = synth::banana_binary(200, 2);
+        let res = m.test(&test);
+        // binary banana (arcs vs blobs) is a hard boundary at n=300
+        assert!(res.error < 0.25, "banana error {}", res.error);
+    }
+
+    #[test]
+    fn multiclass_ova_pipeline() {
+        let tt = synth::banana_mc(300, 150, 3);
+        let cfg = Config::default().folds(3);
+        let m = train(&tt.train, &TaskSpec::MultiClassOvA, &cfg).unwrap();
+        assert_eq!(m.n_tasks, 4);
+        let res = m.test(&tt.test);
+        assert!(res.error < 0.2, "banana-mc error {}", res.error);
+    }
+
+    #[test]
+    fn cells_pipeline_matches_single_cell_quality() {
+        let d = synth::by_name("cod-rna", 900, 4).unwrap().split(600, 9);
+        let base = train(&d.train, &TaskSpec::Binary { w: 0.5 }, &Config::default().folds(3))
+            .unwrap()
+            .test(&d.test);
+        let cells_cfg = Config::default()
+            .folds(3)
+            .voronoi(CellStrategy::RecursiveTree { max_size: 200 });
+        let cells = train(&d.train, &TaskSpec::Binary { w: 0.5 }, &cells_cfg)
+            .unwrap()
+            .test(&d.test);
+        assert!(cells.error <= base.error + 0.08, "{} vs {}", cells.error, base.error);
+    }
+
+    #[test]
+    fn quantile_pipeline_orders_levels() {
+        let d = synth::sinc_hetero(250, 5);
+        let cfg = Config::default().folds(3);
+        let spec = TaskSpec::MultiQuantile { taus: vec![0.1, 0.9] };
+        let m = train(&d, &spec, &cfg).unwrap();
+        let test = synth::sinc_hetero(120, 6);
+        let res = m.test(&test);
+        let gap: f32 = res.task_scores[1]
+            .iter()
+            .zip(&res.task_scores[0])
+            .map(|(hi, lo)| hi - lo)
+            .sum::<f32>()
+            / 120.0;
+        assert!(gap > 0.0, "quantile curves crossed on average: {gap}");
+    }
+
+    #[test]
+    fn tiny_cells_fall_back_gracefully() {
+        let d = synth::banana_binary(60, 7);
+        let cfg = Config::default().folds(5).voronoi(CellStrategy::Voronoi { size: 10 });
+        let m = train(&d, &TaskSpec::Binary { w: 0.5 }, &cfg).unwrap();
+        // must not panic; prediction still runs
+        let preds = m.predict(&d.x);
+        assert_eq!(preds.len(), 60);
+    }
+}

@@ -1,0 +1,77 @@
+//! Neyman-Pearson task selection: after an `npl_svm`/`roc_svm` sweep,
+//! pick the weighted machine that satisfies the false-alarm constraint
+//! (paper §2: "classification with a constraint on the false alarm
+//! rate").
+
+use crate::metrics::Confusion;
+
+/// Per-task (false-alarm, detection) operating points from decision
+/// values on labeled data.
+pub fn operating_points(y: &[f32], task_scores: &[Vec<f32>]) -> Vec<(f32, f32)> {
+    task_scores
+        .iter()
+        .map(|scores| {
+            let c = Confusion::from_scores(y, scores);
+            (c.false_alarm_rate(), c.detection_rate())
+        })
+        .collect()
+}
+
+/// Index of the task with the best detection rate among those whose
+/// false-alarm rate is ≤ `alpha`; falls back to the lowest-false-alarm
+/// task if none satisfies the constraint.
+pub fn select_npl_task(y: &[f32], task_scores: &[Vec<f32>], alpha: f32) -> usize {
+    let pts = operating_points(y, task_scores);
+    let mut feasible: Vec<(usize, f32)> = pts
+        .iter()
+        .enumerate()
+        .filter(|(_, &(fa, _))| fa <= alpha)
+        .map(|(i, &(_, det))| (i, det))
+        .collect();
+    if let Some(&(best, _)) = feasible
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    {
+        feasible.sort_by_key(|&(i, _)| i);
+        return best;
+    }
+    // infeasible everywhere: minimize the violation
+    pts.iter()
+        .enumerate()
+        .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_highest_detection_under_constraint() {
+        // y: 2 negatives, 2 positives
+        let y = vec![-1.0, -1.0, 1.0, 1.0];
+        let scores = vec![
+            vec![1.0, 1.0, 1.0, 1.0],   // fa=1.0, det=1.0
+            vec![-1.0, 1.0, 1.0, 1.0],  // fa=0.5, det=1.0
+            vec![-1.0, -1.0, 1.0, -1.0] // fa=0.0, det=0.5
+        ];
+        assert_eq!(select_npl_task(&y, &scores, 0.6), 1);
+        assert_eq!(select_npl_task(&y, &scores, 0.1), 2);
+    }
+
+    #[test]
+    fn infeasible_falls_back_to_min_false_alarm() {
+        let y = vec![-1.0, 1.0];
+        let scores = vec![vec![1.0, 1.0], vec![1.0, -1.0]];
+        // both have fa=1.0 > alpha: pick the first minimal
+        assert_eq!(select_npl_task(&y, &scores, 0.0), 0);
+    }
+
+    #[test]
+    fn operating_points_shape() {
+        let y = vec![-1.0, 1.0];
+        let pts = operating_points(&y, &[vec![-1.0, 1.0]]);
+        assert_eq!(pts, vec![(0.0, 1.0)]);
+    }
+}

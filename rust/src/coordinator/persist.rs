@@ -1,0 +1,385 @@
+//! Model persistence — liquidSVM writes trained solutions to `.sol` /
+//! `.fsol` files so the test phase can run in a separate process
+//! (that's how its CLI and Spark workers exchange models).  This port
+//! uses a versioned, line-oriented text format (no serde in the
+//! offline registry) that round-trips the full [`SvmModel`]:
+//! config essentials, scaler, cell partition + router, class list,
+//! and every (cell × task) unit with its fold models.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cells::{CellPartition, CellRouter, TreeNode};
+use crate::coordinator::config::Config;
+use crate::coordinator::model::{SvmModel, TrainedUnit};
+use crate::cv::{CvResult, FoldModel};
+use crate::data::dataset::Dataset;
+use crate::data::matrix::Matrix;
+use crate::data::scale::Scaler;
+use crate::tasks::TaskSpec;
+
+const MAGIC: &str = "liquidsvm-sol v1";
+
+/// Serialize a trained model to the `.sol` text format.
+pub fn save_model(model: &SvmModel, path: &Path) -> Result<()> {
+    let mut s = String::new();
+    writeln!(s, "{MAGIC}")?;
+    writeln!(s, "spec {}", spec_tag(&model.spec))?;
+    writeln!(s, "kernel {:?}", model.config.kernel)?;
+    writeln!(s, "classes {}", join_f32(&model.classes))?;
+    writeln!(s, "n_tasks {}", model.n_tasks)?;
+
+    match &model.scaler {
+        Some(sc) => {
+            let (shift, scale) = scaler_parts(sc);
+            writeln!(s, "scaler {} {}", join_f32(&shift), join_f32(&scale))?;
+        }
+        None => writeln!(s, "scaler none")?,
+    }
+
+    write_router(&mut s, &model.partition.router)?;
+    writeln!(s, "cells {}", model.partition.cells.len())?;
+    for cell in &model.partition.cells {
+        writeln!(s, "cell {}", join_usize(cell))?;
+    }
+
+    writeln!(s, "units {}", model.units.len())?;
+    for u in &model.units {
+        writeln!(s, "unit {} {} {}", u.cell, u.task, u.data.dim())?;
+        writeln!(s, "x {}", join_f32(u.data.x.as_slice()))?;
+        writeln!(s, "y {}", join_f32(&u.data.y))?;
+        match &u.cv {
+            Some(cv) => {
+                writeln!(s, "cv {} {} {}", cv.best_gamma, cv.best_lambda, cv.models.len())?;
+                for fm in &cv.models {
+                    writeln!(s, "fold {}", join_usize(&fm.train_idx))?;
+                    writeln!(s, "coef {}", join_f32(&fm.coef))?;
+                }
+            }
+            None => writeln!(s, "cv none")?,
+        }
+    }
+    std::fs::write(path, s).with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+/// Load a model saved by [`save_model`].  `config` supplies runtime
+/// choices not stored in the file (backend, threads, display).
+pub fn load_model(path: &Path, config: &Config) -> Result<SvmModel> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let mut lines = text.lines();
+    macro_rules! next {
+        () => {
+            lines.next().ok_or_else(|| anyhow!("truncated .sol file"))
+        };
+    }
+
+    if next!()? != MAGIC {
+        bail!("not a {MAGIC} file");
+    }
+    let spec = parse_spec(field(next!()?, "spec")?)?;
+    let kernel = match field(next!()?, "kernel")? {
+        "Gauss" => crate::kernel::KernelKind::Gauss,
+        "Laplace" => crate::kernel::KernelKind::Laplace,
+        other => bail!("unknown kernel {other}"),
+    };
+    let classes = parse_f32s(field(next!()?, "classes")?)?;
+    let n_tasks: usize = field(next!()?, "n_tasks")?.parse()?;
+
+    let scaler_line = next!()?;
+    let scaler = if scaler_line == "scaler none" {
+        None
+    } else {
+        let rest = field(scaler_line, "scaler")?;
+        let vals = parse_f32s(rest)?;
+        if vals.len() % 2 != 0 {
+            bail!("scaler line malformed");
+        }
+        let d = vals.len() / 2;
+        Some(Scaler::from_parts(vals[..d].to_vec(), vals[d..].to_vec()))
+    };
+
+    let (router, mut lines_used) = read_router(next!()?, &mut lines)?;
+    let _ = &mut lines_used;
+    let n_cells: usize = field(next!()?, "cells")?.parse()?;
+    let mut cells = Vec::with_capacity(n_cells);
+    for _ in 0..n_cells {
+        cells.push(parse_usizes(field(next!()?, "cell")?)?);
+    }
+    let partition = CellPartition { cells, router };
+
+    let n_units: usize = field(next!()?, "units")?.parse()?;
+    let mut units = Vec::with_capacity(n_units);
+    for _ in 0..n_units {
+        let head = field(next!()?, "unit")?;
+        let parts: Vec<usize> = head
+            .split_whitespace()
+            .map(|t| t.parse().map_err(|_| anyhow!("bad unit header")))
+            .collect::<Result<_>>()?;
+        let [cell, task, dim] = parts[..] else { bail!("unit header arity") };
+        let x = parse_f32s(field(next!()?, "x")?)?;
+        let y = parse_f32s(field(next!()?, "y")?)?;
+        let rows = y.len();
+        if x.len() != rows * dim {
+            bail!("unit data shape mismatch");
+        }
+        let data = Dataset::new(Matrix::from_vec(x, rows, dim), y);
+        let cv_line = next!()?;
+        let cv = if cv_line == "cv none" {
+            None
+        } else {
+            let head = field(cv_line, "cv")?;
+            let toks: Vec<&str> = head.split_whitespace().collect();
+            if toks.len() != 3 {
+                bail!("cv header arity");
+            }
+            let best_gamma: f32 = toks[0].parse()?;
+            let best_lambda: f32 = toks[1].parse()?;
+            let n_models: usize = toks[2].parse()?;
+            let mut models = Vec::with_capacity(n_models);
+            for _ in 0..n_models {
+                let train_idx = parse_usizes(field(next!()?, "fold")?)?;
+                let coef = parse_f32s(field(next!()?, "coef")?)?;
+                if train_idx.len() != coef.len() {
+                    bail!("fold model arity mismatch");
+                }
+                models.push(FoldModel { train_idx, coef });
+            }
+            Some(CvResult {
+                best_gamma,
+                best_lambda,
+                best_val_loss: f32::NAN, // not needed at test time
+                val_matrix: Vec::new(),
+                models,
+                total_iterations: 0,
+                points_evaluated: 0,
+            })
+        };
+        units.push(TrainedUnit { cell, task, data, cv });
+    }
+
+    let mut cfg = config.clone();
+    cfg.kernel = kernel;
+    SvmModel::from_parts(cfg, spec, scaler, partition, classes, n_tasks, units)
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn spec_tag(spec: &TaskSpec) -> String {
+    match spec {
+        TaskSpec::Binary { w } => format!("binary:{w}"),
+        TaskSpec::MultiClassOvA => "ova".into(),
+        TaskSpec::MultiClassAvA => "ava".into(),
+        TaskSpec::MultiClassOvALs => "ova-ls".into(),
+        TaskSpec::LeastSquares => "ls".into(),
+        TaskSpec::NeymanPearson { weights } => format!("npl:{}", join_f32(weights)),
+        TaskSpec::MultiQuantile { taus } => format!("qt:{}", join_f32(taus)),
+        TaskSpec::MultiExpectile { taus } => format!("ex:{}", join_f32(taus)),
+    }
+}
+
+fn parse_spec(tag: &str) -> Result<TaskSpec> {
+    let (kind, rest) = tag.split_once(':').unwrap_or((tag, ""));
+    Ok(match kind {
+        "binary" => TaskSpec::Binary { w: rest.parse()? },
+        "ova" => TaskSpec::MultiClassOvA,
+        "ava" => TaskSpec::MultiClassAvA,
+        "ova-ls" => TaskSpec::MultiClassOvALs,
+        "ls" => TaskSpec::LeastSquares,
+        "npl" => TaskSpec::NeymanPearson { weights: parse_f32s(rest)? },
+        "qt" => TaskSpec::MultiQuantile { taus: parse_f32s(rest)? },
+        "ex" => TaskSpec::MultiExpectile { taus: parse_f32s(rest)? },
+        other => bail!("unknown spec tag {other}"),
+    })
+}
+
+fn write_router(s: &mut String, router: &CellRouter) -> Result<()> {
+    match router {
+        CellRouter::Single => writeln!(s, "router single")?,
+        CellRouter::Broadcast(k) => writeln!(s, "router broadcast {k}")?,
+        CellRouter::Centers(c) => {
+            writeln!(s, "router centers {} {}", c.rows(), c.cols())?;
+            writeln!(s, "{}", join_f32(c.as_slice()))?;
+        }
+        CellRouter::Tree(root) => {
+            let mut flat = String::new();
+            flatten_tree(root, &mut flat);
+            writeln!(s, "router tree {}", flat.trim())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_router<'a>(
+    first: &'a str,
+    lines: &mut std::str::Lines<'a>,
+) -> Result<(CellRouter, usize)> {
+    let rest = field(first, "router")?;
+    let mut toks = rest.split_whitespace();
+    match toks.next().ok_or_else(|| anyhow!("router kind missing"))? {
+        "single" => Ok((CellRouter::Single, 0)),
+        "broadcast" => {
+            let k: usize = toks.next().ok_or_else(|| anyhow!("broadcast k"))?.parse()?;
+            Ok((CellRouter::Broadcast(k), 0))
+        }
+        "centers" => {
+            let r: usize = toks.next().ok_or_else(|| anyhow!("rows"))?.parse()?;
+            let c: usize = toks.next().ok_or_else(|| anyhow!("cols"))?.parse()?;
+            let data = parse_f32s(lines.next().ok_or_else(|| anyhow!("centers data"))?)?;
+            if data.len() != r * c {
+                bail!("centers shape mismatch");
+            }
+            Ok((CellRouter::Centers(Matrix::from_vec(data, r, c)), 1))
+        }
+        "tree" => {
+            let toks: Vec<&str> = rest.split_whitespace().skip(1).collect();
+            let mut pos = 0usize;
+            let root = unflatten_tree(&toks, &mut pos)?;
+            Ok((CellRouter::Tree(Box::new(root)), 0))
+        }
+        other => bail!("unknown router {other}"),
+    }
+}
+
+/// Pre-order flatten: `L <cell>` / `S <dim> <threshold>`.
+fn flatten_tree(node: &TreeNode, out: &mut String) {
+    match node {
+        TreeNode::Leaf { cell } => {
+            let _ = write!(out, "L {cell} ");
+        }
+        TreeNode::Split { dim, threshold, left, right } => {
+            let _ = write!(out, "S {dim} {threshold} ");
+            flatten_tree(left, out);
+            flatten_tree(right, out);
+        }
+    }
+}
+
+fn unflatten_tree(toks: &[&str], pos: &mut usize) -> Result<TreeNode> {
+    let tag = toks.get(*pos).ok_or_else(|| anyhow!("tree truncated"))?;
+    *pos += 1;
+    match *tag {
+        "L" => {
+            let cell: usize = toks.get(*pos).ok_or_else(|| anyhow!("leaf cell"))?.parse()?;
+            *pos += 1;
+            Ok(TreeNode::Leaf { cell })
+        }
+        "S" => {
+            let dim: usize = toks.get(*pos).ok_or_else(|| anyhow!("split dim"))?.parse()?;
+            let threshold: f32 =
+                toks.get(*pos + 1).ok_or_else(|| anyhow!("split thr"))?.parse()?;
+            *pos += 2;
+            let left = unflatten_tree(toks, pos)?;
+            let right = unflatten_tree(toks, pos)?;
+            Ok(TreeNode::Split { dim, threshold, left: Box::new(left), right: Box::new(right) })
+        }
+        other => bail!("bad tree token {other}"),
+    }
+}
+
+fn field<'a>(line: &'a str, key: &str) -> Result<&'a str> {
+    line.strip_prefix(key)
+        .map(str::trim)
+        .ok_or_else(|| anyhow!("expected `{key} ...`, got `{line}`"))
+}
+
+fn join_f32(v: &[f32]) -> String {
+    v.iter().map(|x| format!("{x}")).collect::<Vec<_>>().join(" ")
+}
+
+fn join_usize(v: &[usize]) -> String {
+    v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(" ")
+}
+
+fn parse_f32s(s: &str) -> Result<Vec<f32>> {
+    s.split_whitespace()
+        .map(|t| t.parse().map_err(|_| anyhow!("bad f32 `{t}`")))
+        .collect()
+}
+
+fn parse_usizes(s: &str) -> Result<Vec<usize>> {
+    s.split_whitespace()
+        .map(|t| t.parse().map_err(|_| anyhow!("bad usize `{t}`")))
+        .collect()
+}
+
+/// Scaler internals access for persistence (kept here to avoid exposing
+/// raw fields in the scale module's public API surface).
+fn scaler_parts(s: &Scaler) -> (Vec<f32>, Vec<f32>) {
+    s.parts()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::CellStrategy;
+    use crate::data::synth;
+    use crate::prelude::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("lsvm-persist-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_binary_model_predictions_identical() {
+        let d = synth::banana_binary(200, 1);
+        let cfg = Config::default().folds(3);
+        let m = svm_binary(&d, 0.5, &cfg).unwrap();
+        let path = tmp("binary.sol");
+        save_model(&m, &path).unwrap();
+        let back = load_model(&path, &cfg).unwrap();
+        let test = synth::banana_binary(80, 2);
+        assert_eq!(m.predict(&test.x), back.predict(&test.x));
+    }
+
+    #[test]
+    fn roundtrip_multiclass_with_tree_cells() {
+        let tt = synth::banana_mc(300, 80, 3);
+        let cfg = Config::default()
+            .folds(3)
+            .voronoi(CellStrategy::RecursiveTree { max_size: 100 });
+        let m = mc_svm(&tt.train, &cfg).unwrap();
+        let path = tmp("mc.sol");
+        save_model(&m, &path).unwrap();
+        let back = load_model(&path, &cfg).unwrap();
+        assert_eq!(m.predict(&tt.test.x), back.predict(&tt.test.x));
+        assert_eq!(back.n_tasks, m.n_tasks);
+    }
+
+    #[test]
+    fn roundtrip_voronoi_centers_router() {
+        let d = synth::by_name("cod-rna", 400, 4).unwrap();
+        let cfg = Config::default().folds(3).voronoi(CellStrategy::Voronoi { size: 120 });
+        let m = svm_binary(&d, 0.5, &cfg).unwrap();
+        let path = tmp("vor.sol");
+        save_model(&m, &path).unwrap();
+        let back = load_model(&path, &cfg).unwrap();
+        let test = synth::by_name("cod-rna", 150, 5).unwrap();
+        assert_eq!(m.predict(&test.x), back.predict(&test.x));
+    }
+
+    #[test]
+    fn roundtrip_quantile_spec() {
+        let d = synth::sinc_hetero(150, 6);
+        let cfg = Config::default().folds(3);
+        let m = qt_svm(&d, &[0.25, 0.75], &cfg).unwrap();
+        let path = tmp("qt.sol");
+        save_model(&m, &path).unwrap();
+        let back = load_model(&path, &cfg).unwrap();
+        let test = synth::sinc_hetero(60, 7);
+        let a = m.decision_values(&test.x);
+        let b = back.decision_values(&test.x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage.sol");
+        std::fs::write(&path, "not a model").unwrap();
+        assert!(load_model(&path, &Config::default()).is_err());
+    }
+}

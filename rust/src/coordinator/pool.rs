@@ -1,0 +1,72 @@
+//! Minimal scoped thread pool for the (cell × task) work units — the
+//! liquidSVM `threads=` knob.  No external crates in this image, so
+//! this is a straight work-queue over `std::thread::scope`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `jobs` closures on `threads` workers; returns results in job
+/// order.  Falls back to a plain loop for a single thread (no spawn
+/// overhead — this is the common case in the paper's single-threaded
+/// benchmark columns).
+pub fn run_parallel<T, F>(threads: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if threads <= 1 || n <= 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    // hand each job exactly one slot; unsafe-free: split slots into
+    // per-job cells via Mutex-free claim over an index counter
+    let jobs: Vec<std::sync::Mutex<Option<F>>> =
+        jobs.into_iter().map(|j| std::sync::Mutex::new(Some(j))).collect();
+    let results: Vec<std::sync::Mutex<&mut Option<T>>> =
+        slots.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs[i].lock().unwrap().take().expect("job claimed twice");
+                let out = job();
+                **results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    drop(results);
+    slots.into_iter().map(|s| s.expect("worker died before finishing job")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<_> = (0..17).map(|i| move || i * 2).collect();
+        assert_eq!(run_parallel(4, jobs), (0..17).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let jobs: Vec<_> = (0..5).map(|i| move || i).collect();
+        assert_eq!(run_parallel(1, jobs), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn runs_all_jobs_with_more_threads_than_jobs() {
+        let jobs: Vec<_> = (0..3).map(|i| move || i + 100).collect();
+        assert_eq!(run_parallel(16, jobs), vec![100, 101, 102]);
+    }
+
+    #[test]
+    fn empty_jobs_ok() {
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![];
+        assert!(run_parallel(4, jobs).is_empty());
+    }
+}

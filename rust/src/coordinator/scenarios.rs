@@ -1,0 +1,126 @@
+//! Pre-defined learning scenarios — the simplified interface the paper
+//! advertises for all bindings (`mcSVM`, `lsSVM`, `qtSVM`, `exSVM`,
+//! `nplSVM`, `rocSVM`; §2 "User Interfaces and Pre-defined Learning
+//! Scenarios").  Each is a thin wrapper that picks the task spec and
+//! calls the pipeline.
+
+use anyhow::Result;
+
+use crate::coordinator::config::Config;
+use crate::coordinator::model::{train, SvmModel};
+use crate::data::dataset::Dataset;
+use crate::tasks::TaskSpec;
+
+/// (Weighted) binary classification.  `w = 0.5` is unweighted.
+pub fn svm_binary(data: &Dataset, w: f32, cfg: &Config) -> Result<SvmModel> {
+    train(data, &TaskSpec::Binary { w }, cfg)
+}
+
+/// Multiclass classification, AvA with hinge machines by default, OvA
+/// when `ova` is set (mirrors `mcSVM(..., mc_type=...)`).
+pub fn mc_svm_type(data: &Dataset, ova: bool, cfg: &Config) -> Result<SvmModel> {
+    let spec = if ova { TaskSpec::MultiClassOvA } else { TaskSpec::MultiClassAvA };
+    train(data, &spec, cfg)
+}
+
+/// Multiclass classification with the default decomposition (OvA — the
+/// combination the paper uses in its GURLS comparison).
+pub fn mc_svm(data: &Dataset, cfg: &Config) -> Result<SvmModel> {
+    mc_svm_type(data, true, cfg)
+}
+
+/// Least-squares regression (`lsSVM`).
+pub fn ls_svm(data: &Dataset, cfg: &Config) -> Result<SvmModel> {
+    train(data, &TaskSpec::LeastSquares, cfg)
+}
+
+/// Quantile regression at the given levels (`qtSVM`).
+pub fn qt_svm(data: &Dataset, taus: &[f32], cfg: &Config) -> Result<SvmModel> {
+    train(data, &TaskSpec::MultiQuantile { taus: taus.to_vec() }, cfg)
+}
+
+/// Expectile regression at the given levels (`exSVM`).
+pub fn ex_svm(data: &Dataset, taus: &[f32], cfg: &Config) -> Result<SvmModel> {
+    train(data, &TaskSpec::MultiExpectile { taus: taus.to_vec() }, cfg)
+}
+
+/// Neyman-Pearson-type classification: sweep class weights, then pick
+/// (at test time) the weight whose false-alarm rate stays below
+/// `alpha`.  Returns the model; use
+/// [`crate::coordinator::npl::select_npl_task`] on validation scores.
+pub fn npl_svm(data: &Dataset, alpha: f32, cfg: &Config) -> Result<SvmModel> {
+    let weights = npl_weight_grid(alpha);
+    train(data, &TaskSpec::NeymanPearson { weights }, cfg)
+}
+
+/// ROC-curve scenario: a dense sweep of weighted machines whose
+/// (false-alarm, detection) pairs trace the ROC front (`rocSVM`).
+pub fn roc_svm(data: &Dataset, n_points: usize, cfg: &Config) -> Result<SvmModel> {
+    let n = n_points.clamp(3, 19);
+    let weights: Vec<f32> = (1..=n).map(|i| i as f32 / (n + 1) as f32).collect();
+    train(data, &TaskSpec::NeymanPearson { weights }, cfg)
+}
+
+/// Weight grid bracketing the target false-alarm rate (liquidSVM uses
+/// a small grid around the NP constraint).
+pub fn npl_weight_grid(alpha: f32) -> Vec<f32> {
+    let base = (1.0 - alpha).clamp(0.55, 0.95);
+    vec![
+        (base - 0.15).clamp(0.5, 0.99),
+        (base - 0.05).clamp(0.5, 0.99),
+        base,
+        (base + 0.04).clamp(0.5, 0.99),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn cfg() -> Config {
+        Config::default().folds(3)
+    }
+
+    #[test]
+    fn mc_svm_banana_demo() {
+        // the README demo: mcSVM on banana-mc
+        let tt = synth::banana_mc(250, 120, 42);
+        let m = mc_svm(&tt.train, &cfg()).unwrap();
+        let res = m.test(&tt.test);
+        assert!(res.error < 0.25, "error {}", res.error);
+    }
+
+    #[test]
+    fn ava_has_pairwise_tasks() {
+        let tt = synth::banana_mc(200, 50, 1);
+        let m = mc_svm_type(&tt.train, false, &cfg()).unwrap();
+        assert_eq!(m.n_tasks, 6); // C(4,2)
+    }
+
+    #[test]
+    fn ls_svm_regression() {
+        let d = synth::sinc_hetero(200, 2);
+        let m = ls_svm(&d, &cfg()).unwrap();
+        let test = synth::sinc_hetero(100, 3);
+        let res = m.test(&test);
+        // variance of y is ~0.1-0.2; a fit must beat predicting 0
+        let var: f32 = test.y.iter().map(|v| v * v).sum::<f32>() / 100.0;
+        assert!(res.error < var, "mse {} vs var {}", res.error, var);
+    }
+
+    #[test]
+    fn npl_weight_grid_brackets() {
+        let g = npl_weight_grid(0.05);
+        assert_eq!(g.len(), 4);
+        assert!(g.windows(2).all(|w| w[0] <= w[1]));
+        assert!(g.iter().all(|&w| (0.5..1.0).contains(&w)));
+    }
+
+    #[test]
+    fn roc_svm_task_count() {
+        let d = synth::banana_binary(150, 5);
+        let m = roc_svm(&d, 5, &cfg()).unwrap();
+        assert_eq!(m.n_tasks, 5);
+    }
+}

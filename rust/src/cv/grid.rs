@@ -1,0 +1,126 @@
+//! Hyper-parameter grids (paper §4 + Appendix B/C).
+//!
+//! * the **libsvm grid**: the 10×11 grid from libsvm's tools/grid.py,
+//!   γ_lib ∈ {2³ … 2⁻¹⁵}, cost ∈ {2⁻⁵ … 2¹⁵}, converted into liquidSVM's
+//!   parameterization (γ = 1/√γ_lib, λ = 1/(2·cost·n));
+//! * the **default grids** (`grid_choice` 0/1/2): geometrically spaced
+//!   10×10 / 15×15 / 20×20 grids "where the endpoints are scaled to
+//!   accommodate the number of samples in every fold, the cell size,
+//!   and the dimension".
+
+/// A (γ, λ) candidate grid.  γ is in liquidSVM parameterization
+/// (`exp(-d²/γ²)`), λ is the regularization weight of eq. (1).
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub gammas: Vec<f32>,
+    pub lambdas: Vec<f32>,
+}
+
+impl Grid {
+    pub fn size(&self) -> usize {
+        self.gammas.len() * self.lambdas.len()
+    }
+
+    /// Geometric sequence from hi to lo (descending), `k` points.
+    pub fn geomspace_desc(hi: f32, lo: f32, k: usize) -> Vec<f32> {
+        assert!(hi > lo && lo > 0.0 && k >= 2);
+        let ratio = (lo / hi).powf(1.0 / (k - 1) as f32);
+        (0..k).map(|i| hi * ratio.powi(i as i32)).collect()
+    }
+
+    /// The libsvm 10×11 grid for a fold of `n_fold` training samples.
+    pub fn libsvm(n_fold: usize) -> Grid {
+        let gammas_lib: Vec<f32> =
+            [3i32, 1, -1, -3, -5, -7, -9, -11, -13, -15].iter().map(|&e| 2f32.powi(e)).collect();
+        let costs: Vec<f32> =
+            [-5i32, -3, -1, 1, 3, 5, 7, 9, 11, 13, 15].iter().map(|&e| 2f32.powi(e)).collect();
+        Grid {
+            // γ = 1/√γ_lib; ascending γ_lib ⇒ descending bandwidth —
+            // order by descending γ (wide kernels first) for warm starts
+            gammas: {
+                let mut g: Vec<f32> = gammas_lib.iter().map(|&gl| (1.0 / gl).sqrt()).collect();
+                g.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                g
+            },
+            // λ = 1/(2·C·n): descending λ (strong regularization first)
+            // so each solution warm-starts the next bigger box
+            lambdas: costs.iter().map(|&c| 1.0 / (2.0 * c * n_fold as f32)).collect(),
+        }
+    }
+
+    /// liquidSVM default geometric grid.  `grid_choice`: 0 ⇒ 10×10,
+    /// 1 ⇒ 15×15, 2 ⇒ 20×20 (Appendix C).  Endpoints are scaled by the
+    /// fold size `n_fold` and dimension `d` following the package's
+    /// heuristics: bandwidths span the data diameter down to the
+    /// nearest-neighbour scale n^(-1/d), costs span weak to strong
+    /// regularization proportionally to 1/n.
+    pub fn default_grid(grid_choice: u8, n_fold: usize, d: usize) -> Grid {
+        let k = match grid_choice {
+            0 => 10,
+            1 => 15,
+            2 => 20,
+            other => panic!("grid_choice {other} not in 0..=2"),
+        };
+        let n = n_fold.max(4) as f32;
+        let dd = d.max(1) as f32;
+        // data is scaled to ~unit box: diameter ~ √d
+        let gamma_max = 5.0 * dd.sqrt();
+        // nearest-neighbour spacing heuristic: n^(-1/d) of the diameter,
+        // floored so the grid stays sane in low dimensions
+        let gamma_min = (gamma_max * n.powf(-1.0 / dd.max(2.0))).max(gamma_max / 500.0);
+        let lambda_max = 10.0 / n;
+        let lambda_min = 1.0 / (5000.0 * n);
+        Grid {
+            gammas: Self::geomspace_desc(gamma_max, gamma_min, k),
+            lambdas: Self::geomspace_desc(lambda_max, lambda_min, k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn libsvm_grid_is_10x11() {
+        let g = Grid::libsvm(1000);
+        assert_eq!(g.gammas.len(), 10);
+        assert_eq!(g.lambdas.len(), 11);
+        assert_eq!(g.size(), 110);
+    }
+
+    #[test]
+    fn libsvm_gamma_conversion() {
+        let g = Grid::libsvm(100);
+        // γ_lib = 2^-15 is the smallest ⇒ γ = 2^7.5 is the largest
+        let max = g.gammas.first().unwrap();
+        assert!((max - 2f32.powf(7.5)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn grids_descend_for_warm_starts() {
+        for g in [Grid::libsvm(500), Grid::default_grid(0, 800, 10)] {
+            assert!(g.gammas.windows(2).all(|w| w[0] > w[1]));
+            assert!(g.lambdas.windows(2).all(|w| w[0] > w[1]));
+        }
+    }
+
+    #[test]
+    fn grid_choice_sizes() {
+        assert_eq!(Grid::default_grid(0, 1000, 5).size(), 100);
+        assert_eq!(Grid::default_grid(1, 1000, 5).size(), 225);
+        assert_eq!(Grid::default_grid(2, 1000, 5).size(), 400);
+    }
+
+    #[test]
+    fn endpoints_scale_with_n_and_d() {
+        let small = Grid::default_grid(0, 100, 4);
+        let big = Grid::default_grid(0, 10_000, 4);
+        // more samples ⇒ finer minimum bandwidth and smaller λ_max
+        assert!(big.gammas.last().unwrap() <= small.gammas.last().unwrap());
+        assert!(big.lambdas[0] < small.lambdas[0]);
+        let lo_d = Grid::default_grid(0, 1000, 2);
+        let hi_d = Grid::default_grid(0, 1000, 128);
+        assert!(hi_d.gammas[0] > lo_d.gammas[0]);
+    }
+}

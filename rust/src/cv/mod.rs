@@ -1,0 +1,364 @@
+//! The integrated cross-validation engine — the heart of liquidSVM's
+//! speed claim (paper §2 "Hyper-Parameter Selection").
+//!
+//! For each fold the engine computes ONE squared-distance matrix pair
+//! (train×train, val×train) and reuses it across the whole γ grid
+//! ([`crate::kernel::DistanceCache`]); within each γ it walks the λ
+//! grid from strong to weak regularization, warm-starting every solve
+//! from the previous solution.  This is why the integrated CV is an
+//! order of magnitude faster than wrapping a solver in grid loops
+//! (Table 1's "outer cv" column): the naive loop pays O(n²d) kernel
+//! work and a cold solver start at *every* grid point.
+//!
+//! `adaptivity_control` (Appendix C) prunes the grid after the first
+//! fold: only candidates whose fold-0 loss is within the best
+//! half/quarter are evaluated on the remaining folds.
+
+pub mod grid;
+
+pub use grid::Grid;
+
+use crate::data::dataset::Dataset;
+use crate::data::folds::{make_folds, FoldKind, Folds};
+use crate::kernel::{DistanceCache, GramBackend, KernelKind};
+use crate::metrics::Loss;
+use crate::solver::{solve, warm_vector, Solution, SolverKind, SolverParams};
+
+/// What to do after selecting (γ*, λ*).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectMethod {
+    /// keep the k fold models and average their decision values at test
+    /// time (liquidSVM's time-efficient default)
+    FoldAverage,
+    /// retrain one model on the full working set at (γ*, λ*)
+    RetrainOnFull,
+}
+
+/// Full CV configuration for one working set (cell × task).
+#[derive(Clone, Debug)]
+pub struct CvConfig {
+    pub folds: usize,
+    pub fold_kind: FoldKind,
+    pub grid: Grid,
+    pub val_loss: Loss,
+    pub solver: SolverKind,
+    pub kernel: KernelKind,
+    /// 0 = full grid, 1 = keep best 50% after fold 0, 2 = keep best 25%
+    pub adaptivity: u8,
+    pub select: SelectMethod,
+    pub params: SolverParams,
+    pub backend: GramBackend,
+    pub seed: u64,
+}
+
+impl CvConfig {
+    pub fn new(grid: Grid, solver: SolverKind, val_loss: Loss) -> Self {
+        CvConfig {
+            folds: 5,
+            fold_kind: FoldKind::Stratified,
+            grid,
+            val_loss,
+            solver,
+            kernel: KernelKind::Gauss,
+            adaptivity: 0,
+            select: SelectMethod::FoldAverage,
+            params: SolverParams::default(),
+            backend: GramBackend::default(),
+            seed: 0,
+        }
+    }
+}
+
+/// One trained fold model: expansion coefficients over its training
+/// subset (indices into the *working set* the CV ran on).
+#[derive(Clone, Debug)]
+pub struct FoldModel {
+    pub train_idx: Vec<usize>,
+    pub coef: Vec<f32>,
+}
+
+/// CV outcome for one working set.
+#[derive(Clone, Debug)]
+pub struct CvResult {
+    pub best_gamma: f32,
+    pub best_lambda: f32,
+    /// mean validation loss at the selected point
+    pub best_val_loss: f32,
+    /// `val[gi][li]` = mean validation loss (NaN where pruned)
+    pub val_matrix: Vec<Vec<f32>>,
+    pub models: Vec<FoldModel>,
+    /// total coordinate/CG iterations spent (for perf accounting)
+    pub total_iterations: usize,
+    /// grid points actually solved (≠ grid size under adaptivity)
+    pub points_evaluated: usize,
+}
+
+/// Run the integrated k-fold CV on a working set.
+pub fn run_cv(data: &Dataset, cfg: &CvConfig) -> CvResult {
+    let n = data.len();
+    assert!(n >= cfg.folds, "working set smaller than fold count");
+    let folds = make_folds(data, cfg.folds, effective_fold_kind(cfg, data), cfg.seed);
+    let (ng, nl) = (cfg.grid.gammas.len(), cfg.grid.lambdas.len());
+
+    let mut val_sum = vec![vec![0.0f32; nl]; ng];
+    let mut val_cnt = vec![vec![0usize; nl]; ng];
+    let mut active = vec![vec![true; nl]; ng];
+    let mut total_iterations = 0usize;
+    let mut points_evaluated = 0usize;
+
+    for f in 0..folds.k() {
+        let tr_idx = folds.train_indices(f);
+        let va_idx = folds.val_indices(f).to_vec();
+        let dtr = data.subset(&tr_idx);
+        let dva = data.subset(&va_idx);
+        // per-solve iteration budget scaled to the fold size: extreme
+        // grid corners (huge C) would otherwise burn 10-20x more
+        // iterations for solutions the selection phase discards anyway
+        // (liquidSVM bounds the inner solver the same way); measured:
+        // 5x CV speedup at identical selection + test error (§Perf)
+        let params = SolverParams {
+            max_iter: cfg.params.max_iter.min(4 * dtr.len().max(64)),
+            ..cfg.params
+        };
+
+        // ONE distance computation per fold, reused across all γ
+        let mut ktr = DistanceCache::new(&cfg.backend, &dtr.x, &dtr.x, cfg.kernel);
+        let mut kva = DistanceCache::new(&cfg.backend, &dva.x, &dtr.x, cfg.kernel);
+
+        for (gi, &gamma) in cfg.grid.gammas.iter().enumerate() {
+            if !active[gi].iter().any(|&a| a) {
+                continue;
+            }
+            let kt = ktr.gram(gamma).clone();
+            let mut warm: Option<Vec<f32>> = None;
+            let mut fold_solutions: Vec<Option<Solution>> = vec![None; nl];
+            for (li, &lambda) in cfg.grid.lambdas.iter().enumerate() {
+                if !active[gi][li] {
+                    // pruned points are contiguous tails in practice; a
+                    // cold gap costs more than it saves, so just skip
+                    continue;
+                }
+                let sol = solve(cfg.solver, &kt, &dtr.y, lambda, &params, warm.as_deref());
+                total_iterations += sol.iterations;
+                points_evaluated += 1;
+                warm = Some(warm_vector(cfg.solver, &sol, &dtr.y));
+                fold_solutions[li] = Some(sol);
+            }
+            let kv = kva.gram(gamma);
+            for (li, sol) in fold_solutions.iter().enumerate() {
+                if let Some(sol) = sol {
+                    let preds = sol.decision_values(kv);
+                    val_sum[gi][li] += cfg.val_loss.mean(&dva.y, &preds);
+                    val_cnt[gi][li] += 1;
+                }
+            }
+        }
+
+        // adaptive grid pruning after the first fold
+        if f == 0 && cfg.adaptivity > 0 {
+            prune_grid(&mut active, &val_sum, cfg.adaptivity);
+        }
+    }
+
+    // mean losses; pick best (first hit wins ties — grids descend, so
+    // that is the more strongly regularized model, liquidSVM's
+    // stability tie-break)
+    let mut val_matrix = vec![vec![f32::NAN; nl]; ng];
+    let mut best = (0usize, 0usize, f32::INFINITY);
+    for gi in 0..ng {
+        for li in 0..nl {
+            if val_cnt[gi][li] > 0 {
+                let m = val_sum[gi][li] / val_cnt[gi][li] as f32;
+                val_matrix[gi][li] = m;
+                if m < best.2 - 1e-9 {
+                    best = (gi, li, m);
+                }
+            }
+        }
+    }
+    let (bg, bl, bloss) = best;
+    let best_gamma = cfg.grid.gammas[bg];
+    let best_lambda = cfg.grid.lambdas[bl];
+
+    // final models at the selected point
+    let models = match cfg.select {
+        SelectMethod::FoldAverage => (0..folds.k())
+            .map(|f| train_fold_model(data, &folds, f, cfg, best_gamma, best_lambda))
+            .collect(),
+        SelectMethod::RetrainOnFull => {
+            let all: Vec<usize> = (0..n).collect();
+            let kt = cfg.backend.gram(&data.x, &data.x, best_gamma, cfg.kernel);
+            let sol = solve(cfg.solver, &kt, &data.y, best_lambda, &cfg.params, None);
+            vec![FoldModel { train_idx: all, coef: sol.coef }]
+        }
+    };
+
+    CvResult {
+        best_gamma,
+        best_lambda,
+        best_val_loss: bloss,
+        val_matrix,
+        models,
+        total_iterations,
+        points_evaluated,
+    }
+}
+
+/// Stratified folds only make sense for classification labels; fall
+/// back to random folds for regression-like targets.
+fn effective_fold_kind(cfg: &CvConfig, data: &Dataset) -> FoldKind {
+    if cfg.fold_kind == FoldKind::Stratified && data.classes().len() > 16 {
+        FoldKind::Random
+    } else {
+        cfg.fold_kind
+    }
+}
+
+fn train_fold_model(
+    data: &Dataset,
+    folds: &Folds,
+    f: usize,
+    cfg: &CvConfig,
+    gamma: f32,
+    lambda: f32,
+) -> FoldModel {
+    let tr_idx = folds.train_indices(f);
+    let dtr = data.subset(&tr_idx);
+    let kt = cfg.backend.gram(&dtr.x, &dtr.x, gamma, cfg.kernel);
+    // final models get a roomier budget than the selection sweeps
+    let params =
+        SolverParams { max_iter: cfg.params.max_iter.min(16 * dtr.len().max(64)), ..cfg.params };
+    let sol = solve(cfg.solver, &kt, &dtr.y, lambda, &params, None);
+    FoldModel { train_idx: tr_idx, coef: sol.coef }
+}
+
+/// Keep only grid points whose fold-0 loss is within the best
+/// 50% (adaptivity 1) / 25% (adaptivity 2) quantile.
+fn prune_grid(active: &mut [Vec<bool>], fold0: &[Vec<f32>], adaptivity: u8) {
+    let mut losses: Vec<f32> = fold0.iter().flatten().copied().collect();
+    losses.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let keep_frac = match adaptivity {
+        1 => 0.5,
+        _ => 0.25,
+    };
+    let cut_idx = ((losses.len() as f32 * keep_frac) as usize).clamp(1, losses.len() - 1);
+    let cutoff = losses[cut_idx];
+    for (gi, row) in active.iter_mut().enumerate() {
+        for (li, a) in row.iter_mut().enumerate() {
+            if fold0[gi][li] > cutoff {
+                *a = false;
+            }
+        }
+    }
+}
+
+/// Average the decision values of the fold models on test data — the
+/// default test-phase combination (paper §2: "how these k models are
+/// combined during the test phase").
+pub fn predict_average(
+    models: &[FoldModel],
+    train: &Dataset,
+    test_x: &crate::data::matrix::Matrix,
+    gamma: f32,
+    kernel: KernelKind,
+    backend: &GramBackend,
+) -> Vec<f32> {
+    let mut acc = vec![0.0f32; test_x.rows()];
+    for m in models {
+        let sv = train.x.select_rows(&m.train_idx);
+        let k = backend.gram(test_x, &sv, gamma, kernel);
+        let sol = Solution::from_coef(m.coef.clone(), 0.0, 0);
+        for (a, v) in acc.iter_mut().zip(sol.decision_values(&k)) {
+            *a += v;
+        }
+    }
+    let inv = 1.0 / models.len().max(1) as f32;
+    for a in &mut acc {
+        *a *= inv;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn small_cfg(n_fold: usize) -> CvConfig {
+        let mut cfg = CvConfig::new(
+            Grid::default_grid(0, n_fold, 2),
+            SolverKind::Hinge { w: 0.5 },
+            Loss::Classification,
+        );
+        cfg.folds = 3;
+        cfg
+    }
+
+    #[test]
+    fn cv_learns_banana() {
+        let d = synth::banana_binary(240, 7);
+        let cfg = small_cfg(160);
+        let res = run_cv(&d, &cfg);
+        assert!(res.best_val_loss < 0.25, "val loss {}", res.best_val_loss);
+        assert_eq!(res.models.len(), 3);
+        assert_eq!(res.points_evaluated, 3 * cfg.grid.size());
+    }
+
+    #[test]
+    fn adaptivity_prunes_points() {
+        let d = synth::banana_binary(200, 8);
+        let mut cfg = small_cfg(133);
+        cfg.adaptivity = 2;
+        let full = run_cv(&d, &small_cfg(133));
+        let pruned = run_cv(&d, &cfg);
+        assert!(pruned.points_evaluated < full.points_evaluated);
+        // pruning must not destroy accuracy
+        assert!(pruned.best_val_loss <= full.best_val_loss + 0.08);
+    }
+
+    #[test]
+    fn retrain_on_full_yields_one_model() {
+        let d = synth::banana_binary(150, 9);
+        let mut cfg = small_cfg(100);
+        cfg.select = SelectMethod::RetrainOnFull;
+        let res = run_cv(&d, &cfg);
+        assert_eq!(res.models.len(), 1);
+        assert_eq!(res.models[0].train_idx.len(), 150);
+    }
+
+    #[test]
+    fn val_matrix_has_means() {
+        let d = synth::banana_binary(120, 10);
+        let res = run_cv(&d, &small_cfg(80));
+        let finite = res.val_matrix.iter().flatten().filter(|v| v.is_finite()).count();
+        assert_eq!(finite, res.val_matrix.len() * res.val_matrix[0].len());
+    }
+
+    #[test]
+    fn fold_average_prediction_works() {
+        let d = synth::banana_binary(200, 11);
+        let cfg = small_cfg(133);
+        let res = run_cv(&d, &cfg);
+        let test = synth::banana_binary(100, 12);
+        let preds = predict_average(
+            &res.models, &d, &test.x, res.best_gamma, cfg.kernel, &cfg.backend,
+        );
+        let err = Loss::Classification.mean(&test.y, &preds);
+        assert!(err < 0.3, "test error {err}");
+    }
+
+    #[test]
+    fn quantile_cv_selects() {
+        let d = synth::sinc_hetero(150, 13);
+        let mut cfg = CvConfig::new(
+            Grid::default_grid(0, 100, 1),
+            SolverKind::Quantile { tau: 0.5 },
+            Loss::Pinball { tau: 0.5 },
+        );
+        cfg.folds = 3;
+        cfg.fold_kind = FoldKind::Random;
+        let res = run_cv(&d, &cfg);
+        assert!(res.best_val_loss.is_finite());
+        assert!(res.best_val_loss < 0.2, "pinball {}", res.best_val_loss);
+    }
+}

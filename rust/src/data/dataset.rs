@@ -1,0 +1,112 @@
+//! Labeled dataset container + train/test split bundles.
+
+use super::matrix::Matrix;
+
+/// A labeled sample set. Labels are `f32`: ±1 for binary classification,
+/// {0..k-1} (stored as floats) for multiclass, reals for regression —
+/// matching liquidSVM's untyped label column.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Matrix,
+    pub y: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(x: Matrix, y: Vec<f32>) -> Self {
+        assert_eq!(x.rows(), y.len(), "label/sample count mismatch");
+        Dataset { x, y }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Subset by row indices (order preserved).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+
+    /// Distinct labels in sorted order (exact float comparison, as
+    /// labels are small integers or quantile levels set by us).
+    pub fn classes(&self) -> Vec<f32> {
+        let mut c: Vec<f32> = Vec::new();
+        for &v in &self.y {
+            if !c.iter().any(|&u| u == v) {
+                c.push(v);
+            }
+        }
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        c
+    }
+
+    /// Indices of samples with the given label.
+    pub fn indices_of(&self, label: f32) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.y[i] == label).collect()
+    }
+
+    /// Deterministic split into train/test by shuffled indices.
+    pub fn split(&self, n_train: usize, seed: u64) -> TrainTest {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        let mut rng = super::rng::Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let n_train = n_train.min(self.len());
+        TrainTest {
+            train: self.subset(&idx[..n_train]),
+            test: self.subset(&idx[n_train..]),
+        }
+    }
+}
+
+/// A train/test bundle (what `liquidData` returns in the R binding).
+#[derive(Clone, Debug)]
+pub struct TrainTest {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            Matrix::from_rows(&[&[0.0], &[1.0], &[2.0], &[3.0]]),
+            vec![1.0, -1.0, 1.0, -1.0],
+        )
+    }
+
+    #[test]
+    fn classes_sorted_unique() {
+        assert_eq!(toy().classes(), vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn subset_preserves_pairing() {
+        let s = toy().subset(&[2, 0]);
+        assert_eq!(s.x.as_slice(), &[2.0, 0.0]);
+        assert_eq!(s.y, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn split_partitions_all_samples() {
+        let tt = toy().split(3, 7);
+        assert_eq!(tt.train.len(), 3);
+        assert_eq!(tt.test.len(), 1);
+    }
+
+    #[test]
+    fn indices_of_label() {
+        assert_eq!(toy().indices_of(-1.0), vec![1, 3]);
+    }
+}

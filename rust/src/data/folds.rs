@@ -1,0 +1,158 @@
+//! k-fold generation (paper §2: "The user can choose between different
+//! fold generation methods").  liquidSVM offers random, stratified
+//! (class-balanced), block (contiguous), and alternating assignment.
+
+use super::dataset::Dataset;
+use super::rng::Rng;
+
+/// Fold assignment strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FoldKind {
+    /// uniform random permutation split
+    Random,
+    /// class proportions preserved in every fold (classification default)
+    Stratified,
+    /// contiguous blocks in input order (time-series friendly)
+    Block,
+    /// round-robin i mod k (liquidSVM's "alternating")
+    Alternating,
+}
+
+/// The index sets of one CV split: `folds[f]` are the *validation*
+/// indices of fold `f`; training indices are the complement.
+#[derive(Clone, Debug)]
+pub struct Folds {
+    pub folds: Vec<Vec<usize>>,
+}
+
+impl Folds {
+    pub fn k(&self) -> usize {
+        self.folds.len()
+    }
+
+    /// Training indices for fold `f` (complement of the validation set).
+    pub fn train_indices(&self, f: usize) -> Vec<usize> {
+        let n: usize = self.folds.iter().map(|v| v.len()).sum();
+        let mut in_val = vec![false; n];
+        for &i in &self.folds[f] {
+            in_val[i] = true;
+        }
+        (0..n).filter(|&i| !in_val[i]).collect()
+    }
+
+    pub fn val_indices(&self, f: usize) -> &[usize] {
+        &self.folds[f]
+    }
+}
+
+/// Generate k folds over `d` with the given strategy and seed.
+pub fn make_folds(d: &Dataset, k: usize, kind: FoldKind, seed: u64) -> Folds {
+    let n = d.len();
+    assert!(k >= 2, "need at least 2 folds");
+    assert!(n >= k, "fewer samples than folds");
+    let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+    match kind {
+        FoldKind::Random => {
+            let mut idx: Vec<usize> = (0..n).collect();
+            let mut rng = Rng::new(seed);
+            rng.shuffle(&mut idx);
+            for (pos, &i) in idx.iter().enumerate() {
+                folds[pos % k].push(i);
+            }
+        }
+        FoldKind::Stratified => {
+            let mut rng = Rng::new(seed);
+            for class in d.classes() {
+                let mut idx = d.indices_of(class);
+                rng.shuffle(&mut idx);
+                // continue round-robin within each class so fold sizes
+                // stay balanced overall
+                for (pos, &i) in idx.iter().enumerate() {
+                    folds[pos % k].push(i);
+                }
+            }
+        }
+        FoldKind::Block => {
+            let base = n / k;
+            let extra = n % k;
+            let mut start = 0;
+            for (f, fold) in folds.iter_mut().enumerate() {
+                let len = base + usize::from(f < extra);
+                fold.extend(start..start + len);
+                start += len;
+            }
+        }
+        FoldKind::Alternating => {
+            for i in 0..n {
+                folds[i % k].push(i);
+            }
+        }
+    }
+    for fold in &mut folds {
+        fold.sort_unstable();
+    }
+    Folds { folds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+
+    fn toy(n: usize) -> Dataset {
+        let x = Matrix::from_vec((0..n).map(|i| i as f32).collect(), n, 1);
+        let y = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        Dataset::new(x, y)
+    }
+
+    fn check_partition(f: &Folds, n: usize) {
+        let mut seen = vec![0u8; n];
+        for fold in &f.folds {
+            for &i in fold {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "not a partition");
+    }
+
+    #[test]
+    fn all_kinds_partition() {
+        let d = toy(103);
+        for kind in [FoldKind::Random, FoldKind::Stratified, FoldKind::Block, FoldKind::Alternating] {
+            let f = make_folds(&d, 5, kind, 9);
+            check_partition(&f, 103);
+            let sizes: Vec<usize> = f.folds.iter().map(|v| v.len()).collect();
+            assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 2, "{kind:?}: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn stratified_balances_classes() {
+        let d = toy(90);
+        let f = make_folds(&d, 5, FoldKind::Stratified, 1);
+        for fold in &f.folds {
+            let pos = fold.iter().filter(|&&i| d.y[i] == 1.0).count();
+            // 30 positives over 5 folds => 6 each
+            assert_eq!(pos, 6);
+        }
+    }
+
+    #[test]
+    fn train_indices_complement() {
+        let d = toy(20);
+        let f = make_folds(&d, 4, FoldKind::Random, 3);
+        let tr = f.train_indices(2);
+        assert_eq!(tr.len() + f.val_indices(2).len(), 20);
+        for i in &tr {
+            assert!(!f.val_indices(2).contains(i));
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let d = toy(50);
+        let a = make_folds(&d, 5, FoldKind::Random, 42);
+        let b = make_folds(&d, 5, FoldKind::Random, 42);
+        assert_eq!(a.folds, b.folds);
+    }
+}

@@ -1,0 +1,180 @@
+//! Dataset file formats: LIBSVM sparse text and CSV (the two formats
+//! liquidSVM reads, Table 5 "Data Format" column), plus writers — the
+//! writers are also what the SVMlight-style `disk_wrapper` baseline
+//! uses to pay its per-grid-point disk penalty honestly.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::dataset::Dataset;
+use super::matrix::Matrix;
+
+/// Parse LIBSVM format: `label idx:val idx:val ...` (1-based indices).
+/// `dim` may be 0 to infer the max index.
+pub fn parse_libsvm(text: &str, dim: usize) -> Result<Dataset> {
+    let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
+    let mut labels: Vec<f32> = Vec::new();
+    let mut max_idx = dim;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let lab: f32 = parts
+            .next()
+            .ok_or_else(|| anyhow!("line {}: empty", ln + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad label", ln + 1))?;
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (i, v) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow!("line {}: token `{tok}` not idx:val", ln + 1))?;
+            let i: usize = i.parse().with_context(|| format!("line {}: bad index", ln + 1))?;
+            if i == 0 {
+                return Err(anyhow!("line {}: libsvm indices are 1-based", ln + 1));
+            }
+            let v: f32 = v.parse().with_context(|| format!("line {}: bad value", ln + 1))?;
+            max_idx = max_idx.max(i);
+            feats.push((i - 1, v));
+        }
+        labels.push(lab);
+        rows.push(feats);
+    }
+    let mut x = Matrix::zeros(rows.len(), max_idx);
+    for (r, feats) in rows.iter().enumerate() {
+        for &(j, v) in feats {
+            x.set(r, j, v);
+        }
+    }
+    Ok(Dataset::new(x, labels))
+}
+
+/// Parse CSV with the label in the given column (no header).
+pub fn parse_csv(text: &str, label_col: usize) -> Result<Dataset> {
+    let mut feats: Vec<f32> = Vec::new();
+    let mut labels: Vec<f32> = Vec::new();
+    let mut width: Option<usize> = None;
+    let mut n = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let vals: Vec<f32> = line
+            .split(',')
+            .map(|t| t.trim().parse::<f32>())
+            .collect::<std::result::Result<_, _>>()
+            .with_context(|| format!("line {}: bad number", ln + 1))?;
+        if label_col >= vals.len() {
+            return Err(anyhow!("line {}: label column {} out of range", ln + 1, label_col));
+        }
+        let w = vals.len() - 1;
+        if *width.get_or_insert(w) != w {
+            return Err(anyhow!("line {}: ragged row", ln + 1));
+        }
+        labels.push(vals[label_col]);
+        feats.extend(vals.iter().enumerate().filter(|(j, _)| *j != label_col).map(|(_, v)| *v));
+        n += 1;
+    }
+    Ok(Dataset::new(Matrix::from_vec(feats, n, width.unwrap_or(0)), labels))
+}
+
+pub fn read_libsvm(path: &Path, dim: usize) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path).context("reading libsvm file")?;
+    parse_libsvm(&text, dim)
+}
+
+pub fn read_csv(path: &Path, label_col: usize) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path).context("reading csv file")?;
+    parse_csv(&text, label_col)
+}
+
+/// Write LIBSVM format (dense; zeros skipped like the original tools).
+pub fn write_libsvm(path: &Path, d: &Dataset) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for i in 0..d.len() {
+        write!(w, "{}", d.y[i])?;
+        for (j, &v) in d.x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Write CSV, label first.
+pub fn write_csv(path: &Path, d: &Dataset) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for i in 0..d.len() {
+        write!(w, "{}", d.y[i])?;
+        for &v in d.x.row(i) {
+            write!(w, ",{v}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Stream a libsvm file line-by-line (for large files).
+pub fn read_libsvm_buffered<R: BufRead>(mut r: R, dim: usize) -> Result<Dataset> {
+    let mut text = String::new();
+    r.read_to_string(&mut text)?;
+    parse_libsvm(&text, dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn libsvm_roundtrip_via_text() {
+        let d = parse_libsvm("+1 1:0.5 3:2\n-1 2:1\n", 0).unwrap();
+        assert_eq!(d.dim(), 3);
+        assert_eq!(d.x.row(0), &[0.5, 0.0, 2.0]);
+        assert_eq!(d.x.row(1), &[0.0, 1.0, 0.0]);
+        assert_eq!(d.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn libsvm_rejects_zero_index() {
+        assert!(parse_libsvm("1 0:1\n", 0).is_err());
+    }
+
+    #[test]
+    fn csv_label_first() {
+        let d = parse_csv("1,0.5,2\n-1, 1.5, 3\n", 0).unwrap();
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.y, vec![1.0, -1.0]);
+        assert_eq!(d.x.row(1), &[1.5, 3.0]);
+    }
+
+    #[test]
+    fn csv_ragged_errors() {
+        assert!(parse_csv("1,2\n1,2,3\n", 0).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("liquidsvm-io-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let d = parse_csv("1,0.5\n-1,1.5\n", 0).unwrap();
+        let p = dir.join("d.libsvm");
+        write_libsvm(&p, &d).unwrap();
+        let back = read_libsvm(&p, d.dim()).unwrap();
+        assert_eq!(back.y, d.y);
+        assert_eq!(back.x.as_slice(), d.x.as_slice());
+        let pc = dir.join("d.csv");
+        write_csv(&pc, &d).unwrap();
+        let back = read_csv(&pc, 0).unwrap();
+        assert_eq!(back.x.as_slice(), d.x.as_slice());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,174 @@
+//! Dense row-major `f32` matrix — the sample container used everywhere.
+//!
+//! liquidSVM stores samples as contiguous rows so the Gram hot loop
+//! streams cache lines; we keep the same layout (and it is also the
+//! layout the XLA artifacts expect, so marshalling is a straight copy).
+
+/// Dense row-major matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Wrap an existing buffer (must have `rows * cols` elements).
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Matrix { data, rows, cols }
+    }
+
+    /// Build from row slices (all must share a length).
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { data, rows: r, cols: c }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row access.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Whole buffer, row-major.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// New matrix containing the given rows (in order, repeats allowed).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Vec::with_capacity(idx.len() * self.cols);
+        for &i in idx {
+            out.extend_from_slice(self.row(i));
+        }
+        Matrix::from_vec(out, idx.len(), self.cols)
+    }
+
+    /// Zero-pad to at least (rows, cols) — used to fit artifact buckets.
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols);
+        if rows == self.rows && cols == self.cols {
+            return self.clone();
+        }
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Squared Euclidean norm of every row.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|v| v * v).sum())
+            .collect()
+    }
+
+    /// Append another matrix's rows (same width).
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix::from_vec(data, self.rows + other.rows, self.cols)
+    }
+}
+
+/// Squared Euclidean distance between two equal-length slices.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!((m.rows(), m.cols()), (2, 2));
+        assert_eq!(m.get(1, 0), 3.0);
+        assert_eq!(m.row(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn select_rows_orders_and_repeats() {
+        let m = Matrix::from_rows(&[&[1.0], &[2.0], &[3.0]]);
+        let s = m.select_rows(&[2, 0, 2]);
+        assert_eq!(s.as_slice(), &[3.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn pad_to_keeps_content_zero_fills() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0]]);
+        let p = m.pad_to(2, 3);
+        assert_eq!(p.row(0), &[1.0, 2.0, 0.0]);
+        assert_eq!(p.row(1), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn sq_norms_and_dist() {
+        let m = Matrix::from_rows(&[&[3.0, 4.0], &[0.0, 0.0]]);
+        assert_eq!(m.row_sq_norms(), vec![25.0, 0.0]);
+        assert_eq!(sq_dist(m.row(0), m.row(1)), 25.0);
+    }
+
+    #[test]
+    fn vstack() {
+        let a = Matrix::from_rows(&[&[1.0]]);
+        let b = Matrix::from_rows(&[&[2.0]]);
+        assert_eq!(a.vstack(&b).as_slice(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_panic() {
+        Matrix::from_rows(&[&[1.0, 2.0], &[3.0]]);
+    }
+}

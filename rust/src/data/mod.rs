@@ -1,0 +1,13 @@
+//! Data substrate: sample containers, file formats, scaling, fold
+//! generation, and the synthetic stand-ins for the paper's datasets.
+
+pub mod dataset;
+pub mod folds;
+pub mod io;
+pub mod matrix;
+pub mod rng;
+pub mod scale;
+pub mod synth;
+
+pub use dataset::{Dataset, TrainTest};
+pub use matrix::Matrix;

@@ -1,0 +1,127 @@
+//! Train-set-determined normalization (paper §B.1: "Based on the
+//! training a scaling was determined and both training and test set
+//! were normalized by that").
+
+use super::matrix::Matrix;
+
+/// Per-column affine scaler fitted on a training set.
+#[derive(Clone, Debug)]
+pub struct Scaler {
+    shift: Vec<f32>,
+    scale: Vec<f32>,
+}
+
+/// Which scaling statistic to fit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleKind {
+    /// map [min,max] -> [0,1]
+    MinMax,
+    /// zero mean, unit variance
+    Standard,
+}
+
+impl Scaler {
+    pub fn fit(x: &Matrix, kind: ScaleKind) -> Scaler {
+        let (r, c) = (x.rows(), x.cols());
+        let mut shift = vec![0.0f32; c];
+        let mut scale = vec![1.0f32; c];
+        match kind {
+            ScaleKind::MinMax => {
+                let mut lo = vec![f32::INFINITY; c];
+                let mut hi = vec![f32::NEG_INFINITY; c];
+                for i in 0..r {
+                    for (j, &v) in x.row(i).iter().enumerate() {
+                        lo[j] = lo[j].min(v);
+                        hi[j] = hi[j].max(v);
+                    }
+                }
+                for j in 0..c {
+                    shift[j] = lo[j];
+                    let span = hi[j] - lo[j];
+                    scale[j] = if span > 0.0 { 1.0 / span } else { 1.0 };
+                }
+            }
+            ScaleKind::Standard => {
+                let mut mean = vec![0.0f64; c];
+                let mut m2 = vec![0.0f64; c];
+                for i in 0..r {
+                    for (j, &v) in x.row(i).iter().enumerate() {
+                        mean[j] += v as f64;
+                        m2[j] += (v as f64) * (v as f64);
+                    }
+                }
+                for j in 0..c {
+                    let mu = mean[j] / r.max(1) as f64;
+                    let var = (m2[j] / r.max(1) as f64 - mu * mu).max(0.0);
+                    shift[j] = mu as f32;
+                    scale[j] = if var > 0.0 { (1.0 / var.sqrt()) as f32 } else { 1.0 };
+                }
+            }
+        }
+        Scaler { shift, scale }
+    }
+
+    /// Apply in place.
+    pub fn apply(&self, x: &mut Matrix) {
+        let c = x.cols();
+        assert_eq!(c, self.shift.len());
+        for i in 0..x.rows() {
+            let row = x.row_mut(i);
+            for j in 0..c {
+                row[j] = (row[j] - self.shift[j]) * self.scale[j];
+            }
+        }
+    }
+
+    /// Apply to a copy.
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        let mut out = x.clone();
+        self.apply(&mut out);
+        out
+    }
+
+    /// Rebuild from serialized (shift, scale) columns (persistence).
+    pub fn from_parts(shift: Vec<f32>, scale: Vec<f32>) -> Scaler {
+        assert_eq!(shift.len(), scale.len());
+        Scaler { shift, scale }
+    }
+
+    /// Serialized (shift, scale) columns (persistence).
+    pub fn parts(&self) -> (Vec<f32>, Vec<f32>) {
+        (self.shift.clone(), self.scale.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minmax_maps_to_unit_interval() {
+        let x = Matrix::from_rows(&[&[0.0, 10.0], &[4.0, 30.0], &[2.0, 20.0]]);
+        let s = Scaler::fit(&x, ScaleKind::MinMax);
+        let t = s.transform(&x);
+        assert_eq!(t.get(0, 0), 0.0);
+        assert_eq!(t.get(1, 0), 1.0);
+        assert_eq!(t.get(2, 1), 0.5);
+    }
+
+    #[test]
+    fn standard_zero_mean_unit_var() {
+        let x = Matrix::from_rows(&[&[1.0], &[3.0], &[5.0]]);
+        let s = Scaler::fit(&x, ScaleKind::Standard);
+        let t = s.transform(&x);
+        let mean: f32 = t.as_slice().iter().sum::<f32>() / 3.0;
+        assert!(mean.abs() < 1e-6);
+        let var: f32 = t.as_slice().iter().map(|v| v * v).sum::<f32>() / 3.0;
+        assert!((var - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn constant_column_is_noop() {
+        let x = Matrix::from_rows(&[&[7.0], &[7.0]]);
+        let s = Scaler::fit(&x, ScaleKind::MinMax);
+        let t = s.transform(&x);
+        assert_eq!(t.get(0, 0), 0.0); // shifted by min, scale 1
+    }
+}

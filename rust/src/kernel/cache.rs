@@ -1,0 +1,102 @@
+//! Distance-matrix cache: the data structure behind the paper's
+//! "to speed up the CV, the required kernel matrices may be re-used".
+//!
+//! One squared-distance matrix per (fold, block) pair is computed once
+//! and exponentiated per γ; with a G-point γ grid this turns G distance
+//! passes (the dominant cost, O(n²d)) into one pass plus G cheap
+//! element-wise exponentials (O(n²)).
+
+use crate::data::matrix::Matrix;
+
+use super::{GramBackend, KernelKind};
+
+/// Cached squared distances between a fixed pair of sample sets.
+pub struct DistanceCache {
+    d2: Matrix,
+    kind: KernelKind,
+    /// most recent (gamma, Gram) — CV iterates λ inside γ, so a single
+    /// slot gives full reuse without holding G matrices alive.
+    last: Option<(f32, Matrix)>,
+    /// how many Gram requests were served from `last`
+    pub hits: usize,
+    /// how many required an exponentiation pass
+    pub misses: usize,
+}
+
+impl DistanceCache {
+    /// Compute and hold distances between `x` rows and `y` rows.
+    pub fn new(backend: &GramBackend, x: &Matrix, y: &Matrix, kind: KernelKind) -> Self {
+        DistanceCache { d2: backend.sq_dists(x, y), kind, last: None, hits: 0, misses: 0 }
+    }
+
+    /// Wrap an existing distance matrix.
+    pub fn from_d2(d2: Matrix, kind: KernelKind) -> Self {
+        DistanceCache { d2, kind, last: None, hits: 0, misses: 0 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.d2.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.d2.cols()
+    }
+
+    pub fn d2(&self) -> &Matrix {
+        &self.d2
+    }
+
+    /// Gram matrix for γ — exponentiates at most once per distinct γ in
+    /// a row (CV visits λ-grid inside each γ, so this is a full hit).
+    pub fn gram(&mut self, gamma: f32) -> &Matrix {
+        let fresh = match &self.last {
+            Some((g, _)) if *g == gamma => false,
+            _ => true,
+        };
+        if fresh {
+            self.misses += 1;
+            let k = super::apply_kernel(&self.d2, self.kind, gamma);
+            self.last = Some((gamma, k));
+        } else {
+            self.hits += 1;
+        }
+        &self.last.as_ref().unwrap().1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+
+    fn cache() -> DistanceCache {
+        let x = Matrix::from_rows(&[&[0.0], &[1.0], &[3.0]]);
+        DistanceCache::new(&GramBackend::Blocked, &x, &x, KernelKind::Gauss)
+    }
+
+    #[test]
+    fn distances_correct() {
+        let c = cache();
+        assert_eq!(c.d2().get(0, 1), 1.0);
+        assert_eq!(c.d2().get(0, 2), 9.0);
+    }
+
+    #[test]
+    fn repeat_gamma_hits_cache() {
+        let mut c = cache();
+        let _ = c.gram(1.0);
+        let _ = c.gram(1.0);
+        let _ = c.gram(2.0);
+        let _ = c.gram(2.0);
+        assert_eq!(c.misses, 2);
+        assert_eq!(c.hits, 2);
+    }
+
+    #[test]
+    fn gram_values_match_kernel() {
+        let mut c = cache();
+        let k = c.gram(2.0);
+        // d2(0,2)=9, gamma=2 -> exp(-9/4)
+        assert!((k.get(0, 2) - (-2.25f32).exp()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,53 @@
+//! # liquid-svm
+//!
+//! A Rust + JAX/Pallas reproduction of **liquidSVM: A Fast and Versatile
+//! SVM package** (Steinwart & Thomann, 2017).
+//!
+//! The original is a C++ framework whose speed comes from a fully
+//! integrated cross-validation pipeline (kernel-matrix reuse, warm
+//! starts), carefully engineered dual solvers, working-set management
+//! (tasks + cells), and SIMD/CUDA acceleration of the Gram-matrix hot
+//! spot.  This port keeps the same architecture, with the accelerator
+//! role played by AOT-compiled XLA artifacts (authored as JAX/Pallas
+//! kernels, executed via PJRT from [`runtime`]).
+//!
+//! Layer map:
+//! * **L3 (this crate)** — train/select/test pipeline, tasks, cells,
+//!   CV engine, solvers, CLI, simulated distributed mode.
+//! * **L2 (python/compile/model.py)** — JAX graphs (multi-γ Gram,
+//!   fused prediction) lowered once to `artifacts/*.hlo.txt`.
+//! * **L1 (python/compile/kernels/)** — tiled Pallas kernels called by
+//!   L2; validated against a pure-jnp oracle at build time.
+//!
+//! Quickstart (the paper's banana-mc demo):
+//! ```no_run
+//! use liquid_svm::prelude::*;
+//! let d = liquid_svm::data::synth::banana_mc(2000, 1000, 42);
+//! let cfg = Config::default();
+//! let model = mc_svm(&d.train, &cfg).unwrap();
+//! let res = model.test(&d.test);
+//! println!("error = {:.4}", res.error);
+//! ```
+
+pub mod baselines;
+pub mod cells;
+pub mod coordinator;
+pub mod cv;
+pub mod data;
+pub mod distributed;
+pub mod kernel;
+pub mod metrics;
+pub mod runtime;
+pub mod solver;
+pub mod tasks;
+
+/// Convenience re-exports for the common learning scenarios
+/// (mirrors liquidSVM's simplified interface: `mcSVM`, `lsSVM`, ...).
+pub mod prelude {
+    pub use crate::coordinator::config::Config;
+    pub use crate::coordinator::scenarios::{
+        ex_svm, ls_svm, mc_svm, npl_svm, qt_svm, roc_svm, svm_binary,
+    };
+    pub use crate::coordinator::SvmModel;
+    pub use crate::data::dataset::Dataset;
+}

@@ -1,0 +1,269 @@
+//! `liquidsvm` CLI — the command-line interface of the reproduction
+//! (liquidSVM ships `svm-train`-style tools plus scenario scripts like
+//! `mc-svm.sh`; this binary folds them into subcommands).
+//!
+//! ```text
+//! liquidsvm train --data banana-mc --n 2000 --scenario mc --threads 2 --display 1
+//! liquidsvm bench --table 1
+//! liquidsvm list-datasets
+//! ```
+//!
+//! Hand-rolled argument parsing: this image's offline crate registry
+//! has no clap.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use liquid_svm::coordinator::config::BackendChoice;
+use liquid_svm::coordinator::scenarios;
+use liquid_svm::data::{synth, Dataset};
+use liquid_svm::distributed::{train_distributed, ClusterSpec};
+use liquid_svm::prelude::*;
+use liquid_svm::tasks::TaskSpec;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// `--key value` / `--flag` argument bag.
+struct Args {
+    cmd: String,
+    kv: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut kv = HashMap::new();
+        let mut key: Option<String> = None;
+        for tok in it {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(k) = key.take() {
+                    kv.insert(k, "true".into()); // bare flag
+                }
+                key = Some(stripped.to_string());
+            } else if let Some(k) = key.take() {
+                kv.insert(k, tok);
+            } else {
+                bail!("unexpected positional argument `{tok}`");
+            }
+        }
+        if let Some(k) = key.take() {
+            kv.insert(k, "true".into());
+        }
+        Ok(Args { cmd, kv })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(String::as_str)
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: cannot parse `{v}`")),
+        }
+    }
+}
+
+fn load_dataset(args: &Args) -> Result<(Dataset, Dataset)> {
+    let n: usize = args.num("n", 2000)?;
+    let n_test: usize = args.num("n-test", n / 2)?;
+    let seed: u64 = args.num("seed", 42)?;
+    if let Some(path) = args.get("file") {
+        let d = if path.ends_with(".csv") {
+            liquid_svm::data::io::read_csv(std::path::Path::new(path), 0)?
+        } else {
+            liquid_svm::data::io::read_libsvm(std::path::Path::new(path), 0)?
+        };
+        let tt = d.split(d.len() * 4 / 5, seed);
+        return Ok((tt.train, tt.test));
+    }
+    let name = args.get("data").unwrap_or("banana-mc");
+    if name == "banana-mc" {
+        let tt = synth::banana_mc(n, n_test, seed);
+        return Ok((tt.train, tt.test));
+    }
+    if name == "banana" {
+        return Ok((synth::banana_binary(n, seed), synth::banana_binary(n_test, seed ^ 1)));
+    }
+    if name == "sinc" {
+        return Ok((synth::sinc_hetero(n, seed), synth::sinc_hetero(n_test, seed ^ 1)));
+    }
+    let train = synth::by_name(name, n, seed)
+        .ok_or_else(|| anyhow!("unknown dataset `{name}` (try list-datasets)"))?;
+    let test = synth::by_name(name, n_test, seed ^ 0xdead).unwrap();
+    Ok((train, test))
+}
+
+fn build_config(args: &Args) -> Result<Config> {
+    let mut cfg = Config::default()
+        .display(args.num("display", 0u8)?)
+        .threads(args.num("threads", 1usize)?)
+        .grid_choice(args.num("grid-choice", 0u8)?)
+        .adaptivity(args.num("adaptivity", 0u8)?)
+        .folds(args.num("folds", 5usize)?)
+        .seed(args.num("seed", 42u64)?);
+    cfg.use_libsvm_grid = args.get("libsvm-grid").is_some();
+    if let Some(v) = args.get("voronoi") {
+        cfg.cells = Config::parse_voronoi(v)
+            .ok_or_else(|| anyhow!("--voronoi: bad spec `{v}`"))?;
+    }
+    cfg.backend = match args.get("backend").unwrap_or("blocked") {
+        "scalar" => BackendChoice::Scalar,
+        "blocked" => BackendChoice::Blocked,
+        "xla" => BackendChoice::Xla,
+        other => bail!("--backend: unknown `{other}`"),
+    };
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
+        "convert" => cmd_convert(&args),
+        "distributed" => cmd_distributed(&args),
+        "list-datasets" => {
+            println!("banana-mc banana sinc {}", synth::names().join(" "));
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (see `liquidsvm help`)"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (train_d, test_d) = load_dataset(args)?;
+    let cfg = build_config(args)?;
+    let scenario = args.get("scenario").unwrap_or("mc");
+    let t0 = std::time::Instant::now();
+    let model = match scenario {
+        "binary" => scenarios::svm_binary(&train_d, args.num("weight", 0.5f32)?, &cfg)?,
+        "mc" => scenarios::mc_svm(&train_d, &cfg)?,
+        "mc-ava" => scenarios::mc_svm_type(&train_d, false, &cfg)?,
+        "ls" => scenarios::ls_svm(&train_d, &cfg)?,
+        "qt" => scenarios::qt_svm(&train_d, &[0.05, 0.5, 0.95], &cfg)?,
+        "ex" => scenarios::ex_svm(&train_d, &[0.05, 0.5, 0.95], &cfg)?,
+        "npl" => scenarios::npl_svm(&train_d, args.num("alpha", 0.05f32)?, &cfg)?,
+        "roc" => scenarios::roc_svm(&train_d, args.num("points", 6usize)?, &cfg)?,
+        other => bail!("unknown scenario `{other}`"),
+    };
+    let train_time = t0.elapsed();
+    let res = model.test(&test_d);
+    println!(
+        "scenario={scenario} n={} d={} cells={} tasks={} train={:.2}s test={:.2}s error={:.4}",
+        train_d.len(),
+        train_d.dim(),
+        model.partition.n_cells(),
+        model.n_tasks,
+        train_time.as_secs_f64(),
+        res.test_time.as_secs_f64(),
+        res.error
+    );
+    if let Some(path) = args.get("save") {
+        liquid_svm::coordinator::persist::save_model(&model, std::path::Path::new(path))?;
+        println!("saved model to {path}");
+    }
+    Ok(())
+}
+
+/// Test phase in a separate process: load a `.sol` file and predict —
+/// mirrors liquidSVM's svm-test tool.
+fn cmd_predict(args: &Args) -> Result<()> {
+    let model_path = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let cfg = build_config(args)?;
+    let model =
+        liquid_svm::coordinator::persist::load_model(std::path::Path::new(model_path), &cfg)?;
+    let (_, test_d) = load_dataset(args)?;
+    let res = model.test(&test_d);
+    println!(
+        "model={model_path} n_test={} tasks={} test={:.2}s error={:.4}",
+        test_d.len(),
+        model.n_tasks,
+        res.test_time.as_secs_f64(),
+        res.error
+    );
+    if let Some(out) = args.get("out") {
+        let mut text = String::new();
+        for p in &res.predictions {
+            text.push_str(&format!("{p}\n"));
+        }
+        std::fs::write(out, text)?;
+        println!("wrote predictions to {out}");
+    }
+    Ok(())
+}
+
+/// Format conversion tool (liquidSVM ships CLI data tools, paper §3c).
+fn cmd_convert(args: &Args) -> Result<()> {
+    let input = args.get("in").ok_or_else(|| anyhow!("--in required"))?;
+    let output = args.get("out").ok_or_else(|| anyhow!("--out required"))?;
+    let d = if input.ends_with(".csv") {
+        liquid_svm::data::io::read_csv(std::path::Path::new(input), 0)?
+    } else {
+        liquid_svm::data::io::read_libsvm(std::path::Path::new(input), 0)?
+    };
+    if output.ends_with(".csv") {
+        liquid_svm::data::io::write_csv(std::path::Path::new(output), &d)?;
+    } else {
+        liquid_svm::data::io::write_libsvm(std::path::Path::new(output), &d)?;
+    }
+    println!("converted {} samples x {} dims: {input} -> {output}", d.len(), d.dim());
+    Ok(())
+}
+
+fn cmd_distributed(args: &Args) -> Result<()> {
+    let (train_d, test_d) = load_dataset(args)?;
+    let cfg = build_config(args)?;
+    let cluster = ClusterSpec {
+        workers: args.num("workers", 4usize)?,
+        coarse_size: args.num("coarse-size", 2000usize)?,
+        fine_size: args.num("fine-size", 500usize)?,
+        driver_sample: args.num("driver-sample", 4000usize)?,
+    };
+    let m = train_distributed(&train_d, &TaskSpec::Binary { w: 0.5 }, &cfg, &cluster)
+        .context("distributed training")?;
+    let err = m.test_error(&test_d);
+    println!(
+        "workers={} coarse_cells={} distributed={:.2}s single_node={:.2}s speedup={:.1}x error={:.4}",
+        cluster.workers,
+        m.stats.n_coarse_cells,
+        m.stats.distributed_time.as_secs_f64(),
+        m.stats.single_node_time.as_secs_f64(),
+        m.stats.speedup(),
+        err
+    );
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "liquidsvm — liquidSVM reproduction (Rust + JAX/Pallas)
+
+USAGE:
+  liquidsvm train [--data NAME|--file PATH] [--scenario binary|mc|mc-ava|ls|qt|ex|npl|roc]
+                  [--n N] [--threads T] [--display D] [--grid-choice 0|1|2]
+                  [--adaptivity 0|1|2] [--voronoi SPEC] [--libsvm-grid]
+                  [--backend scalar|blocked|xla] [--folds K] [--seed S]
+                  [--save MODEL.sol]
+  liquidsvm predict --model MODEL.sol [--data NAME|--file PATH] [--out PREDICTIONS.txt]
+  liquidsvm convert --in DATA.[csv|libsvm] --out DATA.[csv|libsvm]
+  liquidsvm distributed [--data NAME] [--workers W] [--coarse-size N] [--fine-size N]
+  liquidsvm list-datasets
+
+EXAMPLES:
+  liquidsvm train --data banana-mc --n 2000 --scenario mc --display 1 --threads 2
+  liquidsvm train --data covtype --n 10000 --voronoi 6,1000 --scenario binary
+  liquidsvm distributed --data covtype --n 20000 --workers 8"
+    );
+}

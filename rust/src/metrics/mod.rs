@@ -1,0 +1,201 @@
+//! Losses, error metrics, and timing instrumentation.
+//!
+//! The validation loss used during the selection phase is configurable
+//! (paper §2: "the user can ... determine ... the loss function used on
+//! the validation fold"); these are the choices liquidSVM ships.
+
+use std::time::{Duration, Instant};
+
+/// Validation / test losses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Loss {
+    /// 0-1 classification error on sign(f)
+    Classification,
+    /// weighted 0-1: false positives cost `w`, false negatives `1-w`
+    WeightedClassification { w: f32 },
+    /// mean squared error
+    LeastSquares,
+    /// pinball loss at quantile `tau`
+    Pinball { tau: f32 },
+    /// asymmetric least squares at expectile `tau`
+    Expectile { tau: f32 },
+    /// hinge loss (margin-based validation for classification)
+    Hinge,
+}
+
+impl Loss {
+    /// Pointwise loss of prediction `t` against truth `y`.
+    #[inline]
+    pub fn eval(&self, y: f32, t: f32) -> f32 {
+        match *self {
+            Loss::Classification => {
+                if (t >= 0.0) == (y >= 0.0) { 0.0 } else { 1.0 }
+            }
+            Loss::WeightedClassification { w } => {
+                if (t >= 0.0) == (y >= 0.0) {
+                    0.0
+                } else if y < 0.0 {
+                    // false positive
+                    w
+                } else {
+                    1.0 - w
+                }
+            }
+            Loss::LeastSquares => (y - t) * (y - t),
+            Loss::Pinball { tau } => {
+                let r = y - t;
+                if r >= 0.0 { tau * r } else { (tau - 1.0) * r }
+            }
+            Loss::Expectile { tau } => {
+                let r = y - t;
+                if r >= 0.0 { tau * r * r } else { (1.0 - tau) * r * r }
+            }
+            Loss::Hinge => (1.0 - y * t).max(0.0),
+        }
+    }
+
+    /// Mean loss over slices.
+    pub fn mean(&self, y: &[f32], t: &[f32]) -> f32 {
+        assert_eq!(y.len(), t.len());
+        if y.is_empty() {
+            return 0.0;
+        }
+        let s: f32 = y.iter().zip(t).map(|(&a, &b)| self.eval(a, b)).sum();
+        s / y.len() as f32
+    }
+}
+
+/// Binary confusion counts from decision values.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: usize,
+    pub tn: usize,
+    pub fp: usize,
+    pub fn_: usize,
+}
+
+impl Confusion {
+    pub fn from_scores(y: &[f32], t: &[f32]) -> Confusion {
+        let mut c = Confusion::default();
+        for (&yi, &ti) in y.iter().zip(t) {
+            match (yi >= 0.0, ti >= 0.0) {
+                (true, true) => c.tp += 1,
+                (false, false) => c.tn += 1,
+                (false, true) => c.fp += 1,
+                (true, false) => c.fn_ += 1,
+            }
+        }
+        c
+    }
+
+    pub fn error(&self) -> f32 {
+        let n = self.tp + self.tn + self.fp + self.fn_;
+        if n == 0 { 0.0 } else { (self.fp + self.fn_) as f32 / n as f32 }
+    }
+
+    /// False-alarm rate (fraction of true negatives classified +).
+    pub fn false_alarm_rate(&self) -> f32 {
+        let n = self.fp + self.tn;
+        if n == 0 { 0.0 } else { self.fp as f32 / n as f32 }
+    }
+
+    /// Detection rate on the positive class.
+    pub fn detection_rate(&self) -> f32 {
+        let n = self.tp + self.fn_;
+        if n == 0 { 0.0 } else { self.tp as f32 / n as f32 }
+    }
+}
+
+/// Multiclass 0-1 error from integer-ish float labels.
+pub fn multiclass_error(y: &[f32], pred: &[f32]) -> f32 {
+    assert_eq!(y.len(), pred.len());
+    if y.is_empty() {
+        return 0.0;
+    }
+    let wrong = y.iter().zip(pred).filter(|(a, b)| a != b).count();
+    wrong as f32 / y.len() as f32
+}
+
+/// Lightweight accumulating timer registry used by the coordinator to
+/// report per-phase wall-clock (train/select/test) like the CLI does.
+#[derive(Debug, Default)]
+pub struct Timers {
+    entries: std::collections::BTreeMap<&'static str, Duration>,
+}
+
+impl Timers {
+    pub fn time<T>(&mut self, key: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        *self.entries.entry(key).or_default() += t0.elapsed();
+        out
+    }
+
+    pub fn add(&mut self, key: &'static str, d: Duration) {
+        *self.entries.entry(key).or_default() += d;
+    }
+
+    pub fn get(&self, key: &str) -> Duration {
+        self.entries.get(key).copied().unwrap_or_default()
+    }
+
+    pub fn report(&self) -> String {
+        self.entries
+            .iter()
+            .map(|(k, v)| format!("{k}: {:.3}s", v.as_secs_f64()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_loss() {
+        let l = Loss::Classification;
+        assert_eq!(l.eval(1.0, 0.3), 0.0);
+        assert_eq!(l.eval(-1.0, 0.3), 1.0);
+        assert_eq!(l.mean(&[1.0, -1.0], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn weighted_classification_asymmetry() {
+        let l = Loss::WeightedClassification { w: 0.8 };
+        assert_eq!(l.eval(-1.0, 1.0), 0.8); // FP
+        assert!((l.eval(1.0, -1.0) - 0.2).abs() < 1e-6); // FN
+    }
+
+    #[test]
+    fn pinball_tilts() {
+        let l = Loss::Pinball { tau: 0.9 };
+        assert!((l.eval(1.0, 0.0) - 0.9).abs() < 1e-6); // under-predict
+        assert!((l.eval(0.0, 1.0) - 0.1).abs() < 1e-6); // over-predict
+    }
+
+    #[test]
+    fn expectile_asymmetric_square() {
+        let l = Loss::Expectile { tau: 0.25 };
+        assert!((l.eval(2.0, 0.0) - 1.0).abs() < 1e-6); // 0.25*4
+        assert!((l.eval(0.0, 2.0) - 3.0).abs() < 1e-6); // 0.75*4
+    }
+
+    #[test]
+    fn confusion_rates() {
+        let c = Confusion::from_scores(&[1.0, 1.0, -1.0, -1.0], &[1.0, -1.0, 1.0, -1.0]);
+        assert_eq!(c, Confusion { tp: 1, tn: 1, fp: 1, fn_: 1 });
+        assert_eq!(c.error(), 0.5);
+        assert_eq!(c.false_alarm_rate(), 0.5);
+        assert_eq!(c.detection_rate(), 0.5);
+    }
+
+    #[test]
+    fn timers_accumulate() {
+        let mut t = Timers::default();
+        t.time("x", || std::thread::sleep(Duration::from_millis(2)));
+        t.time("x", || ());
+        assert!(t.get("x") >= Duration::from_millis(2));
+        assert!(t.report().contains("x:"));
+    }
+}

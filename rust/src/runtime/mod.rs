@@ -1,0 +1,256 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs at request time — the artifacts are HLO *text*
+//! (see aot.py for why text, not serialized protos), compiled once per
+//! process by the PJRT CPU client and cached.  Inputs are zero-padded
+//! up to the artifact's shape bucket (exact for every graph we lower;
+//! see python/compile/kernels/*.py) and outputs sliced back.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::matrix::Matrix;
+
+/// Artifact descriptor from `artifacts/manifest.tsv`.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub op: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub dim: usize,
+    pub gammas: usize,
+    pub t_cols: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub gamma_chunk: usize,
+    pub t_cols: usize,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Parse the TSV manifest written by aot.py:
+    /// first line `gamma_chunk\t<G>\tt_cols\t<T>`, then one artifact
+    /// per line: `name\top\trows\tcols\tdim\tgammas\tt_cols`.
+    pub fn parse_tsv(text: &str) -> Result<Manifest> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let head = lines.next().ok_or_else(|| anyhow!("empty manifest"))?;
+        let h: Vec<&str> = head.split('\t').collect();
+        if h.len() != 4 || h[0] != "gamma_chunk" || h[2] != "t_cols" {
+            return Err(anyhow!("bad manifest header: {head}"));
+        }
+        let gamma_chunk: usize = h[1].parse().context("gamma_chunk")?;
+        let t_cols: usize = h[3].parse().context("t_cols")?;
+        let mut artifacts = Vec::new();
+        for line in lines {
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 7 {
+                return Err(anyhow!("bad manifest row: {line}"));
+            }
+            artifacts.push(ArtifactInfo {
+                name: f[0].to_string(),
+                op: f[1].to_string(),
+                rows: f[2].parse().context("rows")?,
+                cols: f[3].parse().context("cols")?,
+                dim: f[4].parse().context("dim")?,
+                gammas: f[5].parse().context("gammas")?,
+                t_cols: f[6].parse().context("t_cols")?,
+            });
+        }
+        Ok(Manifest { gamma_chunk, t_cols, artifacts })
+    }
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Handle to the PJRT CPU client + compiled-artifact cache.
+///
+/// The PJRT CPU client is internally thread-safe; all calls here are
+/// nonetheless serialized behind one mutex because a single in-flight
+/// executable already saturates this machine.
+pub struct XlaRuntime {
+    dir: PathBuf,
+    manifest: Manifest,
+    inner: Mutex<Inner>,
+    /// executions served, for perf reporting
+    pub calls: std::sync::atomic::AtomicUsize,
+}
+
+// SAFETY: the xla crate wraps C++ objects that the PJRT CPU plugin
+// documents as thread-safe; all mutation is behind `Mutex<Inner>`.
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+impl XlaRuntime {
+    /// Open the artifact directory (default `artifacts/`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest = Manifest::parse_tsv(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(XlaRuntime {
+            dir,
+            manifest,
+            inner: Mutex::new(Inner { client, executables: HashMap::new() }),
+            calls: std::sync::atomic::AtomicUsize::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Largest Gram bucket rows available (callers tile above this).
+    pub fn max_gram_rows(&self) -> usize {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.op == "gram_multi")
+            .map(|a| a.rows)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Pick the smallest bucket that fits (rows, cols, dim) for `op`.
+    fn pick_bucket(&self, op: &str, rows: usize, cols: usize, dim: usize) -> Result<ArtifactInfo> {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.op == op && a.rows >= rows && a.cols >= cols && a.dim >= dim)
+            .min_by_key(|a| a.rows * a.cols * a.dim)
+            .cloned()
+            .ok_or_else(|| anyhow!("no `{op}` artifact bucket fits ({rows}x{cols}x{dim})"))
+    }
+
+    /// Execute an artifact by name with the given literals, returning
+    /// the single tuple-wrapped output literal.
+    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.executables.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            inner.executables.insert(name.to_string(), exe);
+        }
+        let exe = &inner.executables[name];
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        result.to_tuple1().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    fn mat_literal(m: &Matrix) -> Result<xla::Literal> {
+        xla::Literal::vec1(m.as_slice())
+            .reshape(&[m.rows() as i64, m.cols() as i64])
+            .map_err(|e| anyhow!("literal reshape: {e:?}"))
+    }
+
+    /// Multi-γ Gaussian Gram stack `[G]` matrices of shape
+    /// `[x.rows × y.rows]`, via the `gram10` artifact (liquidSVM γ
+    /// parameterization).  γ grids longer than the artifact chunk are
+    /// tiled transparently.
+    pub fn gram_multi(&self, x: &Matrix, y: &Matrix, gammas: &[f32]) -> Result<Vec<Matrix>> {
+        let chunk = self.manifest.gamma_chunk;
+        let (m, n, d) = (x.rows(), y.rows(), x.cols());
+        let art = self.pick_bucket("gram_multi", m, n, d)?;
+        let xpad = x.pad_to(art.rows, art.dim);
+        let ypad = y.pad_to(art.cols, art.dim);
+        let mut out = Vec::with_capacity(gammas.len());
+        for gs in gammas.chunks(chunk) {
+            let mut gpad: Vec<f32> = gs.to_vec();
+            gpad.resize(chunk, 1.0); // padding gammas, outputs ignored
+            let glit = xla::Literal::vec1(&gpad);
+            let res = self.run(
+                &art.name,
+                &[Self::mat_literal(&xpad)?, Self::mat_literal(&ypad)?, glit],
+            )?;
+            let flat: Vec<f32> = res.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            // layout [chunk, art.rows, art.cols] -> slice [m, n] per γ
+            for (gi, _) in gs.iter().enumerate() {
+                let mut mat = Matrix::zeros(m, n);
+                let base = gi * art.rows * art.cols;
+                for i in 0..m {
+                    let row = &flat[base + i * art.cols..base + i * art.cols + n];
+                    mat.row_mut(i).copy_from_slice(row);
+                }
+                out.push(mat);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fused prediction `K_γ(x, sv) · alpha` via the `predict` artifact;
+    /// alpha is `[n × t]`, result `[m × t]`.
+    pub fn predict(&self, x: &Matrix, sv: &Matrix, alpha: &Matrix, gamma: f32) -> Result<Matrix> {
+        let (m, n, d, t) = (x.rows(), sv.rows(), x.cols(), alpha.cols());
+        let tcap = self.manifest.t_cols;
+        let art = self.pick_bucket("predict", m, n, d)?;
+        let xpad = x.pad_to(art.rows, art.dim);
+        let svpad = sv.pad_to(art.cols, art.dim);
+        let mut out = Matrix::zeros(m, t);
+        for t0 in (0..t).step_by(tcap) {
+            let t1 = (t0 + tcap).min(t);
+            // column block of alpha, zero-padded to (art.cols, tcap)
+            let mut ablock = Matrix::zeros(art.cols, tcap);
+            for i in 0..n {
+                for (jj, j) in (t0..t1).enumerate() {
+                    ablock.set(i, jj, alpha.get(i, j));
+                }
+            }
+            let alit = Self::mat_literal(&ablock)?;
+            let res = self.run(
+                &art.name,
+                &[
+                    Self::mat_literal(&xpad)?,
+                    Self::mat_literal(&svpad)?,
+                    alit,
+                    xla::Literal::scalar(gamma),
+                ],
+            )?;
+            let flat: Vec<f32> = res.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            for i in 0..m {
+                for (jj, j) in (t0..t1).enumerate() {
+                    out.set(i, j, flat[i * tcap + jj]);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Locate the artifacts directory relative to the workspace root
+/// (works from `cargo test`, benches, and installed binaries run from
+/// the repo).
+pub fn default_artifact_dir() -> PathBuf {
+    let candidates = [
+        PathBuf::from("artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ];
+    for c in &candidates {
+        if c.join("manifest.tsv").exists() {
+            return c.clone();
+        }
+    }
+    PathBuf::from("artifacts")
+}

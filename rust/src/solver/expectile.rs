@@ -1,0 +1,162 @@
+//! Expectile solver (asymmetric least squares), after Farooq &
+//! Steinwart (2017) — the solver the paper notes needed "more care".
+//!
+//! Loss: ℓ_τ(r) = τ r² for r ≥ 0, (1−τ) r² for r < 0 (r = y − f(x)).
+//! Stationarity of the offset-free problem gives, with f = Σ β_j k_j,
+//!
+//!   β_i = C · ℓ'_τ(y_i − f(x_i)),   C = 1/(2λn),  ℓ'_τ(r) = 2τ' r,
+//!
+//! where τ' = τ on positive residuals and 1−τ on negatives.  Each
+//! coordinate therefore has an *exact* piecewise-linear 1-d solve: try
+//! both sign cases, keep the consistent one (exactly one is, by
+//! monotonicity).  Cyclic sweeps with incremental f-updates until the
+//! largest coordinate move falls below eps.
+
+use crate::data::matrix::Matrix;
+
+use super::{box_c, Solution, SolverParams};
+
+pub fn solve(
+    k: &Matrix,
+    y: &[f32],
+    lambda: f32,
+    tau: f32,
+    params: &SolverParams,
+    warm: Option<&[f32]>,
+) -> Solution {
+    let n = y.len();
+    assert_eq!(k.rows(), n);
+    assert!((0.0..=1.0).contains(&tau));
+    let c = box_c(lambda, n);
+
+    let mut beta: Vec<f32> = warm.map(<[f32]>::to_vec).unwrap_or_else(|| vec![0.0; n]);
+    // f_i = (Kβ)_i maintained incrementally
+    let mut f = vec![0.0f32; n];
+    for j in 0..n {
+        if beta[j] != 0.0 {
+            let bj = beta[j];
+            let krow = k.row(j);
+            for i in 0..n {
+                f[i] += bj * krow[i];
+            }
+        }
+    }
+
+    let scale: f32 = y.iter().map(|v| v.abs()).fold(0.0, f32::max).max(1.0);
+    let mut iters = 0usize;
+    let mut sweep_max = f32::INFINITY;
+    while sweep_max > params.eps * scale && iters < params.max_iter {
+        sweep_max = 0.0;
+        for i in 0..n {
+            let kii = k.get(i, i).max(1e-12);
+            // residual with β_i's own contribution removed:
+            // r_i(β_i) = y_i − (f_i − k_ii β_i) − k_ii β_i
+            let rest = y[i] - (f[i] - kii * beta[i]);
+            // case r >= 0 (τ' = τ):   β = 2Cτ (rest − k_ii β)
+            //   ⇒ β = 2Cτ·rest / (1 + 2Cτ·k_ii), consistent iff r >= 0
+            let mut new_b = beta[i];
+            let bp = 2.0 * c * tau * rest / (1.0 + 2.0 * c * tau * kii);
+            if rest - kii * bp >= 0.0 {
+                new_b = bp;
+            } else {
+                let tn = 1.0 - tau;
+                let bn = 2.0 * c * tn * rest / (1.0 + 2.0 * c * tn * kii);
+                if rest - kii * bn <= 0.0 {
+                    new_b = bn;
+                }
+            }
+            let d = new_b - beta[i];
+            if d != 0.0 {
+                beta[i] = new_b;
+                let krow = k.row(i);
+                for (j, fj) in f.iter_mut().enumerate() {
+                    *fj += d * krow[j];
+                }
+                sweep_max = sweep_max.max(d.abs() * kii);
+            }
+            iters += 1;
+            if iters >= params.max_iter {
+                break;
+            }
+        }
+    }
+
+    // primal objective (for selection comparisons): λ‖f‖² + mean loss
+    let reg: f32 = beta.iter().zip(&f).map(|(&b, &fi)| b * fi).sum();
+    let loss: f32 = y
+        .iter()
+        .zip(&f)
+        .map(|(&yi, &fi)| {
+            let r = yi - fi;
+            if r >= 0.0 { tau * r * r } else { (1.0 - tau) * r * r }
+        })
+        .sum::<f32>()
+        / n as f32;
+    let obj = lambda * reg + loss;
+    Solution::from_coef(beta, obj, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{GramBackend, KernelKind};
+
+    fn setup(n: usize, seed: u64) -> (Matrix, Vec<f32>) {
+        let d = crate::data::synth::sinc_hetero(n, seed);
+        let k = GramBackend::Blocked.gram(&d.x, &d.x, 0.8, KernelKind::Gauss);
+        (k, d.y)
+    }
+
+    #[test]
+    fn half_expectile_equals_ls() {
+        // τ = 0.5 reduces to (half-scaled) least squares — compare fits
+        let (k, y) = setup(100, 1);
+        let p = SolverParams { eps: 1e-5, ..Default::default() };
+        let ex = solve(&k, &y, 1e-3, 0.5, &p, None).decision_values(&k);
+        // ℓ_{0.5}(r) = r²/2, so expectile λ matches LS λ at half weight:
+        let ls = crate::solver::ls::solve(&k, &y, 2e-3, &p, None).decision_values(&k);
+        let diff: f32 =
+            ex.iter().zip(&ls).map(|(a, b)| (a - b).abs()).sum::<f32>() / y.len() as f32;
+        assert!(diff < 0.05, "mean |expectile - ls| = {diff}");
+    }
+
+    #[test]
+    fn high_expectile_sits_above_low() {
+        let (k, y) = setup(150, 2);
+        let p = SolverParams::default();
+        let hi = solve(&k, &y, 1e-4, 0.9, &p, None).decision_values(&k);
+        let lo = solve(&k, &y, 1e-4, 0.1, &p, None).decision_values(&k);
+        let gap: f32 = hi.iter().zip(&lo).map(|(a, b)| a - b).sum::<f32>() / y.len() as f32;
+        assert!(gap > 0.0, "expectile ordering violated, gap {gap}");
+    }
+
+    #[test]
+    fn stationarity_holds() {
+        let (k, y) = setup(60, 3);
+        let lambda = 1e-3;
+        let tau = 0.7;
+        let sol = solve(&k, &y, lambda, tau, &SolverParams { eps: 1e-6, ..Default::default() }, None);
+        let f = sol.decision_values(&k);
+        let c = box_c(lambda, y.len());
+        for i in 0..y.len() {
+            let r = y[i] - f[i];
+            let tp = if r >= 0.0 { tau } else { 1.0 - tau };
+            let should = 2.0 * c * tp * r;
+            assert!(
+                (sol.coef[i] - should).abs() < 2e-3 * (1.0 + should.abs()),
+                "beta[{i}]={} vs {}",
+                sol.coef[i],
+                should
+            );
+        }
+    }
+
+    #[test]
+    fn warm_start_converges() {
+        let (k, y) = setup(80, 4);
+        let p = SolverParams::default();
+        let a = solve(&k, &y, 1e-3, 0.8, &p, None);
+        let b = solve(&k, &y, 8e-4, 0.8, &p, Some(&a.coef));
+        assert!(b.iterations <= a.iterations * 2);
+    }
+}

@@ -1,0 +1,148 @@
+//! Least-squares solver (mean regression and the OvA-LS multiclass
+//! path used in the GURLS comparison, Table 2).
+//!
+//! With the representer expansion f = Σ β_j k(x_j, ·), the offset-free
+//! regularized LS problem reduces to the linear system
+//!
+//!   (K + nλ I) β = y,
+//!
+//! which we solve by conjugate gradients.  CG warm-starts from the
+//! previous λ's solution, which is exactly the "straightforward
+//! modification" of the hinge machinery the paper describes — matvecs
+//! are the cost, and the Gram matrix is the one already cached for the
+//! γ at hand.
+
+use crate::data::matrix::Matrix;
+
+use super::{Solution, SolverParams};
+
+/// y ← (K + nλ I)·x  (fused matvec + shift)
+fn matvec_shifted(k: &Matrix, shift: f32, x: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    for i in 0..n {
+        let row = k.row(i);
+        let mut s = 0.0f32;
+        for j in 0..n {
+            s += row[j] * x[j];
+        }
+        out[i] = s + shift * x[i];
+    }
+}
+
+pub fn solve(
+    k: &Matrix,
+    y: &[f32],
+    lambda: f32,
+    params: &SolverParams,
+    warm: Option<&[f32]>,
+) -> Solution {
+    let n = y.len();
+    assert_eq!(k.rows(), n);
+    let shift = lambda * n as f32;
+
+    let mut beta: Vec<f32> = warm.map(<[f32]>::to_vec).unwrap_or_else(|| vec![0.0; n]);
+    let mut tmp = vec![0.0f32; n];
+
+    // r = y − (K + nλI)β
+    matvec_shifted(k, shift, &beta, &mut tmp);
+    let mut r: Vec<f32> = y.iter().zip(&tmp).map(|(&a, &b)| a - b).collect();
+    let mut p = r.clone();
+    let mut rs: f32 = r.iter().map(|v| v * v).sum();
+    let y_norm: f32 = y.iter().map(|v| v * v).sum::<f32>().max(1e-12);
+    let tol2 = (params.eps * params.eps) * y_norm;
+
+    let mut iters = 0usize;
+    let max_cg = params.max_iter.min(4 * n + 50);
+    while rs > tol2 && iters < max_cg {
+        matvec_shifted(k, shift, &p, &mut tmp);
+        let pap: f32 = p.iter().zip(&tmp).map(|(&a, &b)| a * b).sum();
+        if pap <= 0.0 {
+            break; // K + nλI is SPD; this only trips on round-off
+        }
+        let a = rs / pap;
+        for i in 0..n {
+            beta[i] += a * p[i];
+            r[i] -= a * tmp[i];
+        }
+        let rs_new: f32 = r.iter().map(|v| v * v).sum();
+        let b = rs_new / rs;
+        for i in 0..n {
+            p[i] = r[i] + b * p[i];
+        }
+        rs = rs_new;
+        iters += 1;
+    }
+
+    // dual-ish objective: ½βᵀ(K+nλI)β − yᵀβ (monotone in the residual)
+    matvec_shifted(k, shift, &beta, &mut tmp);
+    let obj: f32 = beta
+        .iter()
+        .zip(&tmp)
+        .zip(y)
+        .map(|((&bi, &ti), &yi)| 0.5 * bi * ti - yi * bi)
+        .sum();
+    Solution::from_coef(beta, obj, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{GramBackend, KernelKind};
+
+    fn gram_1d(xs: &[f32], gamma: f32) -> (Matrix, Matrix) {
+        let rows: Vec<Vec<f32>> = xs.iter().map(|&v| vec![v]).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = Matrix::from_rows(&refs);
+        let k = GramBackend::Blocked.gram(&x, &x, gamma, KernelKind::Gauss);
+        (x, k)
+    }
+
+    #[test]
+    fn solves_linear_system() {
+        let (_, k) = gram_1d(&[0.0, 0.5, 1.0, 1.5, 2.0], 1.0);
+        let y = vec![0.0, 0.25, 1.0, 2.25, 4.0];
+        let lambda = 0.01;
+        let sol = solve(&k, &y, lambda, &SolverParams { eps: 1e-5, ..Default::default() }, None);
+        // residual check: (K + nλI)β ≈ y
+        let n = y.len();
+        let mut out = vec![0.0; n];
+        matvec_shifted(&k, lambda * n as f32, &sol.coef, &mut out);
+        for (o, yi) in out.iter().zip(&y) {
+            assert!((o - yi).abs() < 1e-2, "{o} vs {yi}");
+        }
+    }
+
+    #[test]
+    fn fits_smooth_function() {
+        let xs: Vec<f32> = (0..50).map(|i| i as f32 / 10.0).collect();
+        let (x, k) = gram_1d(&xs, 0.7);
+        let y: Vec<f32> = xs.iter().map(|&v| (v).sin()).collect();
+        let sol = solve(&k, &y, 1e-4, &SolverParams { eps: 1e-5, ..Default::default() }, None);
+        let kx = GramBackend::Blocked.gram(&x, &x, 0.7, KernelKind::Gauss);
+        let f = sol.decision_values(&kx);
+        let mse: f32 =
+            f.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / y.len() as f32;
+        assert!(mse < 1e-3, "mse {mse}");
+    }
+
+    #[test]
+    fn warm_start_converges_faster() {
+        let xs: Vec<f32> = (0..80).map(|i| i as f32 / 8.0).collect();
+        let (_, k) = gram_1d(&xs, 1.0);
+        let y: Vec<f32> = xs.iter().map(|&v| v.cos()).collect();
+        let p = SolverParams { eps: 1e-5, ..Default::default() };
+        let first = solve(&k, &y, 1e-3, &p, None);
+        let warm = solve(&k, &y, 8e-4, &p, Some(&first.coef));
+        let cold = solve(&k, &y, 8e-4, &p, None);
+        assert!(warm.iterations <= cold.iterations);
+    }
+
+    #[test]
+    fn heavy_regularization_shrinks() {
+        let (_, k) = gram_1d(&[0.0, 1.0, 2.0], 1.0);
+        let y = vec![1.0, 1.0, 1.0];
+        let sol = solve(&k, &y, 100.0, &SolverParams::default(), None);
+        let norm: f32 = sol.coef.iter().map(|v| v.abs()).sum();
+        assert!(norm < 0.02, "coef norm {norm}");
+    }
+}

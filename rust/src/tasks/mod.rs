@@ -1,0 +1,286 @@
+//! Working-set **tasks** (paper §2 "Managing Working Sets"): a task is
+//! a sub-problem of the full learning problem — one binary machine of
+//! an OvA/AvA decomposition, one weighted machine of an NPL sweep, one
+//! quantile/expectile level — carrying its own sample subset, label
+//! transformation, solver, and validation loss.  Tasks are crossed with
+//! cells by the coordinator, and hyper-parameter selection runs on each
+//! resulting (cell × task) working set independently.
+
+use crate::data::dataset::Dataset;
+use crate::metrics::Loss;
+use crate::solver::SolverKind;
+
+/// Learning-scenario specification (the routines the CLI/bindings
+/// expose: mcSVM, lsSVM, qtSVM, exSVM, nplSVM, rocSVM ...).
+#[derive(Clone, Debug)]
+pub enum TaskSpec {
+    /// binary classification with hinge loss; `w` = positive-class
+    /// weight (0.5 ⇒ unweighted)
+    Binary { w: f32 },
+    /// one-versus-all multiclass (one hinge task per class)
+    MultiClassOvA,
+    /// all-versus-all multiclass (one task per unordered class pair)
+    MultiClassAvA,
+    /// least-squares regression (also the OvA-LS mode of Table 2 when
+    /// combined with multiclass data via `ova_ls`)
+    LeastSquares,
+    /// OvA with least-squares machines (GURLS comparison mode)
+    MultiClassOvALs,
+    /// weighted-binary sweep for Neyman-Pearson-type control of the
+    /// false-alarm rate
+    NeymanPearson { weights: Vec<f32> },
+    /// quantile regression at several levels simultaneously
+    MultiQuantile { taus: Vec<f32> },
+    /// expectile regression at several levels
+    MultiExpectile { taus: Vec<f32> },
+}
+
+/// A concrete task: subset + transformed labels + solver + val loss.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub name: String,
+    /// indices into the working set this task trains on
+    pub indices: Vec<usize>,
+    /// transformed labels, parallel to `indices`
+    pub y: Vec<f32>,
+    pub solver: SolverKind,
+    pub val_loss: Loss,
+}
+
+/// Materialize the tasks of a spec over a working set, using the
+/// working set's own label set.
+pub fn create_tasks(data: &Dataset, spec: &TaskSpec) -> Vec<Task> {
+    create_tasks_for_classes(data, spec, &data.classes())
+}
+
+/// Materialize tasks against a *global* class list — needed when the
+/// working set is one cell of a decomposition: every cell must carry
+/// the same task roster so predictions can be combined across cells,
+/// even if some class is absent locally (those tasks get empty index
+/// sets and are skipped by the trainer).
+pub fn create_tasks_for_classes(data: &Dataset, spec: &TaskSpec, classes: &[f32]) -> Vec<Task> {
+    let all: Vec<usize> = (0..data.len()).collect();
+    match spec {
+        TaskSpec::Binary { w } => vec![Task {
+            name: "binary".into(),
+            indices: all,
+            y: data.y.clone(),
+            solver: SolverKind::Hinge { w: *w },
+            val_loss: if *w == 0.5 {
+                Loss::Classification
+            } else {
+                Loss::WeightedClassification { w: *w }
+            },
+        }],
+        TaskSpec::LeastSquares => vec![Task {
+            name: "ls".into(),
+            indices: all,
+            y: data.y.clone(),
+            solver: SolverKind::LeastSquares,
+            val_loss: Loss::LeastSquares,
+        }],
+        TaskSpec::MultiClassOvA | TaskSpec::MultiClassOvALs => {
+            let ls = matches!(spec, TaskSpec::MultiClassOvALs);
+            classes
+                .iter()
+                .map(|&c| Task {
+                    name: format!("ova-{c}"),
+                    indices: all.clone(),
+                    y: data.y.iter().map(|&v| if v == c { 1.0 } else { -1.0 }).collect(),
+                    solver: if ls {
+                        SolverKind::LeastSquares
+                    } else {
+                        SolverKind::Hinge { w: 0.5 }
+                    },
+                    val_loss: if ls { Loss::LeastSquares } else { Loss::Classification },
+                })
+                .collect()
+        }
+        TaskSpec::MultiClassAvA => {
+            let mut tasks = Vec::new();
+            for a in 0..classes.len() {
+                for b in a + 1..classes.len() {
+                    let (ca, cb) = (classes[a], classes[b]);
+                    let indices: Vec<usize> =
+                        (0..data.len()).filter(|&i| data.y[i] == ca || data.y[i] == cb).collect();
+                    let y = indices
+                        .iter()
+                        .map(|&i| if data.y[i] == ca { -1.0 } else { 1.0 })
+                        .collect();
+                    tasks.push(Task {
+                        name: format!("ava-{ca}v{cb}"),
+                        indices,
+                        y,
+                        solver: SolverKind::Hinge { w: 0.5 },
+                        val_loss: Loss::Classification,
+                    });
+                }
+            }
+            tasks
+        }
+        TaskSpec::NeymanPearson { weights } => weights
+            .iter()
+            .map(|&w| Task {
+                name: format!("npl-w{w:.3}"),
+                indices: all.clone(),
+                y: data.y.clone(),
+                solver: SolverKind::Hinge { w },
+                val_loss: Loss::WeightedClassification { w },
+            })
+            .collect(),
+        TaskSpec::MultiQuantile { taus } => taus
+            .iter()
+            .map(|&tau| Task {
+                name: format!("qt-{tau:.2}"),
+                indices: all.clone(),
+                y: data.y.clone(),
+                solver: SolverKind::Quantile { tau },
+                val_loss: Loss::Pinball { tau },
+            })
+            .collect(),
+        TaskSpec::MultiExpectile { taus } => taus
+            .iter()
+            .map(|&tau| Task {
+                name: format!("ex-{tau:.2}"),
+                indices: all.clone(),
+                y: data.y.clone(),
+                solver: SolverKind::Expectile { tau },
+                val_loss: Loss::Expectile { tau },
+            })
+            .collect(),
+    }
+}
+
+/// Combine per-task decision values into final predictions.
+/// `scores[t][i]` = task `t`'s decision value on test sample `i`.
+pub fn combine_predictions(spec: &TaskSpec, classes: &[f32], scores: &[Vec<f32>]) -> Vec<f32> {
+    match spec {
+        TaskSpec::Binary { .. } => {
+            scores[0].iter().map(|&s| if s >= 0.0 { 1.0 } else { -1.0 }).collect()
+        }
+        TaskSpec::LeastSquares => scores[0].clone(),
+        TaskSpec::MultiClassOvA | TaskSpec::MultiClassOvALs => {
+            // argmax over the per-class machines
+            let n = scores[0].len();
+            (0..n)
+                .map(|i| {
+                    let mut best = (0usize, f32::NEG_INFINITY);
+                    for (t, sc) in scores.iter().enumerate() {
+                        if sc[i] > best.1 {
+                            best = (t, sc[i]);
+                        }
+                    }
+                    classes[best.0]
+                })
+                .collect()
+        }
+        TaskSpec::MultiClassAvA => {
+            // pairwise voting; task order matches create_tasks pair order
+            let n = scores[0].len();
+            let k = classes.len();
+            (0..n)
+                .map(|i| {
+                    let mut votes = vec![0usize; k];
+                    let mut t = 0usize;
+                    for a in 0..k {
+                        for b in a + 1..k {
+                            if scores[t][i] >= 0.0 {
+                                votes[b] += 1;
+                            } else {
+                                votes[a] += 1;
+                            }
+                            t += 1;
+                        }
+                    }
+                    let best = votes
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, &v)| v)
+                        .map(|(c, _)| c)
+                        .unwrap_or(0);
+                    classes[best]
+                })
+                .collect()
+        }
+        // NPL / quantile / expectile produce one curve per task; the
+        // "combined" prediction defaults to the first task (callers
+        // usually inspect per-task outputs instead)
+        _ => scores[0].clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+
+    fn mc_data() -> Dataset {
+        Dataset::new(
+            Matrix::from_rows(&[&[0.0], &[1.0], &[2.0], &[3.0], &[4.0], &[5.0]]),
+            vec![0.0, 1.0, 2.0, 0.0, 1.0, 2.0],
+        )
+    }
+
+    #[test]
+    fn ova_creates_one_task_per_class() {
+        let tasks = create_tasks(&mc_data(), &TaskSpec::MultiClassOvA);
+        assert_eq!(tasks.len(), 3);
+        // class-1 task labels: +1 where y==1
+        assert_eq!(tasks[1].y, vec![-1.0, 1.0, -1.0, -1.0, 1.0, -1.0]);
+        assert!(matches!(tasks[0].solver, SolverKind::Hinge { .. }));
+    }
+
+    #[test]
+    fn ava_pairs_and_subsets() {
+        let tasks = create_tasks(&mc_data(), &TaskSpec::MultiClassAvA);
+        assert_eq!(tasks.len(), 3); // 3 choose 2
+        // pair (0,1): only samples of class 0/1 included
+        assert_eq!(tasks[0].indices, vec![0, 1, 3, 4]);
+        assert_eq!(tasks[0].y, vec![-1.0, 1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn ova_argmax_combination() {
+        let classes = [0.0, 1.0, 2.0];
+        let scores = vec![vec![0.1, -1.0], vec![0.9, -0.2], vec![-0.5, -0.1]];
+        let pred = combine_predictions(&TaskSpec::MultiClassOvA, &classes, &scores);
+        assert_eq!(pred, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn ava_voting_combination() {
+        let classes = [0.0, 1.0, 2.0];
+        // tasks: (0v1), (0v2), (1v2); sample where 1 beats 0, 2 beats 0,
+        // 1 beats 2 => votes 0:0, 1:2, 2:1 -> class 1
+        let scores = vec![vec![1.0], vec![1.0], vec![-1.0]];
+        let pred = combine_predictions(&TaskSpec::MultiClassAvA, &classes, &scores);
+        assert_eq!(pred, vec![1.0]);
+    }
+
+    #[test]
+    fn quantile_tasks_one_per_tau() {
+        let d = Dataset::new(Matrix::from_rows(&[&[0.0], &[1.0]]), vec![0.3, 0.7]);
+        let tasks =
+            create_tasks(&d, &TaskSpec::MultiQuantile { taus: vec![0.1, 0.5, 0.9] });
+        assert_eq!(tasks.len(), 3);
+        assert!(matches!(tasks[2].solver, SolverKind::Quantile { tau } if tau == 0.9));
+    }
+
+    #[test]
+    fn npl_weight_sweep() {
+        let d = Dataset::new(Matrix::from_rows(&[&[0.0], &[1.0]]), vec![-1.0, 1.0]);
+        let tasks = create_tasks(&d, &TaskSpec::NeymanPearson { weights: vec![0.7, 0.9] });
+        assert_eq!(tasks.len(), 2);
+        assert!(matches!(tasks[1].val_loss, Loss::WeightedClassification { w } if w == 0.9));
+    }
+
+    #[test]
+    fn binary_sign_combination() {
+        let pred = combine_predictions(
+            &TaskSpec::Binary { w: 0.5 },
+            &[-1.0, 1.0],
+            &[vec![0.2, -0.3]],
+        );
+        assert_eq!(pred, vec![1.0, -1.0]);
+    }
+}

@@ -1,0 +1,146 @@
+//! Integration tests for the `liquidsvm` CLI binary.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_liquidsvm"))
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("train"));
+}
+
+#[test]
+fn list_datasets_contains_catalogue() {
+    let out = bin().arg("list-datasets").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in ["banana-mc", "covtype", "webspam"] {
+        assert!(text.contains(name), "missing {name} in: {text}");
+    }
+}
+
+#[test]
+fn train_banana_mc_smoke() {
+    let out = bin()
+        .args(["train", "--data", "banana-mc", "--n", "300", "--folds", "3", "--scenario", "mc"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("error="), "no error report: {text}");
+}
+
+#[test]
+fn train_with_cells_and_libsvm_grid() {
+    let out = bin()
+        .args([
+            "train", "--data", "covtype", "--n", "600", "--folds", "3",
+            "--scenario", "binary", "--voronoi", "6,200", "--libsvm-grid",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("cells="));
+}
+
+#[test]
+fn distributed_smoke() {
+    let out = bin()
+        .args([
+            "distributed", "--data", "covtype", "--n", "1500", "--workers", "3",
+            "--coarse-size", "500", "--fine-size", "200", "--folds", "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("speedup="), "{text}");
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn unknown_dataset_fails_cleanly() {
+    let out = bin().args(["train", "--data", "nope"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown dataset"));
+}
+
+#[test]
+fn save_then_predict_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("lsvm-cli-sol-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let sol = dir.join("m.sol");
+    let out = bin()
+        .args([
+            "train", "--data", "banana", "--n", "250", "--folds", "3",
+            "--scenario", "binary", "--save", sol.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "train: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(sol.exists());
+
+    let preds = dir.join("preds.txt");
+    let out = bin()
+        .args([
+            "predict", "--model", sol.to_str().unwrap(), "--data", "banana",
+            "--n", "100", "--out", preds.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "predict: {}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&preds).unwrap();
+    // predict's test split is n-test = n/2 = 50 rows
+    assert_eq!(text.lines().count(), 50);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn convert_csv_to_libsvm() {
+    let dir = std::env::temp_dir().join(format!("lsvm-cli-conv-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("d.csv");
+    std::fs::write(&csv, "1,0.5,0\n-1,0,2.5\n").unwrap();
+    let light = dir.join("d.libsvm");
+    let out = bin()
+        .args(["convert", "--in", csv.to_str().unwrap(), "--out", light.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&light).unwrap();
+    assert!(text.contains("1:0.5"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn csv_file_input_works() {
+    let dir = std::env::temp_dir().join(format!("lsvm-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("toy.csv");
+    // 40 separable samples
+    let mut text = String::new();
+    for i in 0..40 {
+        let (y, x) = if i % 2 == 0 { (1.0, 1.0 + (i as f32) * 0.01) } else { (-1.0, -1.0 - (i as f32) * 0.01) };
+        text.push_str(&format!("{y},{x},{}\n", x * 0.5));
+    }
+    std::fs::write(&path, text).unwrap();
+    let out = bin()
+        .args(["train", "--file", path.to_str().unwrap(), "--scenario", "binary", "--folds", "2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,143 @@
+//! Integration tests across the full train→select→test pipeline:
+//! every scenario × representative configs, on synthetic workloads
+//! small enough for CI but large enough to demand real learning.
+
+use liquid_svm::cells::CellStrategy;
+use liquid_svm::coordinator::scenarios;
+use liquid_svm::data::synth;
+use liquid_svm::metrics::Loss;
+use liquid_svm::prelude::*;
+
+fn cfg3() -> Config {
+    Config::default().folds(3)
+}
+
+#[test]
+fn binary_all_small_datasets_beat_majority_vote() {
+    for name in ["bank-marketing", "cod-rna", "covtype", "thyroid-ann"] {
+        let train = synth::by_name(name, 400, 1).unwrap();
+        let test = synth::by_name(name, 300, 2).unwrap();
+        let m = svm_binary(&train, 0.5, &cfg3()).unwrap();
+        let err = m.test(&test).error;
+        // majority-vote error = minority fraction
+        let pos = test.y.iter().filter(|&&v| v > 0.0).count() as f32 / test.y.len() as f32;
+        let majority = pos.min(1.0 - pos);
+        assert!(
+            err <= majority + 0.03,
+            "{name}: error {err} vs majority baseline {majority}"
+        );
+    }
+}
+
+#[test]
+fn libsvm_grid_and_default_grid_agree_roughly() {
+    let train = synth::by_name("cod-rna", 500, 3).unwrap();
+    let test = synth::by_name("cod-rna", 300, 4).unwrap();
+    let e_def = svm_binary(&train, 0.5, &cfg3()).unwrap().test(&test).error;
+    let e_lib = svm_binary(&train, 0.5, &cfg3().libsvm_grid(true)).unwrap().test(&test).error;
+    assert!((e_def - e_lib).abs() < 0.08, "default {e_def} vs libsvm {e_lib}");
+}
+
+#[test]
+fn every_cell_strategy_trains_and_predicts() {
+    let train = synth::by_name("covtype", 800, 5).unwrap();
+    let test = synth::by_name("covtype", 400, 6).unwrap();
+    for cells in [
+        CellStrategy::None,
+        CellStrategy::RandomChunks { size: 200 },
+        CellStrategy::Voronoi { size: 200 },
+        CellStrategy::OverlappingVoronoi { size: 200, overlap: 0.3 },
+        CellStrategy::RecursiveTree { max_size: 200 },
+    ] {
+        let label = format!("{cells:?}");
+        let m = svm_binary(&train, 0.5, &cfg3().voronoi(cells)).unwrap();
+        let res = m.test(&test);
+        assert!(res.error < 0.45, "{label}: error {}", res.error);
+        assert_eq!(res.predictions.len(), 400);
+    }
+}
+
+#[test]
+fn ova_and_ava_agree_on_easy_multiclass() {
+    let tt = synth::banana_mc(300, 200, 7);
+    let e_ova = scenarios::mc_svm_type(&tt.train, true, &cfg3()).unwrap().test(&tt.test).error;
+    let e_ava = scenarios::mc_svm_type(&tt.train, false, &cfg3()).unwrap().test(&tt.test).error;
+    assert!(e_ova < 0.2, "ova {e_ova}");
+    assert!(e_ava < 0.2, "ava {e_ava}");
+}
+
+#[test]
+fn expectile_scenario_runs_and_is_calibrated() {
+    let train = synth::sinc_hetero(250, 8);
+    let test = synth::sinc_hetero(150, 9);
+    let m = scenarios::ex_svm(&train, &[0.2, 0.8], &cfg3()).unwrap();
+    let res = m.test(&test);
+    // expectile curves must be ordered on average
+    let gap: f32 = res.task_scores[1]
+        .iter()
+        .zip(&res.task_scores[0])
+        .map(|(h, l)| h - l)
+        .sum::<f32>()
+        / 150.0;
+    assert!(gap > 0.0, "expectile curves crossed");
+}
+
+#[test]
+fn weighted_binary_shifts_operating_point() {
+    let train = synth::by_name("thyroid-ann", 700, 10).unwrap();
+    let test = synth::by_name("thyroid-ann", 500, 11).unwrap();
+    // high positive weight ⇒ fewer false negatives (higher detection)
+    let m_hi = svm_binary(&train, 0.9, &cfg3()).unwrap();
+    let m_lo = svm_binary(&train, 0.1, &cfg3()).unwrap();
+    let s_hi = m_hi.decision_values(&test.x);
+    let s_lo = m_lo.decision_values(&test.x);
+    let det = |scores: &Vec<f32>| {
+        let c = liquid_svm::metrics::Confusion::from_scores(&test.y, scores);
+        c.detection_rate()
+    };
+    assert!(
+        det(&s_hi[0]) >= det(&s_lo[0]) - 0.02,
+        "w=0.9 detection {} < w=0.1 detection {}",
+        det(&s_hi[0]),
+        det(&s_lo[0])
+    );
+}
+
+#[test]
+fn adaptivity_saves_work_keeps_quality() {
+    let train = synth::by_name("cod-rna", 600, 12).unwrap();
+    let test = synth::by_name("cod-rna", 400, 13).unwrap();
+    let m_full = svm_binary(&train, 0.5, &cfg3()).unwrap();
+    let m_adapt = svm_binary(&train, 0.5, &cfg3().adaptivity(2)).unwrap();
+    assert!(m_adapt.points_evaluated < m_full.points_evaluated);
+    let e_full = m_full.test(&test).error;
+    let e_adapt = m_adapt.test(&test).error;
+    assert!(e_adapt <= e_full + 0.05, "adaptive {e_adapt} vs full {e_full}");
+}
+
+#[test]
+fn scaling_is_fitted_on_train_only() {
+    // shifted test set: scaler must come from train stats, so shifted
+    // test data lands outside [0,1] — predictions still work
+    let train = synth::by_name("cod-rna", 300, 14).unwrap();
+    let mut test = synth::by_name("cod-rna", 100, 15).unwrap();
+    for v in test.x.as_mut_slice() {
+        *v += 10.0;
+    }
+    let m = svm_binary(&train, 0.5, &cfg3()).unwrap();
+    let preds = m.predict(&test.x);
+    assert_eq!(preds.len(), 100);
+    assert!(preds.iter().all(|p| p.is_finite()));
+}
+
+#[test]
+fn regression_mse_beats_mean_predictor() {
+    let train = synth::sinc_hetero(300, 16);
+    let test = synth::sinc_hetero(200, 17);
+    let m = scenarios::ls_svm(&train, &cfg3()).unwrap();
+    let res = m.test(&test);
+    let mean: f32 = test.y.iter().sum::<f32>() / test.y.len() as f32;
+    let mean_preds = vec![mean; test.y.len()];
+    let var = Loss::LeastSquares.mean(&test.y, &mean_preds);
+    assert!(res.error < var, "mse {} vs variance {}", res.error, var);
+}

@@ -1,0 +1,278 @@
+//! Property-style tests over randomized inputs (hand-rolled — the
+//! offline registry has no proptest; each property runs a deterministic
+//! sweep of seeded random cases and asserts the invariant on all).
+//!
+//! Coordinator invariants under test: cell decompositions cover &
+//! route correctly for every strategy/shape; fold generation partitions
+//! for every kind/k/n; solvers respect their dual constraints on random
+//! problems; prediction combination emits valid labels; IO round-trips.
+
+use liquid_svm::cells::{make_cells, CellStrategy};
+use liquid_svm::data::folds::{make_folds, FoldKind};
+use liquid_svm::data::matrix::Matrix;
+use liquid_svm::data::rng::Rng;
+use liquid_svm::data::synth;
+use liquid_svm::data::Dataset;
+use liquid_svm::kernel::{GramBackend, KernelKind};
+use liquid_svm::solver::{solve, SolverKind, SolverParams};
+use liquid_svm::tasks::{combine_predictions, create_tasks, TaskSpec};
+
+const CASES: u64 = 12;
+
+fn random_dataset(rng: &mut Rng, n: usize, d: usize, classes: usize) -> Dataset {
+    let x = Matrix::from_vec((0..n * d).map(|_| rng.range(-3.0, 3.0)).collect(), n, d);
+    let y = (0..n)
+        .map(|_| {
+            if classes == 2 {
+                if rng.uniform() < 0.5 { -1.0 } else { 1.0 }
+            } else {
+                rng.below(classes) as f32
+            }
+        })
+        .collect();
+    Dataset::new(x, y)
+}
+
+#[test]
+fn prop_cells_cover_every_sample() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let n = 50 + rng.below(400);
+        let d = 1 + rng.below(8);
+        let data = random_dataset(&mut rng, n, d, 2);
+        let size = 20 + rng.below(100);
+        for strategy in [
+            CellStrategy::None,
+            CellStrategy::RandomChunks { size },
+            CellStrategy::Voronoi { size },
+            CellStrategy::RecursiveTree { max_size: size.max(8) },
+        ] {
+            let p = make_cells(&data, &strategy, seed);
+            let mut seen = vec![false; n];
+            for cell in &p.cells {
+                for &i in cell {
+                    assert!(!seen[i], "{strategy:?}: duplicate {i} (seed {seed})");
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{strategy:?}: missing samples (seed {seed})");
+        }
+    }
+}
+
+#[test]
+fn prop_overlapping_cells_superset_of_voronoi() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x10);
+        let n = 80 + rng.below(200);
+        let data = random_dataset(&mut rng, n, 3, 2);
+        let p = make_cells(&data, &CellStrategy::OverlappingVoronoi { size: 50, overlap: 0.4 }, seed);
+        // overlap cells still cover everything (possibly more than once)
+        let mut seen = vec![false; n];
+        for cell in &p.cells {
+            for &i in cell {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "overlap cells dropped samples (seed {seed})");
+    }
+}
+
+#[test]
+fn prop_routing_is_deterministic_and_in_range() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x20);
+        let n = 60 + rng.below(300);
+        let data = random_dataset(&mut rng, n, 4, 2);
+        for strategy in [
+            CellStrategy::Voronoi { size: 40 },
+            CellStrategy::RecursiveTree { max_size: 40 },
+        ] {
+            let p = make_cells(&data, &strategy, seed);
+            for i in 0..n.min(30) {
+                let a = p.route(data.x.row(i));
+                let b = p.route(data.x.row(i));
+                assert_eq!(a, b, "routing not deterministic");
+                for &c in &a {
+                    assert!(c < p.n_cells());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_folds_partition_for_all_kinds() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x30);
+        let n = 20 + rng.below(300);
+        let k = 2 + rng.below(6);
+        if n < k {
+            continue;
+        }
+        let data = random_dataset(&mut rng, n, 2, 2);
+        for kind in [FoldKind::Random, FoldKind::Stratified, FoldKind::Block, FoldKind::Alternating] {
+            let f = make_folds(&data, k, kind, seed);
+            let mut seen = vec![0u8; n];
+            for fold in &f.folds {
+                for &i in fold {
+                    seen[i] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "{kind:?} not a partition (n={n}, k={k})");
+            // no empty folds
+            assert!(f.folds.iter().all(|fo| !fo.is_empty()), "{kind:?} empty fold");
+        }
+    }
+}
+
+#[test]
+fn prop_hinge_alpha_always_in_box() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x40);
+        let n = 20 + rng.below(60);
+        let data = random_dataset(&mut rng, n, 3, 2);
+        let k = GramBackend::Blocked.gram(&data.x, &data.x, 1.5, KernelKind::Gauss);
+        let lambda = 10f32.powf(rng.range(-4.0, -1.0));
+        let w = rng.range(0.2, 0.8);
+        let sol = solve(SolverKind::Hinge { w }, &k, &data.y, lambda, &SolverParams::default(), None);
+        let c = 1.0 / (2.0 * lambda * n as f32);
+        for (coef, &yi) in sol.coef.iter().zip(&data.y) {
+            let a = coef * yi;
+            let hi = if yi > 0.0 { 2.0 * w * c } else { 2.0 * (1.0 - w) * c };
+            assert!(
+                (-1e-5..=hi + 1e-5).contains(&a),
+                "alpha {a} outside [0, {hi}] (seed {seed})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_quantile_beta_in_box_and_ls_residual_small() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x50);
+        let n = 20 + rng.below(50);
+        let d = synth::sinc_hetero(n, seed);
+        let k = GramBackend::Blocked.gram(&d.x, &d.x, 0.9, KernelKind::Gauss);
+        let lambda = 10f32.powf(rng.range(-4.0, -2.0));
+        let tau = rng.range(0.1, 0.9);
+        let sol = solve(SolverKind::Quantile { tau }, &k, &d.y, lambda, &SolverParams::default(), None);
+        let c = 1.0 / (2.0 * lambda * n as f32);
+        for &b in &sol.coef {
+            assert!(b >= c * (tau - 1.0) - 1e-5 && b <= c * tau + 1e-5, "beta {b} (seed {seed})");
+        }
+    }
+}
+
+#[test]
+fn prop_warm_start_never_worse_objective() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x60);
+        let n = 30 + rng.below(50);
+        let data = random_dataset(&mut rng, n, 2, 2);
+        let k = GramBackend::Blocked.gram(&data.x, &data.x, 1.0, KernelKind::Gauss);
+        let p = SolverParams::default();
+        let l1 = 1e-2f32;
+        let l2 = 5e-3f32;
+        let first = solve(SolverKind::Hinge { w: 0.5 }, &k, &data.y, l1, &p, None);
+        let warm_vec = liquid_svm::solver::warm_vector(SolverKind::Hinge { w: 0.5 }, &first, &data.y);
+        let warm = solve(SolverKind::Hinge { w: 0.5 }, &k, &data.y, l2, &p, Some(&warm_vec));
+        let cold = solve(SolverKind::Hinge { w: 0.5 }, &k, &data.y, l2, &p, None);
+        // same KKT tolerance ⇒ same objective up to tolerance slack
+        assert!(
+            (warm.objective - cold.objective).abs() <= 2e-2 * (1.0 + cold.objective.abs()),
+            "warm {} vs cold {} (seed {seed})",
+            warm.objective,
+            cold.objective
+        );
+    }
+}
+
+#[test]
+fn prop_combined_predictions_are_valid_labels() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x70);
+        let n_classes = 3 + rng.below(4);
+        let classes: Vec<f32> = (0..n_classes).map(|c| c as f32).collect();
+        let n = 20 + rng.below(40);
+        for spec in [TaskSpec::MultiClassOvA, TaskSpec::MultiClassAvA] {
+            let n_tasks = match spec {
+                TaskSpec::MultiClassOvA => n_classes,
+                _ => n_classes * (n_classes - 1) / 2,
+            };
+            let scores: Vec<Vec<f32>> = (0..n_tasks)
+                .map(|_| (0..n).map(|_| rng.range(-2.0, 2.0)).collect())
+                .collect();
+            let preds = combine_predictions(&spec, &classes, &scores);
+            assert_eq!(preds.len(), n);
+            for p in preds {
+                assert!(classes.contains(&p), "invalid label {p} (seed {seed})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_task_indices_and_labels_consistent() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x80);
+        let n_classes = 2 + rng.below(5);
+        let n = 30 + rng.below(100);
+        let data = random_dataset(&mut rng, n, 3, n_classes);
+        for spec in [TaskSpec::MultiClassOvA, TaskSpec::MultiClassAvA] {
+            for task in create_tasks(&data, &spec) {
+                assert_eq!(task.indices.len(), task.y.len());
+                for &i in &task.indices {
+                    assert!(i < data.len());
+                }
+                for &y in &task.y {
+                    assert!(y == 1.0 || y == -1.0, "binary task label {y}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_libsvm_io_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x90);
+        let n = 5 + rng.below(40);
+        let d = 1 + rng.below(10);
+        let data = random_dataset(&mut rng, n, d, 2);
+        let dir = std::env::temp_dir().join(format!("lsvm-prop-{}-{seed}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.libsvm");
+        liquid_svm::data::io::write_libsvm(&p, &data).unwrap();
+        let back = liquid_svm::data::io::read_libsvm(&p, d).unwrap();
+        assert_eq!(back.y, data.y);
+        for i in 0..n {
+            for j in 0..d {
+                let (a, b) = (back.x.get(i, j), data.x.get(i, j));
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "({i},{j}): {a} vs {b}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn prop_gram_backends_agree() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xa0);
+        let m = 5 + rng.below(60);
+        let n = 5 + rng.below(60);
+        let d = 1 + rng.below(20);
+        let x = Matrix::from_vec((0..m * d).map(|_| rng.range(-2.0, 2.0)).collect(), m, d);
+        let y = Matrix::from_vec((0..n * d).map(|_| rng.range(-2.0, 2.0)).collect(), n, d);
+        let g = rng.range(0.3, 4.0);
+        for kind in [KernelKind::Gauss, KernelKind::Laplace] {
+            let a = GramBackend::Scalar.gram(&x, &y, g, kind);
+            let b = GramBackend::Blocked.gram(&x, &y, g, kind);
+            for (u, v) in a.as_slice().iter().zip(b.as_slice()) {
+                assert!((u - v).abs() < 2e-4, "{kind:?}: {u} vs {v} (seed {seed})");
+            }
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Integration: the L3↔L1 bridge — AOT Pallas/XLA artifacts executed
+//! via PJRT must agree with the CPU backends bit-for-bit (up to f32
+//! round-off) and plug into the full pipeline.
+//!
+//! Requires `make artifacts`; tests skip politely when artifacts are
+//! missing (e.g. a cargo-only environment).
+
+use std::sync::Arc;
+
+use liquid_svm::data::rng::Rng;
+use liquid_svm::data::Matrix;
+use liquid_svm::kernel::{GramBackend, KernelKind};
+use liquid_svm::runtime::{default_artifact_dir, XlaRuntime};
+
+fn runtime() -> Option<Arc<XlaRuntime>> {
+    XlaRuntime::open(default_artifact_dir()).ok().map(Arc::new)
+}
+
+fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_vec((0..rows * cols).map(|_| rng.range(-1.5, 1.5)).collect(), rows, cols)
+}
+
+#[test]
+fn gram_multi_matches_cpu_backend() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    let x = randmat(&mut rng, 100, 9);
+    let y = randmat(&mut rng, 150, 9);
+    let gammas = [0.5f32, 1.0, 2.0, 5.0];
+    let xla = GramBackend::Xla(rt).gram_multi(&x, &y, &gammas, KernelKind::Gauss);
+    let cpu = GramBackend::Blocked.gram_multi(&x, &y, &gammas, KernelKind::Gauss);
+    for (a, b) in xla.iter().zip(&cpu) {
+        for (u, v) in a.as_slice().iter().zip(b.as_slice()) {
+            assert!((u - v).abs() < 1e-4, "{u} vs {v}");
+        }
+    }
+}
+
+#[test]
+fn gram_multi_tiles_gamma_grids_beyond_chunk() {
+    let Some(rt) = runtime() else { return };
+    let chunk = rt.manifest().gamma_chunk;
+    let mut rng = Rng::new(2);
+    let x = randmat(&mut rng, 40, 5);
+    // 15 gammas > chunk of 10 forces two artifact invocations
+    let gammas: Vec<f32> = (0..chunk + 5).map(|i| 0.3 + 0.2 * i as f32).collect();
+    let xla = GramBackend::Xla(rt).gram_multi(&x, &x, &gammas, KernelKind::Gauss);
+    let cpu = GramBackend::Blocked.gram_multi(&x, &x, &gammas, KernelKind::Gauss);
+    assert_eq!(xla.len(), gammas.len());
+    for (a, b) in xla.iter().zip(&cpu) {
+        for (u, v) in a.as_slice().iter().zip(b.as_slice()) {
+            assert!((u - v).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn predict_artifact_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    let x = randmat(&mut rng, 64, 12);
+    let sv = randmat(&mut rng, 200, 12);
+    let alpha = randmat(&mut rng, 200, 3);
+    let pred = rt.predict(&x, &sv, &alpha, 1.3).unwrap();
+    let k = GramBackend::Blocked.gram(&x, &sv, 1.3, KernelKind::Gauss);
+    for i in 0..64 {
+        for t in 0..3 {
+            let want: f32 = (0..200).map(|j| k.get(i, j) * alpha.get(j, t)).sum();
+            assert!((pred.get(i, t) - want).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn predict_tiles_wide_coefficient_blocks() {
+    let Some(rt) = runtime() else { return };
+    let tcap = rt.manifest().t_cols;
+    let mut rng = Rng::new(4);
+    let x = randmat(&mut rng, 20, 6);
+    let sv = randmat(&mut rng, 50, 6);
+    let t = tcap + 3; // forces column tiling
+    let alpha = randmat(&mut rng, 50, t);
+    let pred = rt.predict(&x, &sv, &alpha, 0.9).unwrap();
+    assert_eq!((pred.rows(), pred.cols()), (20, t));
+    let k = GramBackend::Blocked.gram(&x, &sv, 0.9, KernelKind::Gauss);
+    for i in 0..20 {
+        for c in 0..t {
+            let want: f32 = (0..50).map(|j| k.get(i, j) * alpha.get(j, c)).sum();
+            assert!((pred.get(i, c) - want).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn oversize_shapes_fall_back_to_cpu() {
+    let Some(rt) = runtime() else { return };
+    let max = rt.max_gram_rows();
+    let mut rng = Rng::new(5);
+    // rows beyond every bucket: the backend must fall back, not fail
+    let x = randmat(&mut rng, max + 10, 4);
+    let out = GramBackend::Xla(rt).gram_multi(&x, &x, &[1.0], KernelKind::Gauss);
+    assert_eq!(out[0].rows(), max + 10);
+    let cpu = GramBackend::Blocked.gram(&x, &x, 1.0, KernelKind::Gauss);
+    for (u, v) in out[0].as_slice().iter().zip(cpu.as_slice()) {
+        assert!((u - v).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn full_pipeline_with_xla_backend() {
+    if runtime().is_none() {
+        return;
+    }
+    use liquid_svm::coordinator::config::BackendChoice;
+    use liquid_svm::prelude::*;
+    let d = liquid_svm::data::synth::banana_binary(250, 6);
+    let cfg = Config::default().folds(3).backend(BackendChoice::Xla);
+    let m = svm_binary(&d, 0.5, &cfg).unwrap();
+    let test = liquid_svm::data::synth::banana_binary(150, 7);
+    let res = m.test(&test);
+    assert!(res.error < 0.25, "xla-backend pipeline error {}", res.error);
+}
+
+#[test]
+fn manifest_parses_and_lists_buckets() {
+    let Some(rt) = runtime() else { return };
+    let man = rt.manifest();
+    assert!(man.gamma_chunk >= 1);
+    assert!(man.artifacts.iter().any(|a| a.op == "gram_multi"));
+    assert!(man.artifacts.iter().any(|a| a.op == "predict"));
+    for a in &man.artifacts {
+        assert!(a.rows > 0 && a.cols > 0 && a.dim > 0, "{a:?}");
+    }
+}
