@@ -1,0 +1,133 @@
+//! Serving-throughput table: single-request vs batched prediction
+//! through the `serve` subsystem, across batch-size caps and Gram
+//! backends.
+//!
+//! "single" runs one connection in strict request/response lockstep
+//! against a `max_batch = 1` server — every row pays the full
+//! per-call cost (syscalls, routing, a 1-row Gram).  "batched" runs
+//! many pipelined connections against a size-bucketed batcher, so
+//! rows coalesce into fused predict calls and the per-call overhead
+//! amortizes — the request-level analogue of the CV engine reusing
+//! one distance matrix across the whole γ grid.
+//!
+//! Paper shape: batched throughput grows with the batch cap until the
+//! predict call saturates the backend; the speedup column is the
+//! serving claim of this PR (target ≥ 3× on Blocked).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use harness::{sized, Table};
+use liquid_svm::coordinator::config::BackendChoice;
+use liquid_svm::data::synth;
+use liquid_svm::prelude::*;
+use liquid_svm::runtime::{default_artifact_dir, XlaRuntime};
+use liquid_svm::serve::{run_load, LoadSpec, ServeConfig, Server};
+
+struct Measured {
+    rps: f64,
+    mean_batch: f64,
+    p99_us: u64,
+}
+
+fn measure(
+    backend: BackendChoice,
+    train: &liquid_svm::data::Dataset,
+    rows: &[Vec<f32>],
+    max_batch: usize,
+    connections: usize,
+    pipeline: usize,
+    requests: usize,
+) -> Measured {
+    let cfg = Config::default().folds(2).backend(backend);
+    let model = svm_binary(train, 0.5, &cfg).unwrap();
+    let server = Server::start(ServeConfig {
+        port: 0,
+        max_batch,
+        max_delay: Duration::from_millis(1),
+        workers: 2,
+        model_config: cfg,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    server.registry.insert("m", model);
+
+    let spec = LoadSpec {
+        addr: server.addr().to_string(),
+        model: "m".into(),
+        connections,
+        requests: requests / connections.max(1),
+        pipeline,
+    };
+    // warm-up (thread spin-up, executable caches), then the timed run
+    let _ = run_load(&LoadSpec { requests: (spec.requests / 10).max(1), ..spec.clone() }, rows, None);
+    let report = run_load(&spec, rows, None).unwrap();
+    let out = Measured {
+        rps: report.rps(),
+        mean_batch: server.stats.mean_batch(),
+        p99_us: report.latency.percentile_us(0.99),
+    };
+    server.shutdown();
+    out
+}
+
+fn main() {
+    let n_train = sized(150, 400, 1000);
+    let requests = sized(2_000, 8_000, 20_000);
+    println!(
+        "\n=== serve: single-request vs batched throughput (train n={n_train}, {requests} requests) ===\n"
+    );
+
+    let train = synth::banana_binary(n_train, 51);
+    let test = synth::banana_binary(512, 52);
+    let rows: Vec<Vec<f32>> = (0..test.len()).map(|i| test.x.row(i).to_vec()).collect();
+
+    let have_artifacts = XlaRuntime::open(default_artifact_dir()).is_ok();
+    let mut backends = vec![
+        ("scalar", BackendChoice::Scalar),
+        ("blocked", BackendChoice::Blocked),
+    ];
+    if have_artifacts {
+        backends.push(("xla", BackendChoice::Xla));
+    } else {
+        println!("(artifacts missing — run `make artifacts` to include the xla rung)\n");
+    }
+
+    let t = Table::new(
+        &["backend", "mode", "batch", "rps", "mean_batch", "p99", "speedup"],
+        &[8, 9, 6, 10, 10, 9, 8],
+    );
+
+    for (label, backend) in backends {
+        // baseline: lockstep single requests, no server-side batching
+        let single = measure(backend, &train, &rows, 1, 1, 1, requests / 4);
+        t.row(&[
+            label,
+            "single",
+            "1",
+            &format!("{:.0}", single.rps),
+            &format!("{:.1}", single.mean_batch),
+            &format!("{}us", single.p99_us),
+            "x1.0",
+        ]);
+        for max_batch in [8usize, 32, 64] {
+            let b = measure(backend, &train, &rows, max_batch, 16, 32, requests);
+            t.row(&[
+                label,
+                "batched",
+                &max_batch.to_string(),
+                &format!("{:.0}", b.rps),
+                &format!("{:.1}", b.mean_batch),
+                &format!("{}us", b.p99_us),
+                &format!("x{:.1}", b.rps / single.rps.max(1e-9)),
+            ]);
+        }
+    }
+
+    println!(
+        "\npaper shape: batched rps climbs with the batch cap; the blocked rung's\n\
+         batched/single ratio is the headline (acceptance: >= 3x)."
+    );
+}

@@ -127,9 +127,10 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
     };
     if cfg.display > 0 {
         eprintln!(
-            "[train] done in {:.2}s ({} grid points solved)",
+            "[train] done in {:.2}s ({} grid points solved; {})",
             model.train_time.as_secs_f64(),
-            model.points_evaluated
+            model.points_evaluated,
+            crate::metrics::counters::snapshot().report()
         );
     }
     Ok(model)

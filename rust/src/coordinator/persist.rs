@@ -61,7 +61,11 @@ pub fn save_model(model: &SvmModel, path: &Path) -> Result<()> {
             None => writeln!(s, "cv none")?,
         }
     }
-    std::fs::write(path, s).with_context(|| format!("writing {path:?}"))?;
+    // write-then-rename so readers (e.g. a serving process hot-reloading
+    // this file) never observe a half-written solution
+    let tmp = path.with_extension("sol.tmp");
+    std::fs::write(&tmp, s).with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
     Ok(())
 }
 

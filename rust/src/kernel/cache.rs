@@ -55,10 +55,12 @@ impl DistanceCache {
         };
         if fresh {
             self.misses += 1;
+            crate::metrics::counters::GRAM_CACHE_MISSES.inc();
             let k = super::apply_kernel(&self.d2, self.kind, gamma);
             self.last = Some((gamma, k));
         } else {
             self.hits += 1;
+            crate::metrics::counters::GRAM_CACHE_HITS.inc();
         }
         &self.last.as_ref().unwrap().1
     }
@@ -90,6 +92,27 @@ mod tests {
         let _ = c.gram(2.0);
         assert_eq!(c.misses, 2);
         assert_eq!(c.hits, 2);
+    }
+
+    #[test]
+    fn global_counters_track_two_gamma_grid() {
+        // the CV λ-inside-γ access pattern on a 2-γ grid: each γ is
+        // requested more than once, so the process-wide counters that
+        // `liquidsvm serve`'s stats report must show hits
+        let before = crate::metrics::counters::snapshot();
+        let mut c = cache();
+        for &g in &[0.5, 0.5, 0.5, 1.5, 1.5] {
+            let _ = c.gram(g);
+        }
+        let after = crate::metrics::counters::snapshot();
+        assert!(c.hits > 0);
+        assert!(
+            after.gram_cache_hits >= before.gram_cache_hits + 3,
+            "{} -> {}",
+            before.gram_cache_hits,
+            after.gram_cache_hits
+        );
+        assert!(after.gram_cache_misses >= before.gram_cache_misses + 2);
     }
 
     #[test]

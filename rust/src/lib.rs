@@ -13,7 +13,8 @@
 //!
 //! Layer map:
 //! * **L3 (this crate)** — train/select/test pipeline, tasks, cells,
-//!   CV engine, solvers, CLI, simulated distributed mode.
+//!   CV engine, solvers, CLI, simulated distributed mode, and the
+//!   batched multi-model inference server ([`serve`]).
 //! * **L2 (python/compile/model.py)** — JAX graphs (multi-γ Gram,
 //!   fused prediction) lowered once to `artifacts/*.hlo.txt`.
 //! * **L1 (python/compile/kernels/)** — tiled Pallas kernels called by
@@ -38,6 +39,7 @@ pub mod distributed;
 pub mod kernel;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod tasks;
 

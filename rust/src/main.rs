@@ -37,24 +37,34 @@ struct Args {
 
 impl Args {
     fn parse() -> Result<Args> {
-        let mut it = std::env::args().skip(1);
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    fn parse_from(tokens: impl IntoIterator<Item = String>) -> Result<Args> {
+        fn insert_unique(kv: &mut HashMap<String, String>, k: String, v: String) -> Result<()> {
+            if kv.insert(k.clone(), v).is_some() {
+                bail!("duplicate option `--{k}`");
+            }
+            Ok(())
+        }
+        let mut it = tokens.into_iter();
         let cmd = it.next().unwrap_or_else(|| "help".into());
         let mut kv = HashMap::new();
         let mut key: Option<String> = None;
         for tok in it {
             if let Some(stripped) = tok.strip_prefix("--") {
                 if let Some(k) = key.take() {
-                    kv.insert(k, "true".into()); // bare flag
+                    insert_unique(&mut kv, k, "true".into())?; // bare flag
                 }
                 key = Some(stripped.to_string());
             } else if let Some(k) = key.take() {
-                kv.insert(k, tok);
+                insert_unique(&mut kv, k, tok)?;
             } else {
                 bail!("unexpected positional argument `{tok}`");
             }
         }
         if let Some(k) = key.take() {
-            kv.insert(k, "true".into());
+            insert_unique(&mut kv, k, "true".into())?;
         }
         Ok(Args { cmd, kv })
     }
@@ -128,6 +138,8 @@ fn run() -> Result<()> {
     match args.cmd.as_str() {
         "train" => cmd_train(&args),
         "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "convert" => cmd_convert(&args),
         "distributed" => cmd_distributed(&args),
         "list-datasets" => {
@@ -204,6 +216,60 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Batched multi-model inference server over persisted `.sol` models.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use liquid_svm::serve::{ServeConfig, Server};
+    let scfg = ServeConfig {
+        host: args.get("host").unwrap_or("127.0.0.1").to_string(),
+        port: args.num("port", 4950u16)?,
+        max_batch: args.num("max-batch", 64usize)?,
+        max_delay: std::time::Duration::from_millis(args.num("max-delay-ms", 2u64)?),
+        queue_cap: args.num("queue-cap", 128usize)?,
+        workers: args.num("workers", 2usize)?,
+        max_models: args.num("max-models", 8usize)?,
+        model_config: build_config(args)?,
+    };
+    let server = Server::start(scfg)?;
+    println!("serving on {}", server.addr());
+    if let Some(spec) = args.get("models") {
+        for part in spec.split(',').filter(|p| !p.is_empty()) {
+            let (name, path) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--models: expected `name=path.sol`, got `{part}`"))?;
+            let m = server.registry.load(name, std::path::Path::new(path))?;
+            println!("loaded {name} from {path} (dim={} units={})", m.dim, m.model.units.len());
+        }
+    }
+    println!("protocol: predict/load/unload/stats/ping/quit — see README");
+    loop {
+        std::thread::park(); // run until killed; requests drive the threads
+    }
+}
+
+/// Load generator against a running server (the demo/bench client).
+fn cmd_client(args: &Args) -> Result<()> {
+    use liquid_svm::serve::{run_load, LoadSpec};
+    let addr = args.get("addr").ok_or_else(|| anyhow!("--addr host:port required"))?;
+    let connections: usize = args.num("connections", 16)?;
+    let total: usize = args.num("n", 1000)?;
+    let spec = LoadSpec {
+        addr: addr.to_string(),
+        model: args.get("model").unwrap_or("default").to_string(),
+        connections,
+        requests: (total + connections.max(1) - 1) / connections.max(1),
+        pipeline: args.num("pipeline", 32usize)?,
+    };
+    let (_, test_d) = load_dataset(args)?;
+    let rows: Vec<Vec<f32>> = (0..test_d.len()).map(|i| test_d.x.row(i).to_vec()).collect();
+    let report = run_load(&spec, &rows, None)?;
+    println!(
+        "connections={} requests_per_conn={} pipeline={}",
+        spec.connections, spec.requests, spec.pipeline
+    );
+    println!("{}", report.report());
+    Ok(())
+}
+
 /// Format conversion tool (liquidSVM ships CLI data tools, paper §3c).
 fn cmd_convert(args: &Args) -> Result<()> {
     let input = args.get("in").ok_or_else(|| anyhow!("--in required"))?;
@@ -257,6 +323,11 @@ USAGE:
                   [--backend scalar|blocked|xla] [--folds K] [--seed S]
                   [--save MODEL.sol]
   liquidsvm predict --model MODEL.sol [--data NAME|--file PATH] [--out PREDICTIONS.txt]
+  liquidsvm serve [--port P] [--host H] [--models name=a.sol,name2=b.sol]
+                  [--max-batch B] [--max-delay-ms MS] [--workers W] [--queue-cap Q]
+                  [--max-models M] [--backend scalar|blocked|xla]
+  liquidsvm client --addr HOST:PORT --model NAME [--data NAME|--file PATH] [--n N]
+                   [--connections C] [--pipeline P]
   liquidsvm convert --in DATA.[csv|libsvm] --out DATA.[csv|libsvm]
   liquidsvm distributed [--data NAME] [--workers W] [--coarse-size N] [--fine-size N]
   liquidsvm list-datasets
@@ -264,6 +335,70 @@ USAGE:
 EXAMPLES:
   liquidsvm train --data banana-mc --n 2000 --scenario mc --display 1 --threads 2
   liquidsvm train --data covtype --n 10000 --voronoi 6,1000 --scenario binary
+  liquidsvm train --data banana --scenario binary --save banana.sol
+  liquidsvm serve --port 4950 --models banana=banana.sol
+  liquidsvm client --addr 127.0.0.1:4950 --model banana --data banana --n 1000
   liquidsvm distributed --data covtype --n 20000 --workers 8"
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Result<Args> {
+        Args::parse_from(tokens.iter().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = parse(&["train", "--data", "banana", "--n", "500"]).unwrap();
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.get("data"), Some("banana"));
+        assert_eq!(a.num("n", 0usize).unwrap(), 500);
+    }
+
+    #[test]
+    fn bare_flags_become_true() {
+        let a = parse(&["train", "--libsvm-grid", "--n", "100", "--verbose"]).unwrap();
+        assert_eq!(a.get("libsvm-grid"), Some("true"));
+        assert_eq!(a.get("verbose"), Some("true")); // trailing bare flag
+        assert_eq!(a.get("n"), Some("100"));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        let err = parse(&["train", "--n", "100", "--n", "200"]).unwrap_err();
+        assert!(err.to_string().contains("duplicate option `--n`"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_bare_flag_rejected() {
+        let err = parse(&["train", "--verbose", "--verbose"]).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_mixed_flag_then_value_rejected() {
+        assert!(parse(&["train", "--x", "--x", "1"]).is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        let err = parse(&["train", "stray"]).unwrap_err();
+        assert!(err.to_string().contains("unexpected positional"), "{err}");
+    }
+
+    #[test]
+    fn empty_args_default_to_help() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.cmd, "help");
+    }
+
+    #[test]
+    fn num_parse_errors_are_reported() {
+        let a = parse(&["train", "--n", "many"]).unwrap();
+        assert!(a.num("n", 0usize).is_err());
+        assert_eq!(a.num("missing", 7usize).unwrap(), 7);
+    }
 }

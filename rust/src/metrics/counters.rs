@@ -1,0 +1,93 @@
+//! Process-wide performance counters.
+//!
+//! The CV engine and the serving subsystem report the same underlying
+//! quantities — kernel-cache effectiveness and accelerator call volume
+//! — so both read from one set of global monotonic counters instead of
+//! threading per-component tallies through every layer.  Counters only
+//! ever increase; consumers diff two [`snapshot`]s to scope a window.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A monotonic, thread-safe event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Gram requests served from [`crate::kernel::DistanceCache`]'s held
+/// kernel matrix (no exponentiation pass needed).
+pub static GRAM_CACHE_HITS: Counter = Counter::new();
+
+/// Gram requests that required an exponentiation pass over distances.
+pub static GRAM_CACHE_MISSES: Counter = Counter::new();
+
+/// Artifact executions on the PJRT runtime
+/// ([`crate::runtime::XlaRuntime`]).
+pub static XLA_CALLS: Counter = Counter::new();
+
+/// Point-in-time view of the global counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub gram_cache_hits: u64,
+    pub gram_cache_misses: u64,
+    pub xla_calls: u64,
+}
+
+impl CounterSnapshot {
+    /// `key=value` report fragment shared by `liquidsvm serve`'s
+    /// `stats` command and the CV engine's display output.
+    pub fn report(&self) -> String {
+        format!(
+            "gram_hits={} gram_misses={} xla_calls={}",
+            self.gram_cache_hits, self.gram_cache_misses, self.xla_calls
+        )
+    }
+}
+
+pub fn snapshot() -> CounterSnapshot {
+    CounterSnapshot {
+        gram_cache_hits: GRAM_CACHE_HITS.get(),
+        gram_cache_misses: GRAM_CACHE_MISSES.get(),
+        xla_calls: XLA_CALLS.get(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn snapshot_reports_all_keys() {
+        let r = snapshot().report();
+        for key in ["gram_hits=", "gram_misses=", "xla_calls="] {
+            assert!(r.contains(key), "missing {key} in {r}");
+        }
+    }
+}

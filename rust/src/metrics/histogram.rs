@@ -1,0 +1,163 @@
+//! Lock-free latency histogram for the serving hot path.
+//!
+//! Power-of-two microsecond buckets: recording is one atomic add (safe
+//! to call from every worker/connection thread), percentiles are read
+//! by walking the cumulative counts.  Bucket `i` covers
+//! `[2^i, 2^(i+1))` µs and a percentile reports the bucket's upper
+//! bound, so quantiles are conservative (never under-reported) with at
+//! most 2× resolution error — plenty for p50/p95/p99 serving stats.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 40; // 2^40 µs ≈ 12.7 days; saturates above
+
+/// Concurrent log₂-bucketed histogram of durations.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(us: u64) -> usize {
+        // floor(log2(us)) via leading_zeros; us=0 maps to bucket 0
+        let v = us.max(1);
+        ((63 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+
+    /// Record one observation.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        self.buckets[Self::bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Mean latency in microseconds (0 if empty).
+    pub fn mean_us(&self) -> u64 {
+        let n = self.count();
+        if n == 0 { 0 } else { self.sum_us.load(Ordering::Relaxed) / n }
+    }
+
+    /// Upper bound (µs) of the bucket containing quantile `q ∈ (0, 1]`.
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << (i + 1)).saturating_sub(1);
+            }
+        }
+        (1u64 << BUCKETS).saturating_sub(1)
+    }
+
+    /// Fold another histogram's counts into this one (client threads
+    /// aggregate per-thread histograms this way).
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter().zip(&other.buckets) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.sum_us.fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// `p50_us=… p95_us=… p99_us=…` report fragment.
+    pub fn report(&self) -> String {
+        format!(
+            "p50_us={} p95_us={} p99_us={}",
+            self.percentile_us(0.50),
+            self.percentile_us(0.95),
+            self.percentile_us(0.99)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn us(v: u64) -> Duration {
+        Duration::from_micros(v)
+    }
+
+    #[test]
+    fn counts_and_mean() {
+        let h = LatencyHistogram::new();
+        h.record(us(10));
+        h.record(us(30));
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.mean_us(), 20);
+    }
+
+    #[test]
+    fn percentiles_are_bucket_upper_bounds() {
+        let h = LatencyHistogram::new();
+        for _ in 0..99 {
+            h.record(us(100)); // bucket [64, 128)
+        }
+        h.record(us(10_000)); // bucket [8192, 16384)
+        assert_eq!(h.percentile_us(0.50), 127);
+        assert_eq!(h.percentile_us(0.95), 127);
+        assert_eq!(h.percentile_us(1.0), 16_383);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(us(i));
+        }
+        let (p50, p95, p99) = (h.percentile_us(0.5), h.percentile_us(0.95), h.percentile_us(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!(p50 >= 500 && p99 >= 990, "{p50} {p99}");
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        a.record(us(5));
+        b.record(us(7));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0);
+        assert!(h.report().contains("p99_us=0"));
+    }
+
+    #[test]
+    fn zero_duration_lands_in_first_bucket() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::ZERO);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile_us(1.0), 1);
+    }
+}

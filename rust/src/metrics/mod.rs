@@ -4,6 +4,12 @@
 //! (paper §2: "the user can ... determine ... the loss function used on
 //! the validation fold"); these are the choices liquidSVM ships.
 
+pub mod counters;
+pub mod histogram;
+
+pub use counters::{snapshot, Counter, CounterSnapshot};
+pub use histogram::LatencyHistogram;
+
 use std::time::{Duration, Instant};
 
 /// Validation / test losses.

@@ -1,0 +1,282 @@
+//! Micro-batching engine: coalesces concurrent prediction requests per
+//! model into one fused predict call.
+//!
+//! Every accepted row joins its model's pending batch.  A batch
+//! flushes to the worker queue on either trigger:
+//!
+//! * **size** — the batch reached `max_batch` rows (flushed inline by
+//!   the submitting thread, zero added latency at saturation);
+//! * **deadline** — the oldest pending row has waited `max_delay`
+//!   (flushed by the server's flusher tick, bounding tail latency at
+//!   low traffic).
+//!
+//! Backpressure is explicit: when a size-triggered flush finds the
+//! worker queue full, the newest row is rejected with a retry-after
+//! hint instead of buffering without bound — the queue capacity is the
+//! server's whole memory budget for in-flight work.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::registry::ServedModel;
+use super::worker::BoundedQueue;
+
+/// One pending prediction row and its reply channel.
+pub struct BatchItem {
+    pub features: Vec<f32>,
+    pub enqueued: Instant,
+    pub tx: mpsc::Sender<Result<f32, String>>,
+}
+
+/// A flushed batch awaiting a worker.
+pub struct Batch {
+    pub model: Arc<ServedModel>,
+    pub items: Vec<BatchItem>,
+    /// shape-bucket cap (the batcher's `max_batch`)
+    pub bucket: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// rows per fused predict call (size trigger)
+    pub max_batch: usize,
+    /// oldest-row wait bound (deadline trigger)
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 64, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// Why a submit was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// worker queue full — retry after the hinted backoff
+    Busy { retry_after_ms: u64 },
+}
+
+struct Pending {
+    model: Arc<ServedModel>,
+    items: Vec<BatchItem>,
+    oldest: Instant,
+}
+
+/// Per-model pending batches in front of the worker queue.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    pending: Mutex<HashMap<String, Pending>>,
+    queue: Arc<BoundedQueue<Batch>>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig, queue: Arc<BoundedQueue<Batch>>) -> Batcher {
+        let cfg = BatcherConfig { max_batch: cfg.max_batch.max(1), ..cfg };
+        Batcher { cfg, pending: Mutex::new(HashMap::new()), queue }
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Enqueue one row for `model`; the receiver yields the prediction
+    /// once a worker has executed the row's batch.
+    pub fn submit(
+        &self,
+        model: &Arc<ServedModel>,
+        features: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<f32, String>>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        let mut pending = self.pending.lock().unwrap();
+        let p = pending.entry(model.name.clone()).or_insert_with(|| Pending {
+            model: model.clone(),
+            items: Vec::with_capacity(self.cfg.max_batch),
+            oldest: Instant::now(),
+        });
+        // a registry hot-reload may have swapped the Arc under this
+        // name; route the already-pending rows to the newest solution
+        if !Arc::ptr_eq(&p.model, model) {
+            p.model = model.clone();
+        }
+        if p.items.is_empty() {
+            p.oldest = Instant::now();
+        }
+        p.items.push(BatchItem { features, enqueued: Instant::now(), tx });
+        if p.items.len() >= self.cfg.max_batch {
+            let batch = Batch {
+                model: p.model.clone(),
+                items: std::mem::take(&mut p.items),
+                bucket: self.cfg.max_batch,
+            };
+            if let Err(mut rejected) = self.queue.try_push(batch) {
+                // queue full: restore the earlier rows (their deadline
+                // is unchanged) and bounce only the newest one
+                rejected.items.pop();
+                p.items = rejected.items;
+                return Err(SubmitError::Busy { retry_after_ms: self.retry_after_ms() });
+            }
+        }
+        Ok(rx)
+    }
+
+    fn retry_after_ms(&self) -> u64 {
+        (self.cfg.max_delay.as_millis() as u64).max(1) * 2
+    }
+
+    /// Flush every pending batch whose oldest row has waited past the
+    /// deadline; called periodically by the server's flusher thread.
+    /// Returns the number of batches moved to the worker queue.
+    pub fn flush_expired(&self) -> usize {
+        self.flush(|p| p.oldest.elapsed() >= self.cfg.max_delay)
+    }
+
+    /// Flush all pending batches regardless of age (shutdown drain).
+    pub fn flush_all(&self) -> usize {
+        self.flush(|_| true)
+    }
+
+    fn flush(&self, should: impl Fn(&Pending) -> bool) -> usize {
+        let mut pending = self.pending.lock().unwrap();
+        let mut flushed = 0;
+        for p in pending.values_mut() {
+            if p.items.is_empty() || !should(p) {
+                continue;
+            }
+            let batch = Batch {
+                model: p.model.clone(),
+                items: std::mem::take(&mut p.items),
+                bucket: self.cfg.max_batch,
+            };
+            match self.queue.try_push(batch) {
+                Ok(()) => flushed += 1,
+                Err(rejected) => {
+                    // queue still full: put the rows back and let the
+                    // next flusher tick retry
+                    p.items = rejected.items;
+                    break;
+                }
+            }
+        }
+        flushed
+    }
+
+    /// Rows currently pending (unflushed) for `model`.
+    pub fn pending_rows(&self, model: &str) -> usize {
+        self.pending.lock().unwrap().get(model).map_or(0, |p| p.items.len())
+    }
+
+    /// Any unflushed rows at all (shutdown drain check).
+    pub fn has_pending(&self) -> bool {
+        self.pending.lock().unwrap().values().any(|p| !p.items.is_empty())
+    }
+
+    /// Drop every pending row, failing its waiter (the reply senders
+    /// are dropped, so blocked receivers error out instead of hanging).
+    /// Returns the number of discarded rows.
+    pub fn discard_pending(&self) -> usize {
+        let mut pending = self.pending.lock().unwrap();
+        pending.values_mut().map(|p| std::mem::take(&mut p.items).len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::prelude::*;
+    use crate::serve::stats::ServeStats;
+    use crate::serve::worker::process_batch;
+
+    fn served() -> Arc<ServedModel> {
+        let d = synth::banana_binary(70, 21);
+        let m = svm_binary(&d, 0.5, &Config::default().folds(2)).unwrap();
+        Arc::new(ServedModel::from_model("m", m))
+    }
+
+    fn batcher(max_batch: usize, queue_cap: usize) -> (Batcher, Arc<BoundedQueue<Batch>>) {
+        let queue = Arc::new(BoundedQueue::new(queue_cap));
+        let cfg = BatcherConfig { max_batch, max_delay: Duration::from_millis(1) };
+        (Batcher::new(cfg, queue.clone()), queue)
+    }
+
+    #[test]
+    fn flushes_by_size() {
+        let model = served();
+        let (b, queue) = batcher(4, 8);
+        for _ in 0..3 {
+            b.submit(&model, vec![0.1, 0.2]).unwrap();
+        }
+        assert!(queue.is_empty());
+        assert_eq!(b.pending_rows("m"), 3);
+        b.submit(&model, vec![0.3, 0.4]).unwrap();
+        assert_eq!(queue.len(), 1);
+        assert_eq!(b.pending_rows("m"), 0);
+        assert_eq!(queue.pop().unwrap().items.len(), 4);
+    }
+
+    #[test]
+    fn flushes_by_deadline() {
+        let model = served();
+        let (b, queue) = batcher(64, 8);
+        b.submit(&model, vec![0.5, 0.5]).unwrap();
+        assert_eq!(b.flush_expired(), 0); // deadline (1ms) not reached
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(b.flush_expired(), 1);
+        assert_eq!(queue.pop().unwrap().items.len(), 1);
+        assert_eq!(b.flush_expired(), 0); // nothing left
+    }
+
+    #[test]
+    fn rejects_with_backpressure_when_queue_full() {
+        let model = served();
+        let (b, queue) = batcher(1, 1); // every row flushes; queue holds one batch
+        b.submit(&model, vec![0.0, 0.0]).unwrap();
+        assert_eq!(queue.len(), 1);
+        let err = b.submit(&model, vec![1.0, 1.0]).unwrap_err();
+        let SubmitError::Busy { retry_after_ms } = err;
+        assert!(retry_after_ms >= 1);
+        // earlier rows were not lost: queue still has the first batch
+        assert_eq!(queue.len(), 1);
+    }
+
+    #[test]
+    fn backpressure_restores_pending_rows() {
+        let model = served();
+        let (b, queue) = batcher(2, 1);
+        // fill the queue with a deadline flush of one row
+        b.submit(&model, vec![0.0, 0.0]).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(b.flush_expired(), 1);
+        // now two more rows force a size flush that cannot enqueue
+        b.submit(&model, vec![0.1, 0.1]).unwrap();
+        let err = b.submit(&model, vec![0.2, 0.2]);
+        assert!(matches!(err, Err(SubmitError::Busy { .. })));
+        // the first of the two stays pending for a later flush
+        assert_eq!(b.pending_rows("m"), 1);
+        let _ = queue.pop();
+    }
+
+    #[test]
+    fn batched_predictions_match_direct_predict() {
+        let model = served();
+        let (b, queue) = batcher(8, 8);
+        let rows: Vec<Vec<f32>> = (0..5)
+            .map(|i| vec![-2.0 + i as f32, 1.0 - 0.4 * i as f32])
+            .collect();
+        let rxs: Vec<_> = rows.iter().map(|r| b.submit(&model, r.clone()).unwrap()).collect();
+        assert_eq!(b.flush_all(), 1);
+        let stats = ServeStats::new();
+        process_batch(queue.pop().unwrap(), &stats);
+
+        let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+        let x = crate::data::matrix::Matrix::from_vec(flat, 5, 2);
+        let expect = model.model.predict(&x);
+        let got: Vec<f32> = rxs.iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        assert_eq!(got, expect);
+        // 5 rows bucketed to 8: padding recorded
+        assert_eq!(stats.batched_rows.get(), 5);
+        assert_eq!(stats.padded_rows.get(), 3);
+    }
+}

@@ -1,0 +1,531 @@
+//! `serve` — a batched, multi-model inference server.
+//!
+//! liquidSVM splits training from testing via persisted `.sol` models
+//! precisely so prediction can run as its own fast process (paper §2);
+//! this subsystem is that process, grown into a server.  Pipeline:
+//!
+//! ```text
+//! TCP conn ──┐
+//! TCP conn ──┼─► Registry (LRU .sol cache, ─► Batcher (per-model, size/
+//! TCP conn ──┘   mtime hot-reload)            deadline flush, backpressure)
+//!                                                     │  bounded queue
+//!                                             WorkerPool ─► fused predict
+//!                                                     │
+//!                                             per-row replies, in order
+//! ```
+//!
+//! Concurrent rows — across connections and pipelined within one —
+//! coalesce into shape-bucketed batches before a single fused
+//! `predict` call, so the per-call overhead (routing, kernel setup,
+//! and on the XLA backend the padded artifact execution) is amortized
+//! the same way the CV engine amortizes Gram work across the γ grid.
+//!
+//! [`protocol`] documents the wire format; [`Server::start`] returns a
+//! handle usable in-process (tests bind port 0), and [`run_load`] is
+//! the load generator behind `liquidsvm client`.
+
+pub mod batcher;
+pub mod protocol;
+pub mod registry;
+pub mod stats;
+pub mod worker;
+
+pub use batcher::{Batch, Batcher, BatcherConfig, SubmitError};
+pub use registry::{Registry, ServedModel};
+pub use stats::ServeStats;
+pub use worker::{BoundedQueue, WorkerPool};
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::config::Config;
+use protocol::Request;
+
+/// Server configuration (`liquidsvm serve` flags map 1:1 onto this).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub host: String,
+    /// 0 picks an ephemeral port (tests)
+    pub port: u16,
+    /// rows per fused predict call (size flush trigger)
+    pub max_batch: usize,
+    /// max wait of the oldest pending row (deadline flush trigger)
+    pub max_delay: Duration,
+    /// worker-queue capacity in batches (the backpressure bound)
+    pub queue_cap: usize,
+    /// predict worker threads
+    pub workers: usize,
+    /// LRU bound on resident models
+    pub max_models: usize,
+    /// runtime choices (backend, threads) applied to loaded models
+    pub model_config: Config,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            host: "127.0.0.1".into(),
+            port: 4950,
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 128,
+            workers: 2,
+            max_models: 8,
+            model_config: Config::default(),
+        }
+    }
+}
+
+/// A running server; dropping it does NOT stop the threads — call
+/// [`Server::shutdown`].
+pub struct Server {
+    pub registry: Arc<Registry>,
+    pub batcher: Arc<Batcher>,
+    pub stats: Arc<ServeStats>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    queue: Arc<BoundedQueue<Batch>>,
+    threads: Vec<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, spawn acceptor + flusher + workers, return immediately.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let addr = listener.local_addr()?;
+
+        let stats = Arc::new(ServeStats::new());
+        let registry = Arc::new(Registry::new(cfg.model_config.clone(), cfg.max_models));
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
+        let batcher = Arc::new(Batcher::new(
+            BatcherConfig { max_batch: cfg.max_batch, max_delay: cfg.max_delay },
+            queue.clone(),
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let mut threads =
+            WorkerPool::start(cfg.workers, queue.clone(), stats.clone()).into_handles();
+
+        // deadline flusher: ticks at a quarter of the delay bound so a
+        // lone request waits at most ~1.25 * max_delay
+        {
+            let batcher = batcher.clone();
+            let stop = stop.clone();
+            let tick = (cfg.max_delay / 4).max(Duration::from_micros(250));
+            threads.push(thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    batcher.flush_expired();
+                    thread::sleep(tick);
+                }
+            }));
+        }
+
+        // acceptor: one thread per connection (batching happens behind
+        // the shared batcher, so connection threads stay cheap readers)
+        {
+            let registry = registry.clone();
+            let batcher = batcher.clone();
+            let stats = stats.clone();
+            let stop = stop.clone();
+            threads.push(thread::spawn(move || {
+                loop {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let registry = registry.clone();
+                            let batcher = batcher.clone();
+                            let stats = stats.clone();
+                            let stop = stop.clone();
+                            thread::spawn(move || {
+                                let _ = handle_conn(stream, registry, batcher, stats, stop);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+            }));
+        }
+
+        Ok(Server { registry, batcher, stats, addr, stop, queue, threads })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop acceptor/flusher/workers and join them.  Connection
+    /// threads notice the stop flag on their next read timeout.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // drain pending rows before closing so in-flight clients get
+        // answers instead of hung receivers; the flush can find the
+        // queue full under load, so keep retrying (bounded) while the
+        // still-running workers make room
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            self.batcher.flush_all();
+            if !self.batcher.has_pending() || Instant::now() >= deadline {
+                break;
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        // anything still pending after the deadline fails fast instead
+        // of leaving its waiters blocked forever
+        self.batcher.discard_pending();
+        self.queue.close();
+        for h in self.threads {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One response slot in a connection's ordered reply stream.
+enum Reply {
+    Ready(String),
+    /// one receiver per submitted row of a predict request
+    Pending(Vec<mpsc::Receiver<Result<f32, String>>>),
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    registry: Arc<Registry>,
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_nonblocking(false).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
+    let mut read_half = stream.try_clone().context("cloning stream")?;
+    let mut write_half = stream;
+
+    // writer thread: resolves replies strictly in request order, so
+    // pipelined requests batch in flight yet answer deterministically
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let writer = thread::spawn(move || {
+        let mut out = String::new();
+        for reply in reply_rx {
+            out.clear();
+            match reply {
+                Reply::Ready(line) => out.push_str(&line),
+                Reply::Pending(rxs) => out.push_str(&collect_predictions(rxs)),
+            }
+            out.push('\n');
+            if write_half.write_all(out.as_bytes()).is_err() {
+                break;
+            }
+        }
+    });
+
+    // manual line framing: a read timeout must not drop a partial line
+    // (BufReader::read_line discards its progress on error)
+    let mut chunk = [0u8; 4096];
+    let mut acc: Vec<u8> = Vec::new();
+    'conn: loop {
+        match read_half.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                acc.extend_from_slice(&chunk[..n]);
+                while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
+                    let line_bytes: Vec<u8> = acc.drain(..=pos).collect();
+                    let line = String::from_utf8_lossy(&line_bytes);
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    match handle_request(line.trim(), &registry, &batcher, &stats) {
+                        Some(reply) => {
+                            if reply_tx.send(reply).is_err() {
+                                break 'conn;
+                            }
+                        }
+                        None => {
+                            let _ = reply_tx.send(Reply::Ready(protocol::ok_msg("bye")));
+                            break 'conn;
+                        }
+                    }
+                }
+                if acc.len() > protocol::MAX_LINE {
+                    let _ = reply_tx
+                        .send(Reply::Ready(protocol::err_msg("bad-request", "line too long")));
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    drop(reply_tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+/// Dispatch one request; `None` means the client asked to quit.
+fn handle_request(
+    line: &str,
+    registry: &Registry,
+    batcher: &Batcher,
+    stats: &ServeStats,
+) -> Option<Reply> {
+    let req = match protocol::parse_request(line) {
+        Ok(r) => r,
+        Err(msg) => return Some(Reply::Ready(protocol::err_msg("bad-request", &msg))),
+    };
+    let reply = match req {
+        Request::Quit => return None,
+        Request::Ping => Reply::Ready(protocol::ok_msg("pong")),
+        Request::Stats => Reply::Ready(protocol::ok_msg(&stats.report(registry.len()))),
+        Request::Load { name, path } => match registry.load(&name, Path::new(&path)) {
+            Ok(m) => Reply::Ready(protocol::ok_msg(&format!(
+                "loaded {name} dim={} units={}",
+                m.dim,
+                m.model.units.len()
+            ))),
+            Err(e) => Reply::Ready(protocol::err_msg("load-failed", &format!("{e:#}"))),
+        },
+        Request::Unload { name } => {
+            if registry.unload(&name) {
+                Reply::Ready(protocol::ok_msg(&format!("unloaded {name}")))
+            } else {
+                Reply::Ready(protocol::err_msg("unknown-model", &format!("no model `{name}`")))
+            }
+        }
+        Request::Predict { model, rows } => {
+            stats.requests.add(rows.len() as u64);
+            let served = match registry.get(&model) {
+                Ok(m) => m,
+                Err(e) => {
+                    stats.errors.add(rows.len() as u64);
+                    return Some(Reply::Ready(protocol::err_msg(
+                        "unknown-model",
+                        &format!("{e:#}"),
+                    )));
+                }
+            };
+            if served.dim > 0 {
+                if let Some(bad) = rows.iter().find(|r| r.len() != served.dim) {
+                    stats.errors.add(rows.len() as u64);
+                    return Some(Reply::Ready(protocol::err_msg(
+                        "dim-mismatch",
+                        &format!("model `{model}` expects dim {}, got {}", served.dim, bad.len()),
+                    )));
+                }
+            }
+            let mut rxs = Vec::with_capacity(rows.len());
+            for row in rows {
+                match batcher.submit(&served, row) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(SubmitError::Busy { retry_after_ms }) => {
+                        stats.rejected.inc();
+                        // rows already submitted from this request stay
+                        // in flight; their receivers are dropped here
+                        // and the worker's sends fail silently
+                        return Some(Reply::Ready(protocol::err_busy(retry_after_ms)));
+                    }
+                }
+            }
+            Reply::Pending(rxs)
+        }
+    };
+    Some(reply)
+}
+
+fn collect_predictions(rxs: Vec<mpsc::Receiver<Result<f32, String>>>) -> String {
+    let mut vals = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Ok(v)) => vals.push(v),
+            Ok(Err(e)) => return protocol::err_msg("predict-failed", &e),
+            Err(_) => return protocol::err_msg("internal", "worker dropped request"),
+        }
+    }
+    protocol::ok_values(&vals)
+}
+
+// ------------------------------------------------------------ client
+
+/// Load-generation parameters (`liquidsvm client` flags).
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    pub addr: String,
+    pub model: String,
+    /// concurrent TCP connections
+    pub connections: usize,
+    /// single-row requests per connection
+    pub requests: usize,
+    /// requests written back-to-back before reading responses (1 = a
+    /// strict request/response lockstep, i.e. no client-side batching)
+    pub pipeline: usize,
+}
+
+/// Aggregated result of a load run.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    /// request lines written (including busy retries)
+    pub sent: usize,
+    /// successful predictions
+    pub ok: usize,
+    /// busy (backpressure) responses observed
+    pub rejected: usize,
+    /// non-busy error responses
+    pub failed: usize,
+    /// predictions that disagreed with the caller's expected values
+    pub mismatches: usize,
+    pub elapsed: Duration,
+    /// round-trip latency of each pipelined chunk
+    pub latency: crate::metrics::LatencyHistogram,
+}
+
+impl LoadReport {
+    pub fn rps(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs <= 0.0 { 0.0 } else { self.ok as f64 / secs }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "sent={} ok={} rejected={} failed={} mismatches={} elapsed={:.2}s rps={:.1} {}",
+            self.sent,
+            self.ok,
+            self.rejected,
+            self.failed,
+            self.mismatches,
+            self.elapsed.as_secs_f64(),
+            self.rps(),
+            self.latency.report()
+        )
+    }
+}
+
+/// Fire `connections × requests` single-row predict requests at a
+/// server, cycling through `rows`.  Busy responses back off and retry
+/// until answered.  When `expected` is given (aligned with `rows`),
+/// every prediction is checked against it.
+pub fn run_load(spec: &LoadSpec, rows: &[Vec<f32>], expected: Option<&[f32]>) -> Result<LoadReport> {
+    if rows.is_empty() {
+        bail!("no feature rows to send");
+    }
+    if let Some(exp) = expected {
+        if exp.len() != rows.len() {
+            bail!("expected values misaligned: {} vs {} rows", exp.len(), rows.len());
+        }
+    }
+    let connections = spec.connections.max(1);
+    let pipeline = spec.pipeline.max(1);
+    let t0 = Instant::now();
+    let mut report = LoadReport::default();
+    let results: Vec<Result<LoadReport>> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..connections)
+            .map(|c| {
+                scope.spawn(move || {
+                    run_connection(spec, rows, expected, c * spec.requests, pipeline)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+    });
+    for r in results {
+        let r = r?;
+        report.sent += r.sent;
+        report.ok += r.ok;
+        report.rejected += r.rejected;
+        report.failed += r.failed;
+        report.mismatches += r.mismatches;
+        report.latency.merge(&r.latency);
+    }
+    report.elapsed = t0.elapsed();
+    Ok(report)
+}
+
+fn run_connection(
+    spec: &LoadSpec,
+    rows: &[Vec<f32>],
+    expected: Option<&[f32]>,
+    base_idx: usize,
+    pipeline: usize,
+) -> Result<LoadReport> {
+    let stream = TcpStream::connect(&spec.addr)
+        .with_context(|| format!("connecting {}", spec.addr))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut st = LoadReport::default();
+
+    let mut done = 0usize;
+    while done < spec.requests {
+        let chunk = pipeline.min(spec.requests - done);
+        let mut outstanding: Vec<usize> =
+            (done..done + chunk).map(|k| (base_idx + k) % rows.len()).collect();
+        let mut attempts = 0usize;
+        while !outstanding.is_empty() {
+            attempts += 1;
+            if attempts > 500 {
+                bail!("request rejected busy 500 times; server saturated");
+            }
+            let t0 = Instant::now();
+            let mut msg = String::new();
+            for &ri in &outstanding {
+                let row: Vec<String> = rows[ri].iter().map(|v| format!("{v}")).collect();
+                msg.push_str(&format!("predict {} {}\n", spec.model, row.join(",")));
+            }
+            writer.write_all(msg.as_bytes())?;
+            st.sent += outstanding.len();
+
+            let mut retry = Vec::new();
+            let mut backoff_ms = 0u64;
+            let mut line = String::new();
+            for &ri in &outstanding {
+                line.clear();
+                if reader.read_line(&mut line)? == 0 {
+                    bail!("server closed connection");
+                }
+                match protocol::parse_response(&line) {
+                    protocol::Response::Ok(body) => {
+                        let vals = protocol::parse_values(&body).map_err(|e| anyhow!(e))?;
+                        st.ok += 1;
+                        if let Some(exp) = expected {
+                            if vals.len() != 1 || vals[0] != exp[ri] {
+                                st.mismatches += 1;
+                            }
+                        }
+                    }
+                    protocol::Response::Busy { retry_after_ms } => {
+                        st.rejected += 1;
+                        backoff_ms = backoff_ms.max(retry_after_ms);
+                        retry.push(ri);
+                    }
+                    protocol::Response::Err { .. } => st.failed += 1,
+                }
+            }
+            st.latency.record(t0.elapsed());
+            if !retry.is_empty() {
+                thread::sleep(Duration::from_millis(backoff_ms.max(1)));
+            }
+            outstanding = retry;
+        }
+        done += chunk;
+    }
+    // polite teardown so the server thread exits promptly
+    let _ = writer.write_all(b"quit\n");
+    Ok(st)
+}

@@ -1,0 +1,217 @@
+//! The wire protocol of `liquidsvm serve` — line-delimited text over
+//! TCP, hand-rolled like the CLI's argument parsing (no serde/json in
+//! this image's offline registry).
+//!
+//! Requests, one per line:
+//!
+//! ```text
+//! predict <model> <f1,f2,...>[;<f1,f2,...>...]   # one or more rows
+//! load <name> <path.sol>
+//! unload <name>
+//! stats
+//! ping
+//! quit
+//! ```
+//!
+//! Responses, one line per request, in request order:
+//!
+//! ```text
+//! ok <v1>[;<v2>...]          # predict
+//! ok <message>               # load/unload/stats/ping
+//! err <code> <message>       # e.g. `err busy retry_after_ms=4`
+//! ```
+//!
+//! Clients may pipeline: the server preserves ordering, so a batch of
+//! requests can be written back-to-back and the responses read in
+//! sequence — that is exactly what lets concurrent rows coalesce into
+//! one fused predict call.
+
+/// Longest accepted request line (guards the server against unbounded
+/// buffering from a misbehaving client).
+pub const MAX_LINE: usize = 1 << 20;
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Predict { model: String, rows: Vec<Vec<f32>> },
+    Load { name: String, path: String },
+    Unload { name: String },
+    Stats,
+    Ping,
+    Quit,
+}
+
+/// Parse one request line.  Errors are human-readable fragments that
+/// the server echoes back as `err bad-request <msg>`.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Err("empty request".into());
+    }
+    if line.len() > MAX_LINE {
+        return Err("request line too long".into());
+    }
+    let (cmd, rest) = match line.split_once(char::is_whitespace) {
+        Some((c, r)) => (c, r.trim()),
+        None => (line, ""),
+    };
+    match cmd {
+        "predict" => {
+            let (model, data) = rest
+                .split_once(char::is_whitespace)
+                .ok_or_else(|| "predict needs `<model> <rows>`".to_string())?;
+            let rows = parse_rows(data.trim())?;
+            Ok(Request::Predict { model: model.to_string(), rows })
+        }
+        "load" => {
+            let (name, path) = rest
+                .split_once(char::is_whitespace)
+                .ok_or_else(|| "load needs `<name> <path>`".to_string())?;
+            Ok(Request::Load { name: name.to_string(), path: path.trim().to_string() })
+        }
+        "unload" => {
+            if rest.is_empty() || rest.contains(char::is_whitespace) {
+                return Err("unload needs `<name>`".into());
+            }
+            Ok(Request::Unload { name: rest.to_string() })
+        }
+        "stats" => Ok(Request::Stats),
+        "ping" => Ok(Request::Ping),
+        "quit" => Ok(Request::Quit),
+        other => Err(format!("unknown command `{other}`")),
+    }
+}
+
+/// Parse `;`-separated rows of `,`-separated floats.
+pub fn parse_rows(text: &str) -> Result<Vec<Vec<f32>>, String> {
+    if text.is_empty() {
+        return Err("no feature rows".into());
+    }
+    let mut rows = Vec::new();
+    for row in text.split(';') {
+        let vals: Result<Vec<f32>, String> = row
+            .split(',')
+            .map(|t| {
+                let t = t.trim();
+                t.parse::<f32>().map_err(|_| format!("bad float `{t}`"))
+            })
+            .collect();
+        let vals = vals?;
+        if vals.is_empty() {
+            return Err("empty feature row".into());
+        }
+        rows.push(vals);
+    }
+    Ok(rows)
+}
+
+/// `ok v1;v2;...` for predict responses.
+pub fn ok_values(vals: &[f32]) -> String {
+    let body: Vec<String> = vals.iter().map(|v| format!("{v}")).collect();
+    format!("ok {}", body.join(";"))
+}
+
+pub fn ok_msg(msg: &str) -> String {
+    format!("ok {msg}")
+}
+
+pub fn err_msg(code: &str, msg: &str) -> String {
+    format!("err {code} {msg}")
+}
+
+/// Backpressure rejection — the client should wait and retry.
+pub fn err_busy(retry_after_ms: u64) -> String {
+    format!("err busy retry_after_ms={retry_after_ms}")
+}
+
+/// Client-side classification of a response line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Ok(String),
+    Busy { retry_after_ms: u64 },
+    Err { code: String, msg: String },
+}
+
+pub fn parse_response(line: &str) -> Response {
+    let line = line.trim();
+    if let Some(body) = line.strip_prefix("ok") {
+        return Response::Ok(body.trim_start().to_string());
+    }
+    let body = line.strip_prefix("err").map(str::trim_start).unwrap_or(line);
+    let (code, msg) = body.split_once(char::is_whitespace).unwrap_or((body, ""));
+    if code == "busy" {
+        let ms = msg
+            .trim()
+            .strip_prefix("retry_after_ms=")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1);
+        return Response::Busy { retry_after_ms: ms };
+    }
+    Response::Err { code: code.to_string(), msg: msg.trim().to_string() }
+}
+
+/// Parse the `v1;v2;...` payload of an `ok` predict response.
+pub fn parse_values(body: &str) -> Result<Vec<f32>, String> {
+    body.split(';')
+        .map(|t| {
+            let t = t.trim();
+            t.parse::<f32>().map_err(|_| format!("bad value `{t}`"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_single_row_predict() {
+        let r = parse_request("predict banana 0.5,-1.25").unwrap();
+        assert_eq!(
+            r,
+            Request::Predict { model: "banana".into(), rows: vec![vec![0.5, -1.25]] }
+        );
+    }
+
+    #[test]
+    fn parses_multi_row_predict() {
+        let r = parse_request("predict m 1,2;3,4;5,6").unwrap();
+        let Request::Predict { rows, .. } = r else { panic!() };
+        assert_eq!(rows, vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+    }
+
+    #[test]
+    fn parses_control_commands() {
+        assert_eq!(parse_request("stats").unwrap(), Request::Stats);
+        assert_eq!(parse_request("ping").unwrap(), Request::Ping);
+        assert_eq!(parse_request("quit").unwrap(), Request::Quit);
+        assert_eq!(
+            parse_request("load m /tmp/m.sol").unwrap(),
+            Request::Load { name: "m".into(), path: "/tmp/m.sol".into() }
+        );
+        assert_eq!(parse_request("unload m").unwrap(), Request::Unload { name: "m".into() });
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_request("").is_err());
+        assert!(parse_request("predict m").is_err());
+        assert!(parse_request("predict m 1,x").is_err());
+        assert!(parse_request("load just-a-name").is_err());
+        assert!(parse_request("unload").is_err());
+        assert!(parse_request("frobnicate 1").is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let line = ok_values(&[1.0, -2.5]);
+        let Response::Ok(body) = parse_response(&line) else { panic!() };
+        assert_eq!(parse_values(&body).unwrap(), vec![1.0, -2.5]);
+
+        assert_eq!(parse_response(&err_busy(7)), Response::Busy { retry_after_ms: 7 });
+        assert_eq!(
+            parse_response(&err_msg("unknown-model", "no `m`")),
+            Response::Err { code: "unknown-model".into(), msg: "no `m`".into() }
+        );
+    }
+}

@@ -1,0 +1,271 @@
+//! Multi-model registry: loads `.sol` solutions via
+//! [`crate::coordinator::persist`], hands out shared handles to the
+//! batcher/workers, bounds resident models with LRU eviction, and
+//! hot-reloads a model when its file changes on disk (liquidSVM's
+//! train and test phases are separate processes, so a trainer can
+//! overwrite a `.sol` under a running server and new requests pick up
+//! the fresh solution without a restart).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::SystemTime;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::config::Config;
+use crate::coordinator::persist::load_model;
+use crate::coordinator::SvmModel;
+
+/// A model resident in the registry, shared immutably across worker
+/// and connection threads.
+pub struct ServedModel {
+    pub name: String,
+    /// source file; `None` for models inserted directly (tests/benches)
+    pub path: Option<PathBuf>,
+    /// (mtime, size) fingerprint of the source file at load time —
+    /// size participates because mtime granularity can be a full
+    /// second on some filesystems
+    pub mtime: Option<SystemTime>,
+    pub size: u64,
+    /// expected input dimension (0 = unknown, skip validation)
+    pub dim: usize,
+    pub model: SvmModel,
+}
+
+impl ServedModel {
+    /// Wrap an in-memory model (no backing file, never hot-reloaded).
+    pub fn from_model(name: &str, model: SvmModel) -> ServedModel {
+        ServedModel {
+            name: name.to_string(),
+            path: None,
+            mtime: None,
+            size: 0,
+            dim: input_dim(&model),
+            model,
+        }
+    }
+}
+
+fn input_dim(model: &SvmModel) -> usize {
+    if let Some(s) = &model.scaler {
+        return s.parts().0.len();
+    }
+    model.units.iter().find(|u| !u.data.is_empty()).map(|u| u.data.dim()).unwrap_or(0)
+}
+
+struct Entry {
+    model: Arc<ServedModel>,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<String, Entry>,
+    tick: u64,
+}
+
+/// LRU-bounded, hot-reloading model cache.
+pub struct Registry {
+    cfg: Config,
+    max_models: usize,
+    inner: Mutex<Inner>,
+    /// single-flight guard: at most one hot-reload parses at a time,
+    /// everyone else keeps serving the resident model meanwhile
+    reloading: AtomicBool,
+}
+
+impl Registry {
+    /// `cfg` supplies the runtime choices (backend, threads) applied to
+    /// every loaded model; `max_models` bounds resident solutions.
+    pub fn new(cfg: Config, max_models: usize) -> Registry {
+        Registry {
+            cfg,
+            max_models: max_models.max(1),
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            reloading: AtomicBool::new(false),
+        }
+    }
+
+    /// Load (or replace) a model from a `.sol` file.
+    pub fn load(&self, name: &str, path: &Path) -> Result<Arc<ServedModel>> {
+        let model = load_model(path, &self.cfg)?;
+        let meta = std::fs::metadata(path).with_context(|| format!("stat {path:?}"))?;
+        let served = Arc::new(ServedModel {
+            name: name.to_string(),
+            path: Some(path.to_path_buf()),
+            mtime: meta.modified().ok(),
+            size: meta.len(),
+            dim: input_dim(&model),
+            model,
+        });
+        self.put(name, served.clone());
+        Ok(served)
+    }
+
+    /// Register an in-memory model under `name` (tests/benches).
+    pub fn insert(&self, name: &str, model: SvmModel) -> Arc<ServedModel> {
+        let served = Arc::new(ServedModel::from_model(name, model));
+        self.put(name, served.clone());
+        served
+    }
+
+    fn put(&self, name: &str, served: Arc<ServedModel>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(name.to_string(), Entry { model: served, last_used: tick });
+        while inner.map.len() > self.max_models {
+            let Some(oldest) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            inner.map.remove(&oldest);
+        }
+    }
+
+    /// Fetch a model by name, bumping its recency.  If the backing file
+    /// changed since load (mtime or size), one caller reloads it while
+    /// the rest keep serving the resident solution; a failed reload
+    /// (e.g. the trainer is mid-overwrite) also falls back to the
+    /// resident model rather than failing the request.
+    pub fn get(&self, name: &str) -> Result<Arc<ServedModel>> {
+        let served = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            let entry = inner
+                .map
+                .get_mut(name)
+                .ok_or_else(|| anyhow!("unknown model `{name}`"))?;
+            entry.last_used = tick;
+            entry.model.clone()
+        };
+        // hot-reload check outside the lock: a slow disk stat (or the
+        // reload itself) must not stall other models' lookups
+        if let Some(path) = &served.path {
+            if let Ok(meta) = std::fs::metadata(path) {
+                let changed = meta.modified().ok() != served.mtime || meta.len() != served.size;
+                if changed
+                    && self
+                        .reloading
+                        .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+                        .is_ok()
+                {
+                    let reloaded = self.load(name, path);
+                    self.reloading.store(false, Ordering::Release);
+                    if let Ok(fresh) = reloaded {
+                        return Ok(fresh);
+                    }
+                }
+            }
+        }
+        Ok(served)
+    }
+
+    /// Drop a model; returns false if it was not resident.
+    pub fn unload(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().map.remove(name).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.inner.lock().unwrap().map.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::persist::save_model;
+    use crate::data::synth;
+    use crate::prelude::*;
+
+    fn tiny_model(n: usize, seed: u64) -> SvmModel {
+        let d = synth::banana_binary(n, seed);
+        svm_binary(&d, 0.5, &Config::default().folds(2)).unwrap()
+    }
+
+    fn tmp_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "lsvm-registry-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn load_get_predicts_like_source_model() {
+        let m = tiny_model(80, 1);
+        let test = synth::banana_binary(40, 2);
+        let expect = m.predict(&test.x);
+        let path = tmp_dir().join("a.sol");
+        save_model(&m, &path).unwrap();
+
+        let reg = Registry::new(Config::default(), 4);
+        reg.load("a", &path).unwrap();
+        let served = reg.get("a").unwrap();
+        assert_eq!(served.dim, 2);
+        assert_eq!(served.model.predict(&test.x), expect);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let reg = Registry::new(Config::default(), 4);
+        assert!(reg.get("nope").is_err());
+        assert!(!reg.unload("nope"));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let reg = Registry::new(Config::default(), 2);
+        reg.insert("a", tiny_model(60, 3));
+        reg.insert("b", tiny_model(60, 4));
+        reg.get("a").unwrap(); // bump a over b
+        reg.insert("c", tiny_model(60, 5));
+        assert_eq!(reg.names(), vec!["a".to_string(), "c".to_string()]);
+        assert!(reg.get("b").is_err());
+    }
+
+    #[test]
+    fn hot_reloads_on_file_change() {
+        let path = tmp_dir().join("hot.sol");
+        let m1 = tiny_model(60, 6);
+        save_model(&m1, &path).unwrap();
+        let reg = Registry::new(Config::default(), 4);
+        reg.load("hot", &path).unwrap();
+
+        // overwrite with a different solution (different size fingerprint)
+        let m2 = tiny_model(110, 7);
+        save_model(&m2, &path).unwrap();
+        let served = reg.get("hot").unwrap();
+
+        let test = synth::banana_binary(30, 8);
+        assert_eq!(served.model.predict(&test.x), m2.predict(&test.x));
+    }
+
+    #[test]
+    fn in_memory_models_skip_reload() {
+        let reg = Registry::new(Config::default(), 4);
+        reg.insert("mem", tiny_model(60, 9));
+        let a = reg.get("mem").unwrap();
+        let b = reg.get("mem").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,111 @@
+//! Serving telemetry: request/batch counters plus the end-to-end
+//! request latency histogram (enqueue → response ready), reported by
+//! the protocol's `stats` command.  Kernel-cache and accelerator
+//! counters come from the process-wide [`crate::metrics::counters`]
+//! so serving and the CV engine report the same quantities.
+
+use std::time::Instant;
+
+use crate::metrics::counters::{self, Counter};
+use crate::metrics::LatencyHistogram;
+
+/// Shared server counters (all lock-free; one instance per server).
+#[derive(Debug)]
+pub struct ServeStats {
+    /// prediction rows accepted into the batcher
+    pub requests: Counter,
+    /// prediction rows rejected with backpressure
+    pub rejected: Counter,
+    /// requests that failed after acceptance
+    pub errors: Counter,
+    /// fused predict calls executed
+    pub batches: Counter,
+    /// real rows across all executed batches
+    pub batched_rows: Counter,
+    /// padding rows added to reach shape buckets
+    pub padded_rows: Counter,
+    /// enqueue → response-ready latency per row
+    pub latency: LatencyHistogram,
+    started: Instant,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats::new()
+    }
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats {
+            requests: Counter::new(),
+            rejected: Counter::new(),
+            errors: Counter::new(),
+            batches: Counter::new(),
+            batched_rows: Counter::new(),
+            padded_rows: Counter::new(),
+            latency: LatencyHistogram::new(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Mean real rows per fused predict call.
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 { 0.0 } else { self.batched_rows.get() as f64 / b as f64 }
+    }
+
+    /// Completed rows per second since the server started.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs <= 0.0 { 0.0 } else { self.latency.count() as f64 / secs }
+    }
+
+    /// One-line `key=value` report for the `stats` protocol command.
+    pub fn report(&self, n_models: usize) -> String {
+        format!(
+            "models={} requests={} rejected={} errors={} batches={} rows={} pad_rows={} \
+             mean_batch={:.1} rps={:.1} {} mean_us={} {}",
+            n_models,
+            self.requests.get(),
+            self.rejected.get(),
+            self.errors.get(),
+            self.batches.get(),
+            self.batched_rows.get(),
+            self.padded_rows.get(),
+            self.mean_batch(),
+            self.throughput_rps(),
+            self.latency.report(),
+            self.latency.mean_us(),
+            counters::snapshot().report(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn report_contains_all_sections() {
+        let s = ServeStats::new();
+        s.requests.add(10);
+        s.batches.add(2);
+        s.batched_rows.add(10);
+        s.padded_rows.add(6);
+        s.latency.record(Duration::from_micros(300));
+        let r = s.report(3);
+        for key in [
+            "models=3", "requests=10", "batches=2", "rows=10", "pad_rows=6", "mean_batch=5.0",
+            "p50_us=", "p95_us=", "p99_us=", "gram_hits=", "xla_calls=",
+        ] {
+            assert!(r.contains(key), "missing {key} in `{r}`");
+        }
+    }
+
+    #[test]
+    fn mean_batch_handles_empty() {
+        assert_eq!(ServeStats::new().mean_batch(), 0.0);
+    }
+}

@@ -1,0 +1,246 @@
+//! Worker pool: a bounded batch queue (the backpressure boundary) and
+//! the threads that execute fused predict calls.
+//!
+//! Batches are padded up to power-of-two row buckets before the
+//! predict call so a steady request stream hits a handful of shapes —
+//! the same amortization trick as the runtime's artifact buckets
+//! (`runtime/mod.rs` pads inputs to fixed shapes so PJRT executables
+//! are compiled once), and on the XLA backend the two bucketing layers
+//! line up so padding waste stays bounded instead of compounding.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use crate::data::matrix::Matrix;
+
+use super::batcher::{Batch, BatchItem};
+use super::stats::ServeStats;
+
+/// A fixed-capacity MPMC queue: `try_push` never blocks (full ⇒ the
+/// caller applies backpressure), `pop` blocks until an item arrives or
+/// the queue is closed.
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue, or hand the item back if the queue is full/closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed || inner.items.len() >= self.cap {
+            return Err(item);
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking dequeue; `None` once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: pending items still drain, new pushes fail,
+    /// blocked `pop`s wake with `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+}
+
+/// Round `n` rows up to its shape bucket: the next power of two,
+/// capped at `max_batch` (a full batch is its own bucket).
+pub fn bucket_rows(n: usize, max_batch: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    if n >= max_batch {
+        return n;
+    }
+    n.next_power_of_two().min(max_batch)
+}
+
+/// Execute one batch: pad to the row bucket, run the fused predict,
+/// scatter per-row results to the waiting connections.
+///
+/// Rows whose dimension disagrees with the batch get an error reply
+/// instead of poisoning the matrix — a hot-reload can change a model's
+/// dim while validated rows are still pending, and a panicking worker
+/// would permanently shrink the pool.
+pub(crate) fn process_batch(batch: Batch, stats: &ServeStats) {
+    if batch.items.is_empty() {
+        return;
+    }
+    let dim = if batch.model.dim > 0 { batch.model.dim } else { batch.items[0].features.len() };
+    let (items, stale): (Vec<BatchItem>, Vec<BatchItem>) =
+        batch.items.into_iter().partition(|it| it.features.len() == dim);
+    for item in stale {
+        stats.errors.inc();
+        let _ = item
+            .tx
+            .send(Err(format!("row dim {} != model dim {dim} (model reloaded?)", item.features.len())));
+    }
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let rows = bucket_rows(n, batch.bucket);
+    let mut x = Matrix::zeros(rows, dim);
+    for (i, item) in items.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(&item.features);
+    }
+    // a panic inside predict must not kill the worker thread — fail the
+    // batch's requests and keep draining the queue
+    let model = &batch.model;
+    let preds = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| model.model.predict(&x)));
+    match preds {
+        Ok(preds) => {
+            stats.batches.inc();
+            stats.batched_rows.add(n as u64);
+            stats.padded_rows.add((rows - n) as u64);
+            for (item, &p) in items.iter().zip(&preds) {
+                stats.latency.record(item.enqueued.elapsed());
+                // receiver gone = client disconnected mid-flight; drop silently
+                let _ = item.tx.send(Ok(p));
+            }
+        }
+        Err(_) => {
+            stats.errors.add(n as u64);
+            for item in items {
+                let _ = item.tx.send(Err("predict panicked on this batch".into()));
+            }
+        }
+    }
+}
+
+/// Threads draining the batch queue.
+pub struct WorkerPool {
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn start(
+        workers: usize,
+        queue: Arc<BoundedQueue<Batch>>,
+        stats: Arc<ServeStats>,
+    ) -> WorkerPool {
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let queue = queue.clone();
+                let stats = stats.clone();
+                thread::spawn(move || {
+                    while let Some(batch) = queue.pop() {
+                        process_batch(batch, &stats);
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { handles }
+    }
+
+    /// Wait for all workers to drain (call after closing the queue).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Surrender the worker threads to a caller that joins them
+    /// together with its own (the server's shutdown path).
+    pub fn into_handles(self) -> Vec<thread::JoinHandle<()>> {
+        self.handles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_rounds_to_powers_of_two() {
+        assert_eq!(bucket_rows(0, 64), 0);
+        assert_eq!(bucket_rows(1, 64), 1);
+        assert_eq!(bucket_rows(3, 64), 4);
+        assert_eq!(bucket_rows(5, 64), 8);
+        assert_eq!(bucket_rows(33, 64), 64);
+        assert_eq!(bucket_rows(64, 64), 64);
+        // cap below next power of two: never pad past a full batch
+        assert_eq!(bucket_rows(40, 48), 48);
+        assert_eq!(bucket_rows(48, 48), 48);
+    }
+
+    #[test]
+    fn queue_pushes_until_cap() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn queue_pop_drains_in_order_then_none_after_close() {
+        let q = BoundedQueue::new(4);
+        q.try_push("a").unwrap();
+        q.try_push("b").unwrap();
+        q.close();
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.try_push("c"), Err("c"));
+    }
+
+    #[test]
+    fn queue_wakes_blocked_consumer() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(std::time::Duration::from_millis(20));
+        q.try_push(7).unwrap();
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q: Arc<BoundedQueue<i32>> = Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+}

@@ -1,0 +1,110 @@
+//! Round-trip property tests for `coordinator/persist`: serving
+//! correctness rests on `save_model` → `load_model` reproducing the
+//! exact solution, so for each scenario family (mc/ls/qt) we train a
+//! tiny model, round-trip it through a `.sol` file, and assert that
+//! decision values AND combined predictions are bit-identical on a
+//! held-out evaluation grid that covers the input domain (not just the
+//! training distribution — padding/extrapolation paths included).
+
+use liquid_svm::coordinator::persist::{load_model, save_model};
+use liquid_svm::coordinator::SvmModel;
+use liquid_svm::data::matrix::Matrix;
+use liquid_svm::data::synth;
+use liquid_svm::prelude::*;
+
+/// Held-out evaluation grid: a lattice over `[-lim, lim]^dim`
+/// (dim ≤ 2 here; the synth scenario sets are 1-d and 2-d).
+fn eval_grid(dim: usize, lim: f32, steps: usize) -> Matrix {
+    assert!(dim == 1 || dim == 2);
+    let lin = |k: usize| -lim + 2.0 * lim * (k as f32) / (steps - 1) as f32;
+    if dim == 1 {
+        let data: Vec<f32> = (0..steps).map(lin).collect();
+        Matrix::from_vec(data, steps, 1)
+    } else {
+        let mut data = Vec::with_capacity(steps * steps * 2);
+        for i in 0..steps {
+            for j in 0..steps {
+                data.push(lin(i));
+                data.push(lin(j));
+            }
+        }
+        Matrix::from_vec(data, steps * steps, 2)
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("lsvm-roundtrip-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn assert_roundtrip(model: &SvmModel, cfg: &Config, file: &str, grid: &Matrix) {
+    let path = tmp(file);
+    save_model(model, &path).unwrap();
+    let back = load_model(&path, cfg).unwrap();
+    assert_eq!(back.n_tasks, model.n_tasks, "{file}: task count");
+    assert_eq!(
+        back.decision_values(grid),
+        model.decision_values(grid),
+        "{file}: decision values diverged after reload"
+    );
+    assert_eq!(
+        back.predict(grid),
+        model.predict(grid),
+        "{file}: combined predictions diverged after reload"
+    );
+}
+
+#[test]
+fn mc_models_roundtrip_on_grid_across_seeds() {
+    let grid = eval_grid(2, 3.5, 13);
+    for seed in [1u64, 2, 3] {
+        let tt = synth::banana_mc(160, 10, seed);
+        let cfg = Config::default().folds(2).seed(seed);
+        let m = mc_svm(&tt.train, &cfg).unwrap();
+        assert_roundtrip(&m, &cfg, &format!("mc-{seed}.sol"), &grid);
+    }
+}
+
+#[test]
+fn ls_models_roundtrip_on_grid_across_seeds() {
+    let grid = eval_grid(1, 3.5, 101);
+    for seed in [4u64, 5, 6] {
+        let d = synth::sinc_hetero(120, seed);
+        let cfg = Config::default().folds(2).seed(seed);
+        let m = ls_svm(&d, &cfg).unwrap();
+        assert_roundtrip(&m, &cfg, &format!("ls-{seed}.sol"), &grid);
+    }
+}
+
+#[test]
+fn qt_models_roundtrip_on_grid_across_seeds() {
+    let grid = eval_grid(1, 3.5, 101);
+    for seed in [7u64, 8] {
+        let d = synth::sinc_hetero(120, seed);
+        let cfg = Config::default().folds(2).seed(seed);
+        let m = qt_svm(&d, &[0.1, 0.5, 0.9], &cfg).unwrap();
+        assert_roundtrip(&m, &cfg, &format!("qt-{seed}.sol"), &grid);
+    }
+}
+
+#[test]
+fn roundtrip_survives_a_second_generation() {
+    // save → load → save → load must be a fixed point
+    let tt = synth::banana_mc(140, 10, 11);
+    let cfg = Config::default().folds(2);
+    let m = mc_svm(&tt.train, &cfg).unwrap();
+    let p1 = tmp("gen1.sol");
+    let p2 = tmp("gen2.sol");
+    save_model(&m, &p1).unwrap();
+    let g1 = load_model(&p1, &cfg).unwrap();
+    save_model(&g1, &p2).unwrap();
+    let g2 = load_model(&p2, &cfg).unwrap();
+    let grid = eval_grid(2, 3.0, 9);
+    assert_eq!(g1.predict(&grid), g2.predict(&grid));
+    assert_eq!(
+        std::fs::read_to_string(&p1).unwrap(),
+        std::fs::read_to_string(&p2).unwrap(),
+        "serialization is not canonical across generations"
+    );
+}
