@@ -7,7 +7,9 @@
 //! errors).
 //!
 //! Scale knob: `BENCH_SCALE=smoke|default|full` (smoke for CI-speed
-//! runs, full for paper-scale sizes).
+//! runs, full for paper-scale sizes), or pass `--quick` to the bench
+//! binary (`cargo bench --bench table3_cells -- --quick`) to force
+//! smoke scale — that is what CI runs so the cells path cannot rot.
 
 #![allow(dead_code)]
 
@@ -22,6 +24,9 @@ pub enum Scale {
 }
 
 pub fn scale() -> Scale {
+    if std::env::args().any(|a| a == "--quick") {
+        return Scale::Smoke;
+    }
     match std::env::var("BENCH_SCALE").as_deref() {
         Ok("smoke") => Scale::Smoke,
         Ok("full") => Scale::Full,

@@ -8,6 +8,9 @@
 //! Paper shape (k=1000): liquidSVM ≈ libsvm-grid ≈ 1×; Overlap a few ×;
 //! Bsvm ~400–550×; Esvm ~40–475×; liquidSVM errors clearly below the
 //! budget baselines, Overlap slightly better still.
+//!
+//! CI runs `cargo bench --bench table3_cells -- --quick` (smoke sizes)
+//! so the cells path is exercised on every push.
 
 #[path = "harness.rs"]
 mod harness;

@@ -28,6 +28,9 @@ pub struct Config {
     pub display: u8,
     /// worker threads for the (cell × task) scheduler (`threads`)
     pub threads: usize,
+    /// worker threads for the parallel cell driver (`--jobs`);
+    /// `None` falls back to `threads`
+    pub jobs: Option<usize>,
     /// 0 ⇒ 10×10 default grid, 1 ⇒ 15×15, 2 ⇒ 20×20 (`grid_choice`);
     /// `use_libsvm_grid` overrides with the 10×11 libsvm grid
     pub grid_choice: u8,
@@ -54,6 +57,7 @@ impl Default for Config {
         Config {
             display: 0,
             threads: 1,
+            jobs: None,
             grid_choice: 0,
             use_libsvm_grid: false,
             adaptivity_control: 0,
@@ -82,6 +86,18 @@ impl Config {
     pub fn threads(mut self, v: usize) -> Self {
         self.threads = v.max(1);
         self
+    }
+
+    /// Worker threads for the parallel cell driver (defaults to
+    /// `threads` when unset).
+    pub fn jobs(mut self, v: usize) -> Self {
+        self.jobs = Some(v.max(1));
+        self
+    }
+
+    /// Resolved driver parallelism: explicit `jobs` or `threads`.
+    pub fn effective_jobs(&self) -> usize {
+        self.jobs.unwrap_or(self.threads).max(1)
     }
 
     pub fn grid_choice(mut self, v: u8) -> Self {
@@ -165,5 +181,12 @@ mod tests {
     #[test]
     fn threads_floor_at_one() {
         assert_eq!(Config::default().threads(0).threads, 1);
+    }
+
+    #[test]
+    fn jobs_defaults_to_threads() {
+        assert_eq!(Config::default().threads(3).effective_jobs(), 3);
+        assert_eq!(Config::default().threads(3).jobs(8).effective_jobs(), 8);
+        assert_eq!(Config::default().jobs(0).effective_jobs(), 1);
     }
 }

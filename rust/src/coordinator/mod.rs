@@ -2,6 +2,7 @@
 //! train/select/test pipeline, and the pre-defined learning scenarios.
 
 pub mod config;
+pub mod driver;
 pub mod model;
 pub mod npl;
 pub mod persist;
@@ -9,4 +10,5 @@ pub mod pool;
 pub mod scenarios;
 
 pub use config::{BackendChoice, Config};
+pub use driver::{lpt_assign, run_cell_grid, DriverReport};
 pub use model::{train, SvmModel, TestResult, TrainedUnit};

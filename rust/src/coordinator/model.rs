@@ -11,7 +11,7 @@ use anyhow::{anyhow, Result};
 
 use crate::cells::{make_cells, CellPartition, CellRouter};
 use crate::coordinator::config::{BackendChoice, Config};
-use crate::coordinator::pool::run_parallel;
+use crate::coordinator::driver::run_cell_grid;
 use crate::cv::{run_cv, predict_average, CvConfig, CvResult, Grid};
 use crate::data::dataset::Dataset;
 use crate::data::scale::Scaler;
@@ -42,6 +42,9 @@ pub struct SvmModel {
     pub n_tasks: usize,
     pub units: Vec<TrainedUnit>,
     pub train_time: Duration,
+    /// measured training time per cell (summed over the cell's tasks);
+    /// all-zero for models reassembled from disk
+    pub cell_times: Vec<Duration>,
     /// total grid points solved across all units (perf accounting)
     pub points_evaluated: usize,
     backend: GramBackend,
@@ -80,8 +83,9 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
     let partition = make_cells(&scaled, &cfg.cells, cfg.seed);
     let n_cells = partition.n_cells();
 
-    // build the (cell × task) working sets
-    let mut jobs: Vec<Box<dyn FnOnce() -> TrainedUnit + Send>> = Vec::new();
+    // build the (cell × task) working sets, each tagged with its cell
+    // so the driver can aggregate per-cell timing
+    let mut jobs: Vec<(usize, Box<dyn FnOnce() -> TrainedUnit + Send>)> = Vec::new();
     let mut n_tasks = 0usize;
     for (c, cell_idx) in partition.cells.iter().enumerate() {
         let cell_data = scaled.subset(cell_idx);
@@ -92,22 +96,26 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
             let cfg = cfg.clone();
             let backend = backend.clone();
             let seed = cfg.seed ^ ((c as u64) << 20) ^ t as u64;
-            jobs.push(Box::new(move || {
-                let cv = train_unit(&ws, task.solver, task.val_loss, &cfg, backend, seed);
-                TrainedUnit { cell: c, task: t, data: ws, cv }
-            }));
+            jobs.push((
+                c,
+                Box::new(move || {
+                    let cv = train_unit(&ws, task.solver, task.val_loss, &cfg, backend, seed);
+                    TrainedUnit { cell: c, task: t, data: ws, cv }
+                }),
+            ));
         }
     }
+    let driver_threads = cfg.effective_jobs();
     if cfg.display > 0 {
         eprintln!(
-            "[train] {} cells x {} tasks = {} working sets ({} threads)",
+            "[train] {} cells x {} tasks = {} working sets ({} driver threads)",
             n_cells,
             n_tasks,
             jobs.len(),
-            cfg.threads
+            driver_threads
         );
     }
-    let units = run_parallel(cfg.threads, jobs);
+    let (units, report) = run_cell_grid(driver_threads, n_cells, jobs);
     let points_evaluated = units
         .iter()
         .filter_map(|u| u.cv.as_ref().map(|c| c.points_evaluated))
@@ -122,13 +130,15 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
         n_tasks,
         units,
         train_time: t0.elapsed(),
+        cell_times: report.per_cell.clone(),
         points_evaluated,
         backend,
     };
     if cfg.display > 0 {
         eprintln!(
-            "[train] done in {:.2}s ({} grid points solved; {})",
+            "[train] done in {:.2}s, driver {} ({} grid points solved; {})",
             model.train_time.as_secs_f64(),
+            report.summary(),
             model.points_evaluated,
             crate::metrics::counters::snapshot().report()
         );
@@ -199,6 +209,7 @@ impl SvmModel {
         let backend = make_backend(&cfg)?;
         let points_evaluated =
             units.iter().filter_map(|u| u.cv.as_ref().map(|c| c.points_evaluated)).sum();
+        let cell_times = vec![Duration::ZERO; partition.n_cells()];
         Ok(SvmModel {
             config: cfg,
             spec,
@@ -208,9 +219,26 @@ impl SvmModel {
             n_tasks,
             units,
             train_time: Duration::ZERO,
+            cell_times,
             points_evaluated,
             backend,
         })
+    }
+
+    /// Expected input dimension of this model (0 = unknown): from the
+    /// fitted scaler when present, else the first non-empty working
+    /// set, else the router's center geometry.
+    pub fn input_dim(&self) -> usize {
+        if let Some(s) = &self.scaler {
+            return s.parts().0.len();
+        }
+        if let Some(u) = self.units.iter().find(|u| !u.data.is_empty()) {
+            return u.data.dim();
+        }
+        match &self.partition.router {
+            CellRouter::Centers(c) => c.cols(),
+            _ => 0,
+        }
     }
 
     /// Decision values of every task on `x` (unscaled input).
@@ -369,6 +397,19 @@ mod tests {
             .sum::<f32>()
             / 120.0;
         assert!(gap > 0.0, "quantile curves crossed on average: {gap}");
+    }
+
+    #[test]
+    fn driver_records_per_cell_times() {
+        let d = synth::banana_binary(240, 11);
+        let cfg = Config::default()
+            .folds(2)
+            .jobs(2)
+            .voronoi(CellStrategy::Voronoi { size: 60 });
+        let m = train(&d, &TaskSpec::Binary { w: 0.5 }, &cfg).unwrap();
+        assert_eq!(m.cell_times.len(), m.partition.n_cells());
+        assert!(m.cell_times.iter().any(|t| *t > Duration::ZERO));
+        assert_eq!(m.input_dim(), 2);
     }
 
     #[test]

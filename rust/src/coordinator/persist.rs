@@ -2,16 +2,30 @@
 //! `.fsol` files so the test phase can run in a separate process
 //! (that's how its CLI and Spark workers exchange models).  This port
 //! uses a versioned, line-oriented text format (no serde in the
-//! offline registry) that round-trips the full [`SvmModel`]:
-//! config essentials, scaler, cell partition + router, class list,
-//! and every (cell × task) unit with its fold models.
+//! offline registry) in two layouts (see DESIGN.md §Persistence):
+//!
+//! * **monolithic `.sol`** — one file round-tripping the full
+//!   [`SvmModel`]: config essentials, scaler, cell partition + router,
+//!   class list, and every (cell × task) unit with its fold models;
+//! * **sharded `.sol.d/` bundle** — a directory holding a `MANIFEST`
+//!   (spec/kernel/classes/scaler/router, the cell strategy, and a
+//!   shard list with per-shard byte counts and FNV-1a checksums) plus
+//!   one shard file per cell carrying that cell's training indices and
+//!   units.  The manifest is tiny and loads eagerly; shards load
+//!   lazily and independently, which is what lets `liquidsvm serve`
+//!   answer traffic against a model far larger than memory.
+//!
+//! Both layouts write atomically (write-then-rename; for bundles the
+//! whole temporary directory is renamed into place) so a serving
+//! process hot-reloading the path never observes a half-written
+//! solution.
 
 use std::fmt::Write as _;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::cells::{CellPartition, CellRouter, TreeNode};
+use crate::cells::{CellPartition, CellRouter, CellStrategy, TreeNode};
 use crate::coordinator::config::Config;
 use crate::coordinator::model::{SvmModel, TrainedUnit};
 use crate::cv::{CvResult, FoldModel};
@@ -21,24 +35,16 @@ use crate::data::scale::Scaler;
 use crate::tasks::TaskSpec;
 
 const MAGIC: &str = "liquidsvm-sol v1";
+const BUNDLE_MAGIC: &str = "liquidsvm-bundle v1";
+const SHARD_MAGIC: &str = "liquidsvm-shard v1";
+/// Name of the bundle's manifest file inside the `.sol.d/` directory.
+pub const MANIFEST_FILE: &str = "MANIFEST";
 
 /// Serialize a trained model to the `.sol` text format.
 pub fn save_model(model: &SvmModel, path: &Path) -> Result<()> {
     let mut s = String::new();
     writeln!(s, "{MAGIC}")?;
-    writeln!(s, "spec {}", spec_tag(&model.spec))?;
-    writeln!(s, "kernel {:?}", model.config.kernel)?;
-    writeln!(s, "classes {}", join_f32(&model.classes))?;
-    writeln!(s, "n_tasks {}", model.n_tasks)?;
-
-    match &model.scaler {
-        Some(sc) => {
-            let (shift, scale) = scaler_parts(sc);
-            writeln!(s, "scaler {} {}", join_f32(&shift), join_f32(&scale))?;
-        }
-        None => writeln!(s, "scaler none")?,
-    }
-
+    write_header(&mut s, model)?;
     write_router(&mut s, &model.partition.router)?;
     writeln!(s, "cells {}", model.partition.cells.len())?;
     for cell in &model.partition.cells {
@@ -47,19 +53,7 @@ pub fn save_model(model: &SvmModel, path: &Path) -> Result<()> {
 
     writeln!(s, "units {}", model.units.len())?;
     for u in &model.units {
-        writeln!(s, "unit {} {} {}", u.cell, u.task, u.data.dim())?;
-        writeln!(s, "x {}", join_f32(u.data.x.as_slice()))?;
-        writeln!(s, "y {}", join_f32(&u.data.y))?;
-        match &u.cv {
-            Some(cv) => {
-                writeln!(s, "cv {} {} {}", cv.best_gamma, cv.best_lambda, cv.models.len())?;
-                for fm in &cv.models {
-                    writeln!(s, "fold {}", join_usize(&fm.train_idx))?;
-                    writeln!(s, "coef {}", join_f32(&fm.coef))?;
-                }
-            }
-            None => writeln!(s, "cv none")?,
-        }
+        write_unit(&mut s, u)?;
     }
     // write-then-rename so readers (e.g. a serving process hot-reloading
     // this file) never observe a half-written solution
@@ -69,9 +63,98 @@ pub fn save_model(model: &SvmModel, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load a model saved by [`save_model`].  `config` supplies runtime
-/// choices not stored in the file (backend, threads, display).
+/// Shared `spec`/`kernel`/`classes`/`n_tasks`/`scaler` header of both
+/// the `.sol` format and the bundle manifest.
+fn write_header(s: &mut String, model: &SvmModel) -> Result<()> {
+    writeln!(s, "spec {}", spec_tag(&model.spec))?;
+    writeln!(s, "kernel {:?}", model.config.kernel)?;
+    writeln!(s, "classes {}", join_f32(&model.classes))?;
+    writeln!(s, "n_tasks {}", model.n_tasks)?;
+    match &model.scaler {
+        Some(sc) => {
+            let (shift, scale) = scaler_parts(sc);
+            writeln!(s, "scaler {} {}", join_f32(&shift), join_f32(&scale))?;
+        }
+        None => writeln!(s, "scaler none")?,
+    }
+    Ok(())
+}
+
+/// One (cell × task) unit: header, working set, CV outcome.
+fn write_unit(s: &mut String, u: &TrainedUnit) -> Result<()> {
+    writeln!(s, "unit {} {} {}", u.cell, u.task, u.data.dim())?;
+    writeln!(s, "x {}", join_f32(u.data.x.as_slice()))?;
+    writeln!(s, "y {}", join_f32(&u.data.y))?;
+    match &u.cv {
+        Some(cv) => {
+            writeln!(s, "cv {} {} {}", cv.best_gamma, cv.best_lambda, cv.models.len())?;
+            for fm in &cv.models {
+                writeln!(s, "fold {}", join_usize(&fm.train_idx))?;
+                writeln!(s, "coef {}", join_f32(&fm.coef))?;
+            }
+        }
+        None => writeln!(s, "cv none")?,
+    }
+    Ok(())
+}
+
+fn read_unit(lines: &mut std::str::Lines) -> Result<TrainedUnit> {
+    let mut next = || lines.next().ok_or_else(|| anyhow!("truncated unit block"));
+    let head = field(next()?, "unit")?;
+    let parts: Vec<usize> = head
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|_| anyhow!("bad unit header")))
+        .collect::<Result<_>>()?;
+    let [cell, task, dim] = parts[..] else { bail!("unit header arity") };
+    let x = parse_f32s(field(next()?, "x")?)?;
+    let y = parse_f32s(field(next()?, "y")?)?;
+    let rows = y.len();
+    if x.len() != rows * dim {
+        bail!("unit data shape mismatch");
+    }
+    let data = Dataset::new(Matrix::from_vec(x, rows, dim), y);
+    let cv_line = next()?;
+    let cv = if cv_line == "cv none" {
+        None
+    } else {
+        let head = field(cv_line, "cv")?;
+        let toks: Vec<&str> = head.split_whitespace().collect();
+        if toks.len() != 3 {
+            bail!("cv header arity");
+        }
+        let best_gamma: f32 = toks[0].parse()?;
+        let best_lambda: f32 = toks[1].parse()?;
+        let n_models: usize = toks[2].parse()?;
+        let mut models = Vec::with_capacity(n_models);
+        for _ in 0..n_models {
+            let train_idx = parse_usizes(field(next()?, "fold")?)?;
+            let coef = parse_f32s(field(next()?, "coef")?)?;
+            if train_idx.len() != coef.len() {
+                bail!("fold model arity mismatch");
+            }
+            models.push(FoldModel { train_idx, coef });
+        }
+        Some(CvResult {
+            best_gamma,
+            best_lambda,
+            best_val_loss: f32::NAN, // not needed at test time
+            val_matrix: Vec::new(),
+            models,
+            total_iterations: 0,
+            points_evaluated: 0,
+        })
+    };
+    Ok(TrainedUnit { cell, task, data, cv })
+}
+
+/// Load a model saved by [`save_model`] — or, transparently, a sharded
+/// bundle written by [`save_bundle`] (every shard loaded eagerly).
+/// `config` supplies runtime choices not stored in the file (backend,
+/// threads, display).
 pub fn load_model(path: &Path, config: &Config) -> Result<SvmModel> {
+    if is_bundle_path(path) {
+        return load_bundle(path, config);
+    }
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
     let mut lines = text.lines();
     macro_rules! next {
@@ -92,18 +175,7 @@ pub fn load_model(path: &Path, config: &Config) -> Result<SvmModel> {
     let classes = parse_f32s(field(next!()?, "classes")?)?;
     let n_tasks: usize = field(next!()?, "n_tasks")?.parse()?;
 
-    let scaler_line = next!()?;
-    let scaler = if scaler_line == "scaler none" {
-        None
-    } else {
-        let rest = field(scaler_line, "scaler")?;
-        let vals = parse_f32s(rest)?;
-        if vals.len() % 2 != 0 {
-            bail!("scaler line malformed");
-        }
-        let d = vals.len() / 2;
-        Some(Scaler::from_parts(vals[..d].to_vec(), vals[d..].to_vec()))
-    };
+    let scaler = parse_scaler_line(next!()?)?;
 
     let (router, mut lines_used) = read_router(next!()?, &mut lines)?;
     let _ = &mut lines_used;
@@ -117,56 +189,300 @@ pub fn load_model(path: &Path, config: &Config) -> Result<SvmModel> {
     let n_units: usize = field(next!()?, "units")?.parse()?;
     let mut units = Vec::with_capacity(n_units);
     for _ in 0..n_units {
-        let head = field(next!()?, "unit")?;
-        let parts: Vec<usize> = head
-            .split_whitespace()
-            .map(|t| t.parse().map_err(|_| anyhow!("bad unit header")))
-            .collect::<Result<_>>()?;
-        let [cell, task, dim] = parts[..] else { bail!("unit header arity") };
-        let x = parse_f32s(field(next!()?, "x")?)?;
-        let y = parse_f32s(field(next!()?, "y")?)?;
-        let rows = y.len();
-        if x.len() != rows * dim {
-            bail!("unit data shape mismatch");
-        }
-        let data = Dataset::new(Matrix::from_vec(x, rows, dim), y);
-        let cv_line = next!()?;
-        let cv = if cv_line == "cv none" {
-            None
-        } else {
-            let head = field(cv_line, "cv")?;
-            let toks: Vec<&str> = head.split_whitespace().collect();
-            if toks.len() != 3 {
-                bail!("cv header arity");
-            }
-            let best_gamma: f32 = toks[0].parse()?;
-            let best_lambda: f32 = toks[1].parse()?;
-            let n_models: usize = toks[2].parse()?;
-            let mut models = Vec::with_capacity(n_models);
-            for _ in 0..n_models {
-                let train_idx = parse_usizes(field(next!()?, "fold")?)?;
-                let coef = parse_f32s(field(next!()?, "coef")?)?;
-                if train_idx.len() != coef.len() {
-                    bail!("fold model arity mismatch");
-                }
-                models.push(FoldModel { train_idx, coef });
-            }
-            Some(CvResult {
-                best_gamma,
-                best_lambda,
-                best_val_loss: f32::NAN, // not needed at test time
-                val_matrix: Vec::new(),
-                models,
-                total_iterations: 0,
-                points_evaluated: 0,
-            })
-        };
-        units.push(TrainedUnit { cell, task, data, cv });
+        units.push(read_unit(&mut lines)?);
     }
 
     let mut cfg = config.clone();
     cfg.kernel = kernel;
     SvmModel::from_parts(cfg, spec, scaler, partition, classes, n_tasks, units)
+}
+
+// ------------------------------------------------------- sharded bundles
+
+/// Metadata of one shard file inside a `.sol.d/` bundle.
+#[derive(Clone, Debug)]
+pub struct ShardMeta {
+    /// cell this shard carries
+    pub cell: usize,
+    /// file name inside the bundle directory
+    pub file: String,
+    /// exact byte length of the shard file
+    pub bytes: u64,
+    /// FNV-1a 64-bit checksum of the shard file
+    pub checksum: u64,
+}
+
+/// The eagerly-loaded part of a `.sol.d/` bundle: everything needed to
+/// scale + route a request, plus the shard table — but none of the
+/// per-cell fold models, which load lazily via [`load_shard`].
+#[derive(Clone, Debug)]
+pub struct BundleManifest {
+    pub spec: TaskSpec,
+    pub kernel: crate::kernel::KernelKind,
+    pub classes: Vec<f32>,
+    pub n_tasks: usize,
+    /// expected input dimension (0 = unknown)
+    pub dim: usize,
+    pub scaler: Option<Scaler>,
+    /// cell strategy the model was trained with (informational)
+    pub strategy: CellStrategy,
+    pub router: CellRouter,
+    /// one entry per cell, in cell order
+    pub shards: Vec<ShardMeta>,
+}
+
+impl BundleManifest {
+    pub fn n_cells(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Sum of all shard file sizes — the resident cost of a fully
+    /// loaded bundle.
+    pub fn total_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.bytes).sum()
+    }
+}
+
+/// Does `path` look like a `.sol.d/` bundle on disk?
+pub fn is_bundle_path(path: &Path) -> bool {
+    path.is_dir() && path.join(MANIFEST_FILE).is_file()
+}
+
+/// FNV-1a 64-bit hash — cheap corruption check for shard files (no
+/// crypto needed; this guards against torn writes and bit rot, not
+/// adversaries).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn strategy_tag(s: &CellStrategy) -> String {
+    match s {
+        CellStrategy::None => "none".into(),
+        CellStrategy::RandomChunks { size } => format!("chunks,{size}"),
+        CellStrategy::Voronoi { size } => format!("voronoi,{size}"),
+        CellStrategy::OverlappingVoronoi { size, overlap } => format!("overlap,{size},{overlap}"),
+        CellStrategy::RecursiveTree { max_size } => format!("tree,{max_size}"),
+    }
+}
+
+fn parse_strategy(tag: &str) -> Result<CellStrategy> {
+    let parts: Vec<&str> = tag.split(',').collect();
+    let num = |i: usize| -> Result<usize> {
+        parts
+            .get(i)
+            .ok_or_else(|| anyhow!("strategy tag `{tag}` arity"))?
+            .parse()
+            .map_err(|_| anyhow!("strategy tag `{tag}`: bad number"))
+    };
+    Ok(match parts[0] {
+        "none" => CellStrategy::None,
+        "chunks" => CellStrategy::RandomChunks { size: num(1)? },
+        "voronoi" => CellStrategy::Voronoi { size: num(1)? },
+        "overlap" => CellStrategy::OverlappingVoronoi {
+            size: num(1)?,
+            overlap: parts
+                .get(2)
+                .and_then(|t| t.parse().ok())
+                .ok_or_else(|| anyhow!("strategy tag `{tag}`: bad overlap"))?,
+        },
+        "tree" => CellStrategy::RecursiveTree { max_size: num(1)? },
+        other => bail!("unknown strategy tag `{other}`"),
+    })
+}
+
+/// Write a model as a sharded `.sol.d/` bundle: one shard file per
+/// cell plus a `MANIFEST`, assembled in a temporary directory and
+/// renamed into place as a whole, so readers never see a partial
+/// bundle (a pre-existing bundle at `path` is replaced).
+pub fn save_bundle(model: &SvmModel, path: &Path) -> Result<()> {
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    if tmp.exists() {
+        std::fs::remove_dir_all(&tmp).with_context(|| format!("clearing {tmp:?}"))?;
+    }
+    std::fs::create_dir_all(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+
+    // group units by cell in one linear pass (models at scale have
+    // thousands of cells — an inner filter scan per cell is quadratic)
+    let n_cells = model.partition.n_cells();
+    let mut by_cell: Vec<Vec<&TrainedUnit>> = vec![Vec::new(); n_cells];
+    for u in &model.units {
+        if u.cell < n_cells {
+            by_cell[u.cell].push(u);
+        }
+    }
+
+    // one shard per cell: the cell's training indices + its units
+    let mut shard_lines = Vec::with_capacity(n_cells);
+    for (c, indices) in model.partition.cells.iter().enumerate() {
+        let mut s = String::new();
+        writeln!(s, "{SHARD_MAGIC}")?;
+        writeln!(s, "cell {c}")?;
+        writeln!(s, "indices {}", join_usize(indices))?;
+        writeln!(s, "units {}", by_cell[c].len())?;
+        for u in &by_cell[c] {
+            write_unit(&mut s, u)?;
+        }
+        let bytes = s.into_bytes();
+        let file = format!("shard-{c:05}.sol");
+        std::fs::write(tmp.join(&file), &bytes)
+            .with_context(|| format!("writing shard {file}"))?;
+        shard_lines.push(format!("shard {c} {file} {} {:016x}", bytes.len(), fnv1a64(&bytes)));
+    }
+
+    let mut m = String::new();
+    writeln!(m, "{BUNDLE_MAGIC}")?;
+    write_header(&mut m, model)?;
+    writeln!(m, "dim {}", model.input_dim())?;
+    writeln!(m, "strategy {}", strategy_tag(&model.config.cells))?;
+    write_router(&mut m, &model.partition.router)?;
+    writeln!(m, "shards {}", shard_lines.len())?;
+    for line in shard_lines {
+        writeln!(m, "{line}")?;
+    }
+    std::fs::write(tmp.join(MANIFEST_FILE), m).context("writing MANIFEST")?;
+
+    // swap the whole bundle into place.  When replacing, the previous
+    // bundle is renamed aside first and deleted only after the new one
+    // is in place, so a crash at any point leaves a loadable bundle on
+    // disk (at `path`, or recoverable at `<path>.old`) — never nothing.
+    if path.exists() {
+        let mut old_name = path.as_os_str().to_owned();
+        old_name.push(".old");
+        let old = PathBuf::from(old_name);
+        if old.exists() {
+            std::fs::remove_dir_all(&old).with_context(|| format!("clearing {old:?}"))?;
+        }
+        std::fs::rename(path, &old).with_context(|| format!("setting aside {path:?}"))?;
+        std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+        let _ = std::fs::remove_dir_all(&old);
+    } else {
+        std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    }
+    Ok(())
+}
+
+/// Read and parse a bundle's `MANIFEST` (cheap: no shard data).
+pub fn read_manifest(dir: &Path) -> Result<BundleManifest> {
+    let path = dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+    let mut lines = text.lines();
+    macro_rules! next {
+        () => {
+            lines.next().ok_or_else(|| anyhow!("truncated MANIFEST"))
+        };
+    }
+
+    if next!()? != BUNDLE_MAGIC {
+        bail!("not a {BUNDLE_MAGIC} directory");
+    }
+    let spec = parse_spec(field(next!()?, "spec")?)?;
+    let kernel = match field(next!()?, "kernel")? {
+        "Gauss" => crate::kernel::KernelKind::Gauss,
+        "Laplace" => crate::kernel::KernelKind::Laplace,
+        other => bail!("unknown kernel {other}"),
+    };
+    let classes = parse_f32s(field(next!()?, "classes")?)?;
+    let n_tasks: usize = field(next!()?, "n_tasks")?.parse()?;
+    let scaler = parse_scaler_line(next!()?)?;
+    let dim: usize = field(next!()?, "dim")?.parse()?;
+    let strategy = parse_strategy(field(next!()?, "strategy")?)?;
+    let router_first = next!()?;
+    let (router, _) = read_router(router_first, &mut lines)?;
+    let n_shards: usize = field(next!()?, "shards")?.parse()?;
+    let mut shards = Vec::with_capacity(n_shards);
+    for i in 0..n_shards {
+        let rest = field(next!()?, "shard")?;
+        let toks: Vec<&str> = rest.split_whitespace().collect();
+        if toks.len() != 4 {
+            bail!("shard line arity");
+        }
+        let cell: usize = toks[0].parse()?;
+        if cell != i {
+            bail!("shard table out of order: expected cell {i}, got {cell}");
+        }
+        shards.push(ShardMeta {
+            cell,
+            file: toks[1].to_string(),
+            bytes: toks[2].parse()?,
+            checksum: u64::from_str_radix(toks[3], 16)
+                .map_err(|_| anyhow!("bad checksum `{}`", toks[3]))?,
+        });
+    }
+    Ok(BundleManifest { spec, kernel, classes, n_tasks, dim, scaler, strategy, router, shards })
+}
+
+/// Load one shard of a bundle, verifying its size and checksum
+/// against the manifest.  Returns the cell's training indices and its
+/// (cell × task) units.
+pub fn load_shard(
+    dir: &Path,
+    manifest: &BundleManifest,
+    cell: usize,
+) -> Result<(Vec<usize>, Vec<TrainedUnit>)> {
+    let meta = manifest
+        .shards
+        .get(cell)
+        .ok_or_else(|| anyhow!("bundle has no shard for cell {cell}"))?;
+    let path = dir.join(&meta.file);
+    let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() as u64 != meta.bytes {
+        bail!("shard {cell}: size {} != manifest {}", bytes.len(), meta.bytes);
+    }
+    let sum = fnv1a64(&bytes);
+    if sum != meta.checksum {
+        bail!("shard {cell}: checksum {sum:016x} != manifest {:016x}", meta.checksum);
+    }
+    let text = std::str::from_utf8(&bytes).context("shard not UTF-8")?;
+    let mut lines = text.lines();
+    let mut next = || lines.next().ok_or_else(|| anyhow!("truncated shard"));
+    if next()? != SHARD_MAGIC {
+        bail!("not a {SHARD_MAGIC} file");
+    }
+    let stored_cell: usize = field(next()?, "cell")?.parse()?;
+    if stored_cell != cell {
+        bail!("shard file claims cell {stored_cell}, manifest says {cell}");
+    }
+    let indices = parse_usizes(field(next()?, "indices")?)?;
+    let n_units: usize = field(next()?, "units")?.parse()?;
+    drop(next);
+    let mut units = Vec::with_capacity(n_units);
+    for _ in 0..n_units {
+        units.push(read_unit(&mut lines)?);
+    }
+    Ok((indices, units))
+}
+
+/// Load a whole bundle eagerly into an [`SvmModel`] (the test-phase /
+/// `liquidsvm predict` path; serving loads shards lazily instead).
+pub fn load_bundle(dir: &Path, config: &Config) -> Result<SvmModel> {
+    let manifest = read_manifest(dir)?;
+    let mut cells = Vec::with_capacity(manifest.n_cells());
+    let mut units = Vec::new();
+    for c in 0..manifest.n_cells() {
+        let (indices, mut shard_units) = load_shard(dir, &manifest, c)?;
+        cells.push(indices);
+        units.append(&mut shard_units);
+    }
+    let partition = CellPartition { cells, router: manifest.router.clone() };
+    let mut cfg = config.clone();
+    cfg.kernel = manifest.kernel;
+    cfg.cells = manifest.strategy.clone();
+    SvmModel::from_parts(
+        cfg,
+        manifest.spec,
+        manifest.scaler,
+        partition,
+        manifest.classes,
+        manifest.n_tasks,
+        units,
+    )
 }
 
 // ---------------------------------------------------------------- helpers
@@ -283,6 +599,21 @@ fn unflatten_tree(toks: &[&str], pos: &mut usize) -> Result<TreeNode> {
     }
 }
 
+/// Parse a `scaler none` / `scaler <shifts> <scales>` line (shared by
+/// the `.sol` format and the bundle manifest).
+fn parse_scaler_line(line: &str) -> Result<Option<Scaler>> {
+    if line == "scaler none" {
+        return Ok(None);
+    }
+    let rest = field(line, "scaler")?;
+    let vals = parse_f32s(rest)?;
+    if vals.is_empty() || vals.len() % 2 != 0 {
+        bail!("scaler line malformed");
+    }
+    let d = vals.len() / 2;
+    Ok(Some(Scaler::from_parts(vals[..d].to_vec(), vals[d..].to_vec())))
+}
+
 fn field<'a>(line: &'a str, key: &str) -> Result<&'a str> {
     line.strip_prefix(key)
         .map(str::trim)
@@ -385,5 +716,81 @@ mod tests {
         let path = tmp("garbage.sol");
         std::fs::write(&path, "not a model").unwrap();
         assert!(load_model(&path, &Config::default()).is_err());
+    }
+
+    #[test]
+    fn bundle_roundtrip_voronoi_predictions_identical() {
+        let d = synth::by_name("cod-rna", 400, 14).unwrap();
+        let cfg = Config::default().folds(3).voronoi(CellStrategy::Voronoi { size: 100 });
+        let m = svm_binary(&d, 0.5, &cfg).unwrap();
+        let dir = tmp("vor.sol.d");
+        save_bundle(&m, &dir).unwrap();
+
+        let manifest = read_manifest(&dir).unwrap();
+        assert_eq!(manifest.n_cells(), m.partition.n_cells());
+        assert_eq!(manifest.dim, 8);
+        assert!(manifest.total_bytes() > 0);
+        assert!(matches!(manifest.strategy, CellStrategy::Voronoi { size: 100 }));
+
+        // load_model is transparent over bundles
+        let back = load_model(&dir, &cfg).unwrap();
+        let test = synth::by_name("cod-rna", 150, 15).unwrap();
+        assert_eq!(m.predict(&test.x), back.predict(&test.x));
+    }
+
+    #[test]
+    fn bundle_roundtrip_every_strategy() {
+        let d = synth::banana_binary(260, 16);
+        let strategies = [
+            CellStrategy::None,
+            CellStrategy::RandomChunks { size: 70 },
+            CellStrategy::RecursiveTree { max_size: 80 },
+            CellStrategy::OverlappingVoronoi { size: 90, overlap: 0.25 },
+        ];
+        for (i, strat) in strategies.into_iter().enumerate() {
+            let cfg = Config::default().folds(2).voronoi(strat.clone());
+            let m = svm_binary(&d, 0.5, &cfg).unwrap();
+            let dir = tmp(&format!("strat-{i}.sol.d"));
+            save_bundle(&m, &dir).unwrap();
+            let back = load_bundle(&dir, &cfg).unwrap();
+            let test = synth::banana_binary(60, 17);
+            assert_eq!(m.predict(&test.x), back.predict(&test.x), "strategy {strat:?}");
+            assert_eq!(read_manifest(&dir).unwrap().strategy, strat);
+        }
+    }
+
+    #[test]
+    fn bundle_detects_shard_corruption() {
+        let d = synth::banana_binary(150, 18);
+        let cfg = Config::default().folds(2).voronoi(CellStrategy::Voronoi { size: 50 });
+        let m = svm_binary(&d, 0.5, &cfg).unwrap();
+        let dir = tmp("corrupt.sol.d");
+        save_bundle(&m, &dir).unwrap();
+        let manifest = read_manifest(&dir).unwrap();
+        // flip bytes in shard 0 without changing its length
+        let shard_path = dir.join(&manifest.shards[0].file);
+        let mut bytes = std::fs::read(&shard_path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] = bytes[last].wrapping_add(1);
+        std::fs::write(&shard_path, &bytes).unwrap();
+        let err = load_shard(&dir, &manifest, 0).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        assert!(load_bundle(&dir, &cfg).is_err());
+    }
+
+    #[test]
+    fn bundle_overwrite_is_atomic_swap() {
+        let cfg = Config::default().folds(2).voronoi(CellStrategy::Voronoi { size: 60 });
+        let m1 = svm_binary(&synth::banana_binary(140, 19), 0.5, &cfg).unwrap();
+        let m2 = svm_binary(&synth::banana_binary(220, 20), 0.5, &cfg).unwrap();
+        let dir = tmp("swap.sol.d");
+        save_bundle(&m1, &dir).unwrap();
+        save_bundle(&m2, &dir).unwrap(); // replaces the first bundle wholesale
+        let back = load_bundle(&dir, &cfg).unwrap();
+        let test = synth::banana_binary(50, 21);
+        assert_eq!(back.predict(&test.x), m2.predict(&test.x));
+        // no leftover temp or set-aside directories
+        assert!(!dir.with_file_name("swap.sol.d.tmp").exists());
+        assert!(!dir.with_file_name("swap.sol.d.old").exists());
     }
 }

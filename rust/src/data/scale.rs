@@ -80,6 +80,17 @@ impl Scaler {
         out
     }
 
+    /// Apply to a single row (one allocation; the serving router's
+    /// per-request path, where building a 1×d `Matrix` would cost two
+    /// extra copies per row).
+    pub fn transform_row(&self, row: &[f32]) -> Vec<f32> {
+        assert_eq!(row.len(), self.shift.len());
+        row.iter()
+            .zip(self.shift.iter().zip(&self.scale))
+            .map(|(&v, (&sh, &sc))| (v - sh) * sc)
+            .collect()
+    }
+
     /// Rebuild from serialized (shift, scale) columns (persistence).
     pub fn from_parts(shift: Vec<f32>, scale: Vec<f32>) -> Scaler {
         assert_eq!(shift.len(), scale.len());
@@ -123,5 +134,15 @@ mod tests {
         let s = Scaler::fit(&x, ScaleKind::MinMax);
         let t = s.transform(&x);
         assert_eq!(t.get(0, 0), 0.0); // shifted by min, scale 1
+    }
+
+    #[test]
+    fn transform_row_matches_matrix_transform() {
+        let x = Matrix::from_rows(&[&[0.0, 10.0], &[4.0, 30.0], &[2.0, 20.0]]);
+        let s = Scaler::fit(&x, ScaleKind::MinMax);
+        let t = s.transform(&x);
+        for i in 0..x.rows() {
+            assert_eq!(s.transform_row(x.row(i)), t.row(i).to_vec(), "row {i}");
+        }
     }
 }

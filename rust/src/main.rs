@@ -29,7 +29,9 @@ fn main() {
     }
 }
 
-/// `--key value` / `--flag` argument bag.
+/// `--key value` / `--key=value` / `--flag` argument bag.  A key may
+/// appear only once, whichever spelling is used — `--n 5 --n=6` is a
+/// duplicate just like `--n 5 --n 6`.
 struct Args {
     cmd: String,
     kv: HashMap<String, String>,
@@ -56,7 +58,14 @@ impl Args {
                 if let Some(k) = key.take() {
                     insert_unique(&mut kv, k, "true".into())?; // bare flag
                 }
-                key = Some(stripped.to_string());
+                if let Some((k, v)) = stripped.split_once('=') {
+                    if k.is_empty() {
+                        bail!("empty option name in `{tok}`");
+                    }
+                    insert_unique(&mut kv, k.to_string(), v.to_string())?;
+                } else {
+                    key = Some(stripped.to_string());
+                }
             } else if let Some(k) = key.take() {
                 insert_unique(&mut kv, k, tok)?;
             } else {
@@ -120,9 +129,17 @@ fn build_config(args: &Args) -> Result<Config> {
         .folds(args.num("folds", 5usize)?)
         .seed(args.num("seed", 42u64)?);
     cfg.use_libsvm_grid = args.get("libsvm-grid").is_some();
-    if let Some(v) = args.get("voronoi") {
-        cfg.cells = Config::parse_voronoi(v)
-            .ok_or_else(|| anyhow!("--voronoi: bad spec `{v}`"))?;
+    if let Some(j) = args.get("jobs") {
+        cfg = cfg.jobs(j.parse().map_err(|_| anyhow!("--jobs: cannot parse `{j}`"))?);
+    }
+    // --cells is the readable alias of the paper's --voronoi syntax
+    match (args.get("voronoi"), args.get("cells")) {
+        (Some(_), Some(_)) => bail!("--voronoi and --cells are aliases; give only one"),
+        (Some(v), None) | (None, Some(v)) => {
+            cfg.cells = Config::parse_voronoi(v)
+                .ok_or_else(|| anyhow!("--voronoi/--cells: bad spec `{v}`"))?;
+        }
+        (None, None) => {}
     }
     cfg.backend = match args.get("backend").unwrap_or("blocked") {
         "scalar" => BackendChoice::Scalar,
@@ -183,8 +200,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         res.error
     );
     if let Some(path) = args.get("save") {
-        liquid_svm::coordinator::persist::save_model(&model, std::path::Path::new(path))?;
-        println!("saved model to {path}");
+        // a `.sol.d` path selects the sharded bundle layout (one shard
+        // per cell, lazily loadable by `liquidsvm serve`)
+        if path.ends_with(".sol.d") {
+            liquid_svm::coordinator::persist::save_bundle(&model, std::path::Path::new(path))?;
+            println!("saved sharded bundle to {path} ({} shards)", model.partition.n_cells());
+        } else {
+            liquid_svm::coordinator::persist::save_model(&model, std::path::Path::new(path))?;
+            println!("saved model to {path}");
+        }
     }
     Ok(())
 }
@@ -227,20 +251,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap: args.num("queue-cap", 128usize)?,
         workers: args.num("workers", 2usize)?,
         max_models: args.num("max-models", 8usize)?,
+        max_shard_bytes: args.num("max-shard-mb", 256u64)? << 20,
         model_config: build_config(args)?,
     };
     let server = Server::start(scfg)?;
     println!("serving on {}", server.addr());
     if let Some(spec) = args.get("models") {
         for part in spec.split(',').filter(|p| !p.is_empty()) {
-            let (name, path) = part
-                .split_once('=')
-                .ok_or_else(|| anyhow!("--models: expected `name=path.sol`, got `{part}`"))?;
+            let (name, path) = part.split_once('=').ok_or_else(|| {
+                anyhow!("--models: expected `name=path.sol` or `name=path.sol.d`, got `{part}`")
+            })?;
             let m = server.registry.load(name, std::path::Path::new(path))?;
-            println!("loaded {name} from {path} (dim={} units={})", m.dim, m.model.units.len());
+            match &m.bundle {
+                Some(b) => println!(
+                    "loaded {name} from {path} (dim={} shards={}, lazy)",
+                    m.dim,
+                    b.manifest().n_cells()
+                ),
+                None => println!(
+                    "loaded {name} from {path} (dim={} units={})",
+                    m.dim,
+                    m.model.units.len()
+                ),
+            }
         }
     }
-    println!("protocol: predict/load/unload/stats/ping/quit — see README");
+    println!("protocol: predict/load/unload/stats/shards/ping/quit — see README");
     loop {
         std::thread::park(); // run until killed; requests drive the threads
     }
@@ -318,25 +354,34 @@ fn print_help() {
 
 USAGE:
   liquidsvm train [--data NAME|--file PATH] [--scenario binary|mc|mc-ava|ls|qt|ex|npl|roc]
-                  [--n N] [--threads T] [--display D] [--grid-choice 0|1|2]
-                  [--adaptivity 0|1|2] [--voronoi SPEC] [--libsvm-grid]
+                  [--n N] [--threads T] [--jobs J] [--display D] [--grid-choice 0|1|2]
+                  [--adaptivity 0|1|2] [--cells SPEC|--voronoi SPEC] [--libsvm-grid]
                   [--backend scalar|blocked|xla] [--folds K] [--seed S]
-                  [--save MODEL.sol]
-  liquidsvm predict --model MODEL.sol [--data NAME|--file PATH] [--out PREDICTIONS.txt]
-  liquidsvm serve [--port P] [--host H] [--models name=a.sol,name2=b.sol]
+                  [--save MODEL.sol | --save MODEL.sol.d]
+  liquidsvm predict --model MODEL.sol[.d] [--data NAME|--file PATH] [--out PREDICTIONS.txt]
+  liquidsvm serve [--port P] [--host H] [--models name=a.sol,name2=b.sol.d]
                   [--max-batch B] [--max-delay-ms MS] [--workers W] [--queue-cap Q]
-                  [--max-models M] [--backend scalar|blocked|xla]
+                  [--max-models M] [--max-shard-mb MB] [--backend scalar|blocked|xla]
   liquidsvm client --addr HOST:PORT --model NAME [--data NAME|--file PATH] [--n N]
                    [--connections C] [--pipeline P]
   liquidsvm convert --in DATA.[csv|libsvm] --out DATA.[csv|libsvm]
   liquidsvm distributed [--data NAME] [--workers W] [--coarse-size N] [--fine-size N]
   liquidsvm list-datasets
 
+Options take `--key value` or `--key=value`; each key at most once.
+`--cells`/`--voronoi` specs: 0 (off), chunks,SIZE, 1,SIZE (Voronoi),
+5,SIZE (overlapping Voronoi), 6,SIZE (recursive tree).  `--jobs` sets
+the parallel cell driver's worker count (defaults to --threads).
+Saving to a `.sol.d` path writes a sharded bundle (one shard per cell)
+that `liquidsvm serve` loads lazily under --max-shard-mb.
+
 EXAMPLES:
   liquidsvm train --data banana-mc --n 2000 --scenario mc --display 1 --threads 2
-  liquidsvm train --data covtype --n 10000 --voronoi 6,1000 --scenario binary
+  liquidsvm train --data covtype --n 10000 --cells 6,1000 --jobs 8 --scenario binary
   liquidsvm train --data banana --scenario binary --save banana.sol
-  liquidsvm serve --port 4950 --models banana=banana.sol
+  liquidsvm train --data covtype --n 50000 --cells 1,2000 --jobs 8 \\
+      --scenario binary --save covtype.sol.d
+  liquidsvm serve --port 4950 --models banana=banana.sol,cov=covtype.sol.d --max-shard-mb 64
   liquidsvm client --addr 127.0.0.1:4950 --model banana --data banana --n 1000
   liquidsvm distributed --data covtype --n 20000 --workers 8"
     );
@@ -370,6 +415,35 @@ mod tests {
     fn duplicate_key_rejected() {
         let err = parse(&["train", "--n", "100", "--n", "200"]).unwrap_err();
         assert!(err.to_string().contains("duplicate option `--n`"), "{err}");
+    }
+
+    #[test]
+    fn equals_syntax_parses() {
+        let a = parse(&["train", "--n=500", "--data=banana", "--verbose"]).unwrap();
+        assert_eq!(a.num("n", 0usize).unwrap(), 500);
+        assert_eq!(a.get("data"), Some("banana"));
+        assert_eq!(a.get("verbose"), Some("true"));
+        // value containing '=' splits only on the first one
+        let a = parse(&["serve", "--models=banana=banana.sol"]).unwrap();
+        assert_eq!(a.get("models"), Some("banana=banana.sol"));
+    }
+
+    #[test]
+    fn equals_vs_space_collision_rejected() {
+        let err = parse(&["train", "--n=100", "--n", "200"]).unwrap_err();
+        assert!(err.to_string().contains("duplicate option `--n`"), "{err}");
+        let err = parse(&["train", "--n", "100", "--n=200"]).unwrap_err();
+        assert!(err.to_string().contains("duplicate option `--n`"), "{err}");
+        let err = parse(&["train", "--n=100", "--n=200"]).unwrap_err();
+        assert!(err.to_string().contains("duplicate option `--n`"), "{err}");
+        // bare flag vs = form collides too
+        assert!(parse(&["train", "--verbose", "--verbose=true"]).is_err());
+    }
+
+    #[test]
+    fn empty_equals_key_rejected() {
+        let err = parse(&["train", "--=5"]).unwrap_err();
+        assert!(err.to_string().contains("empty option name"), "{err}");
     }
 
     #[test]

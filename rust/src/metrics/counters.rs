@@ -44,12 +44,22 @@ pub static GRAM_CACHE_MISSES: Counter = Counter::new();
 /// ([`crate::runtime::XlaRuntime`]).
 pub static XLA_CALLS: Counter = Counter::new();
 
+/// (cell × task) working sets trained through the parallel cell
+/// driver ([`crate::coordinator::driver`]).
+pub static CELL_UNITS_TRAINED: Counter = Counter::new();
+
+/// Accumulated wall-clock spent training those working sets, in
+/// microseconds (per-unit times summed across driver runs).
+pub static CELL_TRAIN_US: Counter = Counter::new();
+
 /// Point-in-time view of the global counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CounterSnapshot {
     pub gram_cache_hits: u64,
     pub gram_cache_misses: u64,
     pub xla_calls: u64,
+    pub cell_units_trained: u64,
+    pub cell_train_us: u64,
 }
 
 impl CounterSnapshot {
@@ -57,8 +67,12 @@ impl CounterSnapshot {
     /// `stats` command and the CV engine's display output.
     pub fn report(&self) -> String {
         format!(
-            "gram_hits={} gram_misses={} xla_calls={}",
-            self.gram_cache_hits, self.gram_cache_misses, self.xla_calls
+            "gram_hits={} gram_misses={} xla_calls={} cell_units={} cell_train_us={}",
+            self.gram_cache_hits,
+            self.gram_cache_misses,
+            self.xla_calls,
+            self.cell_units_trained,
+            self.cell_train_us
         )
     }
 }
@@ -68,6 +82,8 @@ pub fn snapshot() -> CounterSnapshot {
         gram_cache_hits: GRAM_CACHE_HITS.get(),
         gram_cache_misses: GRAM_CACHE_MISSES.get(),
         xla_calls: XLA_CALLS.get(),
+        cell_units_trained: CELL_UNITS_TRAINED.get(),
+        cell_train_us: CELL_TRAIN_US.get(),
     }
 }
 
@@ -86,7 +102,7 @@ mod tests {
     #[test]
     fn snapshot_reports_all_keys() {
         let r = snapshot().report();
-        for key in ["gram_hits=", "gram_misses=", "xla_calls="] {
+        for key in ["gram_hits=", "gram_misses=", "xla_calls=", "cell_units=", "cell_train_us="] {
             assert!(r.contains(key), "missing {key} in {r}");
         }
     }

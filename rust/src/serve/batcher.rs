@@ -1,8 +1,14 @@
 //! Micro-batching engine: coalesces concurrent prediction requests per
-//! model into one fused predict call.
+//! **(model, routing target)** into one fused predict call.
 //!
-//! Every accepted row joins its model's pending batch.  A batch
-//! flushes to the worker queue on either trigger:
+//! Every accepted row is routed first — monolithic models batch as a
+//! whole, sharded bundles batch per owning cell (or per "all cells"
+//! for broadcast ensembles) — and then joins the pending batch of its
+//! (model, target) key.  Keying by target means a fused call never
+//! mixes rows bound for different shards, so the worker executes each
+//! batch against exactly one resident mini-model and the power-of-two
+//! shape buckets keep applying unchanged.  A batch flushes to the
+//! worker queue on either trigger:
 //!
 //! * **size** — the batch reached `max_batch` rows (flushed inline by
 //!   the submitting thread, zero added latency at saturation);
@@ -19,7 +25,7 @@ use std::collections::HashMap;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::registry::ServedModel;
+use super::registry::{RouteTarget, ServedModel};
 use super::worker::BoundedQueue;
 
 /// One pending prediction row and its reply channel.
@@ -32,6 +38,9 @@ pub struct BatchItem {
 /// A flushed batch awaiting a worker.
 pub struct Batch {
     pub model: Arc<ServedModel>,
+    /// where every row of this batch routes (one cell, all cells, or
+    /// the whole monolithic model)
+    pub target: RouteTarget,
     pub items: Vec<BatchItem>,
     /// shape-bucket cap (the batcher's `max_batch`)
     pub bucket: usize,
@@ -60,14 +69,15 @@ pub enum SubmitError {
 
 struct Pending {
     model: Arc<ServedModel>,
+    target: RouteTarget,
     items: Vec<BatchItem>,
     oldest: Instant,
 }
 
-/// Per-model pending batches in front of the worker queue.
+/// Per-(model, target) pending batches in front of the worker queue.
 pub struct Batcher {
     cfg: BatcherConfig,
-    pending: Mutex<HashMap<String, Pending>>,
+    pending: Mutex<HashMap<(String, RouteTarget), Pending>>,
     queue: Arc<BoundedQueue<Batch>>,
 }
 
@@ -82,22 +92,46 @@ impl Batcher {
     }
 
     /// Enqueue one row for `model`; the receiver yields the prediction
-    /// once a worker has executed the row's batch.
+    /// once a worker has executed the row's batch.  The row is routed
+    /// here — through the model's cell router for sharded bundles — so
+    /// it coalesces only with rows bound for the same target.
     pub fn submit(
         &self,
         model: &Arc<ServedModel>,
         features: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<f32, String>>, SubmitError> {
         let (tx, rx) = mpsc::channel();
+        let target = model.route(&features);
         let mut pending = self.pending.lock().unwrap();
-        let p = pending.entry(model.name.clone()).or_insert_with(|| Pending {
-            model: model.clone(),
-            items: Vec::with_capacity(self.cfg.max_batch),
-            oldest: Instant::now(),
-        });
+        let p = pending
+            .entry((model.name.clone(), target))
+            .or_insert_with(|| Pending {
+                model: model.clone(),
+                target,
+                items: Vec::with_capacity(self.cfg.max_batch),
+                oldest: Instant::now(),
+            });
         // a registry hot-reload may have swapped the Arc under this
-        // name; route the already-pending rows to the newest solution
+        // name.  The pending rows were routed with the *old* model's
+        // geometry — executing them against the new model's shard of
+        // the same index would silently answer from the wrong cell —
+        // so flush them as-is against the model that routed them, and
+        // start a fresh batch for the new generation.
         if !Arc::ptr_eq(&p.model, model) {
+            if !p.items.is_empty() {
+                let stale = Batch {
+                    model: p.model.clone(),
+                    target: p.target,
+                    items: std::mem::take(&mut p.items),
+                    bucket: self.cfg.max_batch,
+                };
+                if let Err(rejected) = self.queue.try_push(stale) {
+                    // queue full: keep the old rows pending under the
+                    // old model and bounce only the new row
+                    p.items = rejected.items;
+                    return Err(SubmitError::Busy { retry_after_ms: self.retry_after_ms() });
+                }
+            }
             p.model = model.clone();
         }
         if p.items.is_empty() {
@@ -107,6 +141,7 @@ impl Batcher {
         if p.items.len() >= self.cfg.max_batch {
             let batch = Batch {
                 model: p.model.clone(),
+                target: p.target,
                 items: std::mem::take(&mut p.items),
                 bucket: self.cfg.max_batch,
             };
@@ -146,6 +181,7 @@ impl Batcher {
             }
             let batch = Batch {
                 model: p.model.clone(),
+                target: p.target,
                 items: std::mem::take(&mut p.items),
                 bucket: self.cfg.max_batch,
             };
@@ -159,12 +195,24 @@ impl Batcher {
                 }
             }
         }
+        // drop drained entries: a (model, cell) key that stops seeing
+        // traffic must not pin its ServedModel Arc — after a
+        // hot-reload or unload that would keep a whole old generation
+        // (and its resident shards) alive indefinitely
+        pending.retain(|_, p| !p.items.is_empty());
         flushed
     }
 
-    /// Rows currently pending (unflushed) for `model`.
+    /// Rows currently pending (unflushed) for `model`, summed across
+    /// its routing targets.
     pub fn pending_rows(&self, model: &str) -> usize {
-        self.pending.lock().unwrap().get(model).map_or(0, |p| p.items.len())
+        self.pending
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|((name, _), _)| name == model)
+            .map(|(_, p)| p.items.len())
+            .sum()
     }
 
     /// Any unflushed rows at all (shutdown drain check).
@@ -256,6 +304,41 @@ mod tests {
         // the first of the two stays pending for a later flush
         assert_eq!(b.pending_rows("m"), 1);
         let _ = queue.pop();
+    }
+
+    #[test]
+    fn sharded_rows_batch_per_cell() {
+        use crate::cells::CellStrategy;
+        use crate::coordinator::persist::save_bundle;
+        use crate::serve::registry::{Registry, RouteTarget};
+
+        let d = synth::banana_binary(240, 22);
+        let cfg = Config::default().folds(2).voronoi(CellStrategy::Voronoi { size: 60 });
+        let m = svm_binary(&d, 0.5, &cfg).unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("lsvm-batcher-{}", std::process::id()))
+            .join("b.sol.d");
+        std::fs::create_dir_all(dir.parent().unwrap()).unwrap();
+        save_bundle(&m, &dir).unwrap();
+        let reg = Registry::new(Config::default(), 2);
+        let served = reg.load("b", &dir).unwrap();
+
+        // find two rows owned by different cells
+        let first = served.route(d.x.row(0));
+        let other = (1..d.len())
+            .find(|&i| served.route(d.x.row(i)) != first)
+            .expect("voronoi model should have >1 cell");
+
+        let (b, queue) = batcher(64, 8);
+        b.submit(&served, d.x.row(0).to_vec()).unwrap();
+        b.submit(&served, d.x.row(other).to_vec()).unwrap();
+        assert_eq!(b.pending_rows("b"), 2);
+        // different cells ⇒ different pending batches ⇒ two flushes
+        assert_eq!(b.flush_all(), 2);
+        let (b1, b2) = (queue.pop().unwrap(), queue.pop().unwrap());
+        assert_ne!(b1.target, b2.target);
+        assert!(matches!(b1.target, RouteTarget::Cell(_)));
+        assert_eq!(b1.items.len() + b2.items.len(), 2);
     }
 
     #[test]

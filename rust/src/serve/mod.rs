@@ -1,4 +1,5 @@
-//! `serve` — a batched, multi-model inference server.
+//! `serve` — a batched, multi-model inference server with cell-routed
+//! sharded bundles.
 //!
 //! liquidSVM splits training from testing via persisted `.sol` models
 //! precisely so prediction can run as its own fast process (paper §2);
@@ -6,11 +7,12 @@
 //!
 //! ```text
 //! TCP conn ──┐
-//! TCP conn ──┼─► Registry (LRU .sol cache, ─► Batcher (per-model, size/
-//! TCP conn ──┘   mtime hot-reload)            deadline flush, backpressure)
+//! TCP conn ──┼─► Registry (LRU model cache,  ─► Batcher (per (model, cell),
+//! TCP conn ──┘   .sol + .sol.d bundles,         size/deadline flush,
+//!                hot-reload, shard LRU)          backpressure)
 //!                                                     │  bounded queue
 //!                                             WorkerPool ─► fused predict
-//!                                                     │
+//!                                                     │     (one shard)
 //!                                             per-row replies, in order
 //! ```
 //!
@@ -19,6 +21,22 @@
 //! `predict` call, so the per-call overhead (routing, kernel setup,
 //! and on the XLA backend the padded artifact execution) is amortized
 //! the same way the CV engine amortizes Gram work across the γ grid.
+//!
+//! For cell-decomposed models persisted as `.sol.d/` bundles, the
+//! registry loads only the manifest; each incoming row is walked
+//! through the model's `CellRouter` at submit time and batches
+//! per (model, cell), so a fused call touches exactly one lazily
+//! loaded shard.  Resident shards are bounded by a byte-budgeted LRU
+//! (`max_shard_bytes`), which is what lets one server instance answer
+//! traffic against a model trained on millions of samples without
+//! ever holding it fully in memory (see DESIGN.md §Serving).
+//!
+//! The backpressure contract: the worker queue's capacity is the
+//! server's entire memory budget for in-flight batches.  When a size
+//! flush finds it full, the newest row is refused with
+//! `err busy retry_after_ms=…` and everything previously accepted
+//! stays queued — clients back off and retry; nothing buffers without
+//! bound.
 //!
 //! [`protocol`] documents the wire format; [`Server::start`] returns a
 //! handle usable in-process (tests bind port 0), and [`run_load`] is
@@ -31,7 +49,7 @@ pub mod stats;
 pub mod worker;
 
 pub use batcher::{Batch, Batcher, BatcherConfig, SubmitError};
-pub use registry::{Registry, ServedModel};
+pub use registry::{Registry, RouteTarget, ServedModel, ShardUsage};
 pub use stats::ServeStats;
 pub use worker::{BoundedQueue, WorkerPool};
 
@@ -64,6 +82,8 @@ pub struct ServeConfig {
     pub workers: usize,
     /// LRU bound on resident models
     pub max_models: usize,
+    /// per-bundle byte budget for lazily loaded shards
+    pub max_shard_bytes: u64,
     /// runtime choices (backend, threads) applied to loaded models
     pub model_config: Config,
 }
@@ -78,6 +98,7 @@ impl Default for ServeConfig {
             queue_cap: 128,
             workers: 2,
             max_models: 8,
+            max_shard_bytes: registry::DEFAULT_SHARD_BUDGET,
             model_config: Config::default(),
         }
     }
@@ -104,7 +125,10 @@ impl Server {
         let addr = listener.local_addr()?;
 
         let stats = Arc::new(ServeStats::new());
-        let registry = Arc::new(Registry::new(cfg.model_config.clone(), cfg.max_models));
+        let registry = Arc::new(
+            Registry::new(cfg.model_config.clone(), cfg.max_models)
+                .shard_budget(cfg.max_shard_bytes),
+        );
         let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
         let batcher = Arc::new(Batcher::new(
             BatcherConfig { max_batch: cfg.max_batch, max_delay: cfg.max_delay },
@@ -294,13 +318,50 @@ fn handle_request(
     let reply = match req {
         Request::Quit => return None,
         Request::Ping => Reply::Ready(protocol::ok_msg("pong")),
-        Request::Stats => Reply::Ready(protocol::ok_msg(&stats.report(registry.len()))),
+        Request::Stats => Reply::Ready(protocol::ok_msg(
+            &stats.report(registry.len(), &registry.shard_usage()),
+        )),
+        Request::Shards { name } => match registry.get(&name) {
+            Ok(m) => match m.shard_info() {
+                Some(info) => {
+                    let bundle = m.bundle.as_ref().expect("shard_info implies bundle");
+                    let per_cell: Vec<String> = info
+                        .iter()
+                        .map(|s| {
+                            format!(
+                                "{}:{}:{}",
+                                s.cell,
+                                s.hits,
+                                if s.resident { 1 } else { 0 }
+                            )
+                        })
+                        .collect();
+                    Reply::Ready(protocol::ok_msg(&format!(
+                        "name={} shards={} resident={} resident_bytes={} total_bytes={} \
+                         cell:hits:resident {}",
+                        name,
+                        info.len(),
+                        bundle.resident_shards(),
+                        bundle.resident_bytes(),
+                        bundle.manifest().total_bytes(),
+                        per_cell.join(" ")
+                    )))
+                }
+                None => Reply::Ready(protocol::err_msg(
+                    "not-sharded",
+                    &format!("model `{name}` is not a sharded bundle"),
+                )),
+            },
+            Err(e) => Reply::Ready(protocol::err_msg("unknown-model", &format!("{e:#}"))),
+        },
         Request::Load { name, path } => match registry.load(&name, Path::new(&path)) {
-            Ok(m) => Reply::Ready(protocol::ok_msg(&format!(
-                "loaded {name} dim={} units={}",
-                m.dim,
-                m.model.units.len()
-            ))),
+            Ok(m) => {
+                let detail = match &m.bundle {
+                    Some(b) => format!("shards={}", b.manifest().n_cells()),
+                    None => format!("units={}", m.model.units.len()),
+                };
+                Reply::Ready(protocol::ok_msg(&format!("loaded {name} dim={} {detail}", m.dim)))
+            }
             Err(e) => Reply::Ready(protocol::err_msg("load-failed", &format!("{e:#}"))),
         },
         Request::Unload { name } => {

@@ -6,9 +6,10 @@
 //!
 //! ```text
 //! predict <model> <f1,f2,...>[;<f1,f2,...>...]   # one or more rows
-//! load <name> <path.sol>
+//! load <name> <path>          # path: a .sol file or a .sol.d bundle
 //! unload <name>
-//! stats
+//! stats                       # server-wide counters incl. shard cache
+//! shards <name>               # per-shard residency/hits of a bundle
 //! ping
 //! quit
 //! ```
@@ -17,9 +18,14 @@
 //!
 //! ```text
 //! ok <v1>[;<v2>...]          # predict
-//! ok <message>               # load/unload/stats/ping
+//! ok <message>               # load/unload/stats/shards/ping
 //! err <code> <message>       # e.g. `err busy retry_after_ms=4`
 //! ```
+//!
+//! Error codes: `bad-request` (parse failure), `unknown-model`,
+//! `load-failed`, `dim-mismatch`, `predict-failed`, `not-sharded`
+//! (`shards` on a monolithic model), `busy` (backpressure — wait
+//! `retry_after_ms` and retry), `internal`.
 //!
 //! Clients may pipeline: the server preserves ordering, so a batch of
 //! requests can be written back-to-back and the responses read in
@@ -37,6 +43,8 @@ pub enum Request {
     Load { name: String, path: String },
     Unload { name: String },
     Stats,
+    /// per-shard residency and hit counts of a sharded bundle
+    Shards { name: String },
     Ping,
     Quit,
 }
@@ -74,6 +82,12 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 return Err("unload needs `<name>`".into());
             }
             Ok(Request::Unload { name: rest.to_string() })
+        }
+        "shards" => {
+            if rest.is_empty() || rest.contains(char::is_whitespace) {
+                return Err("shards needs `<name>`".into());
+            }
+            Ok(Request::Shards { name: rest.to_string() })
         }
         "stats" => Ok(Request::Stats),
         "ping" => Ok(Request::Ping),
@@ -190,6 +204,7 @@ mod tests {
             Request::Load { name: "m".into(), path: "/tmp/m.sol".into() }
         );
         assert_eq!(parse_request("unload m").unwrap(), Request::Unload { name: "m".into() });
+        assert_eq!(parse_request("shards m").unwrap(), Request::Shards { name: "m".into() });
     }
 
     #[test]
@@ -199,6 +214,8 @@ mod tests {
         assert!(parse_request("predict m 1,x").is_err());
         assert!(parse_request("load just-a-name").is_err());
         assert!(parse_request("unload").is_err());
+        assert!(parse_request("shards").is_err());
+        assert!(parse_request("shards a b").is_err());
         assert!(parse_request("frobnicate 1").is_err());
     }
 

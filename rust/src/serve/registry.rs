@@ -1,10 +1,29 @@
-//! Multi-model registry: loads `.sol` solutions via
-//! [`crate::coordinator::persist`], hands out shared handles to the
-//! batcher/workers, bounds resident models with LRU eviction, and
-//! hot-reloads a model when its file changes on disk (liquidSVM's
+//! Multi-model registry: the server's model cache and the home of
+//! cell-sharded bundles.
+//!
+//! Two kinds of solutions are served (see DESIGN.md §Serving):
+//!
+//! * **monolithic `.sol` files** load fully via
+//!   [`crate::coordinator::persist::load_model`];
+//! * **sharded `.sol.d/` bundles** load their `MANIFEST` eagerly
+//!   (scaler + router + shard table — enough to route any request)
+//!   while the per-cell shards load lazily on first use and stay
+//!   resident under a byte-budgeted LRU, so one server instance can
+//!   answer traffic against a model far larger than memory.
+//!
+//! The registry itself bounds *models* with LRU eviction
+//! (`max_models`) and hot-reloads a model when its backing file — the
+//! `.sol`, or a bundle's `MANIFEST` — changes on disk: liquidSVM's
 //! train and test phases are separate processes, so a trainer can
-//! overwrite a `.sol` under a running server and new requests pick up
-//! the fresh solution without a restart).
+//! overwrite a solution under a running server and new requests pick
+//! up the fresh one without a restart.  Reloads are single-flight: one
+//! caller parses the new file while everyone else keeps serving the
+//! resident solution, and a failed reload (trainer mid-overwrite)
+//! falls back to the resident model rather than failing requests.
+//! One bundle-specific caveat: during a swap, a request needing a
+//! shard the resident generation never cached can fail retryably —
+//! the per-shard checksum refuses to mix generations silently (see
+//! DESIGN.md §Serving).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -12,26 +31,53 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::SystemTime;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
+use crate::cells::{CellPartition, CellRouter};
 use crate::coordinator::config::Config;
-use crate::coordinator::persist::load_model;
+use crate::coordinator::persist::{
+    is_bundle_path, load_model, load_shard, read_manifest, BundleManifest,
+};
 use crate::coordinator::SvmModel;
+use crate::data::matrix::Matrix;
+use crate::metrics::counters::Counter;
+use crate::tasks::combine_predictions;
+
+/// Default shard-cache budget per bundle (bytes of shard files
+/// resident at once) when the server does not configure one.
+pub const DEFAULT_SHARD_BUDGET: u64 = 256 << 20;
+
+/// Where a prediction row must execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RouteTarget {
+    /// monolithic model — no cell routing
+    Whole,
+    /// exactly one owning cell (Voronoi / tree / single routers)
+    Cell(usize),
+    /// every cell votes (random-chunk ensembles)
+    AllCells,
+}
 
 /// A model resident in the registry, shared immutably across worker
 /// and connection threads.
 pub struct ServedModel {
     pub name: String,
-    /// source file; `None` for models inserted directly (tests/benches)
+    /// source path; `None` for models inserted directly (tests/benches)
     pub path: Option<PathBuf>,
-    /// (mtime, size) fingerprint of the source file at load time —
-    /// size participates because mtime granularity can be a full
-    /// second on some filesystems
+    /// (mtime, size) fingerprint of the source — the `.sol` file or a
+    /// bundle's `MANIFEST` — at load time; size participates because
+    /// mtime granularity can be a full second on some filesystems
     pub mtime: Option<SystemTime>,
     pub size: u64,
     /// expected input dimension (0 = unknown, skip validation)
     pub dim: usize,
+    /// the full solution — or, for bundles, a routing *skeleton*
+    /// (scaler, router, spec, classes; no units).  Calling `predict`
+    /// directly on a bundle skeleton returns zeros; go through
+    /// [`ServedModel::predict_routed`] instead.
     pub model: SvmModel,
+    /// present iff this model is a sharded `.sol.d/` bundle
+    pub bundle: Option<BundleHandle>,
 }
 
 impl ServedModel {
@@ -42,17 +88,322 @@ impl ServedModel {
             path: None,
             mtime: None,
             size: 0,
-            dim: input_dim(&model),
+            dim: model.input_dim(),
             model,
+            bundle: None,
         }
+    }
+
+    /// Decide where a feature row executes.  For bundles with a
+    /// geometric router the row is scaled exactly as at training time
+    /// and walked through the router; the batcher uses the result to
+    /// coalesce rows per (model, cell).
+    pub fn route(&self, features: &[f32]) -> RouteTarget {
+        let Some(b) = &self.bundle else { return RouteTarget::Whole };
+        match &b.manifest.router {
+            CellRouter::Broadcast(_) => RouteTarget::AllCells,
+            CellRouter::Single => RouteTarget::Cell(0),
+            _ => {
+                if self.dim > 0 && features.len() != self.dim {
+                    // dim-mismatched rows are rejected upstream; park
+                    // stragglers in cell 0 where the predict path will
+                    // surface the mismatch
+                    return RouteTarget::Cell(0);
+                }
+                let cells = match &self.model.scaler {
+                    Some(s) => self.model.partition.route(&s.transform_row(features)),
+                    None => self.model.partition.route(features),
+                };
+                RouteTarget::Cell(cells.first().copied().unwrap_or(0))
+            }
+        }
+    }
+
+    /// Predict `x` at a routing target.  Monolithic models ignore the
+    /// target; bundles dispatch to the owning shard (loading it if
+    /// needed), to every shard (broadcast ensembles), or row-by-row
+    /// for un-routed batches.
+    pub fn predict_routed(&self, target: RouteTarget, x: &Matrix) -> Result<Vec<f32>, String> {
+        match (&self.bundle, target) {
+            (None, _) => Ok(self.model.predict(x)),
+            (Some(b), RouteTarget::Cell(c)) => b.predict_cell(c, x),
+            (Some(b), RouteTarget::AllCells) => b.predict_broadcast(x),
+            (Some(b), RouteTarget::Whole) => b.predict_mixed(x, self),
+        }
+    }
+
+    /// Per-shard residency and hit counts (bundles only).
+    pub fn shard_info(&self) -> Option<Vec<ShardInfo>> {
+        let b = self.bundle.as_ref()?;
+        let cache = b.cache.lock().unwrap();
+        Some(
+            (0..b.manifest.n_cells())
+                .map(|c| ShardInfo {
+                    cell: c,
+                    resident: cache.map.contains_key(&c),
+                    bytes: b.manifest.shards[c].bytes,
+                    hits: cache.hits_per_cell[c],
+                })
+                .collect(),
+        )
     }
 }
 
-fn input_dim(model: &SvmModel) -> usize {
-    if let Some(s) = &model.scaler {
-        return s.parts().0.len();
+/// One row of [`ServedModel::shard_info`].
+#[derive(Clone, Copy, Debug)]
+pub struct ShardInfo {
+    pub cell: usize,
+    pub resident: bool,
+    pub bytes: u64,
+    /// total accesses (cache hits + loads) of this shard
+    pub hits: u64,
+}
+
+struct ShardEntry {
+    model: Arc<SvmModel>,
+    bytes: u64,
+    last_used: u64,
+}
+
+struct ShardCache {
+    map: HashMap<usize, ShardEntry>,
+    tick: u64,
+    resident_bytes: u64,
+    /// cumulative accesses per cell (survives eviction)
+    hits_per_cell: Vec<u64>,
+}
+
+/// The lazily-loading shard store of one `.sol.d/` bundle.
+///
+/// Each loaded shard becomes a self-contained single-cell mini
+/// [`SvmModel`] (cell ids remapped to 0, router forced to `Single`),
+/// so the existing predict path runs unchanged and bit-identically to
+/// the monolithic model.  Residency is bounded by `max_bytes` of shard
+/// file size with LRU eviction; the shard being inserted is never the
+/// eviction victim.
+pub struct BundleHandle {
+    dir: PathBuf,
+    manifest: BundleManifest,
+    /// runtime config applied to shard mini-models (kernel pinned from
+    /// the manifest)
+    cfg: Config,
+    max_bytes: u64,
+    cache: Mutex<ShardCache>,
+    /// shard accesses answered from the cache
+    pub hits: Counter,
+    /// shard loads from disk (cache misses)
+    pub loads: Counter,
+    /// shards evicted to stay under the byte budget
+    pub evictions: Counter,
+}
+
+impl BundleHandle {
+    /// Read the manifest and build the handle plus the routing
+    /// skeleton model (no shards resident yet).
+    fn open(dir: &Path, cfg: &Config, max_bytes: u64) -> Result<(BundleHandle, SvmModel)> {
+        let manifest = read_manifest(dir)?;
+        let mut cfg = cfg.clone();
+        cfg.kernel = manifest.kernel;
+        cfg.cells = manifest.strategy.clone();
+        let skeleton = SvmModel::from_parts(
+            cfg.clone(),
+            manifest.spec.clone(),
+            manifest.scaler.clone(),
+            CellPartition {
+                cells: vec![Vec::new(); manifest.n_cells()],
+                router: manifest.router.clone(),
+            },
+            manifest.classes.clone(),
+            manifest.n_tasks,
+            Vec::new(),
+        )?;
+        let n_cells = manifest.n_cells();
+        let handle = BundleHandle {
+            dir: dir.to_path_buf(),
+            manifest,
+            cfg,
+            max_bytes: max_bytes.max(1),
+            cache: Mutex::new(ShardCache {
+                map: HashMap::new(),
+                tick: 0,
+                resident_bytes: 0,
+                hits_per_cell: vec![0; n_cells],
+            }),
+            hits: Counter::new(),
+            loads: Counter::new(),
+            evictions: Counter::new(),
+        };
+        Ok((handle, skeleton))
     }
-    model.units.iter().find(|u| !u.data.is_empty()).map(|u| u.data.dim()).unwrap_or(0)
+
+    pub fn manifest(&self) -> &BundleManifest {
+        &self.manifest
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.cache.lock().unwrap().resident_bytes
+    }
+
+    pub fn resident_shards(&self) -> usize {
+        self.cache.lock().unwrap().map.len()
+    }
+
+    /// Fetch the mini-model of `cell`, loading (and checksumming) its
+    /// shard from disk on first use and evicting least-recently-used
+    /// shards past the byte budget.
+    fn shard(&self, cell: usize) -> Result<Arc<SvmModel>, String> {
+        {
+            let mut cache = self.cache.lock().unwrap();
+            cache.tick += 1;
+            let tick = cache.tick;
+            if cell < cache.hits_per_cell.len() {
+                cache.hits_per_cell[cell] += 1;
+            }
+            if let Some(e) = cache.map.get_mut(&cell) {
+                e.last_used = tick;
+                self.hits.inc();
+                return Ok(e.model.clone());
+            }
+        }
+        // miss: read + parse *outside* the lock so traffic for
+        // already-resident shards (and the stats commands) never
+        // stalls behind a cold load.  Two threads missing on the same
+        // cell may rarely parse it twice; the loser adopts the
+        // winner's copy below.  If the bundle was replaced on disk
+        // under this (stale) handle, the checksum catches the
+        // generation mismatch and the batch fails retryably — the
+        // registry swaps in the new generation on its next lookup.
+        self.loads.inc();
+        let (indices, units) = load_shard(&self.dir, &self.manifest, cell)
+            .map_err(|e| format!("shard {cell} unavailable (bundle replaced on disk? retry): {e:#}"))?;
+        let units = units
+            .into_iter()
+            .map(|mut u| {
+                u.cell = 0;
+                u
+            })
+            .collect();
+        let mini = SvmModel::from_parts(
+            self.cfg.clone(),
+            self.manifest.spec.clone(),
+            self.manifest.scaler.clone(),
+            CellPartition { cells: vec![indices], router: CellRouter::Single },
+            self.manifest.classes.clone(),
+            self.manifest.n_tasks,
+            units,
+        )
+        .map_err(|e| format!("{e:#}"))?;
+        let bytes = self.manifest.shards[cell].bytes;
+        let arc = Arc::new(mini);
+
+        let mut cache = self.cache.lock().unwrap();
+        cache.tick += 1;
+        let tick = cache.tick;
+        if let Some(existing) = cache.map.get_mut(&cell) {
+            // another thread loaded this shard while we parsed
+            existing.last_used = tick;
+            return Ok(existing.model.clone());
+        }
+        cache.resident_bytes += bytes;
+        cache
+            .map
+            .insert(cell, ShardEntry { model: arc.clone(), bytes, last_used: tick });
+        while cache.resident_bytes > self.max_bytes && cache.map.len() > 1 {
+            let victim = cache
+                .map
+                .iter()
+                .filter(|(&c, _)| c != cell)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&c, _)| c);
+            match victim {
+                Some(v) => {
+                    if let Some(e) = cache.map.remove(&v) {
+                        cache.resident_bytes -= e.bytes;
+                        self.evictions.inc();
+                    }
+                }
+                None => break,
+            }
+        }
+        Ok(arc)
+    }
+
+    /// Predict a batch that routes entirely to one cell.
+    fn predict_cell(&self, cell: usize, x: &Matrix) -> Result<Vec<f32>, String> {
+        Ok(self.shard(cell)?.predict(x))
+    }
+
+    /// Broadcast ensembles (random chunks): every cell's decision
+    /// values averaged per task, then combined — the same accumulation
+    /// order and division the monolithic predict path uses, so results
+    /// stay bit-identical.
+    fn predict_broadcast(&self, x: &Matrix) -> Result<Vec<f32>, String> {
+        let n_tasks = self.manifest.n_tasks;
+        let mut scores = vec![vec![0.0f32; x.rows()]; n_tasks];
+        let mut counts = vec![0u32; n_tasks];
+        for c in 0..self.manifest.n_cells() {
+            let mini = self.shard(c)?;
+            let dv = mini.decision_values(x);
+            for t in 0..n_tasks {
+                for (a, b) in scores[t].iter_mut().zip(&dv[t]) {
+                    *a += b;
+                }
+                if mini.units.iter().any(|u| u.task == t && u.cv.is_some() && !u.data.is_empty())
+                {
+                    counts[t] += 1;
+                }
+            }
+        }
+        for t in 0..n_tasks {
+            if counts[t] > 1 {
+                for a in &mut scores[t] {
+                    *a /= counts[t] as f32;
+                }
+            }
+        }
+        Ok(combine_predictions(&self.manifest.spec, &self.manifest.classes, &scores))
+    }
+
+    /// Un-routed batch: route each row, group per cell, predict per
+    /// shard, scatter back in row order.
+    fn predict_mixed(&self, x: &Matrix, served: &ServedModel) -> Result<Vec<f32>, String> {
+        if matches!(self.manifest.router, CellRouter::Broadcast(_)) {
+            return self.predict_broadcast(x);
+        }
+        let mut routed: Vec<Vec<usize>> = vec![Vec::new(); self.manifest.n_cells()];
+        for i in 0..x.rows() {
+            match served.route(x.row(i)) {
+                RouteTarget::Cell(c) if c < routed.len() => routed[c].push(i),
+                _ => routed[0].push(i),
+            }
+        }
+        let mut out = vec![0.0f32; x.rows()];
+        for (c, idx) in routed.iter().enumerate() {
+            if idx.is_empty() {
+                continue;
+            }
+            let sub = x.select_rows(idx);
+            let preds = self.predict_cell(c, &sub)?;
+            for (j, &i) in idx.iter().enumerate() {
+                out[i] = preds[j];
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Aggregated shard-cache telemetry across every resident bundle
+/// (reported by the protocol's `stats` command).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardUsage {
+    pub bundles: usize,
+    pub total_shards: usize,
+    pub resident_shards: usize,
+    pub total_bytes: u64,
+    pub resident_bytes: u64,
+    pub hits: u64,
+    pub loads: u64,
+    pub evictions: u64,
 }
 
 struct Entry {
@@ -69,36 +420,78 @@ struct Inner {
 pub struct Registry {
     cfg: Config,
     max_models: usize,
+    shard_budget: u64,
     inner: Mutex<Inner>,
     /// single-flight guard: at most one hot-reload parses at a time,
     /// everyone else keeps serving the resident model meanwhile
     reloading: AtomicBool,
 }
 
+/// Fingerprint of a model source: the `.sol` file itself, or a
+/// bundle's `MANIFEST` (the directory mtime alone is not reliable).
+/// `None` when the source cannot be stat'ed — callers must then keep
+/// serving the resident model rather than treating it as changed
+/// (the path may be mid-swap or deleted).
+fn fingerprint(path: &Path) -> Option<(Option<SystemTime>, u64)> {
+    let target = if path.is_dir() {
+        path.join(crate::coordinator::persist::MANIFEST_FILE)
+    } else {
+        path.to_path_buf()
+    };
+    std::fs::metadata(&target).ok().map(|m| (m.modified().ok(), m.len()))
+}
+
 impl Registry {
     /// `cfg` supplies the runtime choices (backend, threads) applied to
     /// every loaded model; `max_models` bounds resident solutions.
+    /// Bundles get [`DEFAULT_SHARD_BUDGET`] unless overridden with
+    /// [`Registry::shard_budget`].
     pub fn new(cfg: Config, max_models: usize) -> Registry {
         Registry {
             cfg,
             max_models: max_models.max(1),
+            shard_budget: DEFAULT_SHARD_BUDGET,
             inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
             reloading: AtomicBool::new(false),
         }
     }
 
-    /// Load (or replace) a model from a `.sol` file.
+    /// Override the per-bundle resident-shard byte budget.
+    pub fn shard_budget(mut self, bytes: u64) -> Registry {
+        self.shard_budget = bytes.max(1);
+        self
+    }
+
+    /// Load (or replace) a model from a `.sol` file or `.sol.d/`
+    /// bundle.  Bundles only read their manifest here; shards load
+    /// lazily at predict time.
     pub fn load(&self, name: &str, path: &Path) -> Result<Arc<ServedModel>> {
-        let model = load_model(path, &self.cfg)?;
-        let meta = std::fs::metadata(path).with_context(|| format!("stat {path:?}"))?;
-        let served = Arc::new(ServedModel {
-            name: name.to_string(),
-            path: Some(path.to_path_buf()),
-            mtime: meta.modified().ok(),
-            size: meta.len(),
-            dim: input_dim(&model),
-            model,
-        });
+        let (mtime, size) = fingerprint(path).unwrap_or((None, 0));
+        let served = if is_bundle_path(path) {
+            let (handle, skeleton) = BundleHandle::open(path, &self.cfg, self.shard_budget)?;
+            let dim = if handle.manifest.dim > 0 { handle.manifest.dim } else { skeleton.input_dim() };
+            ServedModel {
+                name: name.to_string(),
+                path: Some(path.to_path_buf()),
+                mtime,
+                size,
+                dim,
+                model: skeleton,
+                bundle: Some(handle),
+            }
+        } else {
+            let model = load_model(path, &self.cfg)?;
+            ServedModel {
+                name: name.to_string(),
+                path: Some(path.to_path_buf()),
+                mtime,
+                size,
+                dim: model.input_dim(),
+                model,
+                bundle: None,
+            }
+        };
+        let served = Arc::new(served);
         self.put(name, served.clone());
         Ok(served)
     }
@@ -128,11 +521,12 @@ impl Registry {
         }
     }
 
-    /// Fetch a model by name, bumping its recency.  If the backing file
-    /// changed since load (mtime or size), one caller reloads it while
-    /// the rest keep serving the resident solution; a failed reload
-    /// (e.g. the trainer is mid-overwrite) also falls back to the
-    /// resident model rather than failing the request.
+    /// Fetch a model by name, bumping its recency.  If the backing
+    /// source changed since load (mtime or size of the `.sol` /
+    /// bundle `MANIFEST`), one caller reloads it while the rest keep
+    /// serving the resident solution; a failed reload (e.g. the
+    /// trainer is mid-overwrite) also falls back to the resident
+    /// model rather than failing the request.
     pub fn get(&self, name: &str) -> Result<Arc<ServedModel>> {
         let served = {
             let mut inner = self.inner.lock().unwrap();
@@ -146,10 +540,12 @@ impl Registry {
             entry.model.clone()
         };
         // hot-reload check outside the lock: a slow disk stat (or the
-        // reload itself) must not stall other models' lookups
+        // reload itself) must not stall other models' lookups.  An
+        // un-stat-able source (mid-swap, deleted) is NOT "changed" —
+        // keep serving the resident solution.
         if let Some(path) = &served.path {
-            if let Ok(meta) = std::fs::metadata(path) {
-                let changed = meta.modified().ok() != served.mtime || meta.len() != served.size;
+            if let Some((mtime, size)) = fingerprint(path) {
+                let changed = mtime != served.mtime || size != served.size;
                 if changed
                     && self
                         .reloading
@@ -186,18 +582,44 @@ impl Registry {
         v.sort();
         v
     }
+
+    /// Aggregate shard-cache telemetry across resident bundles.
+    pub fn shard_usage(&self) -> ShardUsage {
+        let inner = self.inner.lock().unwrap();
+        let mut u = ShardUsage::default();
+        for e in inner.map.values() {
+            let Some(b) = &e.model.bundle else { continue };
+            u.bundles += 1;
+            u.total_shards += b.manifest.n_cells();
+            u.total_bytes += b.manifest.total_bytes();
+            let cache = b.cache.lock().unwrap();
+            u.resident_shards += cache.map.len();
+            u.resident_bytes += cache.resident_bytes;
+            u.hits += b.hits.get();
+            u.loads += b.loads.get();
+            u.evictions += b.evictions.get();
+        }
+        u
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::persist::save_model;
+    use crate::cells::CellStrategy;
+    use crate::coordinator::persist::{save_bundle, save_model};
     use crate::data::synth;
     use crate::prelude::*;
 
     fn tiny_model(n: usize, seed: u64) -> SvmModel {
         let d = synth::banana_binary(n, seed);
         svm_binary(&d, 0.5, &Config::default().folds(2)).unwrap()
+    }
+
+    fn cell_model(n: usize, seed: u64) -> SvmModel {
+        let d = synth::banana_binary(n, seed);
+        let cfg = Config::default().folds(2).voronoi(CellStrategy::Voronoi { size: n / 4 });
+        svm_binary(&d, 0.5, &cfg).unwrap()
     }
 
     fn tmp_dir() -> PathBuf {
@@ -267,5 +689,109 @@ mod tests {
         let a = reg.get("mem").unwrap();
         let b = reg.get("mem").unwrap();
         assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn bundle_loads_manifest_eagerly_and_shards_lazily() {
+        let m = cell_model(240, 40);
+        let dir = tmp_dir().join("lazy.sol.d");
+        save_bundle(&m, &dir).unwrap();
+
+        let reg = Registry::new(Config::default(), 4);
+        let served = reg.load("b", &dir).unwrap();
+        let bundle = served.bundle.as_ref().unwrap();
+        assert!(bundle.manifest().n_cells() > 1);
+        assert_eq!(bundle.resident_shards(), 0, "no shard should load at manifest time");
+        assert_eq!(served.dim, 2);
+
+        // a single-cell request loads exactly the shards it touches
+        let test = synth::banana_binary(6, 41);
+        let row = test.x.row(0);
+        let target = served.route(row);
+        let RouteTarget::Cell(c) = target else { panic!("expected cell target, got {target:?}") };
+        let x = Matrix::from_vec(row.to_vec(), 1, 2);
+        let got = served.predict_routed(target, &x).unwrap();
+        assert_eq!(got, m.predict(&x));
+        assert_eq!(bundle.resident_shards(), 1);
+        assert!(bundle.resident_bytes() < bundle.manifest().total_bytes());
+        let info = served.shard_info().unwrap();
+        assert!(info[c].resident);
+        assert_eq!(info[c].hits, 1);
+    }
+
+    #[test]
+    fn bundle_mixed_batch_matches_monolithic() {
+        let m = cell_model(260, 42);
+        let dir = tmp_dir().join("mixed.sol.d");
+        save_bundle(&m, &dir).unwrap();
+        let reg = Registry::new(Config::default(), 4);
+        let served = reg.load("b", &dir).unwrap();
+
+        let test = synth::banana_binary(70, 43);
+        let got = served.predict_routed(RouteTarget::Whole, &test.x).unwrap();
+        assert_eq!(got, m.predict(&test.x));
+    }
+
+    #[test]
+    fn broadcast_bundle_matches_monolithic() {
+        let d = synth::banana_binary(200, 44);
+        let cfg = Config::default().folds(2).voronoi(CellStrategy::RandomChunks { size: 60 });
+        let m = svm_binary(&d, 0.5, &cfg).unwrap();
+        let dir = tmp_dir().join("bcast.sol.d");
+        save_bundle(&m, &dir).unwrap();
+        let reg = Registry::new(Config::default(), 4);
+        let served = reg.load("b", &dir).unwrap();
+
+        let test = synth::banana_binary(30, 45);
+        assert_eq!(served.route(test.x.row(0)), RouteTarget::AllCells);
+        let got = served.predict_routed(RouteTarget::AllCells, &test.x).unwrap();
+        assert_eq!(got, m.predict(&test.x));
+    }
+
+    #[test]
+    fn shard_budget_evicts_lru() {
+        let m = cell_model(300, 46);
+        let dir = tmp_dir().join("budget.sol.d");
+        save_bundle(&m, &dir).unwrap();
+        let manifest = crate::coordinator::persist::read_manifest(&dir).unwrap();
+        assert!(manifest.n_cells() >= 3, "need several cells for this test");
+        // budget fits roughly one shard: every new cell evicts the last
+        let one_shard = manifest.shards.iter().map(|s| s.bytes).max().unwrap();
+        let reg = Registry::new(Config::default(), 4).shard_budget(one_shard);
+        let served = reg.load("b", &dir).unwrap();
+
+        let test = synth::banana_binary(80, 47);
+        let got = served.predict_routed(RouteTarget::Whole, &test.x).unwrap();
+        assert_eq!(got, m.predict(&test.x));
+        // touch every shard explicitly: with a one-shard budget each
+        // load past the first must evict the previous resident
+        let probe = Matrix::from_vec(test.x.row(0).to_vec(), 1, 2);
+        for c in 0..manifest.n_cells() {
+            served.predict_routed(RouteTarget::Cell(c), &probe).unwrap();
+        }
+        let bundle = served.bundle.as_ref().unwrap();
+        assert!(bundle.evictions.get() > 0, "expected evictions under a 1-shard budget");
+        assert!(bundle.resident_bytes() <= one_shard.max(1));
+
+        let usage = reg.shard_usage();
+        assert_eq!(usage.bundles, 1);
+        assert!(usage.resident_bytes < usage.total_bytes);
+        assert!(usage.loads > usage.evictions);
+    }
+
+    #[test]
+    fn bundle_hot_reloads_on_manifest_change() {
+        let dir = tmp_dir().join("hotb.sol.d");
+        let m1 = cell_model(200, 48);
+        save_bundle(&m1, &dir).unwrap();
+        let reg = Registry::new(Config::default(), 4);
+        reg.load("hb", &dir).unwrap();
+
+        let m2 = cell_model(280, 49);
+        save_bundle(&m2, &dir).unwrap();
+        let served = reg.get("hb").unwrap();
+        let test = synth::banana_binary(25, 50);
+        let got = served.predict_routed(RouteTarget::Whole, &test.x).unwrap();
+        assert_eq!(got, m2.predict(&test.x));
     }
 }

@@ -2,10 +2,15 @@
 //! request latency histogram (enqueue → response ready), reported by
 //! the protocol's `stats` command.  Kernel-cache and accelerator
 //! counters come from the process-wide [`crate::metrics::counters`]
-//! so serving and the CV engine report the same quantities.
+//! so serving and the CV engine report the same quantities; shard
+//! residency/hit numbers come from the registry's per-bundle caches
+//! ([`crate::serve::registry::ShardUsage`]), which is how a load test
+//! verifies that a sharded bundle really is serving lazily (resident
+//! bytes below total bundle size).
 
 use std::time::Instant;
 
+use super::registry::ShardUsage;
 use crate::metrics::counters::{self, Counter};
 use crate::metrics::LatencyHistogram;
 
@@ -62,10 +67,13 @@ impl ServeStats {
     }
 
     /// One-line `key=value` report for the `stats` protocol command.
-    pub fn report(&self, n_models: usize) -> String {
+    /// `shards` carries the registry's aggregated shard-cache usage
+    /// (all-zero when no bundle is resident).
+    pub fn report(&self, n_models: usize, shards: &ShardUsage) -> String {
         format!(
             "models={} requests={} rejected={} errors={} batches={} rows={} pad_rows={} \
-             mean_batch={:.1} rps={:.1} {} mean_us={} {}",
+             mean_batch={:.1} rps={:.1} {} mean_us={} \
+             shards={}/{} shard_bytes={}/{} shard_hits={} shard_loads={} shard_evictions={} {}",
             n_models,
             self.requests.get(),
             self.rejected.get(),
@@ -77,6 +85,13 @@ impl ServeStats {
             self.throughput_rps(),
             self.latency.report(),
             self.latency.mean_us(),
+            shards.resident_shards,
+            shards.total_shards,
+            shards.resident_bytes,
+            shards.total_bytes,
+            shards.hits,
+            shards.loads,
+            shards.evictions,
             counters::snapshot().report(),
         )
     }
@@ -95,10 +110,22 @@ mod tests {
         s.batched_rows.add(10);
         s.padded_rows.add(6);
         s.latency.record(Duration::from_micros(300));
-        let r = s.report(3);
+        let usage = ShardUsage {
+            bundles: 1,
+            total_shards: 4,
+            resident_shards: 2,
+            total_bytes: 4000,
+            resident_bytes: 2000,
+            hits: 7,
+            loads: 2,
+            evictions: 1,
+        };
+        let r = s.report(3, &usage);
         for key in [
             "models=3", "requests=10", "batches=2", "rows=10", "pad_rows=6", "mean_batch=5.0",
             "p50_us=", "p95_us=", "p99_us=", "gram_hits=", "xla_calls=",
+            "shards=2/4", "shard_bytes=2000/4000", "shard_hits=7", "shard_loads=2",
+            "shard_evictions=1",
         ] {
             assert!(r.contains(key), "missing {key} in `{r}`");
         }

@@ -7,6 +7,12 @@
 //! (`runtime/mod.rs` pads inputs to fixed shapes so PJRT executables
 //! are compiled once), and on the XLA backend the two bucketing layers
 //! line up so padding waste stays bounded instead of compounding.
+//!
+//! Every batch carries its routing target: monolithic batches run the
+//! whole model, sharded-bundle batches run exactly one cell's
+//! mini-model (loading the shard lazily on first touch — see
+//! `registry`).  A shard-load failure fails only that batch's rows,
+//! never the worker thread.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -126,9 +132,12 @@ pub(crate) fn process_batch(batch: Batch, stats: &ServeStats) {
     // a panic inside predict must not kill the worker thread — fail the
     // batch's requests and keep draining the queue
     let model = &batch.model;
-    let preds = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| model.model.predict(&x)));
+    let target = batch.target;
+    let preds = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        model.predict_routed(target, &x)
+    }));
     match preds {
-        Ok(preds) => {
+        Ok(Ok(preds)) => {
             stats.batches.inc();
             stats.batched_rows.add(n as u64);
             stats.padded_rows.add((rows - n) as u64);
@@ -136,6 +145,13 @@ pub(crate) fn process_batch(batch: Batch, stats: &ServeStats) {
                 stats.latency.record(item.enqueued.elapsed());
                 // receiver gone = client disconnected mid-flight; drop silently
                 let _ = item.tx.send(Ok(p));
+            }
+        }
+        Ok(Err(e)) => {
+            // e.g. a shard file vanished or failed its checksum
+            stats.errors.add(n as u64);
+            for item in items {
+                let _ = item.tx.send(Err(e.clone()));
             }
         }
         Err(_) => {

@@ -1,0 +1,167 @@
+//! End-to-end tests of cell-sharded `.sol.d/` bundles behind the
+//! server: a Voronoi model round-trips through a bundle, serves
+//! predictions bit-identical to in-process `SvmModel::predict`, and —
+//! under a skewed request mix — loads only the shards it touches
+//! (resident-shard stats stay below the total bundle size).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use liquid_svm::cells::CellStrategy;
+use liquid_svm::coordinator::persist::{read_manifest, save_bundle};
+use liquid_svm::data::matrix::Matrix;
+use liquid_svm::data::synth;
+use liquid_svm::prelude::*;
+use liquid_svm::serve::{ServeConfig, Server};
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn roundtrip(&mut self, req: &str) -> String {
+        writeln!(self.writer, "{req}").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("lsvm-bundle-serve-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// `key=value` lookup in a stats-style report line.
+fn stat<'a>(report: &'a str, key: &str) -> &'a str {
+    report
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix(&format!("{key}=")))
+        .unwrap_or_else(|| panic!("missing {key}= in `{report}`"))
+}
+
+#[test]
+fn sharded_bundle_serves_identically_and_lazily() {
+    // a Voronoi-decomposed model with several cells
+    let d = synth::by_name("cod-rna", 500, 61).unwrap();
+    let cfg = Config::default().folds(2).voronoi(CellStrategy::Voronoi { size: 100 });
+    let model = svm_binary(&d, 0.5, &cfg).unwrap();
+    let n_cells = model.partition.n_cells();
+    assert!(n_cells >= 3, "need several cells, got {n_cells}");
+
+    let dir = tmp("cov.sol.d");
+    save_bundle(&model, &dir).unwrap();
+    let total_bytes = read_manifest(&dir).unwrap().total_bytes();
+
+    let server = Server::start(ServeConfig {
+        port: 0,
+        max_batch: 8,
+        max_delay: Duration::from_millis(1),
+        workers: 2,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(server.addr());
+
+    let loaded = c.roundtrip(&format!("load cov {}", dir.display()));
+    assert!(loaded.starts_with("ok loaded cov dim=8 shards="), "{loaded}");
+
+    // nothing resident until traffic arrives
+    let shards0 = c.roundtrip("shards cov");
+    assert!(shards0.starts_with("ok name=cov"), "{shards0}");
+    assert_eq!(stat(&shards0, "resident"), "0", "{shards0}");
+
+    // skewed mix: only rows whose owner is one of the two largest cells
+    let mut by_size: Vec<usize> = (0..n_cells).collect();
+    by_size.sort_by_key(|&c| std::cmp::Reverse(model.partition.cells[c].len()));
+    let hot: Vec<usize> = by_size[..2].to_vec();
+    let mut sent = 0usize;
+    for &cell in &hot {
+        for &i in model.partition.cells[cell].iter().take(15) {
+            let row = d.x.row(i);
+            let x1 = Matrix::from_vec(row.to_vec(), 1, row.len());
+            let expect = model.predict(&x1)[0];
+            let row_text: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+            let resp = c.roundtrip(&format!("predict cov {}", row_text.join(",")));
+            let body = resp.strip_prefix("ok ").unwrap_or_else(|| panic!("bad resp {resp}"));
+            assert_eq!(body.parse::<f32>().unwrap(), expect, "row {i} of cell {cell}");
+            sent += 1;
+        }
+    }
+    assert!(sent >= 20, "skewed mix too small: {sent}");
+
+    // lazy loading: only the touched shards are resident, and the
+    // resident byte count stays below the whole bundle
+    let shards = c.roundtrip("shards cov");
+    let resident: usize = stat(&shards, "resident").parse().unwrap();
+    assert!(resident <= hot.len(), "{shards}");
+    assert!(resident >= 1, "{shards}");
+    let resident_bytes: u64 = stat(&shards, "resident_bytes").parse().unwrap();
+    assert!(resident_bytes < total_bytes, "{shards}");
+
+    let stats = c.roundtrip("stats");
+    let shard_bytes = stat(&stats, "shard_bytes");
+    let (res, tot) = shard_bytes.split_once('/').expect("shard_bytes=res/total");
+    assert_eq!(res.parse::<u64>().unwrap(), resident_bytes);
+    assert_eq!(tot.parse::<u64>().unwrap(), total_bytes);
+    assert!(stat(&stats, "shard_loads").parse::<u64>().unwrap() >= 1, "{stats}");
+
+    c.roundtrip("quit");
+    server.shutdown();
+}
+
+#[test]
+fn multi_row_predict_spans_cells_and_matches_in_process() {
+    let d = synth::banana_binary(320, 62);
+    let cfg = Config::default().folds(2).voronoi(CellStrategy::Voronoi { size: 80 });
+    let model = svm_binary(&d, 0.5, &cfg).unwrap();
+    let dir = tmp("banana.sol.d");
+    save_bundle(&model, &dir).unwrap();
+
+    let server = Server::start(ServeConfig {
+        port: 0,
+        max_batch: 16,
+        max_delay: Duration::from_millis(1),
+        workers: 2,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(server.addr());
+    assert!(c.roundtrip(&format!("load b {}", dir.display())).starts_with("ok loaded"));
+
+    // one request whose rows route to different cells: replies must
+    // come back in row order and equal the monolithic prediction
+    let test = synth::banana_binary(12, 63);
+    let expect = model.predict(&test.x);
+    let rows: Vec<String> = (0..test.len())
+        .map(|i| {
+            test.x.row(i).iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",")
+        })
+        .collect();
+    let resp = c.roundtrip(&format!("predict b {}", rows.join(";")));
+    let got: Vec<f32> = resp
+        .strip_prefix("ok ")
+        .unwrap_or_else(|| panic!("bad resp {resp}"))
+        .split(';')
+        .map(|t| t.parse().unwrap())
+        .collect();
+    assert_eq!(got, expect);
+
+    // a monolithic model answers `shards` with not-sharded
+    let mono = tmp("mono.sol");
+    liquid_svm::coordinator::persist::save_model(&model, &mono).unwrap();
+    assert!(c.roundtrip(&format!("load m {}", mono.display())).starts_with("ok loaded"));
+    assert!(c.roundtrip("shards m").starts_with("err not-sharded"), "shards on .sol");
+
+    c.roundtrip("quit");
+    server.shutdown();
+}

@@ -65,6 +65,46 @@ fn distributed_smoke() {
 }
 
 #[test]
+fn train_save_bundle_then_predict_from_bundle() {
+    let dir = std::env::temp_dir().join(format!("lsvm-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let bundle = dir.join("banana.sol.d");
+    // exercises --cells/--jobs and the `--key=value` spelling
+    let out = bin()
+        .args([
+            "train", "--data", "banana", "--n=300", "--folds", "2", "--scenario",
+            "binary", "--cells", "1,80", "--jobs=2", "--save",
+            bundle.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("saved sharded bundle"), "{text}");
+    assert!(bundle.join("MANIFEST").is_file(), "bundle has no MANIFEST");
+
+    let out = bin()
+        .args([
+            "predict", "--model", bundle.to_str().unwrap(), "--data", "banana", "--n", "120",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("error="), "no error report: {text}");
+}
+
+#[test]
+fn duplicate_option_across_spellings_fails() {
+    let out = bin()
+        .args(["train", "--n", "100", "--n=200"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("duplicate option"));
+}
+
+#[test]
 fn unknown_command_fails_cleanly() {
     let out = bin().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());

@@ -61,6 +61,39 @@ fn prop_cells_cover_every_sample() {
 }
 
 #[test]
+fn prop_every_training_point_routes_to_an_owning_cell() {
+    // the invariant sharded serving rests on: a point that trained in
+    // shard c must route back to a cell that contains it, under every
+    // strategy (for the broadcast router "routes to" means the owner
+    // is among the broadcast set; for overlapping Voronoi the owner is
+    // the base cell, which keeps its members when cells grow)
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x5e11);
+        let n = 60 + rng.below(300);
+        let d = 2 + rng.below(5);
+        let data = random_dataset(&mut rng, n, d, 2);
+        let size = 20 + rng.below(80);
+        for strategy in [
+            CellStrategy::None,
+            CellStrategy::RandomChunks { size },
+            CellStrategy::Voronoi { size },
+            CellStrategy::OverlappingVoronoi { size, overlap: 0.3 },
+            CellStrategy::RecursiveTree { max_size: size.max(8) },
+        ] {
+            let p = make_cells(&data, &strategy, seed);
+            for i in 0..n {
+                let routed = p.route(data.x.row(i));
+                assert!(
+                    routed.iter().any(|&c| p.cells[c].contains(&i)),
+                    "{strategy:?}: sample {i} routed to {routed:?}, none of which owns it \
+                     (seed {seed})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_overlapping_cells_superset_of_voronoi() {
     for seed in 0..CASES {
         let mut rng = Rng::new(seed ^ 0x10);

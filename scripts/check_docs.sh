@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Documentation link check, run by CI's docs job:
+#  1. every relative markdown link in README.md / DESIGN.md resolves
+#     to a file or directory in the repo;
+#  2. every in-source citation `DESIGN.md §<Section>` resolves to a
+#     real `## <Section>` heading in DESIGN.md.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+fail=0
+
+for f in README.md DESIGN.md; do
+  [ -f "$f" ] || { echo "missing $f"; fail=1; continue; }
+  # extract link targets: ](target) — skip absolute URLs and pure anchors
+  while IFS= read -r target; do
+    case "$target" in
+      http://*|https://*|mailto:*|\#*) continue ;;
+    esac
+    target="${target%%#*}"            # strip in-page anchors
+    [ -n "$target" ] || continue
+    if [ ! -e "$target" ]; then
+      echo "$f: broken link -> $target"
+      fail=1
+    fi
+  done < <(grep -oE '\]\([^)]+\)' "$f" | sed 's/^](//; s/)$//')
+done
+
+if [ -f DESIGN.md ]; then
+  while IFS= read -r sec; do
+    if ! grep -qE "^## ${sec}\b" DESIGN.md; then
+      echo "unresolved citation: DESIGN.md §${sec}"
+      fail=1
+    fi
+  done < <(grep -rhoE 'DESIGN\.md §[A-Za-z][A-Za-z-]*' rust/src | sed 's/.*§//' | sort -u)
+else
+  echo "missing DESIGN.md"
+  fail=1
+fi
+
+if [ "$fail" -ne 0 ]; then
+  echo "doc check FAILED"
+  exit 1
+fi
+echo "doc check OK"
