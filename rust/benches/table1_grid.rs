@@ -1,0 +1,90 @@
+//! CV-grid bench: sequential vs parallel fold×γ grid on the Gram
+//! plane, plus allocation accounting — the observable form of the
+//! plane contract (per-γ Gram allocations gone from the hot loop,
+//! parallel output bit-identical to sequential).
+//!
+//! Columns per dataset:
+//! * `seq` / `par`   — wall-clock of `run_cv` at jobs=1 vs jobs=J
+//! * `speedup`       — seq/par
+//! * `points`        — grid points solved (γ×λ×folds)
+//! * `allocs`        — `gram_allocs` counter delta over the parallel
+//!                     run: stays O(workers), NOT O(points), because
+//!                     each worker exponentiates every γ into one
+//!                     reusable buffer
+//! * `identical`     — bitwise equality of (γ*, λ*, fold coefs)
+//!
+//! Runs in CI as `cargo bench --bench table1_grid -- --quick`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{rel, secs, sized, time_once, Table};
+use liquid_svm::cv::{run_cv, CvConfig, CvResult, Grid};
+use liquid_svm::data::synth;
+use liquid_svm::metrics::{counters, Loss};
+use liquid_svm::solver::SolverKind;
+
+fn identical(a: &CvResult, b: &CvResult) -> bool {
+    a.best_gamma.to_bits() == b.best_gamma.to_bits()
+        && a.best_lambda.to_bits() == b.best_lambda.to_bits()
+        && a.models.len() == b.models.len()
+        && a.models.iter().zip(&b.models).all(|(ma, mb)| {
+            ma.coef.iter().map(|v| v.to_bits()).eq(mb.coef.iter().map(|v| v.to_bits()))
+        })
+}
+
+fn main() {
+    let n = sized(240, 800, 4000);
+    let folds = if n <= 300 { 3 } else { 5 };
+    let jobs = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+    println!("\n=== CV grid: sequential vs parallel fold x gamma (n={n}, {folds}-fold, J={jobs}) ===\n");
+    let t = Table::new(
+        &["dataset", "seq", "par", "speedup", "points", "allocs", "identical"],
+        &[14, 8, 8, 9, 8, 8, 10],
+    );
+
+    for name in ["bank-marketing", "cod-rna", "thyroid-ann"] {
+        let train = synth::by_name(name, n, 42).unwrap();
+        let n_fold = n - n / folds;
+        let mut cfg = CvConfig::new(
+            Grid::default_grid(0, n_fold, train.dim()),
+            SolverKind::Hinge { w: 0.5 },
+            Loss::Classification,
+        );
+        cfg.folds = folds;
+
+        let mut seq_cfg = cfg.clone();
+        seq_cfg.jobs = 1;
+        let (seq_res, t_seq) = time_once(|| run_cv(&train, &seq_cfg));
+
+        let mut par_cfg = cfg.clone();
+        par_cfg.jobs = jobs;
+        let before = counters::snapshot();
+        let (par_res, t_par) = time_once(|| run_cv(&train, &par_cfg));
+        let after = counters::snapshot();
+        let allocs = after.gram_allocs - before.gram_allocs;
+
+        t.row(&[
+            name,
+            &secs(t_seq),
+            &secs(t_par),
+            &rel(t_seq, t_par),
+            &par_res.points_evaluated.to_string(),
+            &allocs.to_string(),
+            if identical(&seq_res, &par_res) { "yes" } else { "NO" },
+        ]);
+        assert!(
+            identical(&seq_res, &par_res),
+            "{name}: parallel CV output differs from sequential"
+        );
+        assert!(
+            (allocs as usize) < par_res.points_evaluated,
+            "{name}: gram_allocs {allocs} not sub-linear in grid points \
+             ({}) — per-γ allocation crept back into the hot loop",
+            par_res.points_evaluated
+        );
+    }
+
+    println!("\nplane contract: allocs ~ O(workers+folds) while points ~ O(folds x grid);");
+    println!("parallel selection and fold coefficients bitwise equal to sequential.");
+}

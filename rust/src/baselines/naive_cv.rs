@@ -15,7 +15,7 @@ use crate::data::dataset::Dataset;
 use crate::data::folds::{make_folds, FoldKind};
 use crate::kernel::{GramBackend, KernelKind};
 use crate::metrics::Loss;
-use crate::solver::{solve, SolverKind, SolverParams};
+use crate::solver::{solve_dense, SolverKind, SolverParams};
 
 use super::smo::train_smo;
 
@@ -91,7 +91,8 @@ pub fn outer_cv_liquid(
                 let kv = GramBackend::Blocked.gram(&va.x, &tr.x, gamma, KernelKind::Gauss);
                 gram_computations += 2;
                 // cold start, every time
-                let sol = solve(SolverKind::Hinge { w: 0.5 }, &kt, &tr.y, lambda, &params, None);
+                let sol =
+                    solve_dense(SolverKind::Hinge { w: 0.5 }, &kt, &tr.y, lambda, &params, None);
                 let preds = sol.decision_values(&kv);
                 loss_sum += Loss::Classification.mean(&va.y, &preds);
             }

@@ -76,6 +76,21 @@ impl CellPartition {
             CellRouter::Tree(root) => vec![walk_tree(root, x)],
         }
     }
+
+    /// Group a whole batch of rows by destination cell:
+    /// `result[c]` = indices of `x` rows that evaluate in cell `c`
+    /// (every row in every cell for broadcast routers).  The batched
+    /// predict path feeds each group through one tiled cross-Gram pass
+    /// instead of routing row-by-row at the call site.
+    pub fn route_batch(&self, x: &Matrix) -> Vec<Vec<usize>> {
+        let mut routed: Vec<Vec<usize>> = vec![Vec::new(); self.n_cells()];
+        for i in 0..x.rows() {
+            for c in self.route(x.row(i)) {
+                routed[c].push(i);
+            }
+        }
+        routed
+    }
 }
 
 fn nearest_center(centers: &Matrix, x: &[f32]) -> usize {
@@ -294,6 +309,28 @@ mod tests {
             for &i in cell.iter().take(3) {
                 assert_eq!(p.route(d.x.row(i)), vec![c]);
             }
+        }
+    }
+
+    #[test]
+    fn route_batch_groups_rows_like_row_routing() {
+        let d = data(200);
+        for strategy in [
+            CellStrategy::Voronoi { size: 50 },
+            CellStrategy::RandomChunks { size: 50 },
+            CellStrategy::RecursiveTree { max_size: 60 },
+        ] {
+            let p = make_cells(&d, &strategy, 6);
+            let routed = p.route_batch(&d.x);
+            let mut seen = vec![0usize; 200];
+            for (c, rows) in routed.iter().enumerate() {
+                for &i in rows {
+                    assert!(p.route(d.x.row(i)).contains(&c));
+                    seen[i] += 1;
+                }
+            }
+            let per_row = if matches!(p.router, CellRouter::Broadcast(_)) { p.n_cells() } else { 1 };
+            assert!(seen.iter().all(|&c| c == per_row), "{strategy:?}");
         }
     }
 

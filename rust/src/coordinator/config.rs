@@ -29,8 +29,15 @@ pub struct Config {
     /// worker threads for the (cell × task) scheduler (`threads`)
     pub threads: usize,
     /// worker threads for the parallel cell driver (`--jobs`);
-    /// `None` falls back to `threads`
+    /// `None` falls back to `threads`.  The same budget is shared with
+    /// the per-unit CV grid (see [`Config::split_jobs`]) so cell-level
+    /// and fold×γ-level parallelism compose without oversubscription.
     pub jobs: Option<usize>,
+    /// byte budget (MiB) for resident distance/Gram state per CV run
+    /// (`--max-gram-mb`); `None` = unlimited.  Past the cap the CV
+    /// engine drops to fold-by-fold caching and then to streamed
+    /// row-tiles (see DESIGN.md §Compute-plane).
+    pub max_gram_mb: Option<usize>,
     /// 0 ⇒ 10×10 default grid, 1 ⇒ 15×15, 2 ⇒ 20×20 (`grid_choice`);
     /// `use_libsvm_grid` overrides with the 10×11 libsvm grid
     pub grid_choice: u8,
@@ -58,6 +65,7 @@ impl Default for Config {
             display: 0,
             threads: 1,
             jobs: None,
+            max_gram_mb: Some(1024),
             grid_choice: 0,
             use_libsvm_grid: false,
             adaptivity_control: 0,
@@ -98,6 +106,24 @@ impl Config {
     /// Resolved driver parallelism: explicit `jobs` or `threads`.
     pub fn effective_jobs(&self) -> usize {
         self.jobs.unwrap_or(self.threads).max(1)
+    }
+
+    /// Gram-state budget in MiB; 0 means unlimited.
+    pub fn max_gram_mb(mut self, mb: usize) -> Self {
+        self.max_gram_mb = if mb == 0 { None } else { Some(mb) };
+        self
+    }
+
+    /// Split the `--jobs` budget between the cell driver and each
+    /// unit's fold×γ CV grid: with `n_units` work units in flight the
+    /// driver takes `min(jobs, n_units)` threads and every unit's CV
+    /// grid gets the leftover factor, so the product never exceeds the
+    /// budget (small working sets keep `cv = 1`, one huge cell gets
+    /// the whole budget).  Returns `(driver_threads, cv_jobs)`.
+    pub fn split_jobs(&self, n_units: usize) -> (usize, usize) {
+        let total = self.effective_jobs();
+        let driver = total.min(n_units.max(1));
+        (driver, (total / driver).max(1))
     }
 
     pub fn grid_choice(mut self, v: u8) -> Self {
@@ -188,5 +214,23 @@ mod tests {
         assert_eq!(Config::default().threads(3).effective_jobs(), 3);
         assert_eq!(Config::default().threads(3).jobs(8).effective_jobs(), 8);
         assert_eq!(Config::default().jobs(0).effective_jobs(), 1);
+    }
+
+    #[test]
+    fn split_jobs_composes_without_oversubscription() {
+        let cfg = Config::default().jobs(8);
+        assert_eq!(cfg.split_jobs(16), (8, 1)); // many cells: all driver
+        assert_eq!(cfg.split_jobs(1), (1, 8)); // one cell: all CV grid
+        assert_eq!(cfg.split_jobs(3), (3, 2)); // mixed: 3 × 2 ≤ 8
+        assert_eq!(cfg.split_jobs(0), (1, 8));
+        let (d, c) = Config::default().split_jobs(4);
+        assert_eq!((d, c), (1, 1)); // default budget of 1 stays 1
+    }
+
+    #[test]
+    fn max_gram_mb_zero_is_unlimited() {
+        assert_eq!(Config::default().max_gram_mb, Some(1024));
+        assert_eq!(Config::default().max_gram_mb(64).max_gram_mb, Some(64));
+        assert_eq!(Config::default().max_gram_mb(0).max_gram_mb, None);
     }
 }

@@ -84,8 +84,12 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
     let n_cells = partition.n_cells();
 
     // build the (cell × task) working sets, each tagged with its cell
-    // so the driver can aggregate per-cell timing
-    let mut jobs: Vec<(usize, Box<dyn FnOnce() -> TrainedUnit + Send>)> = Vec::new();
+    // so the driver can aggregate per-cell timing.  The --jobs budget
+    // is split between the cell driver and each unit's fold×γ CV grid
+    // (one budget, two levels — see DESIGN.md §Compute-plane): the
+    // working sets are materialized once, their count fixes the split,
+    // and every unit then gets its CV share.
+    let mut units: Vec<(usize, usize, Dataset, crate::tasks::Task)> = Vec::new();
     let mut n_tasks = 0usize;
     for (c, cell_idx) in partition.cells.iter().enumerate() {
         let cell_data = scaled.subset(cell_idx);
@@ -93,26 +97,38 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
         n_tasks = n_tasks.max(tasks.len());
         for (t, task) in tasks.into_iter().enumerate() {
             let ws = Dataset::new(cell_data.x.select_rows(&task.indices), task.y.clone());
-            let cfg = cfg.clone();
-            let backend = backend.clone();
-            let seed = cfg.seed ^ ((c as u64) << 20) ^ t as u64;
-            jobs.push((
-                c,
-                Box::new(move || {
-                    let cv = train_unit(&ws, task.solver, task.val_loss, &cfg, backend, seed);
-                    TrainedUnit { cell: c, task: t, data: ws, cv }
-                }),
-            ));
+            units.push((c, t, ws, task));
         }
     }
-    let driver_threads = cfg.effective_jobs();
+    let (driver_threads, cv_jobs) = cfg.split_jobs(units.len());
+    // like the thread budget, the Gram byte budget is a whole-process
+    // figure: with `driver_threads` CV runs resident at once, each run
+    // gets its share so the aggregate stays within --max-gram-mb
+    let cv_gram_mb = cfg.max_gram_mb.map(|mb| (mb / driver_threads.max(1)).max(1));
+
+    let mut jobs: Vec<(usize, Box<dyn FnOnce() -> TrainedUnit + Send>)> = Vec::new();
+    for (c, t, ws, task) in units {
+        let cfg = cfg.clone();
+        let backend = backend.clone();
+        let seed = cfg.seed ^ ((c as u64) << 20) ^ t as u64;
+        jobs.push((
+            c,
+            Box::new(move || {
+                let cv = train_unit(
+                    &ws, task.solver, task.val_loss, &cfg, backend, seed, cv_jobs, cv_gram_mb,
+                );
+                TrainedUnit { cell: c, task: t, data: ws, cv }
+            }),
+        ));
+    }
     if cfg.display > 0 {
         eprintln!(
-            "[train] {} cells x {} tasks = {} working sets ({} driver threads)",
+            "[train] {} cells x {} tasks = {} working sets ({} driver threads x {} cv jobs)",
             n_cells,
             n_tasks,
             jobs.len(),
-            driver_threads
+            driver_threads,
+            cv_jobs
         );
     }
     let (units, report) = run_cell_grid(driver_threads, n_cells, jobs);
@@ -149,6 +165,10 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
 /// CV on one working set, with degenerate-size fallbacks:
 /// * too few samples for k folds ⇒ shrink k;
 /// * single-class / tiny sets ⇒ no model (constant-zero predictor).
+///
+/// `cv_jobs` / `cv_gram_mb` are this unit's shares of the process-wide
+/// `--jobs` / `--max-gram-mb` budgets (see [`Config::split_jobs`]).
+#[allow(clippy::too_many_arguments)]
 fn train_unit(
     ws: &Dataset,
     solver: crate::solver::SolverKind,
@@ -156,6 +176,8 @@ fn train_unit(
     cfg: &Config,
     backend: GramBackend,
     seed: u64,
+    cv_jobs: usize,
+    cv_gram_mb: Option<usize>,
 ) -> Option<CvResult> {
     let n = ws.len();
     if n < 8 {
@@ -177,6 +199,8 @@ fn train_unit(
     cv_cfg.params = cfg.solver_params;
     cv_cfg.backend = backend;
     cv_cfg.seed = seed;
+    cv_cfg.jobs = cv_jobs;
+    cv_cfg.max_gram_mb = cv_gram_mb;
     Some(run_cv(ws, &cv_cfg))
 }
 
@@ -253,12 +277,7 @@ impl SvmModel {
 
         // group test points by cell to batch kernel evaluations
         let broadcast = matches!(self.partition.router, CellRouter::Broadcast(_));
-        let mut routed: Vec<Vec<usize>> = vec![Vec::new(); self.partition.n_cells()];
-        for i in 0..m {
-            for c in self.partition.route(xs.row(i)) {
-                routed[c].push(i);
-            }
-        }
+        let routed = self.partition.route_batch(&xs);
 
         for unit in &self.units {
             let Some(cv) = &unit.cv else { continue };
@@ -274,6 +293,7 @@ impl SvmModel {
                 cv.best_gamma,
                 self.config.kernel,
                 &self.backend,
+                self.config.max_gram_mb,
             );
             for (j, &i) in pts.iter().enumerate() {
                 scores[unit.task][i] += preds[j];

@@ -1,26 +1,56 @@
 //! The integrated cross-validation engine — the heart of liquidSVM's
-//! speed claim (paper §2 "Hyper-Parameter Selection").
+//! speed claim (paper §2 "Hyper-Parameter Selection") — rebuilt on the
+//! Gram plane as a **parallel fold×γ task grid** (see DESIGN.md
+//! §Compute-plane).
 //!
-//! For each fold the engine computes ONE squared-distance matrix pair
-//! (train×train, val×train) and reuses it across the whole γ grid
-//! ([`crate::kernel::DistanceCache`]); within each γ it walks the λ
-//! grid from strong to weak regularization, warm-starting every solve
-//! from the previous solution.  This is why the integrated CV is an
-//! order of magnitude faster than wrapping a solver in grid loops
-//! (Table 1's "outer cv" column): the naive loop pays O(n²d) kernel
-//! work and a cold solver start at *every* grid point.
+//! Structure: one *task* is a (fold, γ) pair.  Within a task the λ
+//! grid is walked sequentially from strong to weak regularization,
+//! warm-starting every solve from the previous solution (the part of
+//! the engine that fundamentally cannot parallelize without losing the
+//! warm-start win).  Across tasks there is no dependency, so the grid
+//! runs on scoped worker threads that share the read-only per-fold
+//! squared-distance matrices and each own **one reusable
+//! [`GramBuffer`]** pair — per γ the worker exponentiates distances in
+//! place, so the hot loop performs *zero* Gram allocations (the
+//! `gram_allocs` counter stays flat while `gram_misses` advances).
+//!
+//! Memory is governed by `CvConfig::max_gram_mb` through three tiers,
+//! chosen once per run (deterministically, so results never depend on
+//! scheduling):
+//!
+//! * **all-cached** — every fold's distance matrices fit: precompute
+//!   them all and run the whole fold×γ grid as one wave (maximum
+//!   parallelism, the default for cell-sized working sets);
+//! * **per-fold** — only one fold fits: folds run sequentially, the γ
+//!   grid still runs parallel inside each fold (the seed's memory
+//!   profile);
+//! * **streamed** — even one fold's n² won't fit: no distance matrix is
+//!   ever materialized; solvers read row-tiles recomputed on demand
+//!   ([`StreamedGram`]), bit-identical to the cached path.
+//!
+//! Parallel output is **bit-identical** to `jobs = 1`: tasks are pure
+//! functions of (fold, γ), results are merged in fixed (fold, γ, λ)
+//! order, and tier selection does not depend on worker count beyond
+//! the documented buffer budget (and the tiers themselves agree
+//! bitwise).  Property-tested in `tests/property_tests.rs`.
 //!
 //! `adaptivity_control` (Appendix C) prunes the grid after the first
-//! fold: only candidates whose fold-0 loss is within the best
-//! half/quarter are evaluated on the remaining folds.
+//! fold: fold 0 runs as its own wave, then only candidates whose
+//! fold-0 loss is within the best half/quarter are evaluated on the
+//! remaining folds.
 
 pub mod grid;
 
 pub use grid::Grid;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use crate::data::dataset::Dataset;
 use crate::data::folds::{make_folds, FoldKind, Folds};
-use crate::kernel::{DistanceCache, GramBackend, KernelKind};
+use crate::data::matrix::Matrix;
+use crate::kernel::plane::{self, GramBuffer, GramSource, StreamedGram, TileBuffer};
+use crate::kernel::{GramBackend, KernelKind};
 use crate::metrics::Loss;
 use crate::solver::{solve, warm_vector, Solution, SolverKind, SolverParams};
 
@@ -49,6 +79,17 @@ pub struct CvConfig {
     pub params: SolverParams,
     pub backend: GramBackend,
     pub seed: u64,
+    /// worker threads for the fold×γ task grid (1 = sequential); the
+    /// coordinator derives this from the shared `--jobs` budget so
+    /// cell-level and grid-level parallelism compose
+    pub jobs: usize,
+    /// byte budget (MiB) for resident distance/Gram state; governs the
+    /// all-cached / per-fold / streamed tiers.  `None` is unlimited,
+    /// which buys maximum parallelism by keeping EVERY fold's distance
+    /// matrices resident at once (~(k+1)/2× the one-fold-at-a-time
+    /// peak) — set a finite cap to get the fold-sequential memory
+    /// profile on big monolithic working sets.
+    pub max_gram_mb: Option<usize>,
 }
 
 impl CvConfig {
@@ -65,6 +106,8 @@ impl CvConfig {
             params: SolverParams::default(),
             backend: GramBackend::default(),
             seed: 0,
+            jobs: 1,
+            max_gram_mb: None,
         }
     }
 }
@@ -93,12 +136,221 @@ pub struct CvResult {
     pub points_evaluated: usize,
 }
 
+/// One fold's immutable context, shared read-only across the γ tasks
+/// of that fold.
+struct FoldCtx {
+    dtr: Dataset,
+    dva: Dataset,
+    params: SolverParams,
+}
+
+/// The kernel-state flavor a fold's tasks read through — either shared
+/// cached distance matrices (exponentiated into per-worker buffers) or
+/// just the row norms for streamed access.
+enum FoldData {
+    Cached { d2_tr: Matrix, d2_va: Matrix, ep_tr: u64, ep_va: u64 },
+    Streamed { tr_norms: Vec<f32>, va_norms: Vec<f32> },
+}
+
+impl FoldData {
+    fn cached(backend: &GramBackend, ctx: &FoldCtx) -> FoldData {
+        FoldData::Cached {
+            d2_tr: backend.sq_dists(&ctx.dtr.x, &ctx.dtr.x),
+            d2_va: backend.sq_dists(&ctx.dva.x, &ctx.dtr.x),
+            ep_tr: plane::next_epoch(),
+            ep_va: plane::next_epoch(),
+        }
+    }
+
+    fn streamed(ctx: &FoldCtx) -> FoldData {
+        FoldData::Streamed {
+            tr_norms: ctx.dtr.x.row_sq_norms(),
+            va_norms: ctx.dva.x.row_sq_norms(),
+        }
+    }
+}
+
+/// Memory tier of a CV run (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Tier {
+    AllCached,
+    PerFold,
+    Streamed,
+}
+
+fn pick_tier(cap_mb: Option<usize>, jobs: usize, per_fold_elems: &[usize]) -> Tier {
+    let Some(mb) = cap_mb else { return Tier::AllCached };
+    let cap = mb.saturating_mul(1 << 20) / 4; // f32 elements
+    let total: usize = per_fold_elems.iter().sum();
+    let max_fold = per_fold_elems.iter().copied().max().unwrap_or(0);
+    // cached tiers hold the shared d² plus, worst case, one
+    // exponentiated fold per worker
+    let worker_over = jobs.max(1).saturating_mul(max_fold);
+    if total.saturating_add(worker_over) <= cap {
+        Tier::AllCached
+    } else if max_fold.saturating_add(worker_over) <= cap {
+        Tier::PerFold
+    } else {
+        Tier::Streamed
+    }
+}
+
+/// Per-worker reusable Gram buffers (train + validation) — the "one
+/// reusable buffer per worker" half of the plane contract.
+#[derive(Default)]
+struct WorkerBufs {
+    ktr: GramBuffer,
+    kva: GramBuffer,
+}
+
+/// Run `n` independent tasks on `jobs` scoped workers, each owning its
+/// buffer pair; results come back in task order (deterministic merge).
+fn run_wave<T, F>(jobs: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &mut WorkerBufs) -> T + Sync,
+{
+    if jobs <= 1 || n <= 1 {
+        let mut bufs = WorkerBufs::default();
+        return (0..n).map(|i| f(i, &mut bufs)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let cells: Vec<Mutex<&mut Option<T>>> = slots.iter_mut().map(Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs.min(n) {
+            scope.spawn(|| {
+                let mut bufs = WorkerBufs::default();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = f(i, &mut bufs);
+                    **cells[i].lock().unwrap() = Some(out);
+                }
+            });
+        }
+    });
+    drop(cells);
+    slots.into_iter().map(|s| s.expect("cv worker died before finishing task")).collect()
+}
+
+/// Result of one (fold, γ) task: per-λ validation losses plus perf
+/// accounting.  `evaluated` marks λs actually solved (vs pruned) —
+/// kept separate from the loss value so a genuinely-NaN validation
+/// loss (diverged solver) still poisons the candidate's mean exactly
+/// like the sequential engine, instead of being mistaken for "pruned".
+struct GammaOut {
+    losses: Vec<f32>,
+    evaluated: Vec<bool>,
+    iterations: usize,
+    points: usize,
+}
+
+/// Sequential λ chain at one γ: strong→weak regularization with warm
+/// starts, then one validation sweep per solved λ.
+fn gamma_task<KT, KV>(
+    cfg: &CvConfig,
+    ctx: &FoldCtx,
+    active: &[bool],
+    kt: &mut KT,
+    kv: &mut KV,
+) -> GammaOut
+where
+    KT: GramSource + ?Sized,
+    KV: GramSource + ?Sized,
+{
+    let nl = cfg.grid.lambdas.len();
+    let mut sols: Vec<Option<Solution>> = vec![None; nl];
+    let mut warm: Option<Vec<f32>> = None;
+    let mut iterations = 0usize;
+    let mut points = 0usize;
+    for (li, &lambda) in cfg.grid.lambdas.iter().enumerate() {
+        if !active[li] {
+            // pruned points are contiguous tails in practice; a cold
+            // gap costs more than it saves, so just skip
+            continue;
+        }
+        let sol = solve(cfg.solver, kt, &ctx.dtr.y, lambda, &ctx.params, warm.as_deref());
+        iterations += sol.iterations;
+        points += 1;
+        warm = Some(warm_vector(cfg.solver, &sol, &ctx.dtr.y));
+        sols[li] = Some(sol);
+    }
+    let mut losses = vec![f32::NAN; nl];
+    let mut evaluated = vec![false; nl];
+    for (li, s) in sols.iter().enumerate() {
+        if let Some(sol) = s {
+            losses[li] = cfg.val_loss.mean(&ctx.dva.y, &sol.decision_values_src(kv));
+            evaluated[li] = true;
+        }
+    }
+    GammaOut { losses, evaluated, iterations, points }
+}
+
+/// Dispatch one (fold, γ) task through the fold's kernel-state flavor.
+fn run_gamma_task(
+    cfg: &CvConfig,
+    ctx: &FoldCtx,
+    data: &FoldData,
+    gi: usize,
+    active: &[bool],
+    bufs: &mut WorkerBufs,
+) -> GammaOut {
+    let gamma = cfg.grid.gammas[gi];
+    match data {
+        FoldData::Cached { d2_tr, d2_va, ep_tr, ep_va } => {
+            bufs.ktr.fill(*ep_tr, d2_tr, cfg.kernel, gamma);
+            // the validation Gram is only needed after the chain, but
+            // filling both up front keeps the borrow of each buffer
+            // disjoint and costs the same exponentiation work
+            bufs.kva.fill(*ep_va, d2_va, cfg.kernel, gamma);
+            let WorkerBufs { ktr, kva } = bufs;
+            gamma_task(cfg, ctx, active, ktr, kva)
+        }
+        FoldData::Streamed { tr_norms, va_norms } => {
+            let mut ktr = StreamedGram::new(
+                &cfg.backend, &ctx.dtr.x, &ctx.dtr.x, tr_norms, tr_norms, cfg.kernel, gamma,
+            );
+            let mut kva = StreamedGram::new(
+                &cfg.backend, &ctx.dva.x, &ctx.dtr.x, va_norms, tr_norms, cfg.kernel, gamma,
+            );
+            gamma_task(cfg, ctx, active, &mut ktr, &mut kva)
+        }
+    }
+}
+
 /// Run the integrated k-fold CV on a working set.
 pub fn run_cv(data: &Dataset, cfg: &CvConfig) -> CvResult {
     let n = data.len();
     assert!(n >= cfg.folds, "working set smaller than fold count");
     let folds = make_folds(data, cfg.folds, effective_fold_kind(cfg, data), cfg.seed);
     let (ng, nl) = (cfg.grid.gammas.len(), cfg.grid.lambdas.len());
+    let jobs = cfg.jobs.max(1);
+
+    // per-fold contexts (subsets + per-solve iteration budget scaled to
+    // the fold size: extreme grid corners (huge C) would otherwise burn
+    // 10-20x more iterations for solutions the selection phase discards
+    // anyway (liquidSVM bounds the inner solver the same way); measured:
+    // 5x CV speedup at identical selection + test error (§Perf))
+    let fctx: Vec<FoldCtx> = (0..folds.k())
+        .map(|f| {
+            let dtr = data.subset(&folds.train_indices(f));
+            let dva = data.subset(folds.val_indices(f));
+            let params = SolverParams {
+                max_iter: cfg.params.max_iter.min(4 * dtr.len().max(64)),
+                ..cfg.params
+            };
+            FoldCtx { dtr, dva, params }
+        })
+        .collect();
+
+    let per_fold_elems: Vec<usize> = fctx
+        .iter()
+        .map(|c| c.dtr.len() * c.dtr.len() + c.dva.len() * c.dtr.len())
+        .collect();
+    let tier = pick_tier(cfg.max_gram_mb, jobs, &per_fold_elems);
 
     let mut val_sum = vec![vec![0.0f32; nl]; ng];
     let mut val_cnt = vec![vec![0usize; nl]; ng];
@@ -106,59 +358,86 @@ pub fn run_cv(data: &Dataset, cfg: &CvConfig) -> CvResult {
     let mut total_iterations = 0usize;
     let mut points_evaluated = 0usize;
 
-    for f in 0..folds.k() {
-        let tr_idx = folds.train_indices(f);
-        let va_idx = folds.val_indices(f).to_vec();
-        let dtr = data.subset(&tr_idx);
-        let dva = data.subset(&va_idx);
-        // per-solve iteration budget scaled to the fold size: extreme
-        // grid corners (huge C) would otherwise burn 10-20x more
-        // iterations for solutions the selection phase discards anyway
-        // (liquidSVM bounds the inner solver the same way); measured:
-        // 5x CV speedup at identical selection + test error (§Perf)
-        let params = SolverParams {
-            max_iter: cfg.params.max_iter.min(4 * dtr.len().max(64)),
-            ..cfg.params
-        };
-
-        // ONE distance computation per fold, reused across all γ
-        let mut ktr = DistanceCache::new(&cfg.backend, &dtr.x, &dtr.x, cfg.kernel);
-        let mut kva = DistanceCache::new(&cfg.backend, &dva.x, &dtr.x, cfg.kernel);
-
-        for (gi, &gamma) in cfg.grid.gammas.iter().enumerate() {
-            if !active[gi].iter().any(|&a| a) {
-                continue;
-            }
-            let kt = ktr.gram(gamma).clone();
-            let mut warm: Option<Vec<f32>> = None;
-            let mut fold_solutions: Vec<Option<Solution>> = vec![None; nl];
-            for (li, &lambda) in cfg.grid.lambdas.iter().enumerate() {
-                if !active[gi][li] {
-                    // pruned points are contiguous tails in practice; a
-                    // cold gap costs more than it saves, so just skip
-                    continue;
-                }
-                let sol = solve(cfg.solver, &kt, &dtr.y, lambda, &params, warm.as_deref());
-                total_iterations += sol.iterations;
-                points_evaluated += 1;
-                warm = Some(warm_vector(cfg.solver, &sol, &dtr.y));
-                fold_solutions[li] = Some(sol);
-            }
-            let kv = kva.gram(gamma);
-            for (li, sol) in fold_solutions.iter().enumerate() {
-                if let Some(sol) = sol {
-                    let preds = sol.decision_values(kv);
-                    val_sum[gi][li] += cfg.val_loss.mean(&dva.y, &preds);
+    // merge one wave of task outputs (tasks listed as (fold, γ) in
+    // fixed order, so accumulation order matches the sequential engine)
+    macro_rules! merge {
+        ($tasks:expr, $outs:expr) => {
+            for (&(_, gi), out) in $tasks.iter().zip($outs) {
+                for (li, loss) in out.losses.into_iter().enumerate() {
+                    if !out.evaluated[li] {
+                        continue;
+                    }
+                    // a NaN loss (diverged solver) poisons the mean so
+                    // the candidate can never win selection — same
+                    // disqualification the sequential engine applied
+                    val_sum[gi][li] += loss;
                     val_cnt[gi][li] += 1;
                 }
+                total_iterations += out.iterations;
+                points_evaluated += out.points;
             }
-        }
-
-        // adaptive grid pruning after the first fold
-        if f == 0 && cfg.adaptivity > 0 {
-            prune_grid(&mut active, &val_sum, cfg.adaptivity);
-        }
+        };
     }
+
+    // kept alive through the final-model wave in the all-cached and
+    // streamed tiers so the selected models reuse the fold kernel
+    // state instead of recomputing O(n²d) distances per fold
+    let fold_data: Option<Vec<FoldData>> = match tier {
+        Tier::AllCached | Tier::Streamed => {
+            // materialize every fold's kernel state up front (for the
+            // streamed tier this is just the row norms), in parallel
+            let fdata: Vec<FoldData> = run_wave(jobs, fctx.len(), |f, _| match tier {
+                Tier::Streamed => FoldData::streamed(&fctx[f]),
+                _ => FoldData::cached(&cfg.backend, &fctx[f]),
+            });
+            let run_tasks = |tasks: &[(usize, usize)], active: &[Vec<bool>]| -> Vec<GammaOut> {
+                run_wave(jobs, tasks.len(), |t, bufs| {
+                    let (f, gi) = tasks[t];
+                    run_gamma_task(cfg, &fctx[f], &fdata[f], gi, &active[gi], bufs)
+                })
+            };
+            if cfg.adaptivity > 0 {
+                // wave 1: fold 0 across the γ grid, then prune
+                let t0: Vec<(usize, usize)> = (0..ng).map(|gi| (0, gi)).collect();
+                let outs = run_tasks(&t0, &active);
+                merge!(t0, outs);
+                prune_grid(&mut active, &val_sum, cfg.adaptivity);
+                // wave 2: remaining folds over the surviving grid
+                let rest: Vec<(usize, usize)> = (1..fctx.len())
+                    .flat_map(|f| (0..ng).map(move |gi| (f, gi)))
+                    .filter(|&(_, gi)| active[gi].iter().any(|&a| a))
+                    .collect();
+                let outs = run_tasks(&rest, &active);
+                merge!(rest, outs);
+            } else {
+                let all: Vec<(usize, usize)> =
+                    (0..fctx.len()).flat_map(|f| (0..ng).map(move |gi| (f, gi))).collect();
+                let outs = run_tasks(&all, &active);
+                merge!(all, outs);
+            }
+            Some(fdata)
+        }
+        Tier::PerFold => {
+            // one fold's distance matrices resident at a time; the γ
+            // grid still runs parallel inside the fold
+            for f in 0..fctx.len() {
+                let fd = FoldData::cached(&cfg.backend, &fctx[f]);
+                let tasks: Vec<(usize, usize)> = (0..ng)
+                    .map(|gi| (f, gi))
+                    .filter(|&(_, gi)| active[gi].iter().any(|&a| a))
+                    .collect();
+                let outs = run_wave(jobs, tasks.len(), |t, bufs| {
+                    let (_, gi) = tasks[t];
+                    run_gamma_task(cfg, &fctx[f], &fd, gi, &active[gi], bufs)
+                });
+                merge!(tasks, outs);
+                if f == 0 && cfg.adaptivity > 0 {
+                    prune_grid(&mut active, &val_sum, cfg.adaptivity);
+                }
+            }
+            None
+        }
+    };
 
     // mean losses; pick best (first hit wins ties — grids descend, so
     // that is the more strongly regularized model, liquidSVM's
@@ -180,15 +459,33 @@ pub fn run_cv(data: &Dataset, cfg: &CvConfig) -> CvResult {
     let best_gamma = cfg.grid.gammas[bg];
     let best_lambda = cfg.grid.lambdas[bl];
 
-    // final models at the selected point
+    // final models at the selected point (independent per fold ⇒ same
+    // wave executor).  The all-cached/streamed tiers reuse the fold
+    // kernel state computed for the grid; the per-fold tier recomputes
+    // it, so each of its workers transiently holds a fold's d² AND the
+    // exponentiated Gram (~2·max_fold elems, vs the ~1 the grid phase
+    // budgets per worker) — halve that wave's parallelism to stay
+    // inside (1+jobs)·max_fold.
+    let final_jobs = if tier == Tier::PerFold { ((jobs + 1) / 2).max(1) } else { jobs };
     let models = match cfg.select {
-        SelectMethod::FoldAverage => (0..folds.k())
-            .map(|f| train_fold_model(data, &folds, f, cfg, best_gamma, best_lambda))
-            .collect(),
+        SelectMethod::FoldAverage => run_wave(final_jobs, folds.k(), |f, bufs| {
+            let fd = fold_data.as_ref().map(|v| &v[f]);
+            train_fold_model(data, &folds, f, cfg, best_gamma, best_lambda, fd, bufs)
+        }),
         SelectMethod::RetrainOnFull => {
+            // the retrain works on the FULL working set, which is
+            // bigger than any fold the tier was sized for: free the
+            // grid-phase state first, then stream whenever the full
+            // d² + Gram pair (2n²) would itself blow the cap
+            drop(fold_data);
+            let retrain_streamed = tier == Tier::Streamed
+                || cfg
+                    .max_gram_mb
+                    .is_some_and(|mb| 2 * n * n > mb.saturating_mul(1 << 20) / 4);
             let all: Vec<usize> = (0..n).collect();
-            let kt = cfg.backend.gram(&data.x, &data.x, best_gamma, cfg.kernel);
-            let sol = solve(cfg.solver, &kt, &data.y, best_lambda, &cfg.params, None);
+            let sol = final_solve(
+                cfg, &data.x, &data.y, best_gamma, best_lambda, &cfg.params, retrain_streamed,
+            );
             vec![FoldModel { train_idx: all, coef: sol.coef }]
         }
     };
@@ -214,6 +511,35 @@ fn effective_fold_kind(cfg: &CvConfig, data: &Dataset) -> FoldKind {
     }
 }
 
+/// Solve one final model on `x`/`y` at (γ, λ), honoring the run's
+/// memory tier.
+fn final_solve(
+    cfg: &CvConfig,
+    x: &Matrix,
+    y: &[f32],
+    gamma: f32,
+    lambda: f32,
+    params: &SolverParams,
+    streamed: bool,
+) -> Solution {
+    if streamed {
+        let norms = x.row_sq_norms();
+        let mut k =
+            StreamedGram::new(&cfg.backend, x, x, &norms, &norms, cfg.kernel, gamma);
+        solve(cfg.solver, &mut k, y, lambda, params, None)
+    } else {
+        let d2 = cfg.backend.sq_dists(x, x);
+        let mut buf = GramBuffer::new();
+        buf.fill(plane::next_epoch(), &d2, cfg.kernel, gamma);
+        solve(cfg.solver, &mut buf, y, lambda, params, None)
+    }
+}
+
+/// Train one final fold model at the selected (γ*, λ*).  `fd` is the
+/// fold's kernel state from the grid phase when the tier kept it alive
+/// (cached d² is reused directly; streamed norms likewise); `None`
+/// (the per-fold tier) recomputes the fold's distances.
+#[allow(clippy::too_many_arguments)]
 fn train_fold_model(
     data: &Dataset,
     folds: &Folds,
@@ -221,14 +547,31 @@ fn train_fold_model(
     cfg: &CvConfig,
     gamma: f32,
     lambda: f32,
+    fd: Option<&FoldData>,
+    bufs: &mut WorkerBufs,
 ) -> FoldModel {
     let tr_idx = folds.train_indices(f);
     let dtr = data.subset(&tr_idx);
-    let kt = cfg.backend.gram(&dtr.x, &dtr.x, gamma, cfg.kernel);
     // final models get a roomier budget than the selection sweeps
     let params =
         SolverParams { max_iter: cfg.params.max_iter.min(16 * dtr.len().max(64)), ..cfg.params };
-    let sol = solve(cfg.solver, &kt, &dtr.y, lambda, &params, None);
+    let sol = match fd {
+        Some(FoldData::Cached { d2_tr, ep_tr, .. }) => {
+            bufs.ktr.fill(*ep_tr, d2_tr, cfg.kernel, gamma);
+            solve(cfg.solver, &mut bufs.ktr, &dtr.y, lambda, &params, None)
+        }
+        Some(FoldData::Streamed { tr_norms, .. }) => {
+            let mut k = StreamedGram::new(
+                &cfg.backend, &dtr.x, &dtr.x, tr_norms, tr_norms, cfg.kernel, gamma,
+            );
+            solve(cfg.solver, &mut k, &dtr.y, lambda, &params, None)
+        }
+        None => {
+            let d2 = cfg.backend.sq_dists(&dtr.x, &dtr.x);
+            bufs.ktr.fill(plane::next_epoch(), &d2, cfg.kernel, gamma);
+            solve(cfg.solver, &mut bufs.ktr, &dtr.y, lambda, &params, None)
+        }
+    };
     FoldModel { train_idx: tr_idx, coef: sol.coef }
 }
 
@@ -254,7 +597,10 @@ fn prune_grid(active: &mut [Vec<bool>], fold0: &[Vec<f32>], adaptivity: u8) {
 
 /// Average the decision values of the fold models on test data — the
 /// default test-phase combination (paper §2: "how these k models are
-/// combined during the test phase").
+/// combined during the test phase").  Cross-kernel values are produced
+/// tile-by-tile through the Gram plane into one reusable buffer
+/// (bounded by `max_gram_mb`), never as a full `m × n` cross Gram per
+/// model.
 pub fn predict_average(
     models: &[FoldModel],
     train: &Dataset,
@@ -262,15 +608,17 @@ pub fn predict_average(
     gamma: f32,
     kernel: KernelKind,
     backend: &GramBackend,
+    max_gram_mb: Option<usize>,
 ) -> Vec<f32> {
     let mut acc = vec![0.0f32; test_x.rows()];
+    let mut buf = TileBuffer::new();
+    // test-row norms computed once, shared across all fold models
+    let xn = test_x.row_sq_norms();
     for m in models {
         let sv = train.x.select_rows(&m.train_idx);
-        let k = backend.gram(test_x, &sv, gamma, kernel);
-        let sol = Solution::from_coef(m.coef.clone(), 0.0, 0);
-        for (a, v) in acc.iter_mut().zip(sol.decision_values(&k)) {
-            *a += v;
-        }
+        plane::accumulate_decisions(
+            backend, kernel, gamma, test_x, &xn, &sv, &m.coef, max_gram_mb, &mut buf, &mut acc,
+        );
     }
     let inv = 1.0 / models.len().max(1) as f32;
     for a in &mut acc {
@@ -341,7 +689,7 @@ mod tests {
         let res = run_cv(&d, &cfg);
         let test = synth::banana_binary(100, 12);
         let preds = predict_average(
-            &res.models, &d, &test.x, res.best_gamma, cfg.kernel, &cfg.backend,
+            &res.models, &d, &test.x, res.best_gamma, cfg.kernel, &cfg.backend, None,
         );
         let err = Loss::Classification.mean(&test.y, &preds);
         assert!(err < 0.3, "test error {err}");
@@ -360,5 +708,68 @@ mod tests {
         let res = run_cv(&d, &cfg);
         assert!(res.best_val_loss.is_finite());
         assert!(res.best_val_loss < 0.2, "pinball {}", res.best_val_loss);
+    }
+
+    fn assert_identical(a: &CvResult, b: &CvResult) {
+        assert_eq!(a.best_gamma.to_bits(), b.best_gamma.to_bits());
+        assert_eq!(a.best_lambda.to_bits(), b.best_lambda.to_bits());
+        assert_eq!(a.points_evaluated, b.points_evaluated);
+        for (ra, rb) in a.val_matrix.iter().zip(&b.val_matrix) {
+            for (va, vb) in ra.iter().zip(rb) {
+                assert!(
+                    va.to_bits() == vb.to_bits() || (va.is_nan() && vb.is_nan()),
+                    "val {va} vs {vb}"
+                );
+            }
+        }
+        assert_eq!(a.models.len(), b.models.len());
+        for (ma, mb) in a.models.iter().zip(&b.models) {
+            assert_eq!(ma.train_idx, mb.train_idx);
+            let ca: Vec<u32> = ma.coef.iter().map(|v| v.to_bits()).collect();
+            let cb: Vec<u32> = mb.coef.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ca, cb, "fold coefficients differ");
+        }
+    }
+
+    #[test]
+    fn parallel_grid_bit_identical_to_sequential() {
+        let d = synth::banana_binary(180, 14);
+        let mut seq = small_cfg(120);
+        seq.jobs = 1;
+        let mut par = small_cfg(120);
+        par.jobs = 4;
+        assert_identical(&run_cv(&d, &seq), &run_cv(&d, &par));
+    }
+
+    #[test]
+    fn parallel_adaptive_grid_bit_identical_to_sequential() {
+        let d = synth::banana_binary(160, 15);
+        let mut seq = small_cfg(107);
+        seq.adaptivity = 1;
+        seq.jobs = 1;
+        let mut par = seq.clone();
+        par.jobs = 3;
+        assert_identical(&run_cv(&d, &seq), &run_cv(&d, &par));
+    }
+
+    #[test]
+    fn streamed_tier_bit_identical_to_cached() {
+        let d = synth::banana_binary(140, 16);
+        let cached = small_cfg(94);
+        let mut capped = cached.clone();
+        capped.max_gram_mb = Some(0); // force the streamed tier
+        assert_identical(&run_cv(&d, &cached), &run_cv(&d, &capped));
+    }
+
+    #[test]
+    fn tier_selection_follows_cap() {
+        // 3 folds of 200 train / 100 val samples ⇒ 60k elems per fold
+        let sizes = [200 * 200 + 100 * 200; 3];
+        assert_eq!(pick_tier(None, 8, &sizes), Tier::AllCached);
+        assert_eq!(pick_tier(Some(1024), 2, &sizes), Tier::AllCached);
+        // 1 MiB = 262144 elems: with 2 workers, 3 folds + 2 buffers
+        // (300k) overflow but 1 fold + 2 buffers (180k) fits
+        assert_eq!(pick_tier(Some(1), 2, &sizes), Tier::PerFold);
+        assert_eq!(pick_tier(Some(0), 1, &sizes), Tier::Streamed);
     }
 }

@@ -73,6 +73,36 @@ impl GramBackend {
     pub fn gram(&self, x: &Matrix, y: &Matrix, gamma: f32, kind: KernelKind) -> Matrix {
         self.gram_multi(x, y, &[gamma], kind).pop().unwrap()
     }
+
+    /// Squared distances of `x` rows `r0..r1` against every `y` row,
+    /// written into `out` (row-major `(r1-r0) × y.rows()`, no
+    /// allocation).  `xn`/`yn` are the full row-norm vectors of `x`
+    /// and `y`; the scalar rung ignores them.  Values are bit-identical
+    /// to the same rows of [`GramBackend::sq_dists`] — the contract the
+    /// streamed/tiled Gram plane is built on.
+    pub fn sq_dists_tile_into(
+        &self,
+        x: &Matrix,
+        r0: usize,
+        r1: usize,
+        y: &Matrix,
+        xn: &[f32],
+        yn: &[f32],
+        out: &mut [f32],
+    ) {
+        let n = y.rows();
+        debug_assert!(r1 <= x.rows() && r0 <= r1);
+        debug_assert_eq!(out.len(), (r1 - r0) * n);
+        for (t, i) in (r0..r1).enumerate() {
+            let row = &mut out[t * n..(t + 1) * n];
+            match self {
+                GramBackend::Scalar => sq_dists_row_scalar(x.row(i), y, row),
+                GramBackend::Blocked | GramBackend::Xla(_) => {
+                    sq_dists_row_blocked(x.row(i), y, xn[i], yn, row)
+                }
+            }
+        }
+    }
 }
 
 fn gram_multi_cpu(
@@ -100,6 +130,41 @@ fn sq_dists_scalar(x: &Matrix, y: &Matrix) -> Matrix {
     out
 }
 
+/// 4-way unrolled dot product — the innermost kernel of the blocked
+/// path, shared by the full-matrix, row-tile, and single-entry entry
+/// points so all three produce bit-identical values (the streamed
+/// Gram plane relies on this; see `kernel::plane`).
+#[inline]
+pub(crate) fn dot4(xi: &[f32], yj: &[f32]) -> f32 {
+    let d = xi.len();
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = d / 4;
+    for c in 0..chunks {
+        let k = c * 4;
+        s0 += xi[k] * yj[k];
+        s1 += xi[k + 1] * yj[k + 1];
+        s2 += xi[k + 2] * yj[k + 2];
+        s3 += xi[k + 3] * yj[k + 3];
+    }
+    let mut dot = s0 + s1 + s2 + s3;
+    for k in chunks * 4..d {
+        dot += xi[k] * yj[k];
+    }
+    dot
+}
+
+/// One blocked-path squared distance from precomputed row norms.
+/// Floating-point cancellation in `‖x‖² + ‖y‖² − 2⟨x,y⟩` can go
+/// negative for near-duplicate rows, so the clamp lives here — at the
+/// source — rather than in each kernel's exponentiation.
+#[inline]
+pub(crate) fn sq_dist_norms(xi: &[f32], yj: &[f32], xn_i: f32, yn_j: f32) -> f32 {
+    (xn_i + yn_j - 2.0 * dot4(xi, yj)).max(0.0)
+}
+
 /// Norm-trick + blocked dot products:
 /// `d²(x,y) = ‖x‖² + ‖y‖² − 2⟨x,y⟩`, with the inner products computed
 /// in 4×-unrolled accumulators over j-tiles so the compiler emits SIMD
@@ -117,29 +182,31 @@ pub fn sq_dists_blocked(x: &Matrix, y: &Matrix) -> Matrix {
             let xi = x.row(i);
             let row = out.row_mut(i);
             for j in j0..j1 {
-                let yj = y.row(j);
-                // 4-way unrolled dot product
-                let mut s0 = 0.0f32;
-                let mut s1 = 0.0f32;
-                let mut s2 = 0.0f32;
-                let mut s3 = 0.0f32;
-                let chunks = d / 4;
-                for c in 0..chunks {
-                    let k = c * 4;
-                    s0 += xi[k] * yj[k];
-                    s1 += xi[k + 1] * yj[k + 1];
-                    s2 += xi[k + 2] * yj[k + 2];
-                    s3 += xi[k + 3] * yj[k + 3];
-                }
-                let mut dot = s0 + s1 + s2 + s3;
-                for k in chunks * 4..d {
-                    dot += xi[k] * yj[k];
-                }
-                row[j] = (xn[i] + yn[j] - 2.0 * dot).max(0.0);
+                row[j] = sq_dist_norms(xi, y.row(j), xn[i], yn[j]);
             }
         }
     }
     out
+}
+
+/// Squared distances of one `x` row against every `y` row, written
+/// into `out` (no allocation).  Per-pair math is identical to
+/// [`sq_dists_blocked`] (same `dot4`, same clamp), so a row produced
+/// here is bit-identical to the corresponding row of the full matrix.
+pub fn sq_dists_row_blocked(xi: &[f32], y: &Matrix, xn_i: f32, yn: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), y.rows());
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = sq_dist_norms(xi, y.row(j), xn_i, yn[j]);
+    }
+}
+
+/// Scalar-path squared distances of one `x` row (bit-identical to the
+/// corresponding row of [`GramBackend::Scalar`]'s full matrix).
+pub fn sq_dists_row_scalar(xi: &[f32], y: &Matrix, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), y.rows());
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = sq_dist(xi, y.row(j));
+    }
 }
 
 #[cfg(test)]
@@ -188,5 +255,49 @@ mod tests {
         let x = randmat(6, 3, 6);
         let k = GramBackend::Scalar.gram(&x, &x, 0.7, KernelKind::Laplace);
         assert!(k.as_slice().iter().all(|&v| (0.0..=1.0 + 1e-6).contains(&v)));
+    }
+
+    #[test]
+    fn tile_rows_bit_identical_to_full_matrix() {
+        let x = randmat(19, 9, 7);
+        let y = randmat(27, 9, 8);
+        let xn = x.row_sq_norms();
+        let yn = y.row_sq_norms();
+        for be in [GramBackend::Scalar, GramBackend::Blocked] {
+            let full = be.sq_dists(&x, &y);
+            let (r0, r1) = (5usize, 13usize);
+            let mut tile = vec![0.0f32; (r1 - r0) * y.rows()];
+            be.sq_dists_tile_into(&x, r0, r1, &y, &xn, &yn, &mut tile);
+            for (t, i) in (r0..r1).enumerate() {
+                assert_eq!(&tile[t * y.rows()..(t + 1) * y.rows()], full.row(i), "backend {be:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cancellation_never_goes_negative_and_backends_agree() {
+        // near-duplicate rows with large norms: the worst case for the
+        // norm trick's ‖x‖²+‖y‖²−2⟨x,y⟩ cancellation
+        let mut rng = crate::data::rng::Rng::new(11);
+        let base: Vec<f32> = (0..24).map(|_| rng.range(50.0, 60.0)).collect();
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for r in 0..12 {
+            let mut v = base.clone();
+            v[r % 24] += 1e-4 * (r as f32);
+            rows.push(v);
+        }
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = Matrix::from_rows(&refs);
+        let a = GramBackend::Scalar.sq_dists(&x, &x);
+        let b = GramBackend::Blocked.sq_dists(&x, &x);
+        assert!(a.as_slice().iter().all(|&v| v >= 0.0));
+        assert!(b.as_slice().iter().all(|&v| v >= 0.0), "blocked backend produced d² < 0");
+        // and the kernels built from either backend agree closely
+        for kind in [KernelKind::Gauss, KernelKind::Laplace] {
+            for (&u, &v) in a.as_slice().iter().zip(b.as_slice()) {
+                let (ku, kv) = (kind.of_sq_dist(u, 0.7), kind.of_sq_dist(v, 0.7));
+                assert!((ku - kv).abs() < 1e-4, "{kind:?}: {ku} vs {kv}");
+            }
+        }
     }
 }

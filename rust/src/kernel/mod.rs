@@ -3,13 +3,16 @@
 //! liquidSVM's speed rests on (a) fast Gram computation (SIMD/CUDA in
 //! the original; here a blocked Rust path and an XLA/PJRT artifact
 //! path) and (b) *reusing* the distance matrix across the whole γ grid
-//! during cross-validation.  Both live here.
+//! during cross-validation.  Both live here: raw distance/Gram
+//! computation in [`backend`], and the reuse machinery — the
+//! [`plane`] (Gram plane) with its `GramSource` contract, reusable
+//! exponentiation buffers, and streamed row-tiles — on top.
 
 pub mod backend;
-pub mod cache;
+pub mod plane;
 
 pub use backend::GramBackend;
-pub use cache::DistanceCache;
+pub use plane::{DenseGram, GramBuffer, GramSource, StreamedGram};
 
 use crate::data::matrix::Matrix;
 
@@ -22,11 +25,15 @@ pub enum KernelKind {
 }
 
 impl KernelKind {
-    /// Apply the kernel to a squared distance.
+    /// Apply the kernel to a squared distance.  Both branches clamp
+    /// `d² ≥ 0`: distances are clamped at the source for the CPU
+    /// backends ([`backend::sq_dist_norms`]), but fused accelerator
+    /// paths hand us raw values, and `exp(+ε/γ²) > 1` would otherwise
+    /// leak out of the kernel's `[0, 1]` range.
     #[inline]
     pub fn of_sq_dist(&self, d2: f32, gamma: f32) -> f32 {
         match self {
-            KernelKind::Gauss => (-d2 / (gamma * gamma)).exp(),
+            KernelKind::Gauss => (-d2.max(0.0) / (gamma * gamma)).exp(),
             KernelKind::Laplace => (-d2.max(0.0).sqrt() / gamma).exp(),
         }
     }
@@ -48,8 +55,10 @@ pub fn apply_kernel(d2: &Matrix, kind: KernelKind, gamma: f32) -> Matrix {
     out
 }
 
-/// Single kernel row k(x, y_j) for all rows y_j — the prediction path
-/// when no artifact bucket fits.
+/// Single kernel row k(x, y_j) for all rows y_j.  Kept as the
+/// one-off/debug primitive; batched prediction goes through
+/// [`plane::accumulate_decisions`] (tiled, zero-realloc) instead of
+/// looping this per row.
 pub fn kernel_row(x: &[f32], ys: &Matrix, kind: KernelKind, gamma: f32, out: &mut [f32]) {
     debug_assert_eq!(out.len(), ys.rows());
     for (j, o) in out.iter_mut().enumerate() {

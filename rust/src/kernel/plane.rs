@@ -1,0 +1,580 @@
+//! The **Gram plane** — the shared kernel compute layer between raw
+//! data and every consumer of kernel values (solvers, the CV grid, the
+//! predict/serve path).  See DESIGN.md §Compute-plane.
+//!
+//! The paper's speed claim rests on computing squared distances once
+//! and re-exponentiating them cheaply per γ.  The plane turns that idea
+//! into an explicit contract:
+//!
+//! * [`GramSource`] — how solvers *read* kernel values: row, row-pair
+//!   and entry access.  Methods take `&mut self` so an implementation
+//!   may fill internal scratch; a returned row stays valid until the
+//!   next access.
+//! * [`DenseGram`] — a borrowed, fully materialized Gram matrix (the
+//!   seed behavior, and the adapter for existing `&Matrix` call sites).
+//! * [`GramBuffer`] — an *owned, reusable* buffer a worker
+//!   exponentiates distances into **in place**.  Refilling for a new γ
+//!   never allocates once capacity is grown; the process-wide
+//!   `gram_allocs` counter proves it (see `metrics::counters`).
+//! * [`StreamedGram`] — row-tile streaming for when n² exceeds
+//!   `--max-gram-mb`: rows are recomputed on demand from the sample
+//!   matrices and row norms, bit-identically to the cached path
+//!   (guaranteed by sharing `backend`'s per-pair distance kernels).
+//! * [`accumulate_decisions`] — the batched predict path: cross
+//!   distances computed tile-by-tile into one reusable buffer,
+//!   exponentiated in place, and immediately folded into decision
+//!   values — replacing both the per-model full cross-Gram allocation
+//!   and any per-row kernel loop.
+
+use crate::data::matrix::{sq_dist, Matrix};
+use crate::metrics::counters;
+
+use super::backend::{self, GramBackend};
+use super::KernelKind;
+
+/// Hand out a fresh identity for a distance source.  [`GramBuffer`]
+/// keys its residency check on `(epoch, γ)`; an epoch is never reused,
+/// so a buffer can roam across folds/working sets without ever
+/// mistaking a new distance matrix at a recycled address for the one
+/// it last exponentiated.
+pub fn next_epoch() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static EPOCH: AtomicU64 = AtomicU64::new(1);
+    EPOCH.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Read access to a Gram matrix, as the solvers need it: single rows
+/// (gradient updates, matvec sweeps), row pairs (two-coordinate
+/// working sets), and scalar entries (diagonals, 2×2 subproblems).
+///
+/// Methods take `&mut self` because a streaming source materializes
+/// the requested row into internal scratch; a slice returned by
+/// [`GramSource::row`] is valid until the next call.  Dense sources
+/// simply return views into their storage.
+pub trait GramSource {
+    /// Number of left-hand rows (x side).
+    fn rows(&self) -> usize;
+    /// Number of right-hand rows (y side) — the expansion size.
+    fn cols(&self) -> usize;
+    /// Kernel row `i`: `k(x_i, y_j)` for all `j`.
+    fn row(&mut self, i: usize) -> &[f32];
+    /// Two rows at once (for 2-coordinate solvers); `i != j` expected.
+    fn row_pair(&mut self, i: usize, j: usize) -> (&[f32], &[f32]);
+    /// Single entry `k(x_i, y_j)`.
+    fn get(&mut self, i: usize, j: usize) -> f32;
+    /// Diagonal entry `k(x_i, y_i)` (square sources).
+    #[inline]
+    fn diag(&mut self, i: usize) -> f32 {
+        self.get(i, i)
+    }
+}
+
+/// A borrowed dense Gram matrix — the adapter between `&Matrix`
+/// producers (e.g. [`GramBackend::gram`]) and [`GramSource`] consumers.
+pub struct DenseGram<'a> {
+    k: &'a Matrix,
+}
+
+impl<'a> DenseGram<'a> {
+    pub fn new(k: &'a Matrix) -> DenseGram<'a> {
+        DenseGram { k }
+    }
+}
+
+impl GramSource for DenseGram<'_> {
+    #[inline]
+    fn rows(&self) -> usize {
+        self.k.rows()
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        self.k.cols()
+    }
+
+    #[inline]
+    fn row(&mut self, i: usize) -> &[f32] {
+        self.k.row(i)
+    }
+
+    #[inline]
+    fn row_pair(&mut self, i: usize, j: usize) -> (&[f32], &[f32]) {
+        (self.k.row(i), self.k.row(j))
+    }
+
+    #[inline]
+    fn get(&mut self, i: usize, j: usize) -> f32 {
+        self.k.get(i, j)
+    }
+}
+
+/// An owned, reusable Gram buffer: one per worker, exponentiated into
+/// in place for each γ the worker visits.  The residency key
+/// `(epoch, γ)` skips redundant exponentiation (the λ-chain access
+/// pattern), and refills never allocate once the buffer has grown to
+/// the largest working set the worker has seen — the "zero per-γ
+/// allocation" half of the plane contract, observable through the
+/// global `gram_allocs` / `gram_hits` / `gram_misses` counters.
+#[derive(Debug, Default)]
+pub struct GramBuffer {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+    resident: Option<(u64, f32)>,
+}
+
+impl GramBuffer {
+    pub fn new() -> GramBuffer {
+        GramBuffer::default()
+    }
+
+    /// Exponentiate `d2` into this buffer for `gamma`, in place.
+    /// `epoch` identifies the distance source (see [`next_epoch`]); a
+    /// repeat `(epoch, γ)` request is a cache hit and does no work.
+    pub fn fill(&mut self, epoch: u64, d2: &Matrix, kind: KernelKind, gamma: f32) {
+        if self.resident == Some((epoch, gamma))
+            && (self.rows, self.cols) == (d2.rows(), d2.cols())
+        {
+            counters::GRAM_CACHE_HITS.inc();
+            return;
+        }
+        counters::GRAM_CACHE_MISSES.inc();
+        let n = d2.rows() * d2.cols();
+        if self.data.capacity() < n {
+            counters::GRAM_ALLOCS.inc();
+        }
+        self.data.clear();
+        self.data
+            .extend(d2.as_slice().iter().map(|&v| kind.of_sq_dist(v, gamma)));
+        self.rows = d2.rows();
+        self.cols = d2.cols();
+        self.resident = Some((epoch, gamma));
+    }
+
+    /// Drop residency (e.g. the distance source is gone); keeps the
+    /// allocation for reuse.
+    pub fn invalidate(&mut self) {
+        self.resident = None;
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data[..self.rows * self.cols]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0 || self.cols == 0
+    }
+
+    /// Read an entry without requiring `&mut` (for tests/inspection).
+    pub fn value(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Current storage capacity in elements (for alloc-reuse tests).
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+}
+
+impl GramSource for GramBuffer {
+    #[inline]
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    fn row(&mut self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    fn row_pair(&mut self, i: usize, j: usize) -> (&[f32], &[f32]) {
+        debug_assert_ne!(i, j);
+        let c = self.cols;
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        let (head, tail) = self.data.split_at(hi * c);
+        let (a, b) = (&head[lo * c..(lo + 1) * c], &tail[..c]);
+        if i < j {
+            (a, b)
+        } else {
+            (b, a)
+        }
+    }
+
+    #[inline]
+    fn get(&mut self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+}
+
+/// Streaming Gram source for working sets whose distance matrix does
+/// not fit the `--max-gram-mb` cap: no n² state is ever held; each
+/// requested row is recomputed from the sample matrices into a small
+/// scratch (two rows, so two-coordinate solvers can hold a pair).
+///
+/// Row values are bit-identical to the cached path because the same
+/// per-pair distance kernels are used ([`backend::sq_dist_norms`] /
+/// [`sq_dist`]) — property-tested in `tests/property_tests.rs`.
+/// Access cost is O(d·cols) per row, so this trades time for memory;
+/// the CV engine only selects it when the cap forces it.
+pub struct StreamedGram<'a> {
+    x: &'a Matrix,
+    y: &'a Matrix,
+    xn: &'a [f32],
+    yn: &'a [f32],
+    scalar: bool,
+    kind: KernelKind,
+    gamma: f32,
+    scratch: [Vec<f32>; 2],
+    resident: [usize; 2],
+    /// which scratch slot the next single-row fill overwrites
+    flip: usize,
+}
+
+impl<'a> StreamedGram<'a> {
+    /// `xn`/`yn` are the row norms of `x`/`y` (compute once per fold,
+    /// share across γ).  The backend picks the per-pair distance rung
+    /// (scalar vs norm-trick) so values match what the cached path
+    /// would have produced for the same backend.
+    pub fn new(
+        backend: &GramBackend,
+        x: &'a Matrix,
+        y: &'a Matrix,
+        xn: &'a [f32],
+        yn: &'a [f32],
+        kind: KernelKind,
+        gamma: f32,
+    ) -> StreamedGram<'a> {
+        StreamedGram {
+            x,
+            y,
+            xn,
+            yn,
+            scalar: matches!(backend, GramBackend::Scalar),
+            kind,
+            gamma,
+            scratch: [vec![0.0; y.rows()], vec![0.0; y.rows()]],
+            resident: [usize::MAX, usize::MAX],
+            flip: 0,
+        }
+    }
+
+    fn fill_slot(&mut self, slot: usize, i: usize) {
+        if self.resident[slot] == i {
+            return;
+        }
+        let xi = self.x.row(i);
+        let buf = &mut self.scratch[slot];
+        if self.scalar {
+            backend::sq_dists_row_scalar(xi, self.y, buf);
+        } else {
+            backend::sq_dists_row_blocked(xi, self.y, self.xn[i], self.yn, buf);
+        }
+        for v in buf.iter_mut() {
+            *v = self.kind.of_sq_dist(*v, self.gamma);
+        }
+        self.resident[slot] = i;
+    }
+
+    fn d2_pair(&self, i: usize, j: usize) -> f32 {
+        if self.scalar {
+            sq_dist(self.x.row(i), self.y.row(j))
+        } else {
+            backend::sq_dist_norms(self.x.row(i), self.y.row(j), self.xn[i], self.yn[j])
+        }
+    }
+}
+
+impl GramSource for StreamedGram<'_> {
+    #[inline]
+    fn rows(&self) -> usize {
+        self.x.rows()
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        self.y.rows()
+    }
+
+    fn row(&mut self, i: usize) -> &[f32] {
+        // keep the most recent *other* row around: the coordinate
+        // solvers frequently revisit the same one or two rows
+        let slot = if self.resident[0] == i {
+            0
+        } else if self.resident[1] == i {
+            1
+        } else {
+            self.flip ^= 1;
+            self.flip
+        };
+        self.fill_slot(slot, i);
+        &self.scratch[slot]
+    }
+
+    fn row_pair(&mut self, i: usize, j: usize) -> (&[f32], &[f32]) {
+        // pin i to slot 0 and j to slot 1 unless already resident
+        if self.resident[1] == i || self.resident[0] == j {
+            self.fill_slot(1, i);
+            self.fill_slot(0, j);
+            let [a, b] = &self.scratch;
+            (b.as_slice(), a.as_slice())
+        } else {
+            self.fill_slot(0, i);
+            self.fill_slot(1, j);
+            let [a, b] = &self.scratch;
+            (a.as_slice(), b.as_slice())
+        }
+    }
+
+    fn get(&mut self, i: usize, j: usize) -> f32 {
+        if self.resident[0] == i {
+            return self.scratch[0][j];
+        }
+        if self.resident[1] == i {
+            return self.scratch[1][j];
+        }
+        self.kind.of_sq_dist(self.d2_pair(i, j), self.gamma)
+    }
+}
+
+/// Reusable cross-tile buffer for the batched predict path: one per
+/// caller, grown to the largest tile seen, reused across models,
+/// tiles, and requests.
+#[derive(Debug, Default)]
+pub struct TileBuffer {
+    data: Vec<f32>,
+}
+
+impl TileBuffer {
+    pub fn new() -> TileBuffer {
+        TileBuffer::default()
+    }
+
+    fn ensure(&mut self, n: usize) -> &mut [f32] {
+        if self.data.len() < n {
+            if self.data.capacity() < n {
+                counters::GRAM_ALLOCS.inc();
+            }
+            self.data.resize(n, 0.0);
+        }
+        &mut self.data[..n]
+    }
+}
+
+/// Rows per cross tile under a byte cap: the tile (`rows × cols` f32)
+/// must fit `cap_mb` when a cap is set, with a floor of one row and a
+/// default of 256 rows otherwise.
+pub fn tile_rows(cap_mb: Option<usize>, cols: usize) -> usize {
+    const DEFAULT_ROWS: usize = 256;
+    match cap_mb {
+        None => DEFAULT_ROWS,
+        Some(mb) => {
+            let cap_elems = mb.saturating_mul(1 << 20) / 4;
+            (cap_elems / cols.max(1)).clamp(1, DEFAULT_ROWS)
+        }
+    }
+}
+
+/// Batched decision-value accumulation: for every `test_x` row `i`,
+/// add `Σ_j coef_j · k(x_i, sv_j)` into `acc[i]`.
+///
+/// Cross distances are computed tile-by-tile into `buf` (zero
+/// allocation in steady state), exponentiated in place, and folded
+/// into `acc` — the Gram-plane replacement for materializing an
+/// `m × n` cross Gram per model (and for per-row kernel loops in the
+/// serve path).  `xn` carries the `test_x` row norms, computed once by
+/// the caller and shared across the fold models of a prediction (the
+/// `sv`-side norms are per-model and computed here).  On the XLA
+/// backend with a Gauss kernel each tile goes through the fused
+/// artifact instead, falling back to the CPU tiles on a bucket miss.
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate_decisions(
+    backend: &GramBackend,
+    kind: KernelKind,
+    gamma: f32,
+    test_x: &Matrix,
+    xn: &[f32],
+    sv: &Matrix,
+    coef: &[f32],
+    cap_mb: Option<usize>,
+    buf: &mut TileBuffer,
+    acc: &mut [f32],
+) {
+    let (m, n) = (test_x.rows(), sv.rows());
+    assert_eq!(coef.len(), n, "coefficient/expansion mismatch");
+    assert_eq!(acc.len(), m);
+    assert_eq!(xn.len(), m, "test-row norms mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let step = tile_rows(cap_mb, n);
+    if matches!(backend, GramBackend::Xla(_)) && kind == KernelKind::Gauss {
+        // fused artifact path: distances+exp happen inside the
+        // artifact, so neither norm vector is touched; marshalling
+        // copies anyway, so a per-tile sub-matrix is the natural unit
+        let mut r0 = 0;
+        while r0 < m {
+            let r1 = (r0 + step).min(m);
+            let idx: Vec<usize> = (r0..r1).collect();
+            let tile_x = test_x.select_rows(&idx);
+            let k = backend.gram(&tile_x, sv, gamma, kind);
+            for (t, i) in (r0..r1).enumerate() {
+                acc[i] += dot_sparse(coef, k.row(t));
+            }
+            r0 = r1;
+        }
+        return;
+    }
+    let yn = sv.row_sq_norms();
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + step).min(m);
+        let tile = buf.ensure((r1 - r0) * n);
+        backend.sq_dists_tile_into(test_x, r0, r1, sv, xn, &yn, tile);
+        for v in tile.iter_mut() {
+            *v = kind.of_sq_dist(*v, gamma);
+        }
+        for (t, i) in (r0..r1).enumerate() {
+            acc[i] += dot_sparse(coef, &tile[t * n..(t + 1) * n]);
+        }
+        r0 = r1;
+    }
+}
+
+/// `Σ_j coef_j · row_j`, skipping zero coefficients (most are zero at
+/// hinge solutions; prediction cost scales with #SV).  The single
+/// accumulation shared by the tiled predict path here and
+/// [`crate::solver::Solution::decision_values_src`], so the CV and
+/// serve paths can never drift apart numerically.
+#[inline]
+pub fn dot_sparse(coef: &[f32], row: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (c, r) in coef.iter().zip(row) {
+        if *c != 0.0 {
+            s += c * r;
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randmat(m: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        Matrix::from_vec((0..m * d).map(|_| rng.range(-2.0, 2.0)).collect(), m, d)
+    }
+
+    #[test]
+    fn gram_buffer_matches_dense_and_reuses_capacity() {
+        let x = randmat(17, 6, 1);
+        let be = GramBackend::Blocked;
+        let d2 = be.sq_dists(&x, &x);
+        let epoch = next_epoch();
+        let mut buf = GramBuffer::new();
+        let before = counters::snapshot();
+        buf.fill(epoch, &d2, KernelKind::Gauss, 1.3);
+        buf.fill(epoch, &d2, KernelKind::Gauss, 1.3); // hit
+        buf.fill(epoch, &d2, KernelKind::Gauss, 0.7); // new γ, same storage
+        let after = counters::snapshot();
+        assert!(after.gram_cache_hits >= before.gram_cache_hits + 1);
+        assert!(after.gram_cache_misses >= before.gram_cache_misses + 2);
+        let dense = be.gram(&x, &x, 0.7, KernelKind::Gauss);
+        assert_eq!(buf.as_slice(), dense.as_slice());
+    }
+
+    #[test]
+    fn gamma_switch_reuses_buffer_storage() {
+        // the CV λ-inside-γ access pattern: four distinct γ on one
+        // distance source cost one allocation, then pure reuse
+        let x = Matrix::from_rows(&[&[0.0], &[1.0], &[3.0]]);
+        let d2 = GramBackend::Blocked.sq_dists(&x, &x);
+        let epoch = next_epoch();
+        let mut buf = GramBuffer::new();
+        buf.fill(epoch, &d2, KernelKind::Gauss, 0.5);
+        let cap_after_first = buf.capacity();
+        for &g in &[1.5, 0.7, 2.5, 1.5] {
+            buf.fill(epoch, &d2, KernelKind::Gauss, g);
+        }
+        assert_eq!(buf.capacity(), cap_after_first);
+        // d2(0,2)=9, γ=2 → exp(-9/4)
+        buf.fill(epoch, &d2, KernelKind::Gauss, 2.0);
+        assert!((buf.value(0, 2) - (-2.25f32).exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gram_buffer_row_pair_is_disjoint_and_ordered() {
+        let x = randmat(9, 4, 2);
+        let d2 = GramBackend::Blocked.sq_dists(&x, &x);
+        let mut buf = GramBuffer::new();
+        buf.fill(next_epoch(), &d2, KernelKind::Gauss, 1.0);
+        let dense = GramBackend::Blocked.gram(&x, &x, 1.0, KernelKind::Gauss);
+        let (a, b) = buf.row_pair(6, 2);
+        assert_eq!(a, dense.row(6));
+        assert_eq!(b, dense.row(2));
+        let (a, b) = buf.row_pair(2, 6);
+        assert_eq!(a, dense.row(2));
+        assert_eq!(b, dense.row(6));
+    }
+
+    #[test]
+    fn streamed_rows_bit_identical_to_dense() {
+        let x = randmat(14, 5, 3);
+        let y = randmat(11, 5, 4);
+        let (xn, yn) = (x.row_sq_norms(), y.row_sq_norms());
+        for be in [GramBackend::Scalar, GramBackend::Blocked] {
+            for kind in [KernelKind::Gauss, KernelKind::Laplace] {
+                let dense = be.gram(&x, &y, 0.9, kind);
+                let mut s = StreamedGram::new(&be, &x, &y, &xn, &yn, kind, 0.9);
+                for i in 0..x.rows() {
+                    assert_eq!(s.row(i), dense.row(i), "{be:?} {kind:?} row {i}");
+                }
+                let (a, b) = s.row_pair(3, 8);
+                assert_eq!(a, dense.row(3));
+                assert_eq!(b, dense.row(8));
+                assert_eq!(s.get(7, 2), dense.get(7, 2));
+                // entry read with no resident row: computed directly
+                let mut fresh = StreamedGram::new(&be, &x, &y, &xn, &yn, kind, 0.9);
+                assert_eq!(fresh.get(9, 10), dense.get(9, 10));
+            }
+        }
+    }
+
+    #[test]
+    fn tile_rows_respects_cap() {
+        assert_eq!(tile_rows(None, 100), 256);
+        // 1 MB / 4 bytes = 262144 elems; 262144 / 1000 cols = 262 rows → clamped to 256
+        assert_eq!(tile_rows(Some(1), 1000), 256);
+        // tiny cap still makes progress
+        assert_eq!(tile_rows(Some(0), 1000), 1);
+    }
+
+    #[test]
+    fn accumulate_decisions_matches_full_cross_gram() {
+        let test_x = randmat(33, 7, 5);
+        let sv = randmat(21, 7, 6);
+        let mut rng = crate::data::rng::Rng::new(7);
+        let coef: Vec<f32> =
+            (0..21).map(|i| if i % 3 == 0 { 0.0 } else { rng.range(-1.0, 1.0) }).collect();
+        let xn = test_x.row_sq_norms();
+        for be in [GramBackend::Scalar, GramBackend::Blocked] {
+            let full = be.gram(&test_x, &sv, 1.1, KernelKind::Gauss);
+            let want: Vec<f32> = (0..33).map(|i| dot_sparse(&coef, full.row(i))).collect();
+            for cap in [None, Some(0)] {
+                let mut acc = vec![0.0f32; 33];
+                let mut buf = TileBuffer::new();
+                accumulate_decisions(
+                    &be, KernelKind::Gauss, 1.1, &test_x, &xn, &sv, &coef, cap, &mut buf,
+                    &mut acc,
+                );
+                assert_eq!(acc, want, "{be:?} cap {cap:?}");
+            }
+        }
+    }
+}

@@ -30,6 +30,14 @@
 //! println!("error = {:.4}", res.error);
 //! ```
 
+// House style for the numeric kernels: hot loops index several
+// parallel buffers at once, so the range-loop and complex-type lints
+// fight the code instead of improving it.  Everything else in clippy
+// is enforced by CI (`cargo clippy --all-targets -- -D warnings`).
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::type_complexity)]
+#![allow(clippy::new_without_default)]
+
 pub mod baselines;
 pub mod cells;
 pub mod coordinator;

@@ -132,6 +132,11 @@ fn build_config(args: &Args) -> Result<Config> {
     if let Some(j) = args.get("jobs") {
         cfg = cfg.jobs(j.parse().map_err(|_| anyhow!("--jobs: cannot parse `{j}`"))?);
     }
+    // Gram-state budget for the CV engine (0 = unlimited)
+    if let Some(mb) = args.get("max-gram-mb") {
+        let mb: usize = mb.parse().map_err(|_| anyhow!("--max-gram-mb: cannot parse `{mb}`"))?;
+        cfg = cfg.max_gram_mb(mb);
+    }
     // --cells is the readable alias of the paper's --voronoi syntax
     match (args.get("voronoi"), args.get("cells")) {
         (Some(_), Some(_)) => bail!("--voronoi and --cells are aliases; give only one"),
@@ -354,9 +359,9 @@ fn print_help() {
 
 USAGE:
   liquidsvm train [--data NAME|--file PATH] [--scenario binary|mc|mc-ava|ls|qt|ex|npl|roc]
-                  [--n N] [--threads T] [--jobs J] [--display D] [--grid-choice 0|1|2]
-                  [--adaptivity 0|1|2] [--cells SPEC|--voronoi SPEC] [--libsvm-grid]
-                  [--backend scalar|blocked|xla] [--folds K] [--seed S]
+                  [--n N] [--threads T] [--jobs J] [--max-gram-mb MB] [--display D]
+                  [--grid-choice 0|1|2] [--adaptivity 0|1|2] [--cells SPEC|--voronoi SPEC]
+                  [--libsvm-grid] [--backend scalar|blocked|xla] [--folds K] [--seed S]
                   [--save MODEL.sol | --save MODEL.sol.d]
   liquidsvm predict --model MODEL.sol[.d] [--data NAME|--file PATH] [--out PREDICTIONS.txt]
   liquidsvm serve [--port P] [--host H] [--models name=a.sol,name2=b.sol.d]
@@ -370,8 +375,11 @@ USAGE:
 
 Options take `--key value` or `--key=value`; each key at most once.
 `--cells`/`--voronoi` specs: 0 (off), chunks,SIZE, 1,SIZE (Voronoi),
-5,SIZE (overlapping Voronoi), 6,SIZE (recursive tree).  `--jobs` sets
-the parallel cell driver's worker count (defaults to --threads).
+5,SIZE (overlapping Voronoi), 6,SIZE (recursive tree).  `--jobs` is
+the shared worker budget (defaults to --threads), split between the
+cell driver and each unit's parallel fold×γ CV grid.  `--max-gram-mb`
+caps resident distance/Gram memory per CV run (default 1024, 0 =
+unlimited); past the cap the engine streams kernel row-tiles.
 Saving to a `.sol.d` path writes a sharded bundle (one shard per cell)
 that `liquidsvm serve` loads lazily under --max-shard-mb.
 

@@ -33,12 +33,21 @@ impl Counter {
     }
 }
 
-/// Gram requests served from [`crate::kernel::DistanceCache`]'s held
-/// kernel matrix (no exponentiation pass needed).
+/// Gram requests answered by an already-resident exponentiation in a
+/// [`crate::kernel::plane::GramBuffer`] (no work needed) — the λ-chain
+/// reuse pattern of the CV grid.
 pub static GRAM_CACHE_HITS: Counter = Counter::new();
 
 /// Gram requests that required an exponentiation pass over distances.
 pub static GRAM_CACHE_MISSES: Counter = Counter::new();
+
+/// Gram-plane buffer (re)allocations: incremented only when a
+/// [`crate::kernel::plane::GramBuffer`] / `TileBuffer` must grow its
+/// storage.  In steady state this stays flat while `gram_misses`
+/// advances — the observable proof that per-γ Gram matrices are
+/// exponentiated into reusable buffers instead of freshly allocated
+/// (the CV hot-loop contract; see DESIGN.md §Compute-plane).
+pub static GRAM_ALLOCS: Counter = Counter::new();
 
 /// Artifact executions on the PJRT runtime
 /// ([`crate::runtime::XlaRuntime`]).
@@ -57,6 +66,7 @@ pub static CELL_TRAIN_US: Counter = Counter::new();
 pub struct CounterSnapshot {
     pub gram_cache_hits: u64,
     pub gram_cache_misses: u64,
+    pub gram_allocs: u64,
     pub xla_calls: u64,
     pub cell_units_trained: u64,
     pub cell_train_us: u64,
@@ -67,9 +77,11 @@ impl CounterSnapshot {
     /// `stats` command and the CV engine's display output.
     pub fn report(&self) -> String {
         format!(
-            "gram_hits={} gram_misses={} xla_calls={} cell_units={} cell_train_us={}",
+            "gram_hits={} gram_misses={} gram_allocs={} xla_calls={} cell_units={} \
+             cell_train_us={}",
             self.gram_cache_hits,
             self.gram_cache_misses,
+            self.gram_allocs,
             self.xla_calls,
             self.cell_units_trained,
             self.cell_train_us
@@ -81,6 +93,7 @@ pub fn snapshot() -> CounterSnapshot {
     CounterSnapshot {
         gram_cache_hits: GRAM_CACHE_HITS.get(),
         gram_cache_misses: GRAM_CACHE_MISSES.get(),
+        gram_allocs: GRAM_ALLOCS.get(),
         xla_calls: XLA_CALLS.get(),
         cell_units_trained: CELL_UNITS_TRAINED.get(),
         cell_train_us: CELL_TRAIN_US.get(),
@@ -102,7 +115,10 @@ mod tests {
     #[test]
     fn snapshot_reports_all_keys() {
         let r = snapshot().report();
-        for key in ["gram_hits=", "gram_misses=", "xla_calls=", "cell_units=", "cell_train_us="] {
+        for key in [
+            "gram_hits=", "gram_misses=", "gram_allocs=", "xla_calls=", "cell_units=",
+            "cell_train_us=",
+        ] {
             assert!(r.contains(key), "missing {key} in {r}");
         }
     }

@@ -123,7 +123,7 @@ mod tests {
         let r = s.report(3, &usage);
         for key in [
             "models=3", "requests=10", "batches=2", "rows=10", "pad_rows=6", "mean_batch=5.0",
-            "p50_us=", "p95_us=", "p99_us=", "gram_hits=", "xla_calls=",
+            "p50_us=", "p95_us=", "p99_us=", "gram_hits=", "gram_allocs=", "xla_calls=",
             "shards=2/4", "shard_bytes=2000/4000", "shard_hits=7", "shard_loads=2",
             "shard_evictions=1",
         ] {

@@ -13,6 +13,12 @@
 //! mini-model (loading the shard lazily on first touch — see
 //! `registry`).  A shard-load failure fails only that batch's rows,
 //! never the worker thread.
+//!
+//! Kernel evaluation under a fused predict goes through the Gram
+//! plane's tiled cross-distance path (`kernel::plane`, via
+//! `cv::predict_average`): one reusable tile buffer per call instead
+//! of a per-row kernel loop or a full test×SV cross Gram, bounded by
+//! the model config's `max_gram_mb` (see DESIGN.md §Compute-plane).
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};

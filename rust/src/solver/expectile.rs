@@ -12,12 +12,12 @@
 //! monotonicity).  Cyclic sweeps with incremental f-updates until the
 //! largest coordinate move falls below eps.
 
-use crate::data::matrix::Matrix;
+use crate::kernel::plane::GramSource;
 
 use super::{box_c, Solution, SolverParams};
 
-pub fn solve(
-    k: &Matrix,
+pub fn solve<K: GramSource + ?Sized>(
+    k: &mut K,
     y: &[f32],
     lambda: f32,
     tau: f32,
@@ -48,7 +48,7 @@ pub fn solve(
     while sweep_max > params.eps * scale && iters < params.max_iter {
         sweep_max = 0.0;
         for i in 0..n {
-            let kii = k.get(i, i).max(1e-12);
+            let kii = k.diag(i).max(1e-12);
             // residual with β_i's own contribution removed:
             // r_i(β_i) = y_i − (f_i − k_ii β_i) − k_ii β_i
             let rest = y[i] - (f[i] - kii * beta[i]);
@@ -99,6 +99,8 @@ pub fn solve(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::matrix::Matrix;
+    use crate::kernel::plane::DenseGram;
     use crate::kernel::{GramBackend, KernelKind};
 
     fn setup(n: usize, seed: u64) -> (Matrix, Vec<f32>) {
@@ -112,9 +114,9 @@ mod tests {
         // τ = 0.5 reduces to (half-scaled) least squares — compare fits
         let (k, y) = setup(100, 1);
         let p = SolverParams { eps: 1e-5, ..Default::default() };
-        let ex = solve(&k, &y, 1e-3, 0.5, &p, None).decision_values(&k);
+        let ex = solve(&mut DenseGram::new(&k), &y, 1e-3, 0.5, &p, None).decision_values(&k);
         // ℓ_{0.5}(r) = r²/2, so expectile λ matches LS λ at half weight:
-        let ls = crate::solver::ls::solve(&k, &y, 2e-3, &p, None).decision_values(&k);
+        let ls = crate::solver::ls::solve(&mut DenseGram::new(&k), &y, 2e-3, &p, None).decision_values(&k);
         let diff: f32 =
             ex.iter().zip(&ls).map(|(a, b)| (a - b).abs()).sum::<f32>() / y.len() as f32;
         assert!(diff < 0.05, "mean |expectile - ls| = {diff}");
@@ -124,8 +126,8 @@ mod tests {
     fn high_expectile_sits_above_low() {
         let (k, y) = setup(150, 2);
         let p = SolverParams::default();
-        let hi = solve(&k, &y, 1e-4, 0.9, &p, None).decision_values(&k);
-        let lo = solve(&k, &y, 1e-4, 0.1, &p, None).decision_values(&k);
+        let hi = solve(&mut DenseGram::new(&k), &y, 1e-4, 0.9, &p, None).decision_values(&k);
+        let lo = solve(&mut DenseGram::new(&k), &y, 1e-4, 0.1, &p, None).decision_values(&k);
         let gap: f32 = hi.iter().zip(&lo).map(|(a, b)| a - b).sum::<f32>() / y.len() as f32;
         assert!(gap > 0.0, "expectile ordering violated, gap {gap}");
     }
@@ -135,7 +137,7 @@ mod tests {
         let (k, y) = setup(60, 3);
         let lambda = 1e-3;
         let tau = 0.7;
-        let sol = solve(&k, &y, lambda, tau, &SolverParams { eps: 1e-6, ..Default::default() }, None);
+        let sol = solve(&mut DenseGram::new(&k), &y, lambda, tau, &SolverParams { eps: 1e-6, ..Default::default() }, None);
         let f = sol.decision_values(&k);
         let c = box_c(lambda, y.len());
         for i in 0..y.len() {
@@ -155,8 +157,8 @@ mod tests {
     fn warm_start_converges() {
         let (k, y) = setup(80, 4);
         let p = SolverParams::default();
-        let a = solve(&k, &y, 1e-3, 0.8, &p, None);
-        let b = solve(&k, &y, 8e-4, 0.8, &p, Some(&a.coef));
+        let a = solve(&mut DenseGram::new(&k), &y, 1e-3, 0.8, &p, None);
+        let b = solve(&mut DenseGram::new(&k), &y, 8e-4, 0.8, &p, Some(&a.coef));
         assert!(b.iterations <= a.iterations * 2);
     }
 }

@@ -14,7 +14,7 @@
 //! violation, and warm starting clips a previous α into the new box and
 //! rebuilds the gradient at O(n·#SV).
 
-use crate::data::matrix::Matrix;
+use crate::kernel::plane::GramSource;
 
 use super::{box_c, Solution, SolverParams};
 
@@ -39,8 +39,8 @@ fn clip_step(alpha: f32, g: f32, q: f32, lo: f32, hi: f32) -> f32 {
     target.clamp(lo, hi) - alpha
 }
 
-pub fn solve(
-    k: &Matrix,
+pub fn solve<K: GramSource + ?Sized>(
+    k: &mut K,
     y: &[f32],
     lambda: f32,
     w: f32,
@@ -106,7 +106,7 @@ pub fn solve(
 
         if i2 == usize::MAX || i2 == i1 {
             // single movable coordinate
-            let d = clip_step(alpha[i1], g[i1], k.get(i1, i1), 0.0, hi[i1]);
+            let d = clip_step(alpha[i1], g[i1], k.diag(i1), 0.0, hi[i1]);
             apply_step(k, y, &mut alpha, &mut g, i1, d);
             (i1, v1, i2, _v2) = select(&alpha, &g);
             iters += 1;
@@ -114,8 +114,8 @@ pub fn solve(
         }
 
         // exact 2-d box solve on (i1, i2)
-        let q11 = k.get(i1, i1).max(1e-12);
-        let q22 = k.get(i2, i2).max(1e-12);
+        let q11 = k.diag(i1).max(1e-12);
+        let q22 = k.diag(i2).max(1e-12);
         let q12 = y[i1] * y[i2] * k.get(i1, i2);
         let (g1, g2) = (g[i1], g[i2]);
         let det = q11 * q22 - q12 * q12;
@@ -166,8 +166,7 @@ pub fn solve(
         alpha[i2] += d2;
         let yi_d1 = y[i1] * d1;
         let yi_d2 = y[i2] * d2;
-        let k1 = k.row(i1);
-        let k2 = k.row(i2);
+        let (k1, k2) = k.row_pair(i1, i2);
         let (mut n1, mut w1) = (usize::MAX, 0.0f32);
         let (mut n2, mut w2) = (usize::MAX, 0.0f32);
         for j in 0..n {
@@ -200,7 +199,14 @@ pub fn solve(
 }
 
 #[inline]
-fn apply_step(k: &Matrix, y: &[f32], alpha: &mut [f32], g: &mut [f32], i: usize, d: f32) {
+fn apply_step<K: GramSource + ?Sized>(
+    k: &mut K,
+    y: &[f32],
+    alpha: &mut [f32],
+    g: &mut [f32],
+    i: usize,
+    d: f32,
+) {
     if d == 0.0 {
         return;
     }
@@ -221,6 +227,7 @@ pub fn alpha_from_solution(sol: &Solution, y: &[f32]) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernel::plane::DenseGram;
     use crate::kernel::{GramBackend, KernelKind};
     use crate::data::matrix::Matrix;
 
@@ -235,7 +242,7 @@ mod tests {
     #[test]
     fn separates_clusters() {
         let (k, y) = separable();
-        let sol = solve(&k, &y, 0.01, 0.5, &SolverParams::default(), None);
+        let sol = solve(&mut DenseGram::new(&k), &y, 0.01, 0.5, &SolverParams::default(), None);
         let f = sol.decision_values(&k);
         for (fi, yi) in f.iter().zip(&y) {
             assert!(fi * yi > 0.0, "decision {fi} label {yi}");
@@ -246,7 +253,7 @@ mod tests {
     fn alpha_within_box() {
         let (k, y) = separable();
         let lambda = 0.05;
-        let sol = solve(&k, &y, lambda, 0.5, &SolverParams::default(), None);
+        let sol = solve(&mut DenseGram::new(&k), &y, lambda, 0.5, &SolverParams::default(), None);
         let c = box_c(lambda, y.len());
         for (ci, yi) in sol.coef.iter().zip(&y) {
             let a = ci * yi; // recover α
@@ -257,10 +264,10 @@ mod tests {
     #[test]
     fn warm_start_fewer_iterations() {
         let (k, y) = separable();
-        let cold = solve(&k, &y, 0.01, 0.5, &SolverParams::default(), None);
+        let cold = solve(&mut DenseGram::new(&k), &y, 0.01, 0.5, &SolverParams::default(), None);
         let warm_alpha = alpha_from_solution(&cold, &y);
-        let warm = solve(&k, &y, 0.008, 0.5, &SolverParams::default(), Some(&warm_alpha));
-        let cold2 = solve(&k, &y, 0.008, 0.5, &SolverParams::default(), None);
+        let warm = solve(&mut DenseGram::new(&k), &y, 0.008, 0.5, &SolverParams::default(), Some(&warm_alpha));
+        let cold2 = solve(&mut DenseGram::new(&k), &y, 0.008, 0.5, &SolverParams::default(), None);
         assert!(warm.iterations <= cold2.iterations, "{} > {}", warm.iterations, cold2.iterations);
         assert!((warm.objective - cold2.objective).abs() < 1e-3 * (1.0 + cold2.objective.abs()));
     }
@@ -270,7 +277,7 @@ mod tests {
         let (k, y) = separable();
         let lambda = 0.05;
         let w = 0.9;
-        let sol = solve(&k, &y, lambda, w, &SolverParams::default(), None);
+        let sol = solve(&mut DenseGram::new(&k), &y, lambda, w, &SolverParams::default(), None);
         let c = box_c(lambda, y.len());
         for (ci, yi) in sol.coef.iter().zip(&y) {
             let a = ci * yi;
@@ -283,8 +290,8 @@ mod tests {
     fn objective_decreases_with_smaller_lambda() {
         // smaller λ ⇒ bigger box ⇒ lower (more negative) dual minimum
         let (k, y) = separable();
-        let a = solve(&k, &y, 0.1, 0.5, &SolverParams::default(), None);
-        let b = solve(&k, &y, 0.01, 0.5, &SolverParams::default(), None);
+        let a = solve(&mut DenseGram::new(&k), &y, 0.1, 0.5, &SolverParams::default(), None);
+        let b = solve(&mut DenseGram::new(&k), &y, 0.01, 0.5, &SolverParams::default(), None);
         assert!(b.objective <= a.objective + 1e-6);
     }
 }

@@ -12,12 +12,12 @@
 //! are the cost, and the Gram matrix is the one already cached for the
 //! γ at hand.
 
-use crate::data::matrix::Matrix;
+use crate::kernel::plane::GramSource;
 
 use super::{Solution, SolverParams};
 
 /// y ← (K + nλ I)·x  (fused matvec + shift)
-fn matvec_shifted(k: &Matrix, shift: f32, x: &[f32], out: &mut [f32]) {
+fn matvec_shifted<K: GramSource + ?Sized>(k: &mut K, shift: f32, x: &[f32], out: &mut [f32]) {
     let n = x.len();
     for i in 0..n {
         let row = k.row(i);
@@ -29,8 +29,8 @@ fn matvec_shifted(k: &Matrix, shift: f32, x: &[f32], out: &mut [f32]) {
     }
 }
 
-pub fn solve(
-    k: &Matrix,
+pub fn solve<K: GramSource + ?Sized>(
+    k: &mut K,
     y: &[f32],
     lambda: f32,
     params: &SolverParams,
@@ -87,6 +87,8 @@ pub fn solve(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::matrix::Matrix;
+    use crate::kernel::plane::DenseGram;
     use crate::kernel::{GramBackend, KernelKind};
 
     fn gram_1d(xs: &[f32], gamma: f32) -> (Matrix, Matrix) {
@@ -102,11 +104,11 @@ mod tests {
         let (_, k) = gram_1d(&[0.0, 0.5, 1.0, 1.5, 2.0], 1.0);
         let y = vec![0.0, 0.25, 1.0, 2.25, 4.0];
         let lambda = 0.01;
-        let sol = solve(&k, &y, lambda, &SolverParams { eps: 1e-5, ..Default::default() }, None);
+        let sol = solve(&mut DenseGram::new(&k), &y, lambda, &SolverParams { eps: 1e-5, ..Default::default() }, None);
         // residual check: (K + nλI)β ≈ y
         let n = y.len();
         let mut out = vec![0.0; n];
-        matvec_shifted(&k, lambda * n as f32, &sol.coef, &mut out);
+        matvec_shifted(&mut DenseGram::new(&k), lambda * n as f32, &sol.coef, &mut out);
         for (o, yi) in out.iter().zip(&y) {
             assert!((o - yi).abs() < 1e-2, "{o} vs {yi}");
         }
@@ -117,7 +119,7 @@ mod tests {
         let xs: Vec<f32> = (0..50).map(|i| i as f32 / 10.0).collect();
         let (x, k) = gram_1d(&xs, 0.7);
         let y: Vec<f32> = xs.iter().map(|&v| (v).sin()).collect();
-        let sol = solve(&k, &y, 1e-4, &SolverParams { eps: 1e-5, ..Default::default() }, None);
+        let sol = solve(&mut DenseGram::new(&k), &y, 1e-4, &SolverParams { eps: 1e-5, ..Default::default() }, None);
         let kx = GramBackend::Blocked.gram(&x, &x, 0.7, KernelKind::Gauss);
         let f = sol.decision_values(&kx);
         let mse: f32 =
@@ -131,9 +133,9 @@ mod tests {
         let (_, k) = gram_1d(&xs, 1.0);
         let y: Vec<f32> = xs.iter().map(|&v| v.cos()).collect();
         let p = SolverParams { eps: 1e-5, ..Default::default() };
-        let first = solve(&k, &y, 1e-3, &p, None);
-        let warm = solve(&k, &y, 8e-4, &p, Some(&first.coef));
-        let cold = solve(&k, &y, 8e-4, &p, None);
+        let first = solve(&mut DenseGram::new(&k), &y, 1e-3, &p, None);
+        let warm = solve(&mut DenseGram::new(&k), &y, 8e-4, &p, Some(&first.coef));
+        let cold = solve(&mut DenseGram::new(&k), &y, 8e-4, &p, None);
         assert!(warm.iterations <= cold.iterations);
     }
 
@@ -141,7 +143,7 @@ mod tests {
     fn heavy_regularization_shrinks() {
         let (_, k) = gram_1d(&[0.0, 1.0, 2.0], 1.0);
         let y = vec![1.0, 1.0, 1.0];
-        let sol = solve(&k, &y, 100.0, &SolverParams::default(), None);
+        let sol = solve(&mut DenseGram::new(&k), &y, 100.0, &SolverParams::default(), None);
         let norm: f32 = sol.coef.iter().map(|v| v.abs()).sum();
         assert!(norm < 0.02, "coef norm {norm}");
     }

@@ -13,6 +13,13 @@
 //! λ grid.  Predictions are `f(x) = Σ_j coef_j · k(x_j, x)` with signed
 //! coefficients, so downstream code never needs labels again.
 //!
+//! Solvers read kernel values through the Gram plane's
+//! [`GramSource`] contract (rows, row pairs, entries) rather than a
+//! concrete `&Matrix`, so the same code runs against a borrowed dense
+//! Gram ([`DenseGram`]), a worker's reusable exponentiation buffer
+//! (`kernel::plane::GramBuffer`), or a memory-capped streaming source
+//! (`kernel::plane::StreamedGram`) — see DESIGN.md §Compute-plane.
+//!
 //! * [`hinge`]     — (weighted) hinge loss, classification
 //! * [`ls`]        — least squares, mean regression (CG on K + nλI)
 //! * [`quantile`]  — pinball loss, quantile regression
@@ -25,6 +32,7 @@ pub mod ls;
 pub mod quantile;
 
 use crate::data::matrix::Matrix;
+use crate::kernel::plane::{DenseGram, GramSource};
 
 /// Which loss/solver to run for a task.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -76,31 +84,28 @@ impl Solution {
 
     /// Decision values on a precomputed cross-Gram `[m × n]`.
     pub fn decision_values(&self, k_cross: &Matrix) -> Vec<f32> {
+        self.decision_values_src(&mut DenseGram::new(k_cross))
+    }
+
+    /// Decision values through any [`GramSource`] (dense, reusable
+    /// buffer, or streamed) — one row sweep, no materialization.
+    /// Zero coefficients are skipped (most are, at hinge solutions;
+    /// prediction cost scales with #SV) via the plane's shared
+    /// [`dot_sparse`](crate::kernel::plane::dot_sparse).
+    pub fn decision_values_src<K: GramSource + ?Sized>(&self, k: &mut K) -> Vec<f32> {
         let n = self.coef.len();
-        assert_eq!(k_cross.cols(), n);
-        (0..k_cross.rows())
-            .map(|i| {
-                let row = k_cross.row(i);
-                let mut s = 0.0f32;
-                for j in 0..n {
-                    // skip zeros: most coefficients are zero at hinge
-                    // solutions, and prediction cost scales with #SV
-                    let c = self.coef[j];
-                    if c != 0.0 {
-                        s += c * row[j];
-                    }
-                }
-                s
-            })
+        assert_eq!(k.cols(), n);
+        (0..k.rows())
+            .map(|i| crate::kernel::plane::dot_sparse(&self.coef, k.row(i)))
             .collect()
     }
 }
 
-/// Solve (1) for the given kernel matrix / labels / λ with an optional
+/// Solve (1) for the given Gram source / labels / λ with an optional
 /// warm start; dispatches to the per-loss solver.
-pub fn solve(
+pub fn solve<K: GramSource + ?Sized>(
     kind: SolverKind,
-    k: &Matrix,
+    k: &mut K,
     y: &[f32],
     lambda: f32,
     params: &SolverParams,
@@ -112,6 +117,19 @@ pub fn solve(
         SolverKind::Quantile { tau } => quantile::solve(k, y, lambda, tau, params, warm),
         SolverKind::Expectile { tau } => expectile::solve(k, y, lambda, tau, params, warm),
     }
+}
+
+/// [`solve`] over a borrowed dense Gram matrix — the adapter for call
+/// sites that still hold a materialized `&Matrix` (baselines, tests).
+pub fn solve_dense(
+    kind: SolverKind,
+    k: &Matrix,
+    y: &[f32],
+    lambda: f32,
+    params: &SolverParams,
+    warm: Option<&[f32]>,
+) -> Solution {
+    solve(kind, &mut DenseGram::new(k), y, lambda, params, warm)
 }
 
 /// The clipped regularization constant shared by the box-constrained

@@ -9,7 +9,7 @@
 //! case: only the box bounds and the linear term change.  The gradient
 //! g = Kβ − y is maintained incrementally; KKT-violation stopping.
 
-use crate::data::matrix::Matrix;
+use crate::kernel::plane::GramSource;
 
 use super::{box_c, Solution, SolverParams};
 
@@ -25,8 +25,8 @@ fn violation(beta: f32, g: f32, lo: f32, hi: f32) -> f32 {
     v
 }
 
-pub fn solve(
-    k: &Matrix,
+pub fn solve<K: GramSource + ?Sized>(
+    k: &mut K,
     y: &[f32],
     lambda: f32,
     tau: f32,
@@ -73,7 +73,7 @@ pub fn solve(
             break;
         }
         let i = best.0;
-        let qii = k.get(i, i).max(1e-12);
+        let qii = k.diag(i).max(1e-12);
         let d = (beta[i] - g[i] / qii).clamp(lo, hi) - beta[i];
         beta[i] += d;
         let krow = k.row(i);
@@ -102,6 +102,8 @@ pub fn solve(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::matrix::Matrix;
+    use crate::kernel::plane::DenseGram;
     use crate::kernel::{GramBackend, KernelKind};
     use crate::metrics::Loss;
 
@@ -114,7 +116,7 @@ mod tests {
     #[test]
     fn median_splits_residuals() {
         let (_, k, y) = setup(150, 3);
-        let sol = solve(&k, &y, 1e-4, 0.5, &SolverParams::default(), None);
+        let sol = solve(&mut DenseGram::new(&k), &y, 1e-4, 0.5, &SolverParams::default(), None);
         let f = sol.decision_values(&k);
         let above = f.iter().zip(&y).filter(|(fi, yi)| *yi > *fi).count();
         let frac = above as f32 / y.len() as f32;
@@ -125,8 +127,8 @@ mod tests {
     fn upper_quantile_sits_higher() {
         let (_, k, y) = setup(150, 4);
         let p = SolverParams::default();
-        let q10 = solve(&k, &y, 1e-4, 0.1, &p, None).decision_values(&k);
-        let q90 = solve(&k, &y, 1e-4, 0.9, &p, None).decision_values(&k);
+        let q10 = solve(&mut DenseGram::new(&k), &y, 1e-4, 0.1, &p, None).decision_values(&k);
+        let q90 = solve(&mut DenseGram::new(&k), &y, 1e-4, 0.9, &p, None).decision_values(&k);
         let mean_gap: f32 =
             q90.iter().zip(&q10).map(|(a, b)| a - b).sum::<f32>() / y.len() as f32;
         assert!(mean_gap > 0.0, "q90 below q10 on average: {mean_gap}");
@@ -135,7 +137,7 @@ mod tests {
     #[test]
     fn coverage_tracks_tau() {
         let (_, k, y) = setup(300, 5);
-        let sol = solve(&k, &y, 1e-4, 0.8, &SolverParams::default(), None);
+        let sol = solve(&mut DenseGram::new(&k), &y, 1e-4, 0.8, &SolverParams::default(), None);
         let f = sol.decision_values(&k);
         let below = f.iter().zip(&y).filter(|(fi, yi)| *yi <= *fi).count();
         let cov = below as f32 / y.len() as f32;
@@ -147,7 +149,7 @@ mod tests {
         let (_, k, y) = setup(80, 6);
         let lambda = 1e-3;
         let tau = 0.25;
-        let sol = solve(&k, &y, lambda, tau, &SolverParams::default(), None);
+        let sol = solve(&mut DenseGram::new(&k), &y, lambda, tau, &SolverParams::default(), None);
         let c = box_c(lambda, y.len());
         for &b in &sol.coef {
             assert!(b >= c * (tau - 1.0) - 1e-6 && b <= c * tau + 1e-6);
@@ -157,7 +159,7 @@ mod tests {
     #[test]
     fn pinball_loss_beats_zero_predictor() {
         let (_, k, y) = setup(200, 7);
-        let sol = solve(&k, &y, 1e-4, 0.7, &SolverParams::default(), None);
+        let sol = solve(&mut DenseGram::new(&k), &y, 1e-4, 0.7, &SolverParams::default(), None);
         let f = sol.decision_values(&k);
         let loss = Loss::Pinball { tau: 0.7 };
         let zeros = vec![0.0; y.len()];

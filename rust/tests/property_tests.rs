@@ -14,7 +14,7 @@ use liquid_svm::data::rng::Rng;
 use liquid_svm::data::synth;
 use liquid_svm::data::Dataset;
 use liquid_svm::kernel::{GramBackend, KernelKind};
-use liquid_svm::solver::{solve, SolverKind, SolverParams};
+use liquid_svm::solver::{solve_dense, SolverKind, SolverParams};
 use liquid_svm::tasks::{combine_predictions, create_tasks, TaskSpec};
 
 const CASES: u64 = 12;
@@ -168,7 +168,7 @@ fn prop_hinge_alpha_always_in_box() {
         let k = GramBackend::Blocked.gram(&data.x, &data.x, 1.5, KernelKind::Gauss);
         let lambda = 10f32.powf(rng.range(-4.0, -1.0));
         let w = rng.range(0.2, 0.8);
-        let sol = solve(SolverKind::Hinge { w }, &k, &data.y, lambda, &SolverParams::default(), None);
+        let sol = solve_dense(SolverKind::Hinge { w }, &k, &data.y, lambda, &SolverParams::default(), None);
         let c = 1.0 / (2.0 * lambda * n as f32);
         for (coef, &yi) in sol.coef.iter().zip(&data.y) {
             let a = coef * yi;
@@ -190,7 +190,7 @@ fn prop_quantile_beta_in_box_and_ls_residual_small() {
         let k = GramBackend::Blocked.gram(&d.x, &d.x, 0.9, KernelKind::Gauss);
         let lambda = 10f32.powf(rng.range(-4.0, -2.0));
         let tau = rng.range(0.1, 0.9);
-        let sol = solve(SolverKind::Quantile { tau }, &k, &d.y, lambda, &SolverParams::default(), None);
+        let sol = solve_dense(SolverKind::Quantile { tau }, &k, &d.y, lambda, &SolverParams::default(), None);
         let c = 1.0 / (2.0 * lambda * n as f32);
         for &b in &sol.coef {
             assert!(b >= c * (tau - 1.0) - 1e-5 && b <= c * tau + 1e-5, "beta {b} (seed {seed})");
@@ -208,10 +208,10 @@ fn prop_warm_start_never_worse_objective() {
         let p = SolverParams::default();
         let l1 = 1e-2f32;
         let l2 = 5e-3f32;
-        let first = solve(SolverKind::Hinge { w: 0.5 }, &k, &data.y, l1, &p, None);
+        let first = solve_dense(SolverKind::Hinge { w: 0.5 }, &k, &data.y, l1, &p, None);
         let warm_vec = liquid_svm::solver::warm_vector(SolverKind::Hinge { w: 0.5 }, &first, &data.y);
-        let warm = solve(SolverKind::Hinge { w: 0.5 }, &k, &data.y, l2, &p, Some(&warm_vec));
-        let cold = solve(SolverKind::Hinge { w: 0.5 }, &k, &data.y, l2, &p, None);
+        let warm = solve_dense(SolverKind::Hinge { w: 0.5 }, &k, &data.y, l2, &p, Some(&warm_vec));
+        let cold = solve_dense(SolverKind::Hinge { w: 0.5 }, &k, &data.y, l2, &p, None);
         // same KKT tolerance ⇒ same objective up to tolerance slack
         assert!(
             (warm.objective - cold.objective).abs() <= 2e-2 * (1.0 + cold.objective.abs()),
@@ -306,6 +306,116 @@ fn prop_gram_backends_agree() {
             for (u, v) in a.as_slice().iter().zip(b.as_slice()) {
                 assert!((u - v).abs() < 2e-4, "{kind:?}: {u} vs {v} (seed {seed})");
             }
+        }
+    }
+}
+
+#[test]
+fn prop_sq_dists_never_negative_across_backends() {
+    // near-duplicate rows with large norms trigger cancellation in the
+    // blocked path's ‖x‖²+‖y‖²−2⟨x,y⟩; the clamp at the source must
+    // keep every backend non-negative and in agreement
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xb0);
+        let d = 4 + rng.below(24);
+        let base: Vec<f32> = (0..d).map(|_| rng.range(20.0, 80.0)).collect();
+        let n = 8 + rng.below(16);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut v = base.clone();
+                v[r % d] += rng.range(0.0, 1e-3);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = Matrix::from_rows(&refs);
+        let a = GramBackend::Scalar.sq_dists(&x, &x);
+        let b = GramBackend::Blocked.sq_dists(&x, &x);
+        for (u, v) in a.as_slice().iter().zip(b.as_slice()) {
+            assert!(*u >= 0.0 && *v >= 0.0, "negative d²: scalar {u} blocked {v} (seed {seed})");
+            assert!((u - v).abs() < 1e-2 * (1.0 + u.abs()), "{u} vs {v} (seed {seed})");
+        }
+    }
+}
+
+#[test]
+fn prop_streamed_gram_bit_identical_to_dense() {
+    // the Gram-plane contract: streamed/tiled row access produces the
+    // exact bits of the materialized path, for every kernel and CPU
+    // backend — this is what makes the memory tiers interchangeable
+    use liquid_svm::kernel::plane::{GramSource, StreamedGram, TileBuffer};
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xc0);
+        let m = 5 + rng.below(40);
+        let n = 5 + rng.below(40);
+        let d = 1 + rng.below(12);
+        let x = Matrix::from_vec((0..m * d).map(|_| rng.range(-2.0, 2.0)).collect(), m, d);
+        let y = Matrix::from_vec((0..n * d).map(|_| rng.range(-2.0, 2.0)).collect(), n, d);
+        let g = rng.range(0.3, 4.0);
+        let (xn, yn) = (x.row_sq_norms(), y.row_sq_norms());
+        for be in [GramBackend::Scalar, GramBackend::Blocked] {
+            for kind in [KernelKind::Gauss, KernelKind::Laplace] {
+                let dense = be.gram(&x, &y, g, kind);
+                let mut s = StreamedGram::new(&be, &x, &y, &xn, &yn, kind, g);
+                for i in 0..m {
+                    let (want, got) = (dense.row(i), s.row(i));
+                    assert_eq!(
+                        want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{be:?} {kind:?} row {i} (seed {seed})"
+                    );
+                }
+                assert_eq!(s.get(m / 2, n / 2).to_bits(), dense.get(m / 2, n / 2).to_bits());
+                // tiled accumulation over a zero-cap (1-row tiles)
+                // matches a full cross-Gram dot as well
+                let coef: Vec<f32> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+                let mut acc = vec![0.0f32; m];
+                let mut buf = TileBuffer::new();
+                liquid_svm::kernel::plane::accumulate_decisions(
+                    &be, kind, g, &x, &xn, &y, &coef, Some(0), &mut buf, &mut acc,
+                );
+                for (i, a) in acc.iter().enumerate() {
+                    let want: f32 =
+                        coef.iter().zip(dense.row(i)).map(|(c, k)| c * k).sum();
+                    assert_eq!(a.to_bits(), want.to_bits(), "tile row {i} (seed {seed})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_cv_bit_identical_to_sequential() {
+    // --jobs N must select the same (γ*, λ*) and produce bit-identical
+    // fold coefficients as --jobs 1, across solvers and adaptivity
+    use liquid_svm::cv::{run_cv, CvConfig, Grid};
+    use liquid_svm::metrics::Loss;
+    for seed in 0..4u64 {
+        let n = 120 + (seed as usize) * 17;
+        let (data, solver, loss): (Dataset, SolverKind, Loss) = if seed % 2 == 0 {
+            (synth::banana_binary(n, seed), SolverKind::Hinge { w: 0.5 }, Loss::Classification)
+        } else {
+            (synth::sinc_hetero(n, seed), SolverKind::LeastSquares, Loss::LeastSquares)
+        };
+        let mut cfg = CvConfig::new(Grid::default_grid(0, n - n / 3, data.dim()), solver, loss);
+        cfg.folds = 3;
+        cfg.fold_kind = FoldKind::Random;
+        cfg.adaptivity = (seed % 3) as u8;
+        cfg.seed = seed;
+        let seq = run_cv(&data, &cfg);
+        let mut par_cfg = cfg.clone();
+        par_cfg.jobs = 4;
+        let par = run_cv(&data, &par_cfg);
+        assert_eq!(seq.best_gamma.to_bits(), par.best_gamma.to_bits(), "seed {seed}");
+        assert_eq!(seq.best_lambda.to_bits(), par.best_lambda.to_bits(), "seed {seed}");
+        assert_eq!(seq.points_evaluated, par.points_evaluated, "seed {seed}");
+        for (a, b) in seq.models.iter().zip(&par.models) {
+            assert_eq!(a.train_idx, b.train_idx);
+            assert_eq!(
+                a.coef.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.coef.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "fold coefficients differ (seed {seed})"
+            );
         }
     }
 }
