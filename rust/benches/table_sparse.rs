@@ -1,0 +1,100 @@
+//! Sparse data plane bench: dense vs CSR train+predict at growing
+//! dimension (density held sub-percent, the rcv1/url/webspam-class
+//! shape).  What the paper's large-scale claims actually stress is
+//! *data* memory, not FLOPs — the Gram state is n² either way, but the
+//! dense sample matrix grows as n·d while the CSR triplet grows as
+//! n·nnz.  Columns:
+//!
+//! * `dense_MB` / `csr_MB` — resident sample bytes of each path
+//!   (`rows·cols·4` vs the CSR triplet)
+//! * `t_dense` / `t_csr`   — wall-clock of train+predict ("-" when the
+//!   dense path is skipped past the crossover dimension)
+//! * `identical`           — bitwise equality of the two paths'
+//!   predictions (the plane contract, asserted)
+//!
+//! Runs in CI as `cargo bench --bench table_sparse -- --quick`, which
+//! asserts that the CSR footprint stays below the dense one at
+//! d ≥ 10⁴ and that predictions match bitwise wherever both run.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{secs, sized, time_once, Table};
+use liquid_svm::coordinator::{train, train_sparse};
+use liquid_svm::data::synth;
+use liquid_svm::prelude::*;
+use liquid_svm::tasks::TaskSpec;
+
+fn main() {
+    let n = sized(160, 400, 1200);
+    let n_test = n / 2;
+    let density = 0.005f32; // 0.5%
+    let dims: &[usize] = match harness::scale() {
+        harness::Scale::Smoke => &[1_000, 10_000],
+        harness::Scale::Default => &[2_000, 10_000, 50_000],
+        harness::Scale::Full => &[2_000, 10_000, 50_000, 100_000],
+    };
+    // past this, the dense twin is pointless to materialize — exactly
+    // the regime the CSR plane exists for
+    let dense_cap = 10_000usize;
+
+    println!("\n=== sparse data plane: dense vs CSR (n={n}, density {:.1}%) ===\n", density * 100.0);
+    let t = Table::new(
+        &["d", "nnz/row", "dense_MB", "csr_MB", "t_dense", "t_csr", "identical"],
+        &[8, 8, 9, 9, 9, 9, 10],
+    );
+
+    let mut cfg = Config::default().folds(2).max_gram_mb(256);
+    cfg.scale = None; // scaling is a densification boundary; keep both paths identical
+    let spec = TaskSpec::Binary { w: 0.5 };
+
+    for &d in dims {
+        let train_d = synth::sparse_binary(n, d, density, 42);
+        let test_d = synth::sparse_binary(n_test, d, density, 43);
+        let dense_bytes = n * d * 4;
+        let csr_bytes = train_d.x.bytes();
+
+        let (sparse_preds, t_csr) = time_once(|| {
+            let m = train_sparse(&train_d, &spec, &cfg).unwrap();
+            m.test_sparse(&test_d).predictions
+        });
+
+        let (dense_cell, identical) = if d <= dense_cap {
+            let dd = train_d.to_dense();
+            let dt = test_d.to_dense();
+            let (dense_preds, t_dense) = time_once(|| {
+                let m = train(&dd, &spec, &cfg).unwrap();
+                m.test(&dt).predictions
+            });
+            let same = dense_preds.len() == sparse_preds.len()
+                && dense_preds
+                    .iter()
+                    .zip(&sparse_preds)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "d={d}: sparse predictions diverged from the densified path");
+            (secs(t_dense), "yes")
+        } else {
+            ("-".to_string(), "skipped")
+        };
+
+        t.row(&[
+            &d.to_string(),
+            &(train_d.x.nnz() / n).to_string(),
+            &format!("{:.1}", dense_bytes as f64 / (1 << 20) as f64),
+            &format!("{:.2}", csr_bytes as f64 / (1 << 20) as f64),
+            &dense_cell,
+            &secs(t_csr),
+            identical,
+        ]);
+
+        if d >= 10_000 {
+            assert!(
+                csr_bytes < dense_bytes,
+                "d={d}: CSR bytes {csr_bytes} not below dense {dense_bytes}"
+            );
+        }
+    }
+
+    println!("\ncontract: CSR sample bytes scale with nnz (dense with n*d), and the");
+    println!("sparse path's predictions are bit-identical to training on the densified data.");
+}

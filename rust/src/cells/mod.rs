@@ -16,6 +16,7 @@
 use crate::data::dataset::Dataset;
 use crate::data::matrix::{sq_dist, Matrix};
 use crate::data::rng::Rng;
+use crate::data::store::StoreRef;
 
 /// Cell creation strategy.
 #[derive(Clone, Debug, PartialEq)]
@@ -63,6 +64,11 @@ pub struct CellPartition {
 }
 
 impl CellPartition {
+    /// The trivial one-cell partition over `n` samples.
+    pub fn single(n: usize) -> CellPartition {
+        CellPartition { cells: vec![(0..n).collect()], router: CellRouter::Single }
+    }
+
     pub fn n_cells(&self) -> usize {
         self.cells.len()
     }
@@ -83,10 +89,41 @@ impl CellPartition {
     /// predict path feeds each group through one tiled cross-Gram pass
     /// instead of routing row-by-row at the call site.
     pub fn route_batch(&self, x: &Matrix) -> Vec<Vec<usize>> {
+        self.route_batch_x(StoreRef::Dense(x))
+    }
+
+    /// [`CellPartition::route_batch`] over either sample layout.
+    /// Routerless strategies (single cell, broadcast) never touch
+    /// features; geometric routers (centers, tree) walk dense rows, so
+    /// sparse inputs densify one reusable scratch row at a time — the
+    /// routing densification boundary (DESIGN.md §Data-plane).  Sparse
+    /// training only builds routerless partitions, so its hot path
+    /// never takes the scratch branch.
+    pub fn route_batch_x(&self, x: StoreRef) -> Vec<Vec<usize>> {
+        let n = x.rows();
         let mut routed: Vec<Vec<usize>> = vec![Vec::new(); self.n_cells()];
-        for i in 0..x.rows() {
-            for c in self.route(x.row(i)) {
-                routed[c].push(i);
+        match (&self.router, x) {
+            (CellRouter::Single, _) => routed[0] = (0..n).collect(),
+            (CellRouter::Broadcast(k), _) => {
+                for cell in routed.iter_mut().take(*k) {
+                    *cell = (0..n).collect();
+                }
+            }
+            (_, StoreRef::Dense(m)) => {
+                for i in 0..n {
+                    for c in self.route(m.row(i)) {
+                        routed[c].push(i);
+                    }
+                }
+            }
+            (_, StoreRef::Sparse(m)) => {
+                let mut scratch = vec![0.0f32; m.cols()];
+                for i in 0..n {
+                    m.densify_row_into(i, &mut scratch);
+                    for c in self.route(&scratch) {
+                        routed[c].push(i);
+                    }
+                }
             }
         }
         routed
@@ -121,20 +158,8 @@ fn walk_tree(node: &TreeNode, x: &[f32]) -> usize {
 pub fn make_cells(data: &Dataset, strategy: &CellStrategy, seed: u64) -> CellPartition {
     let n = data.len();
     match strategy {
-        CellStrategy::None => CellPartition {
-            cells: vec![(0..n).collect()],
-            router: CellRouter::Single,
-        },
-        CellStrategy::RandomChunks { size } => {
-            let k = n.div_ceil((*size).max(1)).max(1);
-            let mut idx: Vec<usize> = (0..n).collect();
-            Rng::new(seed).shuffle(&mut idx);
-            let mut cells = vec![Vec::new(); k];
-            for (pos, &i) in idx.iter().enumerate() {
-                cells[pos % k].push(i);
-            }
-            CellPartition { cells, router: CellRouter::Broadcast(k) }
-        }
+        CellStrategy::None => CellPartition::single(n),
+        CellStrategy::RandomChunks { size } => random_chunks(n, *size, seed),
         CellStrategy::Voronoi { size } => {
             let (cells, centers) = voronoi_cells(data, *size, seed);
             CellPartition { cells, router: CellRouter::Centers(centers) }
@@ -165,6 +190,21 @@ pub fn make_cells(data: &Dataset, strategy: &CellStrategy, seed: u64) -> CellPar
             CellPartition { cells, router: CellRouter::Tree(Box::new(root)) }
         }
     }
+}
+
+/// Label/geometry-free random-chunk partition with broadcast routing —
+/// the one strategy besides `None` that never reads features, shared
+/// by [`make_cells`] and sparse training (which cannot route on dense
+/// geometry; see DESIGN.md §Data-plane).
+pub fn random_chunks(n: usize, size: usize, seed: u64) -> CellPartition {
+    let k = n.div_ceil(size.max(1)).max(1);
+    let mut idx: Vec<usize> = (0..n).collect();
+    Rng::new(seed).shuffle(&mut idx);
+    let mut cells = vec![Vec::new(); k];
+    for (pos, &i) in idx.iter().enumerate() {
+        cells[pos % k].push(i);
+    }
+    CellPartition { cells, router: CellRouter::Broadcast(k) }
 }
 
 /// Sample ~n/size centers, assign every sample to the nearest center,

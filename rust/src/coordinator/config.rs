@@ -56,6 +56,11 @@ pub struct Config {
     pub backend: BackendChoice,
     /// artifact directory for the Xla backend
     pub artifact_dir: Option<std::path::PathBuf>,
+    /// sparse data plane: read LIBSVM files straight into CSR and train
+    /// through the sparse Gram sources (`--sparse`; auto-detected for
+    /// `.csr` file extensions).  Implies no scaling and no geometric
+    /// cells — see DESIGN.md §Data-plane for the boundaries.
+    pub sparse: bool,
     pub seed: u64,
 }
 
@@ -78,6 +83,7 @@ impl Default for Config {
             solver_params: SolverParams::default(),
             backend: BackendChoice::Blocked,
             artifact_dir: None,
+            sparse: false,
             seed: 42,
         }
     }
@@ -153,6 +159,12 @@ impl Config {
 
     pub fn backend(mut self, b: BackendChoice) -> Self {
         self.backend = b;
+        self
+    }
+
+    /// Enable the sparse (CSR) data plane.
+    pub fn sparse(mut self, v: bool) -> Self {
+        self.sparse = v;
         self
     }
 

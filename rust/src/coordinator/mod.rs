@@ -11,4 +11,4 @@ pub mod scenarios;
 
 pub use config::{BackendChoice, Config};
 pub use driver::{lpt_assign, run_cell_grid, DriverReport};
-pub use model::{train, SvmModel, TestResult, TrainedUnit};
+pub use model::{train, train_sparse, SvmModel, TestResult, TrainedUnit};

@@ -9,25 +9,29 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::cells::{make_cells, CellPartition, CellRouter};
+use crate::cells::{make_cells, CellPartition, CellRouter, CellStrategy};
 use crate::coordinator::config::{BackendChoice, Config};
 use crate::coordinator::driver::run_cell_grid;
-use crate::cv::{run_cv, predict_average, CvConfig, CvResult, Grid};
-use crate::data::dataset::Dataset;
+use crate::cv::{predict_average_x, run_cv_ws, CvConfig, CvResult, Grid};
+use crate::data::csr::SparseDataset;
+use crate::data::dataset::{distinct_labels, Dataset};
 use crate::data::scale::Scaler;
+use crate::data::store::{Store, StoreRef, WorkingSet};
 use crate::kernel::GramBackend;
 use crate::metrics::{multiclass_error, Confusion, Loss};
 use crate::runtime::{default_artifact_dir, XlaRuntime};
 use crate::tasks::{combine_predictions, create_tasks_for_classes, TaskSpec};
 
 /// One trained (cell × task) unit: the CV outcome plus the data the
-/// fold models expand over.
+/// fold models expand over.  The working set carries either layout —
+/// dense matrices from [`train`], CSR from [`train_sparse`] — and the
+/// predict path reads whichever it finds (DESIGN.md §Data-plane).
 #[derive(Clone, Debug)]
 pub struct TrainedUnit {
     pub cell: usize,
     pub task: usize,
     /// the task's working set inside the cell (already label-transformed)
-    pub data: Dataset,
+    pub data: WorkingSet,
     pub cv: Option<CvResult>,
 }
 
@@ -62,44 +66,25 @@ pub fn make_backend(cfg: &Config) -> Result<GramBackend> {
     })
 }
 
-/// Train a model for a task spec under a config — the whole training +
-/// selection phase.
-pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> {
-    let t0 = Instant::now();
-    if data.is_empty() {
-        return Err(anyhow!("empty training set"));
-    }
-    let backend = make_backend(cfg)?;
-
-    // scaling fitted on the training set only (paper §B.1)
-    let mut scaled = data.clone();
-    let scaler = cfg.scale.map(|kind| {
-        let s = Scaler::fit(&scaled.x, kind);
-        s.apply(&mut scaled.x);
-        s
-    });
-
-    let classes = scaled.classes();
-    let partition = make_cells(&scaled, &cfg.cells, cfg.seed);
+/// Shared driver tail of [`train`] / [`train_sparse`]: split the
+/// `--jobs`/`--max-gram-mb` budgets, schedule the (cell × task) grid,
+/// and assemble the model.  One copy on purpose — the sparse pipeline's
+/// bit-identity with the dense one depends on identical budgeting and
+/// per-unit seed mixing, so neither path may drift alone.
+#[allow(clippy::too_many_arguments)]
+fn run_training(
+    cfg: &Config,
+    backend: GramBackend,
+    spec: &TaskSpec,
+    scaler: Option<Scaler>,
+    partition: CellPartition,
+    classes: Vec<f32>,
+    n_tasks: usize,
+    units: Vec<(usize, usize, WorkingSet, crate::tasks::Task)>,
+    t0: Instant,
+    label: &str,
+) -> SvmModel {
     let n_cells = partition.n_cells();
-
-    // build the (cell × task) working sets, each tagged with its cell
-    // so the driver can aggregate per-cell timing.  The --jobs budget
-    // is split between the cell driver and each unit's fold×γ CV grid
-    // (one budget, two levels — see DESIGN.md §Compute-plane): the
-    // working sets are materialized once, their count fixes the split,
-    // and every unit then gets its CV share.
-    let mut units: Vec<(usize, usize, Dataset, crate::tasks::Task)> = Vec::new();
-    let mut n_tasks = 0usize;
-    for (c, cell_idx) in partition.cells.iter().enumerate() {
-        let cell_data = scaled.subset(cell_idx);
-        let tasks = create_tasks_for_classes(&cell_data, spec, &classes);
-        n_tasks = n_tasks.max(tasks.len());
-        for (t, task) in tasks.into_iter().enumerate() {
-            let ws = Dataset::new(cell_data.x.select_rows(&task.indices), task.y.clone());
-            units.push((c, t, ws, task));
-        }
-    }
     let (driver_threads, cv_jobs) = cfg.split_jobs(units.len());
     // like the thread budget, the Gram byte budget is a whole-process
     // figure: with `driver_threads` CV runs resident at once, each run
@@ -123,7 +108,7 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
     }
     if cfg.display > 0 {
         eprintln!(
-            "[train] {} cells x {} tasks = {} working sets ({} driver threads x {} cv jobs)",
+            "[{label}] {} cells x {} tasks = {} working sets ({} driver threads x {} cv jobs)",
             n_cells,
             n_tasks,
             jobs.len(),
@@ -152,14 +137,120 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
     };
     if cfg.display > 0 {
         eprintln!(
-            "[train] done in {:.2}s, driver {} ({} grid points solved; {})",
+            "[{label}] done in {:.2}s, driver {} ({} grid points solved; {})",
             model.train_time.as_secs_f64(),
             report.summary(),
             model.points_evaluated,
             crate::metrics::counters::snapshot().report()
         );
     }
-    Ok(model)
+    model
+}
+
+/// Train a model for a task spec under a config — the whole training +
+/// selection phase.
+pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> {
+    let t0 = Instant::now();
+    if data.is_empty() {
+        return Err(anyhow!("empty training set"));
+    }
+    let backend = make_backend(cfg)?;
+
+    // scaling fitted on the training set only (paper §B.1)
+    let mut scaled = data.clone();
+    let scaler = cfg.scale.map(|kind| {
+        let s = Scaler::fit(&scaled.x, kind);
+        s.apply(&mut scaled.x);
+        s
+    });
+
+    let classes = scaled.classes();
+    let partition = make_cells(&scaled, &cfg.cells, cfg.seed);
+
+    // build the (cell × task) working sets, each tagged with its cell
+    // so the driver can aggregate per-cell timing.  The --jobs budget
+    // is split between the cell driver and each unit's fold×γ CV grid
+    // (one budget, two levels — see DESIGN.md §Compute-plane): the
+    // working sets are materialized once, their count fixes the split,
+    // and every unit then gets its CV share.
+    let mut units: Vec<(usize, usize, WorkingSet, crate::tasks::Task)> = Vec::new();
+    let mut n_tasks = 0usize;
+    for (c, cell_idx) in partition.cells.iter().enumerate() {
+        let cell_data = scaled.subset(cell_idx);
+        let tasks = create_tasks_for_classes(&cell_data.y, spec, &classes);
+        n_tasks = n_tasks.max(tasks.len());
+        for (t, task) in tasks.into_iter().enumerate() {
+            let ws =
+                WorkingSet::dense(cell_data.x.select_rows(&task.indices), task.y.clone());
+            units.push((c, t, ws, task));
+        }
+    }
+    Ok(run_training(cfg, backend, spec, scaler, partition, classes, n_tasks, units, t0, "train"))
+}
+
+/// Train on a CSR dataset without ever densifying the samples — the
+/// sparse end of the data plane (see DESIGN.md §Data-plane).
+///
+/// Differences from [`train`], both deliberate densification
+/// boundaries the sparse path refuses to cross:
+///
+/// * **no scaling** — a per-column shift turns every stored zero into
+///   a non-zero; `cfg.scale` is ignored (with a note at `display > 0`).
+///   High-dimensional sparse data is typically pre-normalized row-wise
+///   (tf-idf style) anyway;
+/// * **no geometric cells** — Voronoi/tree routing walks dense rows;
+///   only `CellStrategy::None` and `RandomChunks` (label-free) are
+///   accepted, others are an error rather than a silent densify.
+///
+/// Everything else — task roster, fold×γ CV grid, `--max-gram-mb`
+/// tiers, all four solvers, the tiled predict path — is the same code
+/// as the dense pipeline, reading kernels through the sparse Gram
+/// sources; predictions are bit-identical to [`train`] on the
+/// densified data (tested in `tests/sparse_pipeline.rs`).
+pub fn train_sparse(data: &SparseDataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> {
+    let t0 = Instant::now();
+    if data.is_empty() {
+        return Err(anyhow!("empty training set"));
+    }
+    let backend = make_backend(cfg)?;
+    if cfg.scale.is_some() && cfg.display > 0 {
+        eprintln!("[train-sparse] note: scaling disabled (a shift would densify; see DESIGN.md)");
+    }
+
+    let classes = distinct_labels(&data.y);
+    let n = data.len();
+    let partition = match &cfg.cells {
+        CellStrategy::None => CellPartition::single(n),
+        // label/geometry-free: the same shuffle-split as the dense path
+        CellStrategy::RandomChunks { size } => crate::cells::random_chunks(n, *size, cfg.seed),
+        other => {
+            return Err(anyhow!(
+                "cell strategy {other:?} routes on dense geometry; sparse training supports \
+                 --cells 0 (none) or chunks,SIZE"
+            ))
+        }
+    };
+
+    let mut units: Vec<(usize, usize, WorkingSet, crate::tasks::Task)> = Vec::new();
+    let mut n_tasks = 0usize;
+    for (c, cell_idx) in partition.cells.iter().enumerate() {
+        let cell_y: Vec<f32> = cell_idx.iter().map(|&i| data.y[i]).collect();
+        let tasks = create_tasks_for_classes(&cell_y, spec, &classes);
+        n_tasks = n_tasks.max(tasks.len());
+        for (t, task) in tasks.into_iter().enumerate() {
+            // task.indices index the cell's working set; map back to
+            // dataset rows for the CSR selection
+            let rows: Vec<usize> = task.indices.iter().map(|&i| cell_idx[i]).collect();
+            let ws = WorkingSet::sparse(data.x.select_rows(&rows), task.y.clone());
+            units.push((c, t, ws, task));
+        }
+    }
+    if cfg.display > 0 {
+        eprintln!("[train-sparse] n={} d={} nnz={}", n, data.dim(), data.x.nnz());
+    }
+    Ok(run_training(
+        cfg, backend, spec, None, partition, classes, n_tasks, units, t0, "train-sparse",
+    ))
 }
 
 /// CV on one working set, with degenerate-size fallbacks:
@@ -170,7 +261,7 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
 /// `--jobs` / `--max-gram-mb` budgets (see [`Config::split_jobs`]).
 #[allow(clippy::too_many_arguments)]
 fn train_unit(
-    ws: &Dataset,
+    ws: &WorkingSet,
     solver: crate::solver::SolverKind,
     val_loss: Loss,
     cfg: &Config,
@@ -201,7 +292,7 @@ fn train_unit(
     cv_cfg.seed = seed;
     cv_cfg.jobs = cv_jobs;
     cv_cfg.max_gram_mb = cv_gram_mb;
-    Some(run_cv(ws, &cv_cfg))
+    Some(run_cv_ws(ws, &cv_cfg))
 }
 
 /// Test-phase result.
@@ -265,19 +356,40 @@ impl SvmModel {
         }
     }
 
-    /// Decision values of every task on `x` (unscaled input).
+    /// Decision values of every task on `x` (unscaled dense input).
     pub fn decision_values(&self, x: &crate::data::matrix::Matrix) -> Vec<Vec<f32>> {
-        let xs = match &self.scaler {
-            Some(s) => s.transform(x),
-            None => x.clone(),
+        self.decision_values_x(StoreRef::Dense(x))
+    }
+
+    /// Decision values on CSR input — the sparse predict entry: no
+    /// n×d densification anywhere when the model is sparse-trained
+    /// (scaled dense-trained models densify at the scaler boundary,
+    /// see DESIGN.md §Data-plane).
+    pub fn decision_values_csr(&self, x: &crate::data::csr::CsrMatrix) -> Vec<Vec<f32>> {
+        self.decision_values_x(StoreRef::Sparse(x))
+    }
+
+    /// Decision values over either input layout.
+    pub fn decision_values_x(&self, x: StoreRef) -> Vec<Vec<f32>> {
+        // scaling is a densification boundary: dense inputs transform
+        // as before; sparse inputs densify only when a scaler demands
+        // it (sparse-trained models never fit one)
+        let scaled: Option<crate::data::matrix::Matrix> = match (&self.scaler, x) {
+            (Some(s), StoreRef::Dense(m)) => Some(s.transform(m)),
+            (Some(s), StoreRef::Sparse(m)) => Some(s.transform(&m.to_dense())),
+            (None, _) => None,
         };
-        let m = xs.rows();
+        let xr: StoreRef = match &scaled {
+            Some(m) => StoreRef::Dense(m),
+            None => x,
+        };
+        let m = xr.rows();
         let mut scores = vec![vec![0.0f32; m]; self.n_tasks];
         let mut counts = vec![vec![0u32; m]; self.n_tasks];
 
         // group test points by cell to batch kernel evaluations
         let broadcast = matches!(self.partition.router, CellRouter::Broadcast(_));
-        let routed = self.partition.route_batch(&xs);
+        let routed = self.partition.route_batch_x(xr);
 
         for unit in &self.units {
             let Some(cv) = &unit.cv else { continue };
@@ -285,11 +397,11 @@ impl SvmModel {
             if pts.is_empty() || unit.data.is_empty() {
                 continue;
             }
-            let sub = xs.select_rows(pts);
-            let preds = predict_average(
+            let sub: Store = xr.select_rows(pts);
+            let preds = predict_average_x(
                 &cv.models,
-                &unit.data,
-                &sub,
+                unit.data.x.as_ref(),
+                sub.as_ref(),
                 cv.best_gamma,
                 self.config.kernel,
                 &self.backend,
@@ -319,36 +431,57 @@ impl SvmModel {
         combine_predictions(&self.spec, &self.classes, &scores)
     }
 
+    /// Predict combined outputs for CSR inputs.
+    pub fn predict_csr(&self, x: &crate::data::csr::CsrMatrix) -> Vec<f32> {
+        let scores = self.decision_values_csr(x);
+        combine_predictions(&self.spec, &self.classes, &scores)
+    }
+
+    /// [`SvmModel::test`] on a CSR test set — same combination and
+    /// error computation, sparse kernel path throughout.
+    pub fn test_sparse(&self, test: &SparseDataset) -> TestResult {
+        let t0 = Instant::now();
+        let task_scores = self.decision_values_csr(&test.x);
+        let predictions = combine_predictions(&self.spec, &self.classes, &task_scores);
+        let error = self.scenario_error(&test.y, &task_scores, &predictions);
+        TestResult { predictions, task_scores, error, test_time: t0.elapsed() }
+    }
+
     /// Full test phase: predictions + scenario error.
     pub fn test(&self, test: &Dataset) -> TestResult {
         let t0 = Instant::now();
         let task_scores = self.decision_values(&test.x);
         let predictions = combine_predictions(&self.spec, &self.classes, &task_scores);
-        let error = match &self.spec {
+        let error = self.scenario_error(&test.y, &task_scores, &predictions);
+        TestResult { predictions, task_scores, error, test_time: t0.elapsed() }
+    }
+
+    /// Scenario-appropriate headline error (0-1 / MSE / pinball …).
+    fn scenario_error(&self, y: &[f32], task_scores: &[Vec<f32>], predictions: &[f32]) -> f32 {
+        match &self.spec {
             TaskSpec::Binary { .. } | TaskSpec::NeymanPearson { .. } => {
-                Confusion::from_scores(&test.y, &task_scores[0]).error()
+                Confusion::from_scores(y, &task_scores[0]).error()
             }
             TaskSpec::MultiClassOvA | TaskSpec::MultiClassOvALs | TaskSpec::MultiClassAvA => {
-                multiclass_error(&test.y, &predictions)
+                multiclass_error(y, predictions)
             }
-            TaskSpec::LeastSquares => Loss::LeastSquares.mean(&test.y, &predictions),
+            TaskSpec::LeastSquares => Loss::LeastSquares.mean(y, predictions),
             TaskSpec::MultiQuantile { taus } => {
                 // mean pinball across levels
                 let mut s = 0.0;
                 for (t, &tau) in taus.iter().enumerate() {
-                    s += Loss::Pinball { tau }.mean(&test.y, &task_scores[t]);
+                    s += Loss::Pinball { tau }.mean(y, &task_scores[t]);
                 }
                 s / taus.len().max(1) as f32
             }
             TaskSpec::MultiExpectile { taus } => {
                 let mut s = 0.0;
                 for (t, &tau) in taus.iter().enumerate() {
-                    s += Loss::Expectile { tau }.mean(&test.y, &task_scores[t]);
+                    s += Loss::Expectile { tau }.mean(y, &task_scores[t]);
                 }
                 s / taus.len().max(1) as f32
             }
-        };
-        TestResult { predictions, task_scores, error, test_time: t0.elapsed() }
+        }
     }
 
     /// Selected hyper-parameters of every unit (for inspection/tests).

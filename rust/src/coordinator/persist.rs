@@ -29,9 +29,9 @@ use crate::cells::{CellPartition, CellRouter, CellStrategy, TreeNode};
 use crate::coordinator::config::Config;
 use crate::coordinator::model::{SvmModel, TrainedUnit};
 use crate::cv::{CvResult, FoldModel};
-use crate::data::dataset::Dataset;
 use crate::data::matrix::Matrix;
 use crate::data::scale::Scaler;
+use crate::data::store::{Store, WorkingSet};
 use crate::tasks::TaskSpec;
 
 const MAGIC: &str = "liquidsvm-sol v1";
@@ -80,10 +80,25 @@ fn write_header(s: &mut String, model: &SvmModel) -> Result<()> {
     Ok(())
 }
 
-/// One (cell × task) unit: header, working set, CV outcome.
+/// One (cell × task) unit: header, working set, CV outcome.  Dense
+/// working sets persist as one flat `x` line; CSR working sets persist
+/// their triplet (`xs` indptr / `xi` indices / `xv` values) so a
+/// sparse-trained model never densifies on disk either.
 fn write_unit(s: &mut String, u: &TrainedUnit) -> Result<()> {
     writeln!(s, "unit {} {} {}", u.cell, u.task, u.data.dim())?;
-    writeln!(s, "x {}", join_f32(u.data.x.as_slice()))?;
+    match &u.data.x {
+        Store::Dense(x) => writeln!(s, "x {}", join_f32(x.as_slice()))?,
+        Store::Sparse(x) => {
+            let (indptr, indices, values) = x.parts();
+            writeln!(s, "xs {}", join_usize(indptr))?;
+            writeln!(
+                s,
+                "xi {}",
+                indices.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(" ")
+            )?;
+            writeln!(s, "xv {}", join_f32(values))?;
+        }
+    }
     writeln!(s, "y {}", join_f32(&u.data.y))?;
     match &u.cv {
         Some(cv) => {
@@ -106,13 +121,30 @@ fn read_unit(lines: &mut std::str::Lines) -> Result<TrainedUnit> {
         .map(|t| t.parse().map_err(|_| anyhow!("bad unit header")))
         .collect::<Result<_>>()?;
     let [cell, task, dim] = parts[..] else { bail!("unit header arity") };
-    let x = parse_f32s(field(next()?, "x")?)?;
-    let y = parse_f32s(field(next()?, "y")?)?;
-    let rows = y.len();
-    if x.len() != rows * dim {
-        bail!("unit data shape mismatch");
-    }
-    let data = Dataset::new(Matrix::from_vec(x, rows, dim), y);
+    let x_line = next()?;
+    let data = if let Ok(flat) = field(x_line, "xs") {
+        // CSR working set: indptr / indices / values triplet
+        let indptr = parse_usizes(flat)?;
+        let indices: Vec<u32> = field(next()?, "xi")?
+            .split_whitespace()
+            .map(|t| t.parse().map_err(|_| anyhow!("bad u32 `{t}`")))
+            .collect::<Result<_>>()?;
+        let values = parse_f32s(field(next()?, "xv")?)?;
+        let y = parse_f32s(field(next()?, "y")?)?;
+        if indptr.len() != y.len() + 1 {
+            bail!("sparse unit shape mismatch");
+        }
+        let x = crate::data::csr::CsrMatrix::from_parts(indptr, indices, values, dim);
+        WorkingSet::sparse(x, y)
+    } else {
+        let x = parse_f32s(field(x_line, "x")?)?;
+        let y = parse_f32s(field(next()?, "y")?)?;
+        let rows = y.len();
+        if x.len() != rows * dim {
+            bail!("unit data shape mismatch");
+        }
+        WorkingSet::dense(Matrix::from_vec(x, rows, dim), y)
+    };
     let cv_line = next()?;
     let cv = if cv_line == "cv none" {
         None

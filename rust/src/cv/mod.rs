@@ -46,10 +46,12 @@ pub use grid::Grid;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::data::dataset::Dataset;
-use crate::data::folds::{make_folds, FoldKind, Folds};
+use crate::data::csr::CsrMatrix;
+use crate::data::dataset::{distinct_labels, Dataset};
+use crate::data::folds::{make_folds_y, FoldKind, Folds};
 use crate::data::matrix::Matrix;
-use crate::kernel::plane::{self, GramBuffer, GramSource, StreamedGram, TileBuffer};
+use crate::data::store::{Store, StoreRef, WorkingSet};
+use crate::kernel::plane::{self, GramBuffer, GramSource, SparseGram, StreamedGram, TileBuffer};
 use crate::kernel::{GramBackend, KernelKind};
 use crate::metrics::Loss;
 use crate::solver::{solve, warm_vector, Solution, SolverKind, SolverParams};
@@ -137,10 +139,14 @@ pub struct CvResult {
 }
 
 /// One fold's immutable context, shared read-only across the γ tasks
-/// of that fold.
+/// of that fold.  Sample storage is a [`Store`]: fold subsets keep the
+/// working set's layout (dense or CSR), so the same grid runs either
+/// flavor (see DESIGN.md §Data-plane).
 struct FoldCtx {
-    dtr: Dataset,
-    dva: Dataset,
+    xtr: Store,
+    ytr: Vec<f32>,
+    xva: Store,
+    yva: Vec<f32>,
     params: SolverParams,
 }
 
@@ -155,8 +161,8 @@ enum FoldData {
 impl FoldData {
     fn cached(backend: &GramBackend, ctx: &FoldCtx) -> FoldData {
         FoldData::Cached {
-            d2_tr: backend.sq_dists(&ctx.dtr.x, &ctx.dtr.x),
-            d2_va: backend.sq_dists(&ctx.dva.x, &ctx.dtr.x),
+            d2_tr: backend.sq_dists_ref(ctx.xtr.as_ref(), ctx.xtr.as_ref()),
+            d2_va: backend.sq_dists_ref(ctx.xva.as_ref(), ctx.xtr.as_ref()),
             ep_tr: plane::next_epoch(),
             ep_va: plane::next_epoch(),
         }
@@ -164,8 +170,8 @@ impl FoldData {
 
     fn streamed(ctx: &FoldCtx) -> FoldData {
         FoldData::Streamed {
-            tr_norms: ctx.dtr.x.row_sq_norms(),
-            va_norms: ctx.dva.x.row_sq_norms(),
+            tr_norms: ctx.xtr.as_ref().row_sq_norms(),
+            va_norms: ctx.xva.as_ref().row_sq_norms(),
         }
     }
 }
@@ -272,17 +278,17 @@ where
             // gap costs more than it saves, so just skip
             continue;
         }
-        let sol = solve(cfg.solver, kt, &ctx.dtr.y, lambda, &ctx.params, warm.as_deref());
+        let sol = solve(cfg.solver, kt, &ctx.ytr, lambda, &ctx.params, warm.as_deref());
         iterations += sol.iterations;
         points += 1;
-        warm = Some(warm_vector(cfg.solver, &sol, &ctx.dtr.y));
+        warm = Some(warm_vector(cfg.solver, &sol, &ctx.ytr));
         sols[li] = Some(sol);
     }
     let mut losses = vec![f32::NAN; nl];
     let mut evaluated = vec![false; nl];
     for (li, s) in sols.iter().enumerate() {
         if let Some(sol) = s {
-            losses[li] = cfg.val_loss.mean(&ctx.dva.y, &sol.decision_values_src(kv));
+            losses[li] = cfg.val_loss.mean(&ctx.yva, &sol.decision_values_src(kv));
             evaluated[li] = true;
         }
     }
@@ -309,23 +315,53 @@ fn run_gamma_task(
             let WorkerBufs { ktr, kva } = bufs;
             gamma_task(cfg, ctx, active, ktr, kva)
         }
-        FoldData::Streamed { tr_norms, va_norms } => {
-            let mut ktr = StreamedGram::new(
-                &cfg.backend, &ctx.dtr.x, &ctx.dtr.x, tr_norms, tr_norms, cfg.kernel, gamma,
-            );
-            let mut kva = StreamedGram::new(
-                &cfg.backend, &ctx.dva.x, &ctx.dtr.x, va_norms, tr_norms, cfg.kernel, gamma,
-            );
-            gamma_task(cfg, ctx, active, &mut ktr, &mut kva)
-        }
+        FoldData::Streamed { tr_norms, va_norms } => match (&ctx.xtr, &ctx.xva) {
+            (Store::Dense(xtr), Store::Dense(xva)) => {
+                let mut ktr = StreamedGram::new(
+                    &cfg.backend, xtr, xtr, tr_norms, tr_norms, cfg.kernel, gamma,
+                );
+                let mut kva = StreamedGram::new(
+                    &cfg.backend, xva, xtr, va_norms, tr_norms, cfg.kernel, gamma,
+                );
+                gamma_task(cfg, ctx, active, &mut ktr, &mut kva)
+            }
+            (Store::Sparse(xtr), Store::Sparse(xva)) => {
+                let mut ktr = SparseGram::new(
+                    &cfg.backend, xtr, xtr, tr_norms, tr_norms, cfg.kernel, gamma,
+                );
+                let mut kva = SparseGram::new(
+                    &cfg.backend, xva, xtr, va_norms, tr_norms, cfg.kernel, gamma,
+                );
+                gamma_task(cfg, ctx, active, &mut ktr, &mut kva)
+            }
+            _ => unreachable!("fold subsets share the working set's storage flavor"),
+        },
     }
 }
 
-/// Run the integrated k-fold CV on a working set.
+/// Run the integrated k-fold CV on a dense working set.
 pub fn run_cv(data: &Dataset, cfg: &CvConfig) -> CvResult {
-    let n = data.len();
+    run_cv_x(StoreRef::Dense(&data.x), &data.y, cfg)
+}
+
+/// Run the integrated k-fold CV on a CSR working set — the same grid,
+/// tiers, and solvers as [`run_cv`], reading kernels through the
+/// sparse data plane (no n×d densification anywhere).
+pub fn run_cv_sparse(x: &CsrMatrix, y: &[f32], cfg: &CvConfig) -> CvResult {
+    run_cv_x(StoreRef::Sparse(x), y, cfg)
+}
+
+/// [`run_cv`] over a [`WorkingSet`] (either layout).
+pub fn run_cv_ws(ws: &WorkingSet, cfg: &CvConfig) -> CvResult {
+    run_cv_x(ws.x.as_ref(), &ws.y, cfg)
+}
+
+/// The CV engine over either sample layout.
+pub fn run_cv_x(x: StoreRef, y: &[f32], cfg: &CvConfig) -> CvResult {
+    let n = y.len();
+    assert_eq!(x.rows(), n, "sample/label count mismatch");
     assert!(n >= cfg.folds, "working set smaller than fold count");
-    let folds = make_folds(data, cfg.folds, effective_fold_kind(cfg, data), cfg.seed);
+    let folds = make_folds_y(y, cfg.folds, effective_fold_kind(cfg, y), cfg.seed);
     let (ng, nl) = (cfg.grid.gammas.len(), cfg.grid.lambdas.len());
     let jobs = cfg.jobs.max(1);
 
@@ -336,19 +372,27 @@ pub fn run_cv(data: &Dataset, cfg: &CvConfig) -> CvResult {
     // 5x CV speedup at identical selection + test error (§Perf))
     let fctx: Vec<FoldCtx> = (0..folds.k())
         .map(|f| {
-            let dtr = data.subset(&folds.train_indices(f));
-            let dva = data.subset(folds.val_indices(f));
+            let tr_idx = folds.train_indices(f);
+            let va_idx = folds.val_indices(f);
+            let ytr: Vec<f32> = tr_idx.iter().map(|&i| y[i]).collect();
+            let yva: Vec<f32> = va_idx.iter().map(|&i| y[i]).collect();
             let params = SolverParams {
-                max_iter: cfg.params.max_iter.min(4 * dtr.len().max(64)),
+                max_iter: cfg.params.max_iter.min(4 * ytr.len().max(64)),
                 ..cfg.params
             };
-            FoldCtx { dtr, dva, params }
+            FoldCtx {
+                xtr: x.select_rows(&tr_idx),
+                ytr,
+                xva: x.select_rows(va_idx),
+                yva,
+                params,
+            }
         })
         .collect();
 
     let per_fold_elems: Vec<usize> = fctx
         .iter()
-        .map(|c| c.dtr.len() * c.dtr.len() + c.dva.len() * c.dtr.len())
+        .map(|c| c.ytr.len() * c.ytr.len() + c.yva.len() * c.ytr.len())
         .collect();
     let tier = pick_tier(cfg.max_gram_mb, jobs, &per_fold_elems);
 
@@ -470,7 +514,7 @@ pub fn run_cv(data: &Dataset, cfg: &CvConfig) -> CvResult {
     let models = match cfg.select {
         SelectMethod::FoldAverage => run_wave(final_jobs, folds.k(), |f, bufs| {
             let fd = fold_data.as_ref().map(|v| &v[f]);
-            train_fold_model(data, &folds, f, cfg, best_gamma, best_lambda, fd, bufs)
+            train_fold_model(x, y, &folds, f, cfg, best_gamma, best_lambda, fd, bufs)
         }),
         SelectMethod::RetrainOnFull => {
             // the retrain works on the FULL working set, which is
@@ -484,7 +528,7 @@ pub fn run_cv(data: &Dataset, cfg: &CvConfig) -> CvResult {
                     .is_some_and(|mb| 2 * n * n > mb.saturating_mul(1 << 20) / 4);
             let all: Vec<usize> = (0..n).collect();
             let sol = final_solve(
-                cfg, &data.x, &data.y, best_gamma, best_lambda, &cfg.params, retrain_streamed,
+                cfg, x, y, best_gamma, best_lambda, &cfg.params, retrain_streamed,
             );
             vec![FoldModel { train_idx: all, coef: sol.coef }]
         }
@@ -503,8 +547,8 @@ pub fn run_cv(data: &Dataset, cfg: &CvConfig) -> CvResult {
 
 /// Stratified folds only make sense for classification labels; fall
 /// back to random folds for regression-like targets.
-fn effective_fold_kind(cfg: &CvConfig, data: &Dataset) -> FoldKind {
-    if cfg.fold_kind == FoldKind::Stratified && data.classes().len() > 16 {
+fn effective_fold_kind(cfg: &CvConfig, y: &[f32]) -> FoldKind {
+    if cfg.fold_kind == FoldKind::Stratified && distinct_labels(y).len() > 16 {
         FoldKind::Random
     } else {
         cfg.fold_kind
@@ -515,7 +559,7 @@ fn effective_fold_kind(cfg: &CvConfig, data: &Dataset) -> FoldKind {
 /// memory tier.
 fn final_solve(
     cfg: &CvConfig,
-    x: &Matrix,
+    x: StoreRef,
     y: &[f32],
     gamma: f32,
     lambda: f32,
@@ -524,11 +568,20 @@ fn final_solve(
 ) -> Solution {
     if streamed {
         let norms = x.row_sq_norms();
-        let mut k =
-            StreamedGram::new(&cfg.backend, x, x, &norms, &norms, cfg.kernel, gamma);
-        solve(cfg.solver, &mut k, y, lambda, params, None)
+        match x {
+            StoreRef::Dense(x) => {
+                let mut k =
+                    StreamedGram::new(&cfg.backend, x, x, &norms, &norms, cfg.kernel, gamma);
+                solve(cfg.solver, &mut k, y, lambda, params, None)
+            }
+            StoreRef::Sparse(x) => {
+                let mut k =
+                    SparseGram::new(&cfg.backend, x, x, &norms, &norms, cfg.kernel, gamma);
+                solve(cfg.solver, &mut k, y, lambda, params, None)
+            }
+        }
     } else {
-        let d2 = cfg.backend.sq_dists(x, x);
+        let d2 = cfg.backend.sq_dists_ref(x, x);
         let mut buf = GramBuffer::new();
         buf.fill(plane::next_epoch(), &d2, cfg.kernel, gamma);
         solve(cfg.solver, &mut buf, y, lambda, params, None)
@@ -541,7 +594,8 @@ fn final_solve(
 /// (the per-fold tier) recomputes the fold's distances.
 #[allow(clippy::too_many_arguments)]
 fn train_fold_model(
-    data: &Dataset,
+    x: StoreRef,
+    y: &[f32],
     folds: &Folds,
     f: usize,
     cfg: &CvConfig,
@@ -551,25 +605,34 @@ fn train_fold_model(
     bufs: &mut WorkerBufs,
 ) -> FoldModel {
     let tr_idx = folds.train_indices(f);
-    let dtr = data.subset(&tr_idx);
+    let xtr = x.select_rows(&tr_idx);
+    let ytr: Vec<f32> = tr_idx.iter().map(|&i| y[i]).collect();
     // final models get a roomier budget than the selection sweeps
     let params =
-        SolverParams { max_iter: cfg.params.max_iter.min(16 * dtr.len().max(64)), ..cfg.params };
+        SolverParams { max_iter: cfg.params.max_iter.min(16 * ytr.len().max(64)), ..cfg.params };
     let sol = match fd {
         Some(FoldData::Cached { d2_tr, ep_tr, .. }) => {
             bufs.ktr.fill(*ep_tr, d2_tr, cfg.kernel, gamma);
-            solve(cfg.solver, &mut bufs.ktr, &dtr.y, lambda, &params, None)
+            solve(cfg.solver, &mut bufs.ktr, &ytr, lambda, &params, None)
         }
-        Some(FoldData::Streamed { tr_norms, .. }) => {
-            let mut k = StreamedGram::new(
-                &cfg.backend, &dtr.x, &dtr.x, tr_norms, tr_norms, cfg.kernel, gamma,
-            );
-            solve(cfg.solver, &mut k, &dtr.y, lambda, &params, None)
-        }
+        Some(FoldData::Streamed { tr_norms, .. }) => match &xtr {
+            Store::Dense(xm) => {
+                let mut k = StreamedGram::new(
+                    &cfg.backend, xm, xm, tr_norms, tr_norms, cfg.kernel, gamma,
+                );
+                solve(cfg.solver, &mut k, &ytr, lambda, &params, None)
+            }
+            Store::Sparse(xm) => {
+                let mut k = SparseGram::new(
+                    &cfg.backend, xm, xm, tr_norms, tr_norms, cfg.kernel, gamma,
+                );
+                solve(cfg.solver, &mut k, &ytr, lambda, &params, None)
+            }
+        },
         None => {
-            let d2 = cfg.backend.sq_dists(&dtr.x, &dtr.x);
+            let d2 = cfg.backend.sq_dists_ref(xtr.as_ref(), xtr.as_ref());
             bufs.ktr.fill(plane::next_epoch(), &d2, cfg.kernel, gamma);
-            solve(cfg.solver, &mut bufs.ktr, &dtr.y, lambda, &params, None)
+            solve(cfg.solver, &mut bufs.ktr, &ytr, lambda, &params, None)
         }
     };
     FoldModel { train_idx: tr_idx, coef: sol.coef }
@@ -610,14 +673,38 @@ pub fn predict_average(
     backend: &GramBackend,
     max_gram_mb: Option<usize>,
 ) -> Vec<f32> {
+    predict_average_x(
+        models,
+        StoreRef::Dense(&train.x),
+        StoreRef::Dense(test_x),
+        gamma,
+        kernel,
+        backend,
+        max_gram_mb,
+    )
+}
+
+/// [`predict_average`] over either storage layout on either side (the
+/// coordinator's predict path — units may carry dense or CSR working
+/// sets, and test batches arrive in either form).
+pub fn predict_average_x(
+    models: &[FoldModel],
+    train_x: StoreRef,
+    test_x: StoreRef,
+    gamma: f32,
+    kernel: KernelKind,
+    backend: &GramBackend,
+    max_gram_mb: Option<usize>,
+) -> Vec<f32> {
     let mut acc = vec![0.0f32; test_x.rows()];
     let mut buf = TileBuffer::new();
     // test-row norms computed once, shared across all fold models
     let xn = test_x.row_sq_norms();
     for m in models {
-        let sv = train.x.select_rows(&m.train_idx);
-        plane::accumulate_decisions(
-            backend, kernel, gamma, test_x, &xn, &sv, &m.coef, max_gram_mb, &mut buf, &mut acc,
+        let sv = train_x.select_rows(&m.train_idx);
+        plane::accumulate_decisions_x(
+            backend, kernel, gamma, test_x, &xn, sv.as_ref(), &m.coef, max_gram_mb, &mut buf,
+            &mut acc,
         );
     }
     let inv = 1.0 / models.len().max(1) as f32;
@@ -759,6 +846,37 @@ mod tests {
         let mut capped = cached.clone();
         capped.max_gram_mb = Some(0); // force the streamed tier
         assert_identical(&run_cv(&d, &cached), &run_cv(&d, &capped));
+    }
+
+    #[test]
+    fn sparse_cv_bit_identical_to_densified() {
+        // the same grid on a CSR working set vs its densified twin:
+        // selection, val matrix, and fold coefficients must match
+        // bitwise — in the cached tiers AND the streamed tier
+        let mut rng = crate::data::rng::Rng::new(77);
+        let (n, d) = (90usize, 40usize);
+        let mut dense = Matrix::zeros(n, d);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            for _ in 0..5 {
+                let j = rng.below(d);
+                dense.set(i, j, rng.range(-1.5, 1.5));
+            }
+            let s: f32 = dense
+                .row(i)
+                .iter()
+                .enumerate()
+                .map(|(j, v)| if j % 2 == 0 { *v } else { -*v })
+                .sum();
+            y.push(if s >= 0.0 { 1.0 } else { -1.0 });
+        }
+        let csr = CsrMatrix::from_dense(&dense);
+        let dd = Dataset::new(dense, y.clone());
+        let cfg = small_cfg(60);
+        assert_identical(&run_cv(&dd, &cfg), &run_cv_sparse(&csr, &y, &cfg));
+        let mut capped = cfg.clone();
+        capped.max_gram_mb = Some(0); // force the streamed tier
+        assert_identical(&run_cv(&dd, &capped), &run_cv_sparse(&csr, &y, &capped));
     }
 
     #[test]

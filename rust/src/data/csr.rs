@@ -1,0 +1,299 @@
+//! Compressed-sparse-row sample storage — the sparse half of the data
+//! plane (see DESIGN.md §Data-plane).
+//!
+//! The paper's large-scale benchmarks are LIBSVM-format *sparse* sets
+//! (rcv1/url/webspam-class style: d in the tens of thousands, a few
+//! hundred non-zeros per row).  Densifying such data costs `n·d` floats
+//! before a single kernel value is computed; `CsrMatrix` stores the
+//! `indptr/indices/values` triplet instead, so resident bytes scale
+//! with `nnz`, not `n·d`.
+//!
+//! Bit-identity contract: every derived quantity (row norms, dot
+//! products, squared distances) is computed by walking stored entries
+//! in increasing column order, which produces the same f32 bits as the
+//! dense loops walking all `d` columns — the skipped terms are exact
+//! `±0.0` contributions that cannot change an IEEE accumulator that is
+//! never `-0.0`.  The sparse kernels in `kernel::backend` build on this
+//! (property-tested in `tests/property_tests.rs`).
+
+use super::matrix::Matrix;
+
+/// Compressed-sparse-row `f32` matrix.  Column indices are `u32`
+/// (halving index memory vs `usize`; d is bounded by `u32::MAX`) and
+/// strictly increasing within each row — the invariant every sparse
+/// kernel's merge-join relies on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    /// row `i` occupies `indices[indptr[i]..indptr[i+1]]`
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    cols: usize,
+}
+
+impl CsrMatrix {
+    /// Empty matrix with no rows.
+    pub fn empty(cols: usize) -> CsrMatrix {
+        CsrMatrix { indptr: vec![0], indices: Vec::new(), values: Vec::new(), cols }
+    }
+
+    /// Build from raw parts.  Panics when the triplet is inconsistent
+    /// or a row's indices are not strictly increasing and `< cols`.
+    pub fn from_parts(
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+        cols: usize,
+    ) -> CsrMatrix {
+        assert!(!indptr.is_empty() && indptr[0] == 0, "indptr must start at 0");
+        assert_eq!(*indptr.last().unwrap(), indices.len(), "indptr/indices mismatch");
+        assert_eq!(indices.len(), values.len(), "indices/values mismatch");
+        for w in indptr.windows(2) {
+            assert!(w[0] <= w[1], "indptr must be non-decreasing");
+            for k in w[0] + 1..w[1] {
+                assert!(indices[k - 1] < indices[k], "row indices must strictly increase");
+            }
+        }
+        assert!(indices.iter().all(|&j| (j as usize) < cols.max(1)), "index out of range");
+        CsrMatrix { indptr, indices, values, cols }
+    }
+
+    /// Convert a dense matrix, dropping exact zeros.
+    pub fn from_dense(x: &Matrix) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(x.rows() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for i in 0..x.rows() {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix { indptr, indices, values, cols: x.cols() }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Row `i` as parallel (indices, values) slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Raw parts view (persistence).
+    pub fn parts(&self) -> (&[usize], &[u32], &[f32]) {
+        (&self.indptr, &self.indices, &self.values)
+    }
+
+    /// Densify into an `n × cols` matrix.
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows(), self.cols);
+        for i in 0..self.rows() {
+            let (idx, val) = self.row(i);
+            let row = out.row_mut(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                row[j as usize] = v;
+            }
+        }
+        out
+    }
+
+    /// Densify row `i` into `out` (caller-provided scratch of length
+    /// `cols`, zeroed here) — the per-row densification boundary used
+    /// by geometric routers and dense-expansion predict tiles.
+    pub fn densify_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        let (idx, val) = self.row(i);
+        for (&j, &v) in idx.iter().zip(val) {
+            out[j as usize] = v;
+        }
+    }
+
+    /// New matrix containing the given rows (in order, repeats allowed).
+    pub fn select_rows(&self, sel: &[usize]) -> CsrMatrix {
+        let nnz: usize = sel.iter().map(|&i| self.indptr[i + 1] - self.indptr[i]).sum();
+        let mut indptr = Vec::with_capacity(sel.len() + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for &i in sel {
+            let (idx, val) = self.row(i);
+            indices.extend_from_slice(idx);
+            values.extend_from_slice(val);
+            indptr.push(indices.len());
+        }
+        CsrMatrix { indptr, indices, values, cols: self.cols }
+    }
+
+    /// Squared Euclidean norm of every row — bit-identical to
+    /// [`Matrix::row_sq_norms`] of the densified matrix (skipped zeros
+    /// contribute exact `+0.0` to the in-order accumulation).
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows())
+            .map(|i| self.row(i).1.iter().map(|v| v * v).sum())
+            .collect()
+    }
+
+    /// Resident bytes of the triplet storage (the number the dense
+    /// path's `rows · cols · 4` is compared against in
+    /// `benches/table_sparse.rs`).
+    pub fn bytes(&self) -> usize {
+        self.indptr.len() * std::mem::size_of::<usize>()
+            + self.indices.len() * std::mem::size_of::<u32>()
+            + self.values.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// A labeled sparse sample set — the CSR twin of
+/// [`super::dataset::Dataset`], produced by the streaming LIBSVM
+/// reader (`data::io::read_libsvm_csr`).
+#[derive(Clone, Debug)]
+pub struct SparseDataset {
+    pub x: CsrMatrix,
+    pub y: Vec<f32>,
+}
+
+impl SparseDataset {
+    pub fn new(x: CsrMatrix, y: Vec<f32>) -> SparseDataset {
+        assert_eq!(x.rows(), y.len(), "label/sample count mismatch");
+        SparseDataset { x, y }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Subset by row indices (order preserved).
+    pub fn subset(&self, idx: &[usize]) -> SparseDataset {
+        SparseDataset {
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+
+    /// Distinct labels in sorted order.
+    pub fn classes(&self) -> Vec<f32> {
+        super::dataset::distinct_labels(&self.y)
+    }
+
+    /// Densify into a [`super::dataset::Dataset`] (tests/benches; the
+    /// training path never does this).
+    pub fn to_dense(&self) -> super::dataset::Dataset {
+        super::dataset::Dataset::new(self.x.to_dense(), self.y.clone())
+    }
+
+    /// Deterministic split into train/test by shuffled indices —
+    /// mirrors [`super::dataset::Dataset::split`].
+    pub fn split(&self, n_train: usize, seed: u64) -> (SparseDataset, SparseDataset) {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        let mut rng = super::rng::Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let n_train = n_train.min(self.len());
+        (self.subset(&idx[..n_train]), self.subset(&idx[n_train..]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> CsrMatrix {
+        // [[0, 1.5, 0, 2], [0, 0, 0, 0], [3, 0, -1, 0]]
+        CsrMatrix::from_parts(
+            vec![0, 2, 2, 4],
+            vec![1, 3, 0, 2],
+            vec![1.5, 2.0, 3.0, -1.0],
+            4,
+        )
+    }
+
+    #[test]
+    fn roundtrip_dense() {
+        let c = toy();
+        assert_eq!((c.rows(), c.cols(), c.nnz()), (3, 4, 4));
+        let d = c.to_dense();
+        assert_eq!(d.row(0), &[0.0, 1.5, 0.0, 2.0]);
+        assert_eq!(d.row(1), &[0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(d.row(2), &[3.0, 0.0, -1.0, 0.0]);
+        assert_eq!(CsrMatrix::from_dense(&d), c);
+    }
+
+    #[test]
+    fn norms_match_dense_bitwise() {
+        let c = toy();
+        let dense = c.to_dense().row_sq_norms();
+        let sparse = c.row_sq_norms();
+        for (a, b) in dense.iter().zip(&sparse) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn select_rows_orders_and_repeats() {
+        let c = toy();
+        let s = c.select_rows(&[2, 0, 2]);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.to_dense().row(0), c.to_dense().row(2));
+        assert_eq!(s.to_dense().row(1), c.to_dense().row(0));
+        assert_eq!(s.to_dense().row(2), c.to_dense().row(2));
+    }
+
+    #[test]
+    fn densify_row_into_zeroes_scratch() {
+        let c = toy();
+        let mut scratch = vec![9.0f32; 4];
+        c.densify_row_into(1, &mut scratch);
+        assert_eq!(scratch, vec![0.0; 4]);
+        c.densify_row_into(0, &mut scratch);
+        assert_eq!(scratch, vec![0.0, 1.5, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn bytes_track_nnz_not_area() {
+        let c = toy();
+        assert!(c.bytes() < 3 * 1000 * 4);
+        let wide = CsrMatrix::from_parts(vec![0, 1], vec![999], vec![1.0], 1000);
+        assert!(wide.bytes() < 1000);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unsorted_row_rejected() {
+        CsrMatrix::from_parts(vec![0, 2], vec![3, 1], vec![1.0, 2.0], 4);
+    }
+
+    #[test]
+    fn sparse_dataset_subset_split() {
+        let d = SparseDataset::new(toy(), vec![1.0, -1.0, 1.0]);
+        assert_eq!(d.classes(), vec![-1.0, 1.0]);
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.y, vec![1.0, 1.0]);
+        let (tr, te) = d.split(2, 7);
+        assert_eq!(tr.len() + te.len(), 3);
+    }
+}

@@ -40,14 +40,7 @@ impl Dataset {
     /// Distinct labels in sorted order (exact float comparison, as
     /// labels are small integers or quantile levels set by us).
     pub fn classes(&self) -> Vec<f32> {
-        let mut c: Vec<f32> = Vec::new();
-        for &v in &self.y {
-            if !c.iter().any(|&u| u == v) {
-                c.push(v);
-            }
-        }
-        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        c
+        distinct_labels(&self.y)
     }
 
     /// Indices of samples with the given label.
@@ -66,6 +59,20 @@ impl Dataset {
             test: self.subset(&idx[n_train..]),
         }
     }
+}
+
+/// Distinct labels of `y` in sorted order — the label-only core of
+/// [`Dataset::classes`], shared with the sparse containers and the
+/// label-driven fold/task machinery.
+pub fn distinct_labels(y: &[f32]) -> Vec<f32> {
+    let mut c: Vec<f32> = Vec::new();
+    for &v in y {
+        if !c.iter().any(|&u| u == v) {
+            c.push(v);
+        }
+    }
+    c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    c
 }
 
 /// A train/test bundle (what `liquidData` returns in the R binding).

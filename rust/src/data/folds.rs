@@ -47,7 +47,13 @@ impl Folds {
 
 /// Generate k folds over `d` with the given strategy and seed.
 pub fn make_folds(d: &Dataset, k: usize, kind: FoldKind, seed: u64) -> Folds {
-    let n = d.len();
+    make_folds_y(&d.y, k, kind, seed)
+}
+
+/// Label-only fold generation — the strategies never look at features,
+/// so sparse datasets share this path.
+pub fn make_folds_y(y: &[f32], k: usize, kind: FoldKind, seed: u64) -> Folds {
+    let n = y.len();
     assert!(k >= 2, "need at least 2 folds");
     assert!(n >= k, "fewer samples than folds");
     let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
@@ -62,13 +68,22 @@ pub fn make_folds(d: &Dataset, k: usize, kind: FoldKind, seed: u64) -> Folds {
         }
         FoldKind::Stratified => {
             let mut rng = Rng::new(seed);
-            for class in d.classes() {
-                let mut idx = d.indices_of(class);
+            // ONE round-robin cursor carried across classes: restarting
+            // at fold 0 per class (`pos % k` with a class-local `pos`)
+            // would pile every class's remainder onto the low-index
+            // folds — with c classes, fold 0 could end up c samples
+            // bigger than fold k-1.  Carrying the cursor keeps overall
+            // fold sizes within 1 for any class mix, while each class
+            // still spreads over k consecutive slots (per-class counts
+            // within 1 too).
+            let mut cursor = 0usize;
+            for class in crate::data::dataset::distinct_labels(y) {
+                let mut idx: Vec<usize> =
+                    (0..n).filter(|&i| y[i] == class).collect();
                 rng.shuffle(&mut idx);
-                // continue round-robin within each class so fold sizes
-                // stay balanced overall
-                for (pos, &i) in idx.iter().enumerate() {
-                    folds[pos % k].push(i);
+                for &i in &idx {
+                    folds[cursor % k].push(i);
+                    cursor += 1;
                 }
             }
         }
@@ -135,6 +150,53 @@ mod tests {
             // 30 positives over 5 folds => 6 each
             assert_eq!(pos, 6);
         }
+    }
+
+    #[test]
+    fn stratified_carries_cursor_across_classes() {
+        // regression: many small odd-sized classes.  With the old
+        // class-local `pos % k`, every class dropped its remainder on
+        // fold 0: 11 classes x 3 samples over 5 folds gave fold sizes
+        // [11, 11, 11, 0, 0].  The carried cursor keeps the spread <= 1
+        // overall AND <= 1 within every class.
+        let n_classes = 11usize;
+        let per_class = 3usize;
+        let n = n_classes * per_class;
+        let x = Matrix::from_vec((0..n).map(|i| i as f32).collect(), n, 1);
+        let y: Vec<f32> = (0..n).map(|i| (i % n_classes) as f32).collect();
+        let d = Dataset::new(x, y);
+        let k = 5;
+        let f = make_folds(&d, k, FoldKind::Stratified, 3);
+        check_partition(&f, n);
+        let sizes: Vec<usize> = f.folds.iter().map(Vec::len).collect();
+        let (lo, hi) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
+        assert!(hi - lo <= 1, "fold sizes unbalanced: {sizes:?}");
+        for class in d.classes() {
+            let counts: Vec<usize> = f
+                .folds
+                .iter()
+                .map(|fold| fold.iter().filter(|&&i| d.y[i] == class).count())
+                .collect();
+            let (lo, hi) = (*counts.iter().min().unwrap(), *counts.iter().max().unwrap());
+            assert!(hi - lo <= 1, "class {class} unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn stratified_balances_uneven_binary_mix() {
+        // 7 positives + 46 negatives over 4 folds: overall sizes must
+        // differ by at most 1 even though both classes leave remainders
+        let n = 53usize;
+        let x = Matrix::from_vec((0..n).map(|i| i as f32).collect(), n, 1);
+        let y: Vec<f32> = (0..n).map(|i| if i < 7 { 1.0 } else { -1.0 }).collect();
+        let d = Dataset::new(x, y);
+        let f = make_folds(&d, 4, FoldKind::Stratified, 9);
+        check_partition(&f, n);
+        let sizes: Vec<usize> = f.folds.iter().map(Vec::len).collect();
+        assert!(
+            sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1,
+            "{sizes:?}"
+        );
     }
 
     #[test]

@@ -8,49 +8,137 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::csr::{CsrMatrix, SparseDataset};
 use super::dataset::Dataset;
 use super::matrix::Matrix;
 
-/// Parse LIBSVM format: `label idx:val idx:val ...` (1-based indices).
-/// `dim` may be 0 to infer the max index.
-pub fn parse_libsvm(text: &str, dim: usize) -> Result<Dataset> {
-    let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
-    let mut labels: Vec<f32> = Vec::new();
-    let mut max_idx = dim;
-    for (ln, line) in text.lines().enumerate() {
+/// Incremental LIBSVM parser building a [`CsrMatrix`] directly — the
+/// sparse data plane's ingest path (see DESIGN.md §Data-plane).  Feed
+/// lines one at a time; memory stays bounded by the CSR triplet being
+/// built (plus one row's scratch), never by the text.
+///
+/// Strictness (all errors carry the 1-based line number):
+/// * indices are 1-based; `0:` is rejected;
+/// * duplicate indices within a row are rejected — last-write-wins
+///   silently changes norms and distances far from the cause;
+/// * with a declared `dim != 0`, an index past `dim` is rejected
+///   instead of silently widening the matrix — predict-time rows wider
+///   than the trained model's `dim` used to surface as shape-mismatch
+///   panics deep in the kernel layer.
+pub struct LibsvmParser {
+    /// declared dimension; 0 = infer from the max index seen
+    dim: usize,
+    max_idx: usize,
+    line_no: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    labels: Vec<f32>,
+    row_buf: Vec<(u32, f32)>,
+}
+
+impl LibsvmParser {
+    pub fn new(dim: usize) -> LibsvmParser {
+        LibsvmParser {
+            dim,
+            max_idx: 0,
+            line_no: 0,
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            labels: Vec::new(),
+            row_buf: Vec::new(),
+        }
+    }
+
+    /// Parse one input line (blank lines and `#` comments are skipped).
+    pub fn push_line(&mut self, line: &str) -> Result<()> {
+        self.line_no += 1;
+        let ln = self.line_no;
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
-            continue;
+            return Ok(());
         }
         let mut parts = line.split_whitespace();
         let lab: f32 = parts
             .next()
-            .ok_or_else(|| anyhow!("line {}: empty", ln + 1))?
+            .ok_or_else(|| anyhow!("line {ln}: empty"))?
             .parse()
-            .with_context(|| format!("line {}: bad label", ln + 1))?;
-        let mut feats = Vec::new();
+            .with_context(|| format!("line {ln}: bad label"))?;
+        self.row_buf.clear();
         for tok in parts {
             let (i, v) = tok
                 .split_once(':')
-                .ok_or_else(|| anyhow!("line {}: token `{tok}` not idx:val", ln + 1))?;
-            let i: usize = i.parse().with_context(|| format!("line {}: bad index", ln + 1))?;
+                .ok_or_else(|| anyhow!("line {ln}: token `{tok}` not idx:val"))?;
+            let i: usize = i.parse().with_context(|| format!("line {ln}: bad index"))?;
             if i == 0 {
-                return Err(anyhow!("line {}: libsvm indices are 1-based", ln + 1));
+                return Err(anyhow!("line {ln}: libsvm indices are 1-based"));
             }
-            let v: f32 = v.parse().with_context(|| format!("line {}: bad value", ln + 1))?;
-            max_idx = max_idx.max(i);
-            feats.push((i - 1, v));
+            if self.dim != 0 && i > self.dim {
+                return Err(anyhow!(
+                    "line {ln}: index {i} exceeds declared dim {} — refusing to widen",
+                    self.dim
+                ));
+            }
+            if i > u32::MAX as usize {
+                return Err(anyhow!("line {ln}: index {i} exceeds u32 range"));
+            }
+            let v: f32 = v.parse().with_context(|| format!("line {ln}: bad value"))?;
+            self.max_idx = self.max_idx.max(i);
+            self.row_buf.push((i as u32 - 1, v));
         }
-        labels.push(lab);
-        rows.push(feats);
-    }
-    let mut x = Matrix::zeros(rows.len(), max_idx);
-    for (r, feats) in rows.iter().enumerate() {
-        for &(j, v) in feats {
-            x.set(r, j, v);
+        // files are usually sorted already; sort defensively, then a
+        // single adjacent scan catches duplicates (before zero-dropping,
+        // so `2:0 2:5` is still a duplicate)
+        self.row_buf.sort_unstable_by_key(|&(j, _)| j);
+        for w in self.row_buf.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(anyhow!(
+                    "line {ln}: duplicate index {} (libsvm rows must list each index once)",
+                    w[0].0 + 1
+                ));
+            }
         }
+        for &(j, v) in &self.row_buf {
+            // explicit zeros are dropped: they change no kernel value
+            // (exact ±0.0 contributions) and would bloat the triplet
+            if v != 0.0 {
+                self.indices.push(j);
+                self.values.push(v);
+            }
+        }
+        self.indptr.push(self.indices.len());
+        self.labels.push(lab);
+        Ok(())
     }
-    Ok(Dataset::new(x, labels))
+
+    /// Finish parsing: the CSR dataset with `cols = dim` (declared) or
+    /// the max index seen (inferred).
+    pub fn finish(self) -> SparseDataset {
+        let cols = if self.dim != 0 { self.dim } else { self.max_idx };
+        SparseDataset::new(
+            CsrMatrix::from_parts(self.indptr, self.indices, self.values, cols),
+            self.labels,
+        )
+    }
+}
+
+/// Parse LIBSVM text into a [`SparseDataset`] (CSR, no densification).
+/// `dim` may be 0 to infer the max index.
+pub fn parse_libsvm_csr(text: &str, dim: usize) -> Result<SparseDataset> {
+    let mut p = LibsvmParser::new(dim);
+    for line in text.lines() {
+        p.push_line(line)?;
+    }
+    Ok(p.finish())
+}
+
+/// Parse LIBSVM format into a dense [`Dataset`]: `label idx:val ...`
+/// (1-based indices).  `dim` may be 0 to infer the max index.  Built
+/// on the CSR parser, so strictness (duplicate indices, index > dim)
+/// is identical across the dense and sparse ingest paths.
+pub fn parse_libsvm(text: &str, dim: usize) -> Result<Dataset> {
+    Ok(parse_libsvm_csr(text, dim)?.to_dense())
 }
 
 /// Parse CSV with the label in the given column (no header).
@@ -88,6 +176,30 @@ pub fn read_libsvm(path: &Path, dim: usize) -> Result<Dataset> {
     parse_libsvm(&text, dim)
 }
 
+/// Stream a LIBSVM file into a [`SparseDataset`] line-by-line: resident
+/// memory is the growing CSR triplet plus one line buffer — never the
+/// whole text, never an n×d dense matrix.  This is the ingest path for
+/// `--sparse` training.
+pub fn read_libsvm_csr(path: &Path, dim: usize) -> Result<SparseDataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    read_libsvm_buffered_csr(std::io::BufReader::new(f), dim)
+}
+
+/// [`read_libsvm_csr`] over any buffered reader.
+pub fn read_libsvm_buffered_csr<R: BufRead>(r: R, dim: usize) -> Result<SparseDataset> {
+    let mut p = LibsvmParser::new(dim);
+    let mut line = String::new();
+    let mut r = r;
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            break;
+        }
+        p.push_line(&line)?;
+    }
+    Ok(p.finish())
+}
+
 pub fn read_csv(path: &Path, label_col: usize) -> Result<Dataset> {
     let text = std::fs::read_to_string(path).context("reading csv file")?;
     parse_csv(&text, label_col)
@@ -123,11 +235,30 @@ pub fn write_csv(path: &Path, d: &Dataset) -> Result<()> {
     Ok(())
 }
 
-/// Stream a libsvm file line-by-line (for large files).
-pub fn read_libsvm_buffered<R: BufRead>(mut r: R, dim: usize) -> Result<Dataset> {
-    let mut text = String::new();
-    r.read_to_string(&mut text)?;
-    parse_libsvm(&text, dim)
+/// Stream a libsvm file line-by-line (for large files): genuinely
+/// bounded memory — one line buffer plus the CSR triplet under
+/// construction (the seed version slurped the whole text with
+/// `read_to_string` despite this doc line), densified only at the end.
+/// Parity with [`parse_libsvm`] is tested below; callers that can stay
+/// sparse should use [`read_libsvm_buffered_csr`] and skip the
+/// densification entirely.
+pub fn read_libsvm_buffered<R: BufRead>(r: R, dim: usize) -> Result<Dataset> {
+    Ok(read_libsvm_buffered_csr(r, dim)?.to_dense())
+}
+
+/// Write a [`SparseDataset`] in LIBSVM format (stored entries only).
+pub fn write_libsvm_csr(path: &Path, d: &SparseDataset) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for i in 0..d.len() {
+        write!(w, "{}", d.y[i])?;
+        let (idx, val) = d.x.row(i);
+        for (&j, &v) in idx.iter().zip(val) {
+            write!(w, " {}:{}", j + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -146,6 +277,63 @@ mod tests {
     #[test]
     fn libsvm_rejects_zero_index() {
         assert!(parse_libsvm("1 0:1\n", 0).is_err());
+    }
+
+    #[test]
+    fn libsvm_rejects_duplicate_index_with_line_number() {
+        let err = parse_libsvm("1 1:0.5\n-1 2:1 3:4 2:9\n", 0).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("duplicate index 2"), "{msg}");
+        // unsorted but distinct indices are fine (sorted internally)
+        let d = parse_libsvm("1 3:3 1:1\n", 0).unwrap();
+        assert_eq!(d.x.row(0), &[1.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn libsvm_rejects_index_past_declared_dim() {
+        let err = parse_libsvm("1 2:1\n1 5:2\n", 3).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2") && msg.contains("exceeds declared dim 3"), "{msg}");
+        // dim == 0 still infers
+        assert_eq!(parse_libsvm("1 5:2\n", 0).unwrap().dim(), 5);
+        // declared dim wider than the data pads
+        assert_eq!(parse_libsvm("1 2:1\n", 6).unwrap().dim(), 6);
+    }
+
+    #[test]
+    fn buffered_reader_parity_with_parse() {
+        let text = "+1 1:0.5 3:2\n\n# comment\n-1 2:1\n3 1:-1 4:0.25\n";
+        let a = parse_libsvm(text, 0).unwrap();
+        let b = read_libsvm_buffered(std::io::Cursor::new(text.as_bytes()), 0).unwrap();
+        assert_eq!(a.x.as_slice(), b.x.as_slice());
+        assert_eq!(a.y, b.y);
+        // and the CSR path densifies to the same bytes
+        let c = parse_libsvm_csr(text, 0).unwrap();
+        assert_eq!(c.to_dense().x.as_slice(), a.x.as_slice());
+        assert_eq!(c.dim(), 4);
+        assert_eq!(c.x.nnz(), 5);
+    }
+
+    #[test]
+    fn csr_roundtrip_via_file() {
+        let dir = std::env::temp_dir().join(format!("liquidsvm-io-csr-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let d = parse_libsvm_csr("1 2:0.5 9:1\n-1 4:2\n", 0).unwrap();
+        let p = dir.join("d.libsvm");
+        write_libsvm_csr(&p, &d).unwrap();
+        let back = read_libsvm_csr(&p, d.dim()).unwrap();
+        assert_eq!(back.y, d.y);
+        assert_eq!(back.x, d.x);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn explicit_zero_values_are_dropped() {
+        let d = parse_libsvm_csr("1 1:0 3:2\n", 0).unwrap();
+        assert_eq!(d.x.nnz(), 1);
+        assert_eq!(d.dim(), 3);
+        assert_eq!(d.to_dense().x.row(0), &[0.0, 0.0, 2.0]);
     }
 
     #[test]

@@ -1,13 +1,17 @@
 //! Data substrate: sample containers, file formats, scaling, fold
 //! generation, and the synthetic stand-ins for the paper's datasets.
 
+pub mod csr;
 pub mod dataset;
 pub mod folds;
 pub mod io;
 pub mod matrix;
 pub mod rng;
 pub mod scale;
+pub mod store;
 pub mod synth;
 
+pub use csr::{CsrMatrix, SparseDataset};
 pub use dataset::{Dataset, TrainTest};
 pub use matrix::Matrix;
+pub use store::{Store, StoreRef, WorkingSet};

@@ -1,0 +1,182 @@
+//! The sample-storage abstraction of the data plane (see DESIGN.md
+//! §Data-plane): one enum over the two physical layouts — dense
+//! row-major [`Matrix`] and [`CsrMatrix`] — so the CV engine, the
+//! trained units, and the predict path carry either without caring
+//! which.  Kernel math on a `Store` lives in `kernel::backend` /
+//! `kernel::plane` (the data module stays dependency-free); this
+//! module only owns the data operations: row selection, norms, and the
+//! explicit densification boundaries.
+
+use super::csr::CsrMatrix;
+use super::matrix::Matrix;
+
+/// Owned sample storage: dense or CSR.
+#[derive(Clone, Debug)]
+pub enum Store {
+    Dense(Matrix),
+    Sparse(CsrMatrix),
+}
+
+/// Borrowed view of a [`Store`] — what the CV engine and predict path
+/// take, so callers holding a bare `&Matrix` or `&CsrMatrix` never
+/// clone into an owned `Store` just to call in.
+#[derive(Clone, Copy, Debug)]
+pub enum StoreRef<'a> {
+    Dense(&'a Matrix),
+    Sparse(&'a CsrMatrix),
+}
+
+impl Store {
+    /// Borrowed view (not the `AsRef` trait: the target is an enum of
+    /// references, not a reference).
+    #[allow(clippy::should_implement_trait)]
+    pub fn as_ref(&self) -> StoreRef<'_> {
+        match self {
+            Store::Dense(m) => StoreRef::Dense(m),
+            Store::Sparse(m) => StoreRef::Sparse(m),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.as_ref().rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.as_ref().cols()
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Store::Sparse(_))
+    }
+}
+
+impl StoreRef<'_> {
+    pub fn rows(&self) -> usize {
+        match self {
+            StoreRef::Dense(m) => m.rows(),
+            StoreRef::Sparse(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            StoreRef::Dense(m) => m.cols(),
+            StoreRef::Sparse(m) => m.cols(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, StoreRef::Sparse(_))
+    }
+
+    /// Owned subset in the same layout (order preserved, repeats
+    /// allowed) — fold subsets and cell working sets never change
+    /// flavor.
+    pub fn select_rows(&self, idx: &[usize]) -> Store {
+        match self {
+            StoreRef::Dense(m) => Store::Dense(m.select_rows(idx)),
+            StoreRef::Sparse(m) => Store::Sparse(m.select_rows(idx)),
+        }
+    }
+
+    /// Squared row norms — bit-identical across layouts (see
+    /// [`CsrMatrix::row_sq_norms`]).
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        match self {
+            StoreRef::Dense(m) => m.row_sq_norms(),
+            StoreRef::Sparse(m) => m.row_sq_norms(),
+        }
+    }
+
+    /// Densify row `i` into caller scratch of length `cols` — the
+    /// per-row densification boundary (geometric routing, dense-model
+    /// predict on sparse inputs).  For dense stores this is a plain
+    /// copy.
+    pub fn densify_row_into(&self, i: usize, out: &mut [f32]) {
+        match self {
+            StoreRef::Dense(m) => out.copy_from_slice(m.row(i)),
+            StoreRef::Sparse(m) => m.densify_row_into(i, out),
+        }
+    }
+
+    /// Fully densify (tests / explicit boundaries only — never the
+    /// sparse hot path).
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            StoreRef::Dense(m) => (*m).clone(),
+            StoreRef::Sparse(m) => m.to_dense(),
+        }
+    }
+}
+
+/// A labeled working set over either storage layout — what a trained
+/// (cell × task) unit carries as its expansion data.
+#[derive(Clone, Debug)]
+pub struct WorkingSet {
+    pub x: Store,
+    pub y: Vec<f32>,
+}
+
+impl WorkingSet {
+    pub fn dense(x: Matrix, y: Vec<f32>) -> WorkingSet {
+        assert_eq!(x.rows(), y.len(), "label/sample count mismatch");
+        WorkingSet { x: Store::Dense(x), y }
+    }
+
+    pub fn sparse(x: CsrMatrix, y: Vec<f32>) -> WorkingSet {
+        assert_eq!(x.rows(), y.len(), "label/sample count mismatch");
+        WorkingSet { x: Store::Sparse(x), y }
+    }
+
+    pub fn from_dataset(d: super::dataset::Dataset) -> WorkingSet {
+        WorkingSet { x: Store::Dense(d.x), y: d.y }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_preserves_flavor() {
+        let dense = StoreRef::Dense(&Matrix::from_rows(&[&[1.0], &[2.0]])).select_rows(&[1]);
+        assert!(!dense.is_sparse());
+        let csr = CsrMatrix::from_dense(&Matrix::from_rows(&[&[0.0, 1.0], &[2.0, 0.0]]));
+        let sparse = StoreRef::Sparse(&csr).select_rows(&[0]);
+        assert!(sparse.is_sparse());
+        assert_eq!(sparse.as_ref().to_dense().row(0), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn densify_row_matches_dense_copy() {
+        let m = Matrix::from_rows(&[&[0.0, 3.0, 0.0], &[1.0, 0.0, 2.0]]);
+        let csr = CsrMatrix::from_dense(&m);
+        let mut a = vec![0.0; 3];
+        let mut b = vec![0.0; 3];
+        for i in 0..2 {
+            StoreRef::Dense(&m).densify_row_into(i, &mut a);
+            StoreRef::Sparse(&csr).densify_row_into(i, &mut b);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn working_set_accessors() {
+        let ws = WorkingSet::dense(Matrix::from_rows(&[&[1.0, 2.0]]), vec![1.0]);
+        assert_eq!((ws.len(), ws.dim()), (1, 2));
+        assert!(!ws.is_empty());
+        assert!(!ws.x.is_sparse());
+    }
+}

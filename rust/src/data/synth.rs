@@ -13,6 +13,7 @@
 //!
 //! Deterministic: same (name, n, seed) → identical bytes.
 
+use super::csr::{CsrMatrix, SparseDataset};
 use super::dataset::{Dataset, TrainTest};
 use super::rng::Rng;
 use super::matrix::Matrix;
@@ -246,6 +247,60 @@ pub fn banana_binary(n: usize, seed: u64) -> Dataset {
     d
 }
 
+/// Synthetic high-dimensional sparse binary set — the stand-in for the
+/// rcv1/url/webspam-class style LIBSVM benchmarks (d in the tens of
+/// thousands, sub-percent density) that the sparse data plane exists
+/// for.  Each row draws `max(1, round(dim·density))` distinct indices
+/// with values in [-1, 1]; the label is the sign of a fixed sparse
+/// hyperplane (sign pattern hashed from the column index), so the
+/// problem is learnable at any dimension.  Deterministic: same
+/// `(n, dim, density, seed)` → identical bytes, and the CSR bytes are
+/// `O(n·nnz)` — the generator never allocates an n×d matrix.
+pub fn sparse_binary(n: usize, dim: usize, density: f32, seed: u64) -> SparseDataset {
+    assert!(dim > 0 && density > 0.0);
+    let nnz_row = ((dim as f32 * density).round() as usize).clamp(1, dim);
+    let mut rng = Rng::new(seed ^ 0x5aa7_5e3d_0bad_cafe);
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices: Vec<u32> = Vec::with_capacity(n * nnz_row);
+    let mut values: Vec<f32> = Vec::with_capacity(n * nnz_row);
+    let mut y = Vec::with_capacity(n);
+    indptr.push(0);
+    let mut row: Vec<u32> = Vec::with_capacity(nnz_row);
+    for _ in 0..n {
+        row.clear();
+        while row.len() < nnz_row {
+            let j = rng.below(dim) as u32;
+            row.push(j);
+            if row.len() == nnz_row {
+                row.sort_unstable();
+                row.dedup();
+            }
+        }
+        let mut score = 0.0f32;
+        for &j in row.iter() {
+            let mut v = rng.range(-1.0, 1.0);
+            if v == 0.0 {
+                // CSR stores no explicit zeros; nudge the (measure-zero
+                // but reachable) exact hit
+                v = 0.5;
+            }
+            indices.push(j);
+            values.push(v);
+            score += v * plane_sign(j);
+        }
+        indptr.push(indices.len());
+        y.push(if score >= 0.0 { 1.0 } else { -1.0 });
+    }
+    SparseDataset::new(CsrMatrix::from_parts(indptr, indices, values, dim), y)
+}
+
+/// Fixed ±1 hyperplane weight for column `j` (splitmix-style hash).
+fn plane_sign(j: u32) -> f32 {
+    let mut z = (j as u64).wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    if z & 1 == 0 { 1.0 } else { -1.0 }
+}
+
 /// 1-d heteroscedastic regression set for quantile/expectile scenarios:
 /// y = sinc-like trend + noise whose scale grows with x, so the true
 /// conditional quantile curves fan out (visible in the example output).
@@ -313,6 +368,22 @@ mod tests {
         assert_eq!(tt.train.classes().len(), 4);
         assert_eq!(tt.train.dim(), 2);
         assert_eq!(tt.test.len(), 100);
+    }
+
+    #[test]
+    fn sparse_binary_shape_and_determinism() {
+        let a = sparse_binary(50, 5000, 0.002, 9);
+        let b = sparse_binary(50, 5000, 0.002, 9);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.dim(), 5000);
+        assert_eq!(a.len(), 50);
+        // ~10 nnz per row, never more
+        assert!(a.x.nnz() <= 50 * 10);
+        assert!(a.x.nnz() >= 50); // at least one per row
+        assert!(a.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        // both classes present
+        assert!(a.classes().len() == 2);
     }
 
     #[test]

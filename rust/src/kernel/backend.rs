@@ -9,7 +9,9 @@
 
 use std::sync::Arc;
 
+use crate::data::csr::CsrMatrix;
 use crate::data::matrix::{sq_dist, Matrix};
+use crate::data::store::StoreRef;
 use crate::runtime::XlaRuntime;
 
 use super::KernelKind;
@@ -72,6 +74,44 @@ impl GramBackend {
     /// Single-γ Gram matrix.
     pub fn gram(&self, x: &Matrix, y: &Matrix, gamma: f32, kind: KernelKind) -> Matrix {
         self.gram_multi(x, y, &[gamma], kind).pop().unwrap()
+    }
+
+    /// Pairwise squared distances over CSR samples, `[x.rows × y.rows]`
+    /// — same rung semantics as [`GramBackend::sq_dists`], bit-identical
+    /// to running that on the densified matrices (the sparse kernels
+    /// below replicate the dense accumulation orders exactly).  The XLA
+    /// artifact takes dense buffers only, so sparse stops here: the Xla
+    /// rung computes on the blocked CPU path (see DESIGN.md §Data-plane).
+    pub fn sq_dists_csr(&self, x: &CsrMatrix, y: &CsrMatrix) -> Matrix {
+        let (m, n) = (x.rows(), y.rows());
+        assert_eq!(x.cols(), y.cols(), "dimension mismatch");
+        let mut out = Matrix::zeros(m, n);
+        match self {
+            GramBackend::Scalar => {
+                for i in 0..m {
+                    sq_dists_row_csr_scalar(x.row(i), y, out.row_mut(i));
+                }
+            }
+            GramBackend::Blocked | GramBackend::Xla(_) => {
+                let xn = x.row_sq_norms();
+                let yn = y.row_sq_norms();
+                for i in 0..m {
+                    sq_dists_row_csr_blocked(x.row(i), y, xn[i], &yn, x.cols(), out.row_mut(i));
+                }
+            }
+        }
+        out
+    }
+
+    /// [`GramBackend::sq_dists`] over either storage layout.  Mixed
+    /// layouts densify the sparse side first (an explicit boundary —
+    /// the CV engine never mixes; see DESIGN.md §Data-plane).
+    pub fn sq_dists_ref(&self, x: StoreRef, y: StoreRef) -> Matrix {
+        match (x, y) {
+            (StoreRef::Dense(a), StoreRef::Dense(b)) => self.sq_dists(a, b),
+            (StoreRef::Sparse(a), StoreRef::Sparse(b)) => self.sq_dists_csr(a, b),
+            (a, b) => self.sq_dists(&a.to_dense(), &b.to_dense()),
+        }
     }
 
     /// Squared distances of `x` rows `r0..r1` against every `y` row,
@@ -209,6 +249,129 @@ pub fn sq_dists_row_scalar(xi: &[f32], y: &Matrix, out: &mut [f32]) {
     }
 }
 
+// -------------------------------------------------------- sparse kernels
+//
+// The sparse·sparse kernels below are bit-identical to their dense
+// counterparts on the densified rows.  The argument, once: the dense
+// loops add one term per column; every term where a factor is zero is
+// an exact `±0.0`, and `acc + (±0.0) == acc` bitwise for every `acc`
+// except `-0.0` — which the accumulators can never be (they start at
+// `+0.0`, and IEEE round-to-nearest never produces `-0.0` from a sum
+// of non-(-0.0) addends; `x + (-x) = +0.0`).  So walking only the
+// stored entries, in the same column order and into the same
+// accumulator structure, reproduces the dense bits exactly.
+// Property-tested in `tests/property_tests.rs`.
+
+/// One sparse row as parallel (indices, values) slices — the shape
+/// [`CsrMatrix::row`] returns.
+pub type SparseRow<'a> = (&'a [u32], &'a [f32]);
+
+/// Scalar-rung squared distance between two sparse rows: the merge-join
+/// twin of [`sq_dist`], one accumulator, terms in column order.
+pub fn sq_dist_sp((ai, av): SparseRow, (bi, bv): SparseRow) -> f32 {
+    let mut s = 0.0f32;
+    let (mut p, mut q) = (0usize, 0usize);
+    while p < ai.len() && q < bi.len() {
+        match ai[p].cmp(&bi[q]) {
+            std::cmp::Ordering::Less => {
+                let d = av[p];
+                s += d * d;
+                p += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                let d = bv[q];
+                s += d * d;
+                q += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                let d = av[p] - bv[q];
+                s += d * d;
+                p += 1;
+                q += 1;
+            }
+        }
+    }
+    for k in p..ai.len() {
+        s += av[k] * av[k];
+    }
+    for k in q..bi.len() {
+        s += bv[k] * bv[k];
+    }
+    s
+}
+
+/// Blocked-rung dot product between two sparse rows — the merge-join
+/// twin of [`dot4`], replicating its accumulator structure exactly:
+/// columns `< (d/4)·4` feed four lanes keyed by `col % 4`, the lanes
+/// reduce as `s0+s1+s2+s3`, and the ≤3 tail columns are added after, in
+/// column order.  `d` is the (dense) dimension, which fixes the
+/// lane/tail split.
+pub(crate) fn dot4_sp((ai, av): SparseRow, (bi, bv): SparseRow, d: usize) -> f32 {
+    let cut = ((d / 4) * 4) as u32;
+    let mut s = [0.0f32; 4];
+    // at most 3 columns fall past the cut; collected in order
+    let mut tail = [0.0f32; 3];
+    let mut n_tail = 0usize;
+    let (mut p, mut q) = (0usize, 0usize);
+    while p < ai.len() && q < bi.len() {
+        match ai[p].cmp(&bi[q]) {
+            std::cmp::Ordering::Less => p += 1,
+            std::cmp::Ordering::Greater => q += 1,
+            std::cmp::Ordering::Equal => {
+                let col = ai[p];
+                let prod = av[p] * bv[q];
+                if col < cut {
+                    s[(col % 4) as usize] += prod;
+                } else {
+                    tail[n_tail] = prod;
+                    n_tail += 1;
+                }
+                p += 1;
+                q += 1;
+            }
+        }
+    }
+    let mut dot = s[0] + s[1] + s[2] + s[3];
+    for &t in &tail[..n_tail] {
+        dot += t;
+    }
+    dot
+}
+
+/// Blocked-rung sparse squared distance from precomputed row norms —
+/// the twin of [`sq_dist_norms`], sharing its clamp-at-source contract.
+#[inline]
+pub fn sq_dist_norms_sp(a: SparseRow, b: SparseRow, an: f32, bn: f32, d: usize) -> f32 {
+    (an + bn - 2.0 * dot4_sp(a, b, d)).max(0.0)
+}
+
+/// Scalar-path squared distances of one sparse row against every `y`
+/// row (bit-identical to the corresponding row of
+/// [`GramBackend::sq_dists_csr`] on the Scalar rung).
+pub fn sq_dists_row_csr_scalar(xi: SparseRow, y: &CsrMatrix, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), y.rows());
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = sq_dist_sp(xi, y.row(j));
+    }
+}
+
+/// Blocked-path squared distances of one sparse row against every `y`
+/// row (no allocation; `d` is the dense dimension fixing the dot4
+/// lane split).
+pub fn sq_dists_row_csr_blocked(
+    xi: SparseRow,
+    y: &CsrMatrix,
+    xn_i: f32,
+    yn: &[f32],
+    d: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), y.rows());
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = sq_dist_norms_sp(xi, y.row(j), xn_i, yn[j], d);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,6 +435,71 @@ mod tests {
                 assert_eq!(&tile[t * y.rows()..(t + 1) * y.rows()], full.row(i), "backend {be:?}");
             }
         }
+    }
+
+    fn rand_sparse(m: usize, d: usize, nnz_row: usize, seed: u64) -> CsrMatrix {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        let mut dense = Matrix::zeros(m, d);
+        for i in 0..m {
+            for _ in 0..nnz_row {
+                let j = rng.below(d);
+                dense.set(i, j, rng.range(-2.0, 2.0));
+            }
+        }
+        CsrMatrix::from_dense(&dense)
+    }
+
+    #[test]
+    fn sparse_sq_dists_bit_identical_to_densified() {
+        // includes the empty row, duplicate-ish tiny values, and a
+        // dimension with a dot4 tail (d % 4 != 0)
+        for d in [7usize, 16, 33] {
+            let x = rand_sparse(9, d, 3, 100 + d as u64);
+            let y = rand_sparse(11, d, 4, 200 + d as u64);
+            let (xd, yd) = (x.to_dense(), y.to_dense());
+            for be in [GramBackend::Scalar, GramBackend::Blocked] {
+                let dense = be.sq_dists(&xd, &yd);
+                let sparse = be.sq_dists_csr(&x, &y);
+                for (a, b) in dense.as_slice().iter().zip(sparse.as_slice()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{be:?} d={d}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_row_kernels_match_full_matrix() {
+        let x = rand_sparse(6, 13, 4, 7);
+        let y = rand_sparse(8, 13, 3, 8);
+        let (xn, yn) = (x.row_sq_norms(), y.row_sq_norms());
+        let scalar_full = GramBackend::Scalar.sq_dists_csr(&x, &y);
+        let blocked_full = GramBackend::Blocked.sq_dists_csr(&x, &y);
+        let mut row = vec![0.0f32; 8];
+        for i in 0..6 {
+            sq_dists_row_csr_scalar(x.row(i), &y, &mut row);
+            assert_eq!(&row, scalar_full.row(i));
+            sq_dists_row_csr_blocked(x.row(i), &y, xn[i], &yn, 13, &mut row);
+            assert_eq!(&row, blocked_full.row(i));
+        }
+    }
+
+    #[test]
+    fn sparse_norms_match_dense_bitwise() {
+        let x = rand_sparse(10, 21, 5, 9);
+        let a = x.row_sq_norms();
+        let b = x.to_dense().row_sq_norms();
+        for (u, v) in a.iter().zip(&b) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn sq_dists_ref_dispatches_both_layouts() {
+        let x = rand_sparse(5, 10, 3, 11);
+        let xd = x.to_dense();
+        let a = GramBackend::Blocked.sq_dists_ref(StoreRef::Sparse(&x), StoreRef::Sparse(&x));
+        let b = GramBackend::Blocked.sq_dists_ref(StoreRef::Dense(&xd), StoreRef::Dense(&xd));
+        assert_eq!(a.as_slice(), b.as_slice());
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod backend;
 pub mod plane;
 
 pub use backend::GramBackend;
-pub use plane::{DenseGram, GramBuffer, GramSource, StreamedGram};
+pub use plane::{DenseGram, GramBuffer, GramSource, SparseGram, StreamedGram};
 
 use crate::data::matrix::Matrix;
 

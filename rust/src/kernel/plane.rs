@@ -26,7 +26,9 @@
 //!   values — replacing both the per-model full cross-Gram allocation
 //!   and any per-row kernel loop.
 
+use crate::data::csr::CsrMatrix;
 use crate::data::matrix::{sq_dist, Matrix};
+use crate::data::store::StoreRef;
 use crate::metrics::counters;
 
 use super::backend::{self, GramBackend};
@@ -342,6 +344,137 @@ impl GramSource for StreamedGram<'_> {
     }
 }
 
+/// Streaming Gram source over CSR samples — the sparse twin of
+/// [`StreamedGram`], and the reason the whole solver stack runs on
+/// sparse data unchanged: solvers read through [`GramSource`], this
+/// source recomputes rows on demand from the CSR triplets, and the
+/// per-pair kernels (`sq_dist_sp` / `sq_dist_norms_sp`) are
+/// bit-identical to the dense ones on densified rows (see
+/// DESIGN.md §Data-plane).  No n² state, no n×d state: resident cost
+/// is the triplets plus two row-scratches.
+pub struct SparseGram<'a> {
+    x: &'a CsrMatrix,
+    y: &'a CsrMatrix,
+    xn: &'a [f32],
+    yn: &'a [f32],
+    scalar: bool,
+    kind: KernelKind,
+    gamma: f32,
+    scratch: [Vec<f32>; 2],
+    resident: [usize; 2],
+    flip: usize,
+}
+
+impl<'a> SparseGram<'a> {
+    /// `xn`/`yn` are the sparse row norms (compute once per fold,
+    /// share across γ) — used by the blocked rung only, like the dense
+    /// streamed source.
+    pub fn new(
+        backend: &GramBackend,
+        x: &'a CsrMatrix,
+        y: &'a CsrMatrix,
+        xn: &'a [f32],
+        yn: &'a [f32],
+        kind: KernelKind,
+        gamma: f32,
+    ) -> SparseGram<'a> {
+        SparseGram {
+            x,
+            y,
+            xn,
+            yn,
+            scalar: matches!(backend, GramBackend::Scalar),
+            kind,
+            gamma,
+            scratch: [vec![0.0; y.rows()], vec![0.0; y.rows()]],
+            resident: [usize::MAX, usize::MAX],
+            flip: 0,
+        }
+    }
+
+    fn fill_slot(&mut self, slot: usize, i: usize) {
+        if self.resident[slot] == i {
+            return;
+        }
+        let xi = self.x.row(i);
+        let buf = &mut self.scratch[slot];
+        if self.scalar {
+            backend::sq_dists_row_csr_scalar(xi, self.y, buf);
+        } else {
+            backend::sq_dists_row_csr_blocked(
+                xi, self.y, self.xn[i], self.yn, self.x.cols(), buf,
+            );
+        }
+        for v in buf.iter_mut() {
+            *v = self.kind.of_sq_dist(*v, self.gamma);
+        }
+        self.resident[slot] = i;
+    }
+
+    fn d2_pair(&self, i: usize, j: usize) -> f32 {
+        if self.scalar {
+            backend::sq_dist_sp(self.x.row(i), self.y.row(j))
+        } else {
+            backend::sq_dist_norms_sp(
+                self.x.row(i),
+                self.y.row(j),
+                self.xn[i],
+                self.yn[j],
+                self.x.cols(),
+            )
+        }
+    }
+}
+
+impl GramSource for SparseGram<'_> {
+    #[inline]
+    fn rows(&self) -> usize {
+        self.x.rows()
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        self.y.rows()
+    }
+
+    fn row(&mut self, i: usize) -> &[f32] {
+        let slot = if self.resident[0] == i {
+            0
+        } else if self.resident[1] == i {
+            1
+        } else {
+            self.flip ^= 1;
+            self.flip
+        };
+        self.fill_slot(slot, i);
+        &self.scratch[slot]
+    }
+
+    fn row_pair(&mut self, i: usize, j: usize) -> (&[f32], &[f32]) {
+        if self.resident[1] == i || self.resident[0] == j {
+            self.fill_slot(1, i);
+            self.fill_slot(0, j);
+            let [a, b] = &self.scratch;
+            (b.as_slice(), a.as_slice())
+        } else {
+            self.fill_slot(0, i);
+            self.fill_slot(1, j);
+            let [a, b] = &self.scratch;
+            (a.as_slice(), b.as_slice())
+        }
+    }
+
+    fn get(&mut self, i: usize, j: usize) -> f32 {
+        if self.resident[0] == i {
+            return self.scratch[0][j];
+        }
+        if self.resident[1] == i {
+            return self.scratch[1][j];
+        }
+        self.kind.of_sq_dist(self.d2_pair(i, j), self.gamma)
+    }
+}
+
 /// Reusable cross-tile buffer for the batched predict path: one per
 /// caller, grown to the largest tile seen, reused across models,
 /// tiles, and requests.
@@ -443,6 +576,124 @@ pub fn accumulate_decisions(
             acc[i] += dot_sparse(coef, &tile[t * n..(t + 1) * n]);
         }
         r0 = r1;
+    }
+}
+
+/// [`accumulate_decisions`] over either storage layout on either side
+/// — the predict tile source of the sparse data plane.  Layout rules
+/// (DESIGN.md §Data-plane):
+///
+/// * dense test × dense SVs — the existing path, including the fused
+///   XLA tile when available;
+/// * sparse SVs — tiles computed by the sparse per-pair kernels; a
+///   *dense* test row crossing sparse SVs is sparsified on the fly
+///   (bit-identical: dropped zeros are exact `±0.0` terms);
+/// * dense SVs × sparse test — each test row densifies into one
+///   reusable scratch row at the tile boundary (the dense expansion
+///   demands dense rows; this is the only densification and it is one
+///   row wide).
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate_decisions_x(
+    backend: &GramBackend,
+    kind: KernelKind,
+    gamma: f32,
+    test_x: StoreRef,
+    xn: &[f32],
+    sv: StoreRef,
+    coef: &[f32],
+    cap_mb: Option<usize>,
+    buf: &mut TileBuffer,
+    acc: &mut [f32],
+) {
+    let (m, n) = (test_x.rows(), sv.rows());
+    assert_eq!(coef.len(), n, "coefficient/expansion mismatch");
+    assert_eq!(acc.len(), m);
+    assert_eq!(xn.len(), m, "test-row norms mismatch");
+    assert_eq!(
+        test_x.cols(),
+        sv.cols(),
+        "test/expansion dimension mismatch (was the model trained at a different dim?)"
+    );
+    if m == 0 || n == 0 {
+        return;
+    }
+    let (test_x, sv) = match (test_x, sv) {
+        (StoreRef::Dense(t), StoreRef::Dense(s)) => {
+            accumulate_decisions(backend, kind, gamma, t, xn, s, coef, cap_mb, buf, acc);
+            return;
+        }
+        pair => pair,
+    };
+    let scalar = matches!(backend, GramBackend::Scalar);
+    let step = tile_rows(cap_mb, n);
+    match sv {
+        StoreRef::Sparse(sv) => {
+            let yn = sv.row_sq_norms();
+            let d = sv.cols();
+            // scratch for sparsifying dense test rows on the fly
+            let mut si: Vec<u32> = Vec::new();
+            let mut sval: Vec<f32> = Vec::new();
+            let mut r0 = 0;
+            while r0 < m {
+                let r1 = (r0 + step).min(m);
+                let tile = buf.ensure((r1 - r0) * n);
+                for (t, i) in (r0..r1).enumerate() {
+                    let row = &mut tile[t * n..(t + 1) * n];
+                    let xi: backend::SparseRow = match test_x {
+                        StoreRef::Sparse(tm) => tm.row(i),
+                        StoreRef::Dense(tm) => {
+                            si.clear();
+                            sval.clear();
+                            for (j, &v) in tm.row(i).iter().enumerate() {
+                                if v != 0.0 {
+                                    si.push(j as u32);
+                                    sval.push(v);
+                                }
+                            }
+                            (&si, &sval)
+                        }
+                    };
+                    if scalar {
+                        backend::sq_dists_row_csr_scalar(xi, sv, row);
+                    } else {
+                        backend::sq_dists_row_csr_blocked(xi, sv, xn[i], &yn, d, row);
+                    }
+                }
+                for v in tile.iter_mut() {
+                    *v = kind.of_sq_dist(*v, gamma);
+                }
+                for (t, i) in (r0..r1).enumerate() {
+                    acc[i] += dot_sparse(coef, &tile[t * n..(t + 1) * n]);
+                }
+                r0 = r1;
+            }
+        }
+        StoreRef::Dense(sv) => {
+            // sparse test × dense SVs: densify one test row at a time
+            let yn = sv.row_sq_norms();
+            let mut dense_row = vec![0.0f32; sv.cols()];
+            let mut r0 = 0;
+            while r0 < m {
+                let r1 = (r0 + step).min(m);
+                let tile = buf.ensure((r1 - r0) * n);
+                for (t, i) in (r0..r1).enumerate() {
+                    let row = &mut tile[t * n..(t + 1) * n];
+                    test_x.densify_row_into(i, &mut dense_row);
+                    if scalar {
+                        backend::sq_dists_row_scalar(&dense_row, sv, row);
+                    } else {
+                        backend::sq_dists_row_blocked(&dense_row, sv, xn[i], &yn, row);
+                    }
+                }
+                for v in tile.iter_mut() {
+                    *v = kind.of_sq_dist(*v, gamma);
+                }
+                for (t, i) in (r0..r1).enumerate() {
+                    acc[i] += dot_sparse(coef, &tile[t * n..(t + 1) * n]);
+                }
+                r0 = r1;
+            }
+        }
     }
 }
 
@@ -553,6 +804,76 @@ mod tests {
         assert_eq!(tile_rows(Some(1), 1000), 256);
         // tiny cap still makes progress
         assert_eq!(tile_rows(Some(0), 1000), 1);
+    }
+
+    fn rand_sparse(m: usize, d: usize, nnz_row: usize, seed: u64) -> CsrMatrix {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        let mut dense = Matrix::zeros(m, d);
+        for i in 0..m {
+            for _ in 0..nnz_row {
+                let j = rng.below(d);
+                dense.set(i, j, rng.range(-2.0, 2.0));
+            }
+        }
+        CsrMatrix::from_dense(&dense)
+    }
+
+    #[test]
+    fn sparse_gram_rows_bit_identical_to_densified_streamed() {
+        let x = rand_sparse(12, 18, 5, 31);
+        let y = rand_sparse(9, 18, 4, 32);
+        let (xd, yd) = (x.to_dense(), y.to_dense());
+        let (xn, yn) = (x.row_sq_norms(), y.row_sq_norms());
+        for be in [GramBackend::Scalar, GramBackend::Blocked] {
+            for kind in [KernelKind::Gauss, KernelKind::Laplace] {
+                let dense = be.gram(&xd, &yd, 0.8, kind);
+                let mut s = SparseGram::new(&be, &x, &y, &xn, &yn, kind, 0.8);
+                for i in 0..x.rows() {
+                    assert_eq!(s.row(i), dense.row(i), "{be:?} {kind:?} row {i}");
+                }
+                let (a, b) = s.row_pair(2, 7);
+                assert_eq!(a, dense.row(2));
+                assert_eq!(b, dense.row(7));
+                assert_eq!(s.get(5, 3), dense.get(5, 3));
+                let mut fresh = SparseGram::new(&be, &x, &y, &xn, &yn, kind, 0.8);
+                assert_eq!(fresh.get(8, 1), dense.get(8, 1));
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_decisions_x_all_layout_pairs_agree() {
+        let test_s = rand_sparse(17, 23, 6, 41);
+        let sv_s = rand_sparse(13, 23, 5, 42);
+        let (test_d, sv_d) = (test_s.to_dense(), sv_s.to_dense());
+        let mut rng = crate::data::rng::Rng::new(43);
+        let coef: Vec<f32> =
+            (0..13).map(|i| if i % 4 == 0 { 0.0 } else { rng.range(-1.0, 1.0) }).collect();
+        let xn = test_s.row_sq_norms();
+        for be in [GramBackend::Scalar, GramBackend::Blocked] {
+            let mut want = vec![0.0f32; 17];
+            let mut buf = TileBuffer::new();
+            accumulate_decisions(
+                &be, KernelKind::Gauss, 0.9, &test_d, &xn, &sv_d, &coef, None, &mut buf,
+                &mut want,
+            );
+            let pairs: [(StoreRef, StoreRef); 3] = [
+                (StoreRef::Sparse(&test_s), StoreRef::Sparse(&sv_s)),
+                (StoreRef::Dense(&test_d), StoreRef::Sparse(&sv_s)),
+                (StoreRef::Sparse(&test_s), StoreRef::Dense(&sv_d)),
+            ];
+            for (tx, sx) in pairs {
+                let mut acc = vec![0.0f32; 17];
+                let mut buf = TileBuffer::new();
+                accumulate_decisions_x(
+                    &be, KernelKind::Gauss, 0.9, tx, &xn, sx, &coef, Some(0), &mut buf,
+                    &mut acc,
+                );
+                let bits_a: Vec<u32> = acc.iter().map(|v| v.to_bits()).collect();
+                let bits_w: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits_a, bits_w, "{be:?} {tx:?}×{sx:?}");
+            }
+        }
     }
 
     #[test]

@@ -58,6 +58,7 @@ pub mod prelude {
     pub use crate::coordinator::scenarios::{
         ex_svm, ls_svm, mc_svm, npl_svm, qt_svm, roc_svm, svm_binary,
     };
-    pub use crate::coordinator::SvmModel;
+    pub use crate::coordinator::{train_sparse, SvmModel};
+    pub use crate::data::csr::SparseDataset;
     pub use crate::data::dataset::Dataset;
 }

@@ -152,7 +152,77 @@ fn build_config(args: &Args) -> Result<Config> {
         "xla" => BackendChoice::Xla,
         other => bail!("--backend: unknown `{other}`"),
     };
+    // sparse data plane: explicit --sparse, or auto-detected from a
+    // `.csr` file extension (LIBSVM text read straight into CSR)
+    cfg.sparse = args.get("sparse").is_some()
+        || args.get("file").is_some_and(|f| f.ends_with(".csr"));
     Ok(cfg)
+}
+
+/// Load a CSR train/test pair for the sparse pipeline: a LIBSVM file
+/// (streamed, bounded memory) or the synthetic sparse generator.
+/// `dim_hint > 0` pins the dimension (predict-time: the loaded model's
+/// `input_dim`, so an over-wide test file fails with the parser's
+/// line-numbered error instead of a shape panic in the kernel layer).
+fn load_sparse_dataset(
+    args: &Args,
+    dim_hint: usize,
+) -> Result<(liquid_svm::data::SparseDataset, liquid_svm::data::SparseDataset)> {
+    let seed: u64 = args.num("seed", 42)?;
+    if let Some(path) = args.get("file") {
+        let dim = if dim_hint > 0 { dim_hint } else { args.num("dim", 0usize)? };
+        let d = liquid_svm::data::io::read_libsvm_csr(std::path::Path::new(path), dim)?;
+        let n_train = d.len() * 4 / 5;
+        return Ok(d.split(n_train, seed));
+    }
+    // synthetic sparse set: --n/--dim/--density knobs
+    let n: usize = args.num("n", 2000)?;
+    let n_test: usize = args.num("n-test", n / 2)?;
+    let dim = if dim_hint > 0 { dim_hint } else { args.num("dim", 10_000)? };
+    let density: f32 = args.num("density", 0.005f32)?;
+    Ok((
+        synth::sparse_binary(n, dim, density, seed),
+        synth::sparse_binary(n_test, dim, density, seed ^ 0xdead),
+    ))
+}
+
+/// Sparse training: single-cell (or chunked) pipeline over CSR data.
+fn cmd_train_sparse(args: &Args, cfg: &Config) -> Result<()> {
+    let (train_d, test_d) = load_sparse_dataset(args, 0)?;
+    let scenario = args.get("scenario").unwrap_or("binary");
+    let spec = match scenario {
+        "binary" => TaskSpec::Binary { w: args.num("weight", 0.5f32)? },
+        "mc" => TaskSpec::MultiClassOvA,
+        "mc-ava" => TaskSpec::MultiClassAvA,
+        "ls" => TaskSpec::LeastSquares,
+        "qt" => TaskSpec::MultiQuantile { taus: vec![0.05, 0.5, 0.95] },
+        "ex" => TaskSpec::MultiExpectile { taus: vec![0.05, 0.5, 0.95] },
+        other => bail!("scenario `{other}` not supported with --sparse"),
+    };
+    let t0 = std::time::Instant::now();
+    let model = liquid_svm::coordinator::train_sparse(&train_d, &spec, cfg)?;
+    let train_time = t0.elapsed();
+    let res = model.test_sparse(&test_d);
+    println!(
+        "scenario={scenario} sparse=1 n={} d={} nnz={} tasks={} train={:.2}s test={:.2}s error={:.4}",
+        train_d.len(),
+        train_d.dim(),
+        train_d.x.nnz(),
+        model.n_tasks,
+        train_time.as_secs_f64(),
+        res.test_time.as_secs_f64(),
+        res.error
+    );
+    if let Some(path) = args.get("save") {
+        if path.ends_with(".sol.d") {
+            liquid_svm::coordinator::persist::save_bundle(&model, std::path::Path::new(path))?;
+            println!("saved sharded bundle to {path} ({} shards)", model.partition.n_cells());
+        } else {
+            liquid_svm::coordinator::persist::save_model(&model, std::path::Path::new(path))?;
+            println!("saved model to {path}");
+        }
+    }
+    Ok(())
 }
 
 fn run() -> Result<()> {
@@ -177,8 +247,11 @@ fn run() -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let (train_d, test_d) = load_dataset(args)?;
     let cfg = build_config(args)?;
+    if cfg.sparse {
+        return cmd_train_sparse(args, &cfg);
+    }
+    let (train_d, test_d) = load_dataset(args)?;
     let scenario = args.get("scenario").unwrap_or("mc");
     let t0 = std::time::Instant::now();
     let model = match scenario {
@@ -225,6 +298,26 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     let model =
         liquid_svm::coordinator::persist::load_model(std::path::Path::new(model_path), &cfg)?;
+    if cfg.sparse {
+        let (_, test_d) = load_sparse_dataset(args, model.input_dim())?;
+        let res = model.test_sparse(&test_d);
+        println!(
+            "model={model_path} sparse=1 n_test={} tasks={} test={:.2}s error={:.4}",
+            test_d.len(),
+            model.n_tasks,
+            res.test_time.as_secs_f64(),
+            res.error
+        );
+        if let Some(out) = args.get("out") {
+            let mut text = String::new();
+            for p in &res.predictions {
+                text.push_str(&format!("{p}\n"));
+            }
+            std::fs::write(out, text)?;
+            println!("wrote predictions to {out}");
+        }
+        return Ok(());
+    }
     let (_, test_d) = load_dataset(args)?;
     let res = model.test(&test_d);
     println!(
@@ -362,8 +455,10 @@ USAGE:
                   [--n N] [--threads T] [--jobs J] [--max-gram-mb MB] [--display D]
                   [--grid-choice 0|1|2] [--adaptivity 0|1|2] [--cells SPEC|--voronoi SPEC]
                   [--libsvm-grid] [--backend scalar|blocked|xla] [--folds K] [--seed S]
+                  [--sparse] [--dim D] [--density P]
                   [--save MODEL.sol | --save MODEL.sol.d]
-  liquidsvm predict --model MODEL.sol[.d] [--data NAME|--file PATH] [--out PREDICTIONS.txt]
+  liquidsvm predict --model MODEL.sol[.d] [--data NAME|--file PATH] [--sparse]
+                  [--out PREDICTIONS.txt]
   liquidsvm serve [--port P] [--host H] [--models name=a.sol,name2=b.sol.d]
                   [--max-batch B] [--max-delay-ms MS] [--workers W] [--queue-cap Q]
                   [--max-models M] [--max-shard-mb MB] [--backend scalar|blocked|xla]
@@ -382,6 +477,16 @@ caps resident distance/Gram memory per CV run (default 1024, 0 =
 unlimited); past the cap the engine streams kernel row-tiles.
 Saving to a `.sol.d` path writes a sharded bundle (one shard per cell)
 that `liquidsvm serve` loads lazily under --max-shard-mb.
+`--sparse` (auto-detected for `.csr` files) reads LIBSVM data straight
+into CSR and trains through the sparse data plane: no n x d
+densification anywhere, no scaling, cells limited to 0/chunks — the
+path for d in the tens of thousands at sub-percent density.  Without
+--file it generates a synthetic sparse set (--dim, --density).
+
+EXAMPLES (sparse):
+  liquidsvm train --sparse --dim 50000 --density 0.005 --n 2000 --scenario binary
+  liquidsvm train --file rcv1.csr --scenario binary --save rcv1.sol
+  liquidsvm predict --model rcv1.sol --file rcv1-test.csr
 
 EXAMPLES:
   liquidsvm train --data banana-mc --n 2000 --scenario mc --display 1 --threads 2

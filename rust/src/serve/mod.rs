@@ -383,17 +383,45 @@ fn handle_request(
                     )));
                 }
             };
-            if served.dim > 0 {
-                if let Some(bad) = rows.iter().find(|r| r.len() != served.dim) {
-                    stats.errors.add(rows.len() as u64);
-                    return Some(Reply::Ready(protocol::err_msg(
-                        "dim-mismatch",
-                        &format!("model `{model}` expects dim {}, got {}", served.dim, bad.len()),
-                    )));
+            // resolve every wire row to a dense feature vector before
+            // batching: dense rows must match the model dim exactly
+            // (when known); sparse idx:val rows densify against it here
+            // — the serve path's densification boundary (the shard
+            // expansions are dense; see DESIGN.md §Data-plane)
+            // a rejected request fails ALL its rows with one err reply,
+            // so the error counter advances by the full row count —
+            // keeping `requests - errors` = successful predictions
+            let total_rows = rows.len() as u64;
+            let mut dense_rows: Vec<Vec<f32>> = Vec::with_capacity(rows.len());
+            for row in rows {
+                let err = match &row {
+                    protocol::PredictRow::Dense(v) if served.dim > 0 && v.len() != served.dim => {
+                        Some(format!(
+                            "model `{model}` expects dim {}, got {}",
+                            served.dim,
+                            v.len()
+                        ))
+                    }
+                    protocol::PredictRow::Sparse(_) if served.dim == 0 => Some(format!(
+                        "model `{model}` has unknown dim; sparse rows need a known dim"
+                    )),
+                    _ => None,
+                };
+                if let Some(msg) = err {
+                    stats.errors.add(total_rows);
+                    return Some(Reply::Ready(protocol::err_msg("dim-mismatch", &msg)));
+                }
+                let dim = if served.dim > 0 { served.dim } else { row.min_dim() };
+                match row.densify(dim) {
+                    Ok(v) => dense_rows.push(v),
+                    Err(msg) => {
+                        stats.errors.add(total_rows);
+                        return Some(Reply::Ready(protocol::err_msg("dim-mismatch", &msg)));
+                    }
                 }
             }
-            let mut rxs = Vec::with_capacity(rows.len());
-            for row in rows {
+            let mut rxs = Vec::with_capacity(dense_rows.len());
+            for row in dense_rows {
                 match batcher.submit(&served, row) {
                     Ok(rx) => rxs.push(rx),
                     Err(SubmitError::Busy { retry_after_ms }) => {

@@ -6,6 +6,9 @@
 //!
 //! ```text
 //! predict <model> <f1,f2,...>[;<f1,f2,...>...]   # one or more rows
+//!                             # rows may be sparse: `idx:val` pairs
+//!                             # (1-based, libsvm-style), e.g.
+//!                             # `predict m 3:0.5,17:1.2;1:2`
 //! load <name> <path>          # path: a .sol file or a .sol.d bundle
 //! unload <name>
 //! stats                       # server-wide counters incl. shard cache
@@ -36,10 +39,52 @@
 /// buffering from a misbehaving client).
 pub const MAX_LINE: usize = 1 << 20;
 
+/// One prediction row off the wire: dense (`v1,v2,...`) or sparse
+/// (`idx:val` pairs, 1-based like LIBSVM).  Sparse rows densify at the
+/// server boundary against the target model's dimension — the serving
+/// expansion is dense, so this is the documented densification
+/// boundary of the serve path (DESIGN.md §Data-plane).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PredictRow {
+    Dense(Vec<f32>),
+    /// 0-based (index, value) pairs, strictly increasing
+    Sparse(Vec<(u32, f32)>),
+}
+
+impl PredictRow {
+    /// The row's minimum viable dimension: dense length, or highest
+    /// sparse index + 1.
+    pub fn min_dim(&self) -> usize {
+        match self {
+            PredictRow::Dense(v) => v.len(),
+            PredictRow::Sparse(p) => p.last().map_or(0, |&(j, _)| j as usize + 1),
+        }
+    }
+
+    /// Densify to exactly `dim` features.  Errors when the row cannot
+    /// fit (dense length mismatch is left to the caller's dim check;
+    /// sparse indices past `dim` are rejected here).
+    pub fn densify(self, dim: usize) -> Result<Vec<f32>, String> {
+        match self {
+            PredictRow::Dense(v) => Ok(v),
+            PredictRow::Sparse(pairs) => {
+                let mut out = vec![0.0f32; dim];
+                for (j, v) in pairs {
+                    if j as usize >= dim {
+                        return Err(format!("sparse index {} exceeds model dim {dim}", j + 1));
+                    }
+                    out[j as usize] = v;
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
 /// A parsed client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
-    Predict { model: String, rows: Vec<Vec<f32>> },
+    Predict { model: String, rows: Vec<PredictRow> },
     Load { name: String, path: String },
     Unload { name: String },
     Stats,
@@ -96,25 +141,53 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
     }
 }
 
-/// Parse `;`-separated rows of `,`-separated floats.
-pub fn parse_rows(text: &str) -> Result<Vec<Vec<f32>>, String> {
+/// Parse `;`-separated rows of `,`-separated values.  A row whose
+/// first token contains `:` is sparse (`idx:val` pairs, 1-based);
+/// mixed tokens within one row are rejected, as are duplicate or
+/// zero indices — the same strictness as the LIBSVM file reader.
+pub fn parse_rows(text: &str) -> Result<Vec<PredictRow>, String> {
     if text.is_empty() {
         return Err("no feature rows".into());
     }
     let mut rows = Vec::new();
     for row in text.split(';') {
-        let vals: Result<Vec<f32>, String> = row
-            .split(',')
-            .map(|t| {
+        let sparse = row.split(',').next().is_some_and(|t| t.contains(':'));
+        if sparse {
+            let mut pairs: Vec<(u32, f32)> = Vec::new();
+            for t in row.split(',') {
                 let t = t.trim();
-                t.parse::<f32>().map_err(|_| format!("bad float `{t}`"))
-            })
-            .collect();
-        let vals = vals?;
-        if vals.is_empty() {
-            return Err("empty feature row".into());
+                let (i, v) = t
+                    .split_once(':')
+                    .ok_or_else(|| format!("mixed sparse/dense row at `{t}`"))?;
+                let i: u32 = i.parse().map_err(|_| format!("bad index `{i}`"))?;
+                if i == 0 {
+                    return Err("sparse indices are 1-based".into());
+                }
+                let v: f32 = v.parse().map_err(|_| format!("bad value `{v}`"))?;
+                pairs.push((i - 1, v));
+            }
+            pairs.sort_unstable_by_key(|&(j, _)| j);
+            if pairs.windows(2).any(|w| w[0].0 == w[1].0) {
+                return Err("duplicate sparse index".into());
+            }
+            if pairs.is_empty() {
+                return Err("empty feature row".into());
+            }
+            rows.push(PredictRow::Sparse(pairs));
+        } else {
+            let vals: Result<Vec<f32>, String> = row
+                .split(',')
+                .map(|t| {
+                    let t = t.trim();
+                    t.parse::<f32>().map_err(|_| format!("bad float `{t}`"))
+                })
+                .collect();
+            let vals = vals?;
+            if vals.is_empty() {
+                return Err("empty feature row".into());
+            }
+            rows.push(PredictRow::Dense(vals));
         }
-        rows.push(vals);
     }
     Ok(rows)
 }
@@ -183,7 +256,10 @@ mod tests {
         let r = parse_request("predict banana 0.5,-1.25").unwrap();
         assert_eq!(
             r,
-            Request::Predict { model: "banana".into(), rows: vec![vec![0.5, -1.25]] }
+            Request::Predict {
+                model: "banana".into(),
+                rows: vec![PredictRow::Dense(vec![0.5, -1.25])]
+            }
         );
     }
 
@@ -191,7 +267,38 @@ mod tests {
     fn parses_multi_row_predict() {
         let r = parse_request("predict m 1,2;3,4;5,6").unwrap();
         let Request::Predict { rows, .. } = r else { panic!() };
-        assert_eq!(rows, vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(
+            rows,
+            vec![
+                PredictRow::Dense(vec![1.0, 2.0]),
+                PredictRow::Dense(vec![3.0, 4.0]),
+                PredictRow::Dense(vec![5.0, 6.0])
+            ]
+        );
+    }
+
+    #[test]
+    fn parses_sparse_rows_and_densifies() {
+        let r = parse_request("predict m 3:0.5,1:2;7:1").unwrap();
+        let Request::Predict { rows, .. } = r else { panic!() };
+        // indices sorted, 0-based
+        assert_eq!(rows[0], PredictRow::Sparse(vec![(0, 2.0), (2, 0.5)]));
+        assert_eq!(rows[1].min_dim(), 7);
+        assert_eq!(rows[0].clone().densify(4).unwrap(), vec![2.0, 0.0, 0.5, 0.0]);
+        // index past the model dim is a row error, not a panic
+        assert!(rows[1].clone().densify(4).is_err());
+        // dense and sparse rows may mix across (not within) a request
+        let r = parse_request("predict m 1,2;2:5").unwrap();
+        let Request::Predict { rows, .. } = r else { panic!() };
+        assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_sparse_rows() {
+        assert!(parse_request("predict m 0:1").is_err()); // 1-based
+        assert!(parse_request("predict m 2:1,2:3").is_err()); // duplicate
+        assert!(parse_request("predict m 2:1,5").is_err()); // mixed row
+        assert!(parse_request("predict m x:1").is_err());
     }
 
     #[test]

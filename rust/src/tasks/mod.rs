@@ -50,21 +50,23 @@ pub struct Task {
 /// Materialize the tasks of a spec over a working set, using the
 /// working set's own label set.
 pub fn create_tasks(data: &Dataset, spec: &TaskSpec) -> Vec<Task> {
-    create_tasks_for_classes(data, spec, &data.classes())
+    create_tasks_for_classes(&data.y, spec, &data.classes())
 }
 
 /// Materialize tasks against a *global* class list — needed when the
 /// working set is one cell of a decomposition: every cell must carry
 /// the same task roster so predictions can be combined across cells,
 /// even if some class is absent locally (those tasks get empty index
-/// sets and are skipped by the trainer).
-pub fn create_tasks_for_classes(data: &Dataset, spec: &TaskSpec, classes: &[f32]) -> Vec<Task> {
-    let all: Vec<usize> = (0..data.len()).collect();
+/// sets and are skipped by the trainer).  Tasks are a pure label
+/// transformation, so this takes labels only — the dense and sparse
+/// training paths share it (see DESIGN.md §Data-plane).
+pub fn create_tasks_for_classes(y: &[f32], spec: &TaskSpec, classes: &[f32]) -> Vec<Task> {
+    let all: Vec<usize> = (0..y.len()).collect();
     match spec {
         TaskSpec::Binary { w } => vec![Task {
             name: "binary".into(),
             indices: all,
-            y: data.y.clone(),
+            y: y.to_vec(),
             solver: SolverKind::Hinge { w: *w },
             val_loss: if *w == 0.5 {
                 Loss::Classification
@@ -75,7 +77,7 @@ pub fn create_tasks_for_classes(data: &Dataset, spec: &TaskSpec, classes: &[f32]
         TaskSpec::LeastSquares => vec![Task {
             name: "ls".into(),
             indices: all,
-            y: data.y.clone(),
+            y: y.to_vec(),
             solver: SolverKind::LeastSquares,
             val_loss: Loss::LeastSquares,
         }],
@@ -86,7 +88,7 @@ pub fn create_tasks_for_classes(data: &Dataset, spec: &TaskSpec, classes: &[f32]
                 .map(|&c| Task {
                     name: format!("ova-{c}"),
                     indices: all.clone(),
-                    y: data.y.iter().map(|&v| if v == c { 1.0 } else { -1.0 }).collect(),
+                    y: y.iter().map(|&v| if v == c { 1.0 } else { -1.0 }).collect(),
                     solver: if ls {
                         SolverKind::LeastSquares
                     } else {
@@ -102,15 +104,15 @@ pub fn create_tasks_for_classes(data: &Dataset, spec: &TaskSpec, classes: &[f32]
                 for b in a + 1..classes.len() {
                     let (ca, cb) = (classes[a], classes[b]);
                     let indices: Vec<usize> =
-                        (0..data.len()).filter(|&i| data.y[i] == ca || data.y[i] == cb).collect();
-                    let y = indices
+                        (0..y.len()).filter(|&i| y[i] == ca || y[i] == cb).collect();
+                    let ty: Vec<f32> = indices
                         .iter()
-                        .map(|&i| if data.y[i] == ca { -1.0 } else { 1.0 })
+                        .map(|&i| if y[i] == ca { -1.0 } else { 1.0 })
                         .collect();
                     tasks.push(Task {
                         name: format!("ava-{ca}v{cb}"),
                         indices,
-                        y,
+                        y: ty,
                         solver: SolverKind::Hinge { w: 0.5 },
                         val_loss: Loss::Classification,
                     });
@@ -123,7 +125,7 @@ pub fn create_tasks_for_classes(data: &Dataset, spec: &TaskSpec, classes: &[f32]
             .map(|&w| Task {
                 name: format!("npl-w{w:.3}"),
                 indices: all.clone(),
-                y: data.y.clone(),
+                y: y.to_vec(),
                 solver: SolverKind::Hinge { w },
                 val_loss: Loss::WeightedClassification { w },
             })
@@ -133,7 +135,7 @@ pub fn create_tasks_for_classes(data: &Dataset, spec: &TaskSpec, classes: &[f32]
             .map(|&tau| Task {
                 name: format!("qt-{tau:.2}"),
                 indices: all.clone(),
-                y: data.y.clone(),
+                y: y.to_vec(),
                 solver: SolverKind::Quantile { tau },
                 val_loss: Loss::Pinball { tau },
             })
@@ -143,7 +145,7 @@ pub fn create_tasks_for_classes(data: &Dataset, spec: &TaskSpec, classes: &[f32]
             .map(|&tau| Task {
                 name: format!("ex-{tau:.2}"),
                 indices: all.clone(),
-                y: data.y.clone(),
+                y: y.to_vec(),
                 solver: SolverKind::Expectile { tau },
                 val_loss: Loss::Expectile { tau },
             })

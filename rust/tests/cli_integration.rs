@@ -51,6 +51,55 @@ fn train_with_cells_and_libsvm_grid() {
 }
 
 #[test]
+fn train_sparse_smoke() {
+    let out = bin()
+        .args([
+            "train", "--sparse", "--n", "200", "--dim", "5000", "--density", "0.002",
+            "--folds", "2", "--scenario", "binary",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("sparse=1") && text.contains("error="), "{text}");
+}
+
+#[test]
+fn train_sparse_autodetects_csr_extension_and_roundtrips() {
+    let dir = std::env::temp_dir().join(format!("lsvm-cli-sparse-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let data = dir.join("toy.csr");
+    // 20 rows of 1-based idx:val text
+    let mut text = String::new();
+    for i in 0..20 {
+        let sign = if i % 2 == 0 { 1 } else { -1 };
+        text.push_str(&format!("{sign} {}:0.5 {}:{}.25\n", i % 7 + 1, i % 11 + 3, sign));
+    }
+    std::fs::write(&data, text).unwrap();
+    let sol = dir.join("toy.sol");
+    let out = bin()
+        .args([
+            "train", "--file", data.to_str().unwrap(), "--folds", "2",
+            "--scenario", "binary", "--save", sol.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("sparse=1"), "extension auto-detect failed: {text}");
+    assert!(sol.exists());
+
+    let out = bin()
+        .args([
+            "predict", "--model", sol.to_str().unwrap(), "--file", data.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn distributed_smoke() {
     let out = bin()
         .args([

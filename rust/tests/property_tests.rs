@@ -419,3 +419,83 @@ fn prop_parallel_cv_bit_identical_to_sequential() {
         }
     }
 }
+
+#[test]
+fn prop_sparse_gram_bit_identical_to_dense_gram() {
+    // the sparse data plane's core contract: a SparseGram over a CSR
+    // matrix produces the exact bits a DenseGram holds for the
+    // densified data — same dot4-order guarantee the streamed path
+    // already makes — across both CPU backends and both kernels
+    use liquid_svm::data::csr::CsrMatrix;
+    use liquid_svm::kernel::plane::{DenseGram, GramSource, SparseGram};
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xd0);
+        let m = 5 + rng.below(30);
+        let n = 5 + rng.below(30);
+        // dims straddling the dot4 lane cut (d % 4 ∈ {0..3})
+        let d = 4 + rng.below(40);
+        let nnz = 1 + rng.below(6);
+        let mut xd = Matrix::zeros(m, d);
+        let mut yd = Matrix::zeros(n, d);
+        for i in 0..m {
+            for _ in 0..nnz {
+                let j = rng.below(d);
+                xd.set(i, j, rng.range(-2.0, 2.0));
+            }
+        }
+        for i in 0..n {
+            for _ in 0..nnz {
+                let j = rng.below(d);
+                yd.set(i, j, rng.range(-2.0, 2.0));
+            }
+        }
+        let x = CsrMatrix::from_dense(&xd);
+        let y = CsrMatrix::from_dense(&yd);
+        let (xn, yn) = (x.row_sq_norms(), y.row_sq_norms());
+        let g = rng.range(0.3, 4.0);
+        for be in [GramBackend::Scalar, GramBackend::Blocked] {
+            for kind in [KernelKind::Gauss, KernelKind::Laplace] {
+                let dense_k = be.gram(&xd, &yd, g, kind);
+                let mut dense = DenseGram::new(&dense_k);
+                let mut sparse = SparseGram::new(&be, &x, &y, &xn, &yn, kind, g);
+                for i in 0..m {
+                    let (a, b) = (dense.row(i), sparse.row(i));
+                    for (u, v) in a.iter().zip(b) {
+                        assert_eq!(
+                            u.to_bits(),
+                            v.to_bits(),
+                            "{be:?} {kind:?} row {i}: {u} vs {v} (seed {seed})"
+                        );
+                    }
+                }
+                // entry access with no resident row
+                let mut fresh = SparseGram::new(&be, &x, &y, &xn, &yn, kind, g);
+                let (i, j) = (rng.below(m), rng.below(n));
+                assert_eq!(fresh.get(i, j).to_bits(), dense.get(i, j).to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_libsvm_csr_roundtrip_preserves_triplet() {
+    // CSR write → stream-read round-trip is exact for random sparse
+    // data, and the dense reader agrees with the densified CSR
+    use liquid_svm::data::io;
+    for seed in 0..6u64 {
+        let d = synth::sparse_binary(40, 200 + seed as usize * 57, 0.02, seed);
+        let dir = std::env::temp_dir().join(format!(
+            "lsvm-prop-csr-{}-{seed}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("d.csr");
+        io::write_libsvm_csr(&p, &d).unwrap();
+        let back = io::read_libsvm_csr(&p, d.dim()).unwrap();
+        assert_eq!(back.x, d.x, "seed {seed}");
+        assert_eq!(back.y, d.y, "seed {seed}");
+        let dense = io::read_libsvm(&p, d.dim()).unwrap();
+        assert_eq!(dense.x.as_slice(), d.to_dense().x.as_slice(), "seed {seed}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

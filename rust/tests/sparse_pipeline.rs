@@ -1,0 +1,211 @@
+//! End-to-end tests of the sparse data plane: CSR training against the
+//! densified twin (bit-identity), persistence round-trips, the
+//! high-dimensional memory profile, and sparse `idx:val` rows over the
+//! serve wire protocol.
+
+use liquid_svm::cells::CellStrategy;
+use liquid_svm::coordinator::persist::{load_model, save_bundle, save_model};
+use liquid_svm::coordinator::train_sparse;
+use liquid_svm::data::synth;
+use liquid_svm::prelude::*;
+use liquid_svm::tasks::TaskSpec;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("lsvm-sparse-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// A config both pipelines can run identically: no scaling (the sparse
+/// path's boundary), single cell, small fold count.
+fn flat_cfg() -> Config {
+    let mut cfg = Config::default().folds(3);
+    cfg.scale = None;
+    cfg
+}
+
+#[test]
+fn sparse_train_bit_identical_to_densified_train() {
+    let train = synth::sparse_binary(140, 300, 0.02, 5);
+    let test = synth::sparse_binary(60, 300, 0.02, 6);
+    let cfg = flat_cfg();
+    let spec = TaskSpec::Binary { w: 0.5 };
+
+    let sparse_model = train_sparse(&train, &spec, &cfg).unwrap();
+    let dense_model = liquid_svm::coordinator::train(&train.to_dense(), &spec, &cfg).unwrap();
+
+    // identical hyper-parameter selection...
+    assert_eq!(sparse_model.selected_params(), dense_model.selected_params());
+
+    // ...and bitwise-identical predictions, sparse input vs densified
+    let sp = sparse_model.test_sparse(&test);
+    let dp = dense_model.test(&test.to_dense());
+    assert_eq!(sp.predictions, dp.predictions);
+    for (a, b) in sp.task_scores.iter().zip(&dp.task_scores) {
+        let bits_a: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+        let bits_b: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "decision values diverged");
+    }
+    assert_eq!(sp.error, dp.error);
+
+    // the sparse model also answers dense queries identically (dense
+    // rows sparsify at the tile boundary)
+    let dense_x = test.to_dense().x;
+    let via_dense = sparse_model.predict(&dense_x);
+    let via_sparse = sparse_model.predict_csr(&test.x);
+    assert_eq!(via_dense, via_sparse);
+}
+
+#[test]
+fn sparse_memory_tiers_agree_end_to_end() {
+    // the coordinator clamps per-unit budgets to ≥ 1 MiB, so the
+    // forced-streamed case lives in cv's unit tests
+    // (`sparse_cv_bit_identical_to_densified` runs Some(0)); here the
+    // capped and unlimited coordinator paths must agree bitwise
+    let train = synth::sparse_binary(90, 150, 0.03, 7);
+    let test = synth::sparse_binary(40, 150, 0.03, 8);
+    let spec = TaskSpec::Binary { w: 0.5 };
+    let unlimited = flat_cfg().max_gram_mb(0);
+    let capped = flat_cfg().max_gram_mb(1);
+    let a = train_sparse(&train, &spec, &unlimited).unwrap().test_sparse(&test);
+    let b = train_sparse(&train, &spec, &capped).unwrap().test_sparse(&test);
+    assert_eq!(a.predictions, b.predictions);
+}
+
+#[test]
+fn sparse_multiclass_and_regression_scenarios_run() {
+    // all four solver families through the sparse plane
+    let mut d = synth::sparse_binary(120, 80, 0.05, 11);
+    // relabel into 3 classes for the OvA path
+    for (i, y) in d.y.iter_mut().enumerate() {
+        *y = (i % 3) as f32;
+    }
+    let cfg = flat_cfg();
+    let m = train_sparse(&d, &TaskSpec::MultiClassOvA, &cfg).unwrap();
+    assert_eq!(m.n_tasks, 3);
+    let preds = m.predict_csr(&d.x);
+    assert!(preds.iter().all(|&p| (0.0..3.0).contains(&p)));
+
+    let mut reg = synth::sparse_binary(100, 60, 0.05, 12);
+    for (i, y) in reg.y.iter_mut().enumerate() {
+        *y = (i as f32 * 0.01).sin();
+    }
+    for spec in [
+        TaskSpec::LeastSquares,
+        TaskSpec::MultiQuantile { taus: vec![0.5] },
+        TaskSpec::MultiExpectile { taus: vec![0.5] },
+    ] {
+        let m = train_sparse(&reg, &spec, &cfg).unwrap();
+        let res = m.test_sparse(&reg);
+        assert!(res.error.is_finite(), "{spec:?}");
+    }
+}
+
+#[test]
+fn sparse_chunked_cells_supported_geometric_rejected() {
+    let d = synth::sparse_binary(160, 90, 0.05, 13);
+    let mut cfg = flat_cfg();
+    cfg.cells = CellStrategy::RandomChunks { size: 50 };
+    let m = train_sparse(&d, &TaskSpec::Binary { w: 0.5 }, &cfg).unwrap();
+    assert!(m.partition.n_cells() > 1);
+    assert_eq!(m.predict_csr(&d.x).len(), 160);
+
+    cfg.cells = CellStrategy::Voronoi { size: 50 };
+    let err = train_sparse(&d, &TaskSpec::Binary { w: 0.5 }, &cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("dense geometry"), "{err:#}");
+}
+
+#[test]
+fn sparse_model_persist_roundtrip_sol_and_bundle() {
+    let train = synth::sparse_binary(120, 250, 0.02, 21);
+    let test = synth::sparse_binary(50, 250, 0.02, 22);
+    let cfg = flat_cfg();
+    let m = train_sparse(&train, &TaskSpec::Binary { w: 0.5 }, &cfg).unwrap();
+    let expect = m.predict_csr(&test.x);
+
+    let sol = tmp("sparse.sol");
+    save_model(&m, &sol).unwrap();
+    let back = load_model(&sol, &cfg).unwrap();
+    // the reloaded working sets stay CSR (no densification on disk)
+    assert!(back.units.iter().all(|u| u.data.x.is_sparse()));
+    assert_eq!(back.predict_csr(&test.x), expect);
+
+    let dir = tmp("sparse.sol.d");
+    save_bundle(&m, &dir).unwrap();
+    let back = load_model(&dir, &cfg).unwrap();
+    assert_eq!(back.predict_csr(&test.x), expect);
+}
+
+#[test]
+fn high_dim_sparse_trains_where_dense_bytes_explode() {
+    // the acceptance shape: d = 50 000 at 0.05% density.  The CSR
+    // triplet holds ~25 nnz/row; the dense twin would need n·d floats
+    // — 200× more than the entire sparse footprint here.  Train +
+    // predict end-to-end under a finite Gram budget, no densification.
+    let (n, d) = (160usize, 50_000usize);
+    let train = synth::sparse_binary(n, d, 0.0005, 31);
+    let test = synth::sparse_binary(60, d, 0.0005, 32);
+    let dense_bytes = n * d * 4;
+    assert!(
+        train.x.bytes() * 100 < dense_bytes,
+        "CSR {} vs dense {} bytes",
+        train.x.bytes(),
+        dense_bytes
+    );
+    let mut cfg = flat_cfg();
+    cfg = cfg.folds(2).max_gram_mb(64);
+    let m = train_sparse(&train, &TaskSpec::Binary { w: 0.5 }, &cfg).unwrap();
+    let res = m.test_sparse(&test);
+    assert_eq!(res.predictions.len(), 60);
+    assert!(res.error.is_finite());
+}
+
+#[test]
+fn serve_answers_sparse_rows() {
+    use liquid_svm::serve::{ServeConfig, Server};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let train = synth::sparse_binary(120, 40, 0.1, 41);
+    let cfg = flat_cfg();
+    let m = train_sparse(&train, &TaskSpec::Binary { w: 0.5 }, &cfg).unwrap();
+    let sol = tmp("serve-sparse.sol");
+    save_model(&m, &sol).unwrap();
+
+    let server = Server::start(ServeConfig {
+        port: 0,
+        max_delay: std::time::Duration::from_millis(1),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut roundtrip = |req: &str| -> String {
+        writeln!(writer, "{req}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    };
+
+    let loaded = roundtrip(&format!("load sp {}", sol.display()));
+    assert!(loaded.starts_with("ok loaded sp dim=40"), "{loaded}");
+
+    // sparse wire rows answer exactly like predict_csr
+    let expect = m.predict_csr(&train.x);
+    for i in 0..8 {
+        let (idx, val) = train.x.row(i);
+        let toks: Vec<String> =
+            idx.iter().zip(val).map(|(&j, &v)| format!("{}:{}", j + 1, v)).collect();
+        let resp = roundtrip(&format!("predict sp {}", toks.join(",")));
+        let body = resp.strip_prefix("ok ").unwrap_or_else(|| panic!("bad resp {resp}"));
+        assert_eq!(body.parse::<f32>().unwrap(), expect[i], "row {i}");
+    }
+
+    // an index past the model dim fails the row, not the server
+    let resp = roundtrip("predict sp 99:1");
+    assert!(resp.starts_with("err dim-mismatch"), "{resp}");
+    assert_eq!(roundtrip("ping"), "ok pong");
+    server.shutdown();
+}
