@@ -1,0 +1,157 @@
+//! Solver-core bench: total coordinate sweeps + wall time per loss,
+//! shrink on/off × cold / λ-warm / (γ,λ)-warm (DESIGN.md
+//! §Solver-core).
+//!
+//! Each cell walks the same little (2 γ × 4 λ) grid a CV fold would:
+//!
+//! * `cold`    — every point solved from scratch;
+//! * `λ-warm`  — warm starts along each λ chain, cold across γ
+//!               (the pre-plane behavior);
+//! * `γλ-warm` — the warm-start plane: the previous γ-chain's
+//!               terminal α also seeds the next γ's first λ.
+//!
+//! Work is reported as summed `Solution::iterations` (coordinate
+//! updates, comparable across losses) and summed
+//! `Solution::sweep_entries` (gradient entries written — the cost
+//! shrinking attacks).  `--quick` (CI) shrinks the problem and
+//! asserts the structural claims: shrink-on writes fewer sweep
+//! entries than shrink-off at fixed accuracy on the box losses, and
+//! γλ-warm spends no more iterations than cold.
+//!
+//! Run: `cargo bench --bench table_solver [-- --quick]`
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use harness::{secs, sized, time_once, Table};
+use liquid_svm::data::matrix::Matrix;
+use liquid_svm::data::synth;
+use liquid_svm::kernel::{GramBackend, KernelKind};
+use liquid_svm::solver::{solve_dense, warm_vector, SolverKind, SolverParams};
+
+struct Cell {
+    iterations: usize,
+    sweeps: u64,
+    objective: f32,
+    wall: Duration,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum WarmMode {
+    Cold,
+    Lambda,
+    GammaLambda,
+}
+
+/// Walk the (γ, λ) grid under one warm mode, accumulating work.
+fn run_grid(
+    kind: SolverKind,
+    grams: &[Matrix],
+    y: &[f32],
+    lambdas: &[f32],
+    params: &SolverParams,
+    mode: WarmMode,
+) -> Cell {
+    let mut iterations = 0usize;
+    let mut sweeps = 0u64;
+    let mut objective = 0.0f32;
+    let (_, wall) = time_once(|| {
+        let mut carry: Option<Vec<f32>> = None; // survives γ in GammaLambda mode
+        for k in grams {
+            let mut warm: Option<Vec<f32>> =
+                if mode == WarmMode::GammaLambda { carry.take() } else { None };
+            for &lambda in lambdas {
+                let w = if mode == WarmMode::Cold { None } else { warm.as_deref() };
+                let sol = solve_dense(kind, k, y, lambda, params, w);
+                iterations += sol.iterations;
+                sweeps += sol.sweep_entries;
+                objective = sol.objective;
+                warm = Some(warm_vector(kind, &sol, y));
+            }
+            carry = warm;
+        }
+    });
+    Cell { iterations, sweeps, objective, wall }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = sized(260, 1200, 4000);
+    let db = synth::banana_binary(n, 42);
+    let dr = synth::sinc_hetero(n, 43);
+    let gammas = [1.2f32, 1.0];
+    let lambdas = [4e-3f32, 2e-3, 1e-3, 5e-4];
+    let shrink_on = SolverParams { shrink_every: 200, ..SolverParams::default() };
+    let shrink_off = SolverParams { shrink_every: 0, ..SolverParams::default() };
+
+    let losses: [(&str, SolverKind, &Matrix, &[f32]); 4] = [
+        ("hinge", SolverKind::Hinge { w: 0.5 }, &db.x, &db.y),
+        ("ls", SolverKind::LeastSquares, &dr.x, &dr.y),
+        ("quantile", SolverKind::Quantile { tau: 0.5 }, &dr.x, &dr.y),
+        ("expectile", SolverKind::Expectile { tau: 0.8 }, &dr.x, &dr.y),
+    ];
+
+    println!("table_solver: n={n}, 2γ×{}λ grid, shrink_every=200 when on", lambdas.len());
+    let table = Table::new(
+        &["loss", "shrink", "warm", "iters", "sweep_entries", "time"],
+        &[9, 6, 8, 10, 14, 8],
+    );
+
+    for (name, kind, x, y) in losses {
+        let grams: Vec<Matrix> = gammas
+            .iter()
+            .map(|&g| GramBackend::Blocked.gram(x, x, g, KernelKind::Gauss))
+            .collect();
+        let mut cells: Vec<(&str, &str, Cell)> = Vec::new();
+        for (sname, params) in [("off", &shrink_off), ("on", &shrink_on)] {
+            for (wname, mode) in [
+                ("cold", WarmMode::Cold),
+                ("λ", WarmMode::Lambda),
+                ("γλ", WarmMode::GammaLambda),
+            ] {
+                let cell = run_grid(kind, &grams, y, &lambdas, params, mode);
+                table.row(&[
+                    name,
+                    sname,
+                    wname,
+                    &cell.iterations.to_string(),
+                    &cell.sweeps.to_string(),
+                    &secs(cell.wall),
+                ]);
+                cells.push((sname, wname, cell));
+            }
+        }
+        let get = |s: &str, w: &str| {
+            cells.iter().find(|(a, b, _)| *a == s && *b == w).map(|(_, _, c)| c).unwrap()
+        };
+        // structural claims, enforced in CI via --quick:
+        // final objectives agree across every configuration (same ε-KKT)
+        let base = get("off", "cold").objective;
+        for (s, w, c) in &cells {
+            assert!(
+                (c.objective - base).abs() < 2e-2 * (1.0 + base.abs()),
+                "{name} [{s}/{w}]: objective {} drifted from {base}",
+                c.objective
+            );
+        }
+        // the warm-start plane spends no more coordinate updates than
+        // cold starts
+        assert!(
+            get("off", "γλ").iterations <= get("off", "cold").iterations,
+            "{name}: γλ-warm slower than cold"
+        );
+        // shrinking writes fewer gradient entries on the box losses
+        // (ls has no box; expectile shrink gains depend on scale)
+        if quick && (name == "hinge" || name == "quantile") {
+            assert!(
+                get("on", "cold").sweeps < get("off", "cold").sweeps,
+                "{name}: shrink-on did not reduce sweep work ({} vs {})",
+                get("on", "cold").sweeps,
+                get("off", "cold").sweeps
+            );
+        }
+    }
+    println!("table_solver OK");
+}

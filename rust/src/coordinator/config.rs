@@ -31,7 +31,7 @@ pub struct Config {
     /// worker threads for the parallel cell driver (`--jobs`);
     /// `None` falls back to `threads`.  The same budget is shared with
     /// the per-unit CV grid (see [`Config::split_jobs`]) so cell-level
-    /// and fold×γ-level parallelism compose without oversubscription.
+    /// and fold-level parallelism compose without oversubscription.
     pub jobs: Option<usize>,
     /// byte budget (MiB) for resident distance/Gram state per CV run
     /// (`--max-gram-mb`); `None` = unlimited.  Past the cap the CV
@@ -120,8 +120,27 @@ impl Config {
         self
     }
 
+    /// Solver KKT stopping threshold (`--solver-eps`).
+    pub fn solver_eps(mut self, eps: f32) -> Self {
+        self.solver_params.eps = eps;
+        self
+    }
+
+    /// Solver iteration cap (`--max-iter`; coordinate updates).
+    pub fn max_iter(mut self, n: usize) -> Self {
+        self.solver_params.max_iter = n.max(1);
+        self
+    }
+
+    /// Coordinate updates between shrinking refreshes
+    /// (`--shrink-every`; 0 disables shrinking).
+    pub fn shrink_every(mut self, n: usize) -> Self {
+        self.solver_params.shrink_every = n;
+        self
+    }
+
     /// Split the `--jobs` budget between the cell driver and each
-    /// unit's fold×γ CV grid: with `n_units` work units in flight the
+    /// unit's per-fold CV chain grid: with `n_units` work units in flight the
     /// driver takes `min(jobs, n_units)` threads and every unit's CV
     /// grid gets the leftover factor, so the product never exceeds the
     /// budget (small working sets keep `cv = 1`, one huge cell gets
@@ -219,6 +238,16 @@ mod tests {
     #[test]
     fn threads_floor_at_one() {
         assert_eq!(Config::default().threads(0).threads, 1);
+    }
+
+    #[test]
+    fn solver_knobs_reach_params() {
+        let c = Config::default().solver_eps(1e-4).max_iter(5000).shrink_every(0);
+        assert_eq!(c.solver_params.eps, 1e-4);
+        assert_eq!(c.solver_params.max_iter, 5000);
+        assert_eq!(c.solver_params.shrink_every, 0);
+        // defaults keep shrinking on
+        assert!(Config::default().solver_params.shrink_every > 0);
     }
 
     #[test]

@@ -169,7 +169,7 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
 
     // build the (cell × task) working sets, each tagged with its cell
     // so the driver can aggregate per-cell timing.  The --jobs budget
-    // is split between the cell driver and each unit's fold×γ CV grid
+    // is split between the cell driver and each unit's per-fold CV chain grid
     // (one budget, two levels — see DESIGN.md §Compute-plane): the
     // working sets are materialized once, their count fixes the split,
     // and every unit then gets its CV share.
@@ -202,7 +202,7 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
 ///   only `CellStrategy::None` and `RandomChunks` (label-free) are
 ///   accepted, others are an error rather than a silent densify.
 ///
-/// Everything else — task roster, fold×γ CV grid, `--max-gram-mb`
+/// Everything else — task roster, per-fold (γ, λ) CV chain grid, `--max-gram-mb`
 /// tiers, all four solvers, the tiled predict path — is the same code
 /// as the dense pipeline, reading kernels through the sparse Gram
 /// sources; predictions are bit-identical to [`train`] on the

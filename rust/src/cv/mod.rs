@@ -1,38 +1,47 @@
 //! The integrated cross-validation engine — the heart of liquidSVM's
 //! speed claim (paper §2 "Hyper-Parameter Selection") — rebuilt on the
-//! Gram plane as a **parallel fold×γ task grid** (see DESIGN.md
-//! §Compute-plane).
+//! Gram plane as a **parallel grid of per-fold (γ, λ) warm-start
+//! chains** (see DESIGN.md §Compute-plane and §Solver-core).
 //!
-//! Structure: one *task* is a (fold, γ) pair.  Within a task the λ
-//! grid is walked sequentially from strong to weak regularization,
-//! warm-starting every solve from the previous solution (the part of
-//! the engine that fundamentally cannot parallelize without losing the
-//! warm-start win).  Across tasks there is no dependency, so the grid
-//! runs on scoped worker threads that share the read-only per-fold
-//! squared-distance matrices and each own **one reusable
-//! [`GramBuffer`]** pair — per γ the worker exponentiates distances in
-//! place, so the hot loop performs *zero* Gram allocations (the
-//! `gram_allocs` counter stays flat while `gram_misses` advances).
+//! Structure: one *task* is a fold.  Within a task the whole (γ, λ)
+//! grid is walked in fixed order — γ from wide to narrow bandwidth,
+//! the λ chain inside each γ from strong to weak regularization — and
+//! every solve warm-starts from the previous solution: along the λ
+//! chain as before, **and across the γ handoff**, where the previous
+//! γ-chain's terminal α seeds the next γ's first λ (clipped into the
+//! new box by the solver engine).  This is the (γ, λ) *warm-start
+//! plane*: adjacent bandwidths have similar solutions, so the handoff
+//! converts most first-λ solves from cold starts into a few cleanup
+//! sweeps (Glasmachers 2022's "aggressive warm-starting").  The chain
+//! is the part of the engine that fundamentally cannot parallelize
+//! without losing that win, so parallelism lives *across folds* (and
+//! across cells above this layer): fold tasks run on scoped worker
+//! threads that share the read-only per-fold squared-distance
+//! matrices and each own **one reusable [`GramBuffer`]** pair — per γ
+//! the worker exponentiates distances in place, so the hot loop
+//! performs *zero* Gram allocations (the `gram_allocs` counter stays
+//! flat while `gram_misses` advances).
 //!
 //! Memory is governed by `CvConfig::max_gram_mb` through three tiers,
 //! chosen once per run (deterministically, so results never depend on
 //! scheduling):
 //!
 //! * **all-cached** — every fold's distance matrices fit: precompute
-//!   them all and run the whole fold×γ grid as one wave (maximum
+//!   them all and run every fold chain as one wave (maximum
 //!   parallelism, the default for cell-sized working sets);
-//! * **per-fold** — only one fold fits: folds run sequentially, the γ
-//!   grid still runs parallel inside each fold (the seed's memory
-//!   profile);
+//! * **per-fold** — only one fold fits: folds run sequentially (the
+//!   seed's memory profile; the grid phase is serial in this tier
+//!   since the γ chain inside a fold is ordered);
 //! * **streamed** — even one fold's n² won't fit: no distance matrix is
 //!   ever materialized; solvers read row-tiles recomputed on demand
 //!   ([`StreamedGram`]), bit-identical to the cached path.
 //!
-//! Parallel output is **bit-identical** to `jobs = 1`: tasks are pure
-//! functions of (fold, γ), results are merged in fixed (fold, γ, λ)
-//! order, and tier selection does not depend on worker count beyond
-//! the documented buffer budget (and the tiers themselves agree
-//! bitwise).  Property-tested in `tests/property_tests.rs`.
+//! Parallel output is **bit-identical** to `jobs = 1`: each fold's
+//! chain is a pure sequential function of the fold, results are
+//! merged in fixed (fold, γ, λ) order, and tier selection does not
+//! depend on worker count beyond the documented buffer budget (and
+//! the tiers themselves agree bitwise).  Property-tested in
+//! `tests/property_tests.rs`.
 //!
 //! `adaptivity_control` (Appendix C) prunes the grid after the first
 //! fold: fold 0 runs as its own wave, then only candidates whose
@@ -81,7 +90,7 @@ pub struct CvConfig {
     pub params: SolverParams,
     pub backend: GramBackend,
     pub seed: u64,
-    /// worker threads for the fold×γ task grid (1 = sequential); the
+    /// worker threads for the per-fold chain grid (1 = sequential); the
     /// coordinator derives this from the shared `--jobs` budget so
     /// cell-level and grid-level parallelism compose
     pub jobs: usize,
@@ -176,6 +185,24 @@ impl FoldData {
     }
 }
 
+/// Per-solve iteration budget for a fold of `ntr` training samples:
+/// `mult`·n coordinate updates, doubled for the pairwise hinge engine
+/// because a 2-coordinate step now honestly counts as 2 updates — the
+/// doubled figure covers the same number of *pair* selection steps
+/// the pre-engine solver's cap allowed, so capped grid-corner solves
+/// keep the seed's effective budget (single-movable fallback steps
+/// still cost 1, so a mixed sequence can run slightly longer than the
+/// seed's pass-counted cap — strictly roomier, never tighter).  The
+/// CG least-squares engine treats the cap as CG rounds, its
+/// historical semantics, and bounds itself at 4n+50 rounds regardless.
+fn fold_cap(solver: SolverKind, mult: usize, ntr: usize) -> usize {
+    let steps = mult * ntr.max(64);
+    match solver {
+        SolverKind::Hinge { .. } => steps.saturating_mul(2),
+        _ => steps,
+    }
+}
+
 /// Memory tier of a CV run (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Tier {
@@ -242,36 +269,51 @@ where
     slots.into_iter().map(|s| s.expect("cv worker died before finishing task")).collect()
 }
 
-/// Result of one (fold, γ) task: per-λ validation losses plus perf
-/// accounting.  `evaluated` marks λs actually solved (vs pruned) —
-/// kept separate from the loss value so a genuinely-NaN validation
-/// loss (diverged solver) still poisons the candidate's mean exactly
-/// like the sequential engine, instead of being mistaken for "pruned".
-struct GammaOut {
-    losses: Vec<f32>,
-    evaluated: Vec<bool>,
+/// Result of one fold task: the per-(γ, λ) validation losses plus
+/// perf accounting.  `evaluated` marks points actually solved (vs
+/// pruned) — kept separate from the loss value so a genuinely-NaN
+/// validation loss (diverged solver) still poisons the candidate's
+/// mean exactly like the sequential engine, instead of being mistaken
+/// for "pruned".
+struct FoldOut {
+    losses: Vec<Vec<f32>>,
+    evaluated: Vec<Vec<bool>>,
     iterations: usize,
     points: usize,
 }
 
-/// Sequential λ chain at one γ: strong→weak regularization with warm
-/// starts, then one validation sweep per solved λ.
-fn gamma_task<KT, KV>(
+impl FoldOut {
+    fn new(ng: usize, nl: usize) -> FoldOut {
+        FoldOut {
+            losses: vec![vec![f32::NAN; nl]; ng],
+            evaluated: vec![vec![false; nl]; ng],
+            iterations: 0,
+            points: 0,
+        }
+    }
+}
+
+/// One γ's λ chain inside a fold task: strong→weak regularization
+/// with warm starts, then one validation sweep per solved λ.  `warm`
+/// is the fold's running warm-start vector — it enters holding the
+/// *previous* γ-chain's terminal α (the γ handoff of the warm-start
+/// plane) and leaves holding this chain's.
+#[allow(clippy::too_many_arguments)]
+fn chain_gamma<KT, KV>(
     cfg: &CvConfig,
     ctx: &FoldCtx,
+    gi: usize,
     active: &[bool],
     kt: &mut KT,
     kv: &mut KV,
-) -> GammaOut
-where
+    warm: &mut Option<Vec<f32>>,
+    out: &mut FoldOut,
+) where
     KT: GramSource + ?Sized,
     KV: GramSource + ?Sized,
 {
     let nl = cfg.grid.lambdas.len();
     let mut sols: Vec<Option<Solution>> = vec![None; nl];
-    let mut warm: Option<Vec<f32>> = None;
-    let mut iterations = 0usize;
-    let mut points = 0usize;
     for (li, &lambda) in cfg.grid.lambdas.iter().enumerate() {
         if !active[li] {
             // pruned points are contiguous tails in practice; a cold
@@ -279,64 +321,72 @@ where
             continue;
         }
         let sol = solve(cfg.solver, kt, &ctx.ytr, lambda, &ctx.params, warm.as_deref());
-        iterations += sol.iterations;
-        points += 1;
-        warm = Some(warm_vector(cfg.solver, &sol, &ctx.ytr));
+        out.iterations += sol.iterations;
+        out.points += 1;
+        *warm = Some(warm_vector(cfg.solver, &sol, &ctx.ytr));
         sols[li] = Some(sol);
     }
-    let mut losses = vec![f32::NAN; nl];
-    let mut evaluated = vec![false; nl];
     for (li, s) in sols.iter().enumerate() {
         if let Some(sol) = s {
-            losses[li] = cfg.val_loss.mean(&ctx.yva, &sol.decision_values_src(kv));
-            evaluated[li] = true;
+            out.losses[gi][li] = cfg.val_loss.mean(&ctx.yva, &sol.decision_values_src(kv));
+            out.evaluated[gi][li] = true;
         }
     }
-    GammaOut { losses, evaluated, iterations, points }
 }
 
-/// Dispatch one (fold, γ) task through the fold's kernel-state flavor.
-fn run_gamma_task(
+/// One fold's full (γ, λ) chain through the fold's kernel-state
+/// flavor.  γs whose whole λ row is pruned are skipped; the warm
+/// vector is carried through the gap so the next surviving γ still
+/// warm-starts from the last solved chain (deterministic at any
+/// `jobs`, since the whole chain lives inside this one task).
+fn run_fold_task(
     cfg: &CvConfig,
     ctx: &FoldCtx,
     data: &FoldData,
-    gi: usize,
-    active: &[bool],
+    active: &[Vec<bool>],
     bufs: &mut WorkerBufs,
-) -> GammaOut {
-    let gamma = cfg.grid.gammas[gi];
-    match data {
-        FoldData::Cached { d2_tr, d2_va, ep_tr, ep_va } => {
-            bufs.ktr.fill(*ep_tr, d2_tr, cfg.kernel, gamma);
-            // the validation Gram is only needed after the chain, but
-            // filling both up front keeps the borrow of each buffer
-            // disjoint and costs the same exponentiation work
-            bufs.kva.fill(*ep_va, d2_va, cfg.kernel, gamma);
-            let WorkerBufs { ktr, kva } = bufs;
-            gamma_task(cfg, ctx, active, ktr, kva)
+) -> FoldOut {
+    let (ng, nl) = (cfg.grid.gammas.len(), cfg.grid.lambdas.len());
+    let mut out = FoldOut::new(ng, nl);
+    let mut warm: Option<Vec<f32>> = None;
+    for (gi, &gamma) in cfg.grid.gammas.iter().enumerate() {
+        if !active[gi].iter().any(|&a| a) {
+            continue;
         }
-        FoldData::Streamed { tr_norms, va_norms } => match (&ctx.xtr, &ctx.xva) {
-            (Store::Dense(xtr), Store::Dense(xva)) => {
-                let mut ktr = StreamedGram::new(
-                    &cfg.backend, xtr, xtr, tr_norms, tr_norms, cfg.kernel, gamma,
-                );
-                let mut kva = StreamedGram::new(
-                    &cfg.backend, xva, xtr, va_norms, tr_norms, cfg.kernel, gamma,
-                );
-                gamma_task(cfg, ctx, active, &mut ktr, &mut kva)
+        match data {
+            FoldData::Cached { d2_tr, d2_va, ep_tr, ep_va } => {
+                bufs.ktr.fill(*ep_tr, d2_tr, cfg.kernel, gamma);
+                // the validation Gram is only needed after the chain,
+                // but filling both up front keeps the borrow of each
+                // buffer disjoint and costs the same exponentiation
+                bufs.kva.fill(*ep_va, d2_va, cfg.kernel, gamma);
+                let WorkerBufs { ktr, kva } = bufs;
+                chain_gamma(cfg, ctx, gi, &active[gi], ktr, kva, &mut warm, &mut out);
             }
-            (Store::Sparse(xtr), Store::Sparse(xva)) => {
-                let mut ktr = SparseGram::new(
-                    &cfg.backend, xtr, xtr, tr_norms, tr_norms, cfg.kernel, gamma,
-                );
-                let mut kva = SparseGram::new(
-                    &cfg.backend, xva, xtr, va_norms, tr_norms, cfg.kernel, gamma,
-                );
-                gamma_task(cfg, ctx, active, &mut ktr, &mut kva)
-            }
-            _ => unreachable!("fold subsets share the working set's storage flavor"),
-        },
+            FoldData::Streamed { tr_norms, va_norms } => match (&ctx.xtr, &ctx.xva) {
+                (Store::Dense(xtr), Store::Dense(xva)) => {
+                    let mut ktr = StreamedGram::new(
+                        &cfg.backend, xtr, xtr, tr_norms, tr_norms, cfg.kernel, gamma,
+                    );
+                    let mut kva = StreamedGram::new(
+                        &cfg.backend, xva, xtr, va_norms, tr_norms, cfg.kernel, gamma,
+                    );
+                    chain_gamma(cfg, ctx, gi, &active[gi], &mut ktr, &mut kva, &mut warm, &mut out);
+                }
+                (Store::Sparse(xtr), Store::Sparse(xva)) => {
+                    let mut ktr = SparseGram::new(
+                        &cfg.backend, xtr, xtr, tr_norms, tr_norms, cfg.kernel, gamma,
+                    );
+                    let mut kva = SparseGram::new(
+                        &cfg.backend, xva, xtr, va_norms, tr_norms, cfg.kernel, gamma,
+                    );
+                    chain_gamma(cfg, ctx, gi, &active[gi], &mut ktr, &mut kva, &mut warm, &mut out);
+                }
+                _ => unreachable!("fold subsets share the working set's storage flavor"),
+            },
+        }
     }
+    out
 }
 
 /// Run the integrated k-fold CV on a dense working set.
@@ -377,7 +427,7 @@ pub fn run_cv_x(x: StoreRef, y: &[f32], cfg: &CvConfig) -> CvResult {
             let ytr: Vec<f32> = tr_idx.iter().map(|&i| y[i]).collect();
             let yva: Vec<f32> = va_idx.iter().map(|&i| y[i]).collect();
             let params = SolverParams {
-                max_iter: cfg.params.max_iter.min(4 * ytr.len().max(64)),
+                max_iter: cfg.params.max_iter.min(fold_cap(cfg.solver, 4, ytr.len())),
                 ..cfg.params
             };
             FoldCtx {
@@ -402,20 +452,24 @@ pub fn run_cv_x(x: StoreRef, y: &[f32], cfg: &CvConfig) -> CvResult {
     let mut total_iterations = 0usize;
     let mut points_evaluated = 0usize;
 
-    // merge one wave of task outputs (tasks listed as (fold, γ) in
-    // fixed order, so accumulation order matches the sequential engine)
+    // merge one wave of fold outputs (folds listed in ascending order,
+    // each contributing its (γ, λ) matrix in fixed order, so per-point
+    // accumulation order matches the sequential engine)
     macro_rules! merge {
-        ($tasks:expr, $outs:expr) => {
-            for (&(_, gi), out) in $tasks.iter().zip($outs) {
-                for (li, loss) in out.losses.into_iter().enumerate() {
-                    if !out.evaluated[li] {
-                        continue;
+        ($outs:expr) => {
+            for out in $outs {
+                for (gi, row) in out.losses.into_iter().enumerate() {
+                    for (li, loss) in row.into_iter().enumerate() {
+                        if !out.evaluated[gi][li] {
+                            continue;
+                        }
+                        // a NaN loss (diverged solver) poisons the mean
+                        // so the candidate can never win selection —
+                        // same disqualification the sequential engine
+                        // applied
+                        val_sum[gi][li] += loss;
+                        val_cnt[gi][li] += 1;
                     }
-                    // a NaN loss (diverged solver) poisons the mean so
-                    // the candidate can never win selection — same
-                    // disqualification the sequential engine applied
-                    val_sum[gi][li] += loss;
-                    val_cnt[gi][li] += 1;
                 }
                 total_iterations += out.iterations;
                 points_evaluated += out.points;
@@ -434,47 +488,37 @@ pub fn run_cv_x(x: StoreRef, y: &[f32], cfg: &CvConfig) -> CvResult {
                 Tier::Streamed => FoldData::streamed(&fctx[f]),
                 _ => FoldData::cached(&cfg.backend, &fctx[f]),
             });
-            let run_tasks = |tasks: &[(usize, usize)], active: &[Vec<bool>]| -> Vec<GammaOut> {
-                run_wave(jobs, tasks.len(), |t, bufs| {
-                    let (f, gi) = tasks[t];
-                    run_gamma_task(cfg, &fctx[f], &fdata[f], gi, &active[gi], bufs)
-                })
-            };
             if cfg.adaptivity > 0 {
-                // wave 1: fold 0 across the γ grid, then prune
-                let t0: Vec<(usize, usize)> = (0..ng).map(|gi| (0, gi)).collect();
-                let outs = run_tasks(&t0, &active);
-                merge!(t0, outs);
+                // wave 1: fold 0's full chain, then prune
+                let outs = run_wave(1, 1, |_, bufs| {
+                    run_fold_task(cfg, &fctx[0], &fdata[0], &active, bufs)
+                });
+                merge!(outs);
                 prune_grid(&mut active, &val_sum, cfg.adaptivity);
-                // wave 2: remaining folds over the surviving grid
-                let rest: Vec<(usize, usize)> = (1..fctx.len())
-                    .flat_map(|f| (0..ng).map(move |gi| (f, gi)))
-                    .filter(|&(_, gi)| active[gi].iter().any(|&a| a))
-                    .collect();
-                let outs = run_tasks(&rest, &active);
-                merge!(rest, outs);
+                // wave 2: remaining folds' chains over the surviving
+                // grid, in parallel
+                let outs = run_wave(jobs, fctx.len() - 1, |t, bufs| {
+                    run_fold_task(cfg, &fctx[t + 1], &fdata[t + 1], &active, bufs)
+                });
+                merge!(outs);
             } else {
-                let all: Vec<(usize, usize)> =
-                    (0..fctx.len()).flat_map(|f| (0..ng).map(move |gi| (f, gi))).collect();
-                let outs = run_tasks(&all, &active);
-                merge!(all, outs);
+                let outs = run_wave(jobs, fctx.len(), |f, bufs| {
+                    run_fold_task(cfg, &fctx[f], &fdata[f], &active, bufs)
+                });
+                merge!(outs);
             }
             Some(fdata)
         }
         Tier::PerFold => {
-            // one fold's distance matrices resident at a time; the γ
-            // grid still runs parallel inside the fold
+            // one fold's distance matrices resident at a time; each
+            // fold's (γ, λ) chain is ordered, so this tier's grid
+            // phase is serial — the price of the one-fold memory
+            // profile (the final-model wave below stays parallel)
             for f in 0..fctx.len() {
                 let fd = FoldData::cached(&cfg.backend, &fctx[f]);
-                let tasks: Vec<(usize, usize)> = (0..ng)
-                    .map(|gi| (f, gi))
-                    .filter(|&(_, gi)| active[gi].iter().any(|&a| a))
-                    .collect();
-                let outs = run_wave(jobs, tasks.len(), |t, bufs| {
-                    let (_, gi) = tasks[t];
-                    run_gamma_task(cfg, &fctx[f], &fd, gi, &active[gi], bufs)
-                });
-                merge!(tasks, outs);
+                let mut bufs = WorkerBufs::default();
+                let out = run_fold_task(cfg, &fctx[f], &fd, &active, &mut bufs);
+                merge!([out]);
                 if f == 0 && cfg.adaptivity > 0 {
                     prune_grid(&mut active, &val_sum, cfg.adaptivity);
                 }
@@ -520,7 +564,12 @@ pub fn run_cv_x(x: StoreRef, y: &[f32], cfg: &CvConfig) -> CvResult {
             // the retrain works on the FULL working set, which is
             // bigger than any fold the tier was sized for: free the
             // grid-phase state first, then stream whenever the full
-            // d² + Gram pair (2n²) would itself blow the cap
+            // d² + Gram pair (2n²) would itself blow the cap.
+            // `cfg.params.max_iter` is the user's budget and is
+            // passed through verbatim — it counts coordinate updates
+            // per the documented contract (a hinge pair step spends
+            // 2), unlike the internally derived fold caps above which
+            // are doubled to keep the seed's effective budget
             drop(fold_data);
             let retrain_streamed = tier == Tier::Streamed
                 || cfg
@@ -608,8 +657,10 @@ fn train_fold_model(
     let xtr = x.select_rows(&tr_idx);
     let ytr: Vec<f32> = tr_idx.iter().map(|&i| y[i]).collect();
     // final models get a roomier budget than the selection sweeps
-    let params =
-        SolverParams { max_iter: cfg.params.max_iter.min(16 * ytr.len().max(64)), ..cfg.params };
+    let params = SolverParams {
+        max_iter: cfg.params.max_iter.min(fold_cap(cfg.solver, 16, ytr.len())),
+        ..cfg.params
+    };
     let sol = match fd {
         Some(FoldData::Cached { d2_tr, ep_tr, .. }) => {
             bufs.ktr.fill(*ep_tr, d2_tr, cfg.kernel, gamma);

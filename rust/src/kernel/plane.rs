@@ -69,6 +69,21 @@ pub trait GramSource {
     fn diag(&mut self, i: usize) -> f32 {
         self.get(i, i)
     }
+    /// Gather `k(x_i, y_{idx[t]})` into `out[t]` — the active-set
+    /// access path of the shrinking solver engine (DESIGN.md
+    /// §Solver-core): a shrunk sweep reads O(|idx|) entries instead of
+    /// a full row.  The default materializes the row and indexes into
+    /// it (free for dense/buffered sources); streaming sources
+    /// override it with per-pair recomputation so the gather costs
+    /// O(|idx|·d), not O(n·d).  Values are bit-identical to the
+    /// corresponding [`GramSource::row`] entries on every source.
+    fn gather(&mut self, i: usize, idx: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(idx.len(), out.len());
+        let row = self.row(i);
+        for (o, &j) in out.iter_mut().zip(idx) {
+            *o = row[j];
+        }
+    }
 }
 
 /// A borrowed dense Gram matrix — the adapter between `&Matrix`
@@ -342,6 +357,26 @@ impl GramSource for StreamedGram<'_> {
         }
         self.kind.of_sq_dist(self.d2_pair(i, j), self.gamma)
     }
+
+    /// Active-set gather without materializing the row: a resident
+    /// row is indexed directly; otherwise each requested entry is
+    /// recomputed per pair — O(|idx|·d) instead of the O(n·d) a full
+    /// row recomputation would cost.  Bit-identical to the row path
+    /// because both go through the same per-pair distance kernels.
+    fn gather(&mut self, i: usize, idx: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(idx.len(), out.len());
+        for slot in 0..2 {
+            if self.resident[slot] == i {
+                for (o, &j) in out.iter_mut().zip(idx) {
+                    *o = self.scratch[slot][j];
+                }
+                return;
+            }
+        }
+        for (o, &j) in out.iter_mut().zip(idx) {
+            *o = self.kind.of_sq_dist(self.d2_pair(i, j), self.gamma);
+        }
+    }
 }
 
 /// Streaming Gram source over CSR samples — the sparse twin of
@@ -472,6 +507,24 @@ impl GramSource for SparseGram<'_> {
             return self.scratch[1][j];
         }
         self.kind.of_sq_dist(self.d2_pair(i, j), self.gamma)
+    }
+
+    /// Active-set gather — same contract as the dense streamed
+    /// source: resident rows are indexed, everything else recomputed
+    /// per pair through the sparse distance kernels (O(|idx|·nnz)).
+    fn gather(&mut self, i: usize, idx: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(idx.len(), out.len());
+        for slot in 0..2 {
+            if self.resident[slot] == i {
+                for (o, &j) in out.iter_mut().zip(idx) {
+                    *o = self.scratch[slot][j];
+                }
+                return;
+            }
+        }
+        for (o, &j) in out.iter_mut().zip(idx) {
+            *o = self.kind.of_sq_dist(self.d2_pair(i, j), self.gamma);
+        }
     }
 }
 
@@ -795,6 +848,55 @@ mod tests {
                 assert_eq!(fresh.get(9, 10), dense.get(9, 10));
             }
         }
+    }
+
+    #[test]
+    fn gather_matches_row_on_every_source() {
+        // the active-set access path must be bit-identical to row
+        // indexing on dense, buffered, and streamed sources alike
+        let x = randmat(13, 5, 9);
+        let idx = [0usize, 4, 7, 11];
+        let be = GramBackend::Blocked;
+        let dense = be.gram(&x, &x, 1.1, KernelKind::Gauss);
+        let want: Vec<f32> = idx.iter().map(|&j| dense.get(3, j)).collect();
+        let mut out = vec![0.0f32; idx.len()];
+
+        let mut dg = DenseGram::new(&dense);
+        dg.gather(3, &idx, &mut out);
+        assert_eq!(out, want);
+
+        let d2 = be.sq_dists(&x, &x);
+        let mut buf = GramBuffer::new();
+        buf.fill(next_epoch(), &d2, KernelKind::Gauss, 1.1);
+        buf.gather(3, &idx, &mut out);
+        assert_eq!(out, want);
+
+        let xn = x.row_sq_norms();
+        let mut s = StreamedGram::new(&be, &x, &x, &xn, &xn, KernelKind::Gauss, 1.1);
+        // fresh source: per-pair path
+        s.gather(3, &idx, &mut out);
+        assert_eq!(out, want, "streamed per-pair gather");
+        // resident-row path after touching the row
+        s.row(3);
+        s.gather(3, &idx, &mut out);
+        assert_eq!(out, want, "streamed resident gather");
+    }
+
+    #[test]
+    fn sparse_gather_matches_row() {
+        let x = rand_sparse(11, 16, 4, 51);
+        let xn = x.row_sq_norms();
+        let be = GramBackend::Blocked;
+        let dense = be.gram(&x.to_dense(), &x.to_dense(), 0.7, KernelKind::Gauss);
+        let idx = [1usize, 5, 9];
+        let want: Vec<f32> = idx.iter().map(|&j| dense.get(6, j)).collect();
+        let mut out = vec![0.0f32; idx.len()];
+        let mut s = SparseGram::new(&be, &x, &x, &xn, &xn, KernelKind::Gauss, 0.7);
+        s.gather(6, &idx, &mut out);
+        assert_eq!(out, want, "sparse per-pair gather");
+        s.row(6);
+        s.gather(6, &idx, &mut out);
+        assert_eq!(out, want, "sparse resident gather");
     }
 
     #[test]

@@ -137,6 +137,20 @@ fn build_config(args: &Args) -> Result<Config> {
         let mb: usize = mb.parse().map_err(|_| anyhow!("--max-gram-mb: cannot parse `{mb}`"))?;
         cfg = cfg.max_gram_mb(mb);
     }
+    // solver tolerances: CLI → Config → every CV/driver call site (no
+    // more hard-coded SolverParams::default() anywhere on the path)
+    let eps: f32 = args.num("solver-eps", cfg.solver_params.eps)?;
+    if !eps.is_finite() || eps <= 0.0 {
+        bail!("--solver-eps must be positive, got `{eps}`");
+    }
+    let max_iter: usize = args.num("max-iter", cfg.solver_params.max_iter)?;
+    if max_iter == 0 {
+        bail!("--max-iter must be at least 1 (0 does not mean unlimited; the default is 200000)");
+    }
+    cfg = cfg
+        .solver_eps(eps)
+        .max_iter(max_iter)
+        .shrink_every(args.num("shrink-every", cfg.solver_params.shrink_every)?);
     // --cells is the readable alias of the paper's --voronoi syntax
     match (args.get("voronoi"), args.get("cells")) {
         (Some(_), Some(_)) => bail!("--voronoi and --cells are aliases; give only one"),
@@ -455,6 +469,7 @@ USAGE:
                   [--n N] [--threads T] [--jobs J] [--max-gram-mb MB] [--display D]
                   [--grid-choice 0|1|2] [--adaptivity 0|1|2] [--cells SPEC|--voronoi SPEC]
                   [--libsvm-grid] [--backend scalar|blocked|xla] [--folds K] [--seed S]
+                  [--solver-eps E] [--max-iter N] [--shrink-every N]
                   [--sparse] [--dim D] [--density P]
                   [--save MODEL.sol | --save MODEL.sol.d]
   liquidsvm predict --model MODEL.sol[.d] [--data NAME|--file PATH] [--sparse]
@@ -472,9 +487,17 @@ Options take `--key value` or `--key=value`; each key at most once.
 `--cells`/`--voronoi` specs: 0 (off), chunks,SIZE, 1,SIZE (Voronoi),
 5,SIZE (overlapping Voronoi), 6,SIZE (recursive tree).  `--jobs` is
 the shared worker budget (defaults to --threads), split between the
-cell driver and each unit's parallel fold×γ CV grid.  `--max-gram-mb`
+cell driver and each unit's parallel per-fold CV chain grid.  `--max-gram-mb`
 caps resident distance/Gram memory per CV run (default 1024, 0 =
 unlimited); past the cap the engine streams kernel row-tiles.
+`--solver-eps` (default 1e-3) is the KKT stopping threshold,
+`--max-iter` (default 200000) the per-solve coordinate-update cap
+(the ls scenario's CG solver reads it as a CG-round cap), and
+`--shrink-every` (default 1000, 0 = off) the cadence of the solver
+engine's shrinking: every N coordinate updates it drops coordinates
+pinned at a box bound, and a mandatory unshrink pass before
+termination re-checks the full KKT criterion, so accuracy is
+unchanged — see the README solver-tuning playbook.
 Saving to a `.sol.d` path writes a sharded bundle (one shard per cell)
 that `liquidsvm serve` loads lazily under --max-shard-mb.
 `--sparse` (auto-detected for `.csr` files) reads LIBSVM data straight
@@ -587,5 +610,26 @@ mod tests {
         let a = parse(&["train", "--n", "many"]).unwrap();
         assert!(a.num("n", 0usize).is_err());
         assert_eq!(a.num("missing", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn solver_knobs_parse_into_config() {
+        let a = parse(&[
+            "train", "--solver-eps", "1e-4", "--max-iter", "5000", "--shrink-every", "0",
+        ])
+        .unwrap();
+        let cfg = build_config(&a).unwrap();
+        assert_eq!(cfg.solver_params.eps, 1e-4);
+        assert_eq!(cfg.solver_params.max_iter, 5000);
+        assert_eq!(cfg.solver_params.shrink_every, 0);
+        // defaults flow through untouched
+        let d = build_config(&parse(&["train"]).unwrap()).unwrap();
+        assert_eq!(d.solver_params.eps, 1e-3);
+        assert!(d.solver_params.shrink_every > 0);
+        // nonsense values are rejected with flag-specific errors
+        let bad = parse(&["train", "--solver-eps", "-1"]).unwrap();
+        assert!(build_config(&bad).unwrap_err().to_string().contains("solver-eps"));
+        let bad = parse(&["train", "--max-iter", "0"]).unwrap();
+        assert!(build_config(&bad).unwrap_err().to_string().contains("max-iter"));
     }
 }

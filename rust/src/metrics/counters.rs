@@ -53,6 +53,23 @@ pub static GRAM_ALLOCS: Counter = Counter::new();
 /// ([`crate::runtime::XlaRuntime`]).
 pub static XLA_CALLS: Counter = Counter::new();
 
+/// Gradient/state entries written by the solver engine's sweeps — the
+/// O(n·iterations) core cost of coordinate descent, and the quantity
+/// shrinking reduces: a shrunk sweep writes |active| entries instead
+/// of n (selection-only scans are not counted).  Compare shrink-on vs
+/// shrink-off at fixed accuracy via `benches/table_solver.rs`.
+pub static SOLVER_SWEEPS: Counter = Counter::new();
+
+/// Sum of active-set sizes recorded at each shrink refresh; divided by
+/// the number of refreshes it gives the mean surviving active-set
+/// size (see DESIGN.md §Solver-core).
+pub static SOLVER_SHRINK_ACTIVE: Counter = Counter::new();
+
+/// Stale-gradient reconstruction passes: the mandatory full unshrink
+/// verification before any termination, plus forced rebuilds on
+/// `max_iter` exits while shrunk.
+pub static SOLVER_UNSHRINK_PASSES: Counter = Counter::new();
+
 /// (cell × task) working sets trained through the parallel cell
 /// driver ([`crate::coordinator::driver`]).
 pub static CELL_UNITS_TRAINED: Counter = Counter::new();
@@ -68,6 +85,9 @@ pub struct CounterSnapshot {
     pub gram_cache_misses: u64,
     pub gram_allocs: u64,
     pub xla_calls: u64,
+    pub solver_sweeps: u64,
+    pub solver_shrink_active: u64,
+    pub solver_unshrink_passes: u64,
     pub cell_units_trained: u64,
     pub cell_train_us: u64,
 }
@@ -77,12 +97,15 @@ impl CounterSnapshot {
     /// `stats` command and the CV engine's display output.
     pub fn report(&self) -> String {
         format!(
-            "gram_hits={} gram_misses={} gram_allocs={} xla_calls={} cell_units={} \
-             cell_train_us={}",
+            "gram_hits={} gram_misses={} gram_allocs={} xla_calls={} solver_sweeps={} \
+             shrink_active={} unshrink_passes={} cell_units={} cell_train_us={}",
             self.gram_cache_hits,
             self.gram_cache_misses,
             self.gram_allocs,
             self.xla_calls,
+            self.solver_sweeps,
+            self.solver_shrink_active,
+            self.solver_unshrink_passes,
             self.cell_units_trained,
             self.cell_train_us
         )
@@ -95,6 +118,9 @@ pub fn snapshot() -> CounterSnapshot {
         gram_cache_misses: GRAM_CACHE_MISSES.get(),
         gram_allocs: GRAM_ALLOCS.get(),
         xla_calls: XLA_CALLS.get(),
+        solver_sweeps: SOLVER_SWEEPS.get(),
+        solver_shrink_active: SOLVER_SHRINK_ACTIVE.get(),
+        solver_unshrink_passes: SOLVER_UNSHRINK_PASSES.get(),
         cell_units_trained: CELL_UNITS_TRAINED.get(),
         cell_train_us: CELL_TRAIN_US.get(),
     }
@@ -116,8 +142,8 @@ mod tests {
     fn snapshot_reports_all_keys() {
         let r = snapshot().report();
         for key in [
-            "gram_hits=", "gram_misses=", "gram_allocs=", "xla_calls=", "cell_units=",
-            "cell_train_us=",
+            "gram_hits=", "gram_misses=", "gram_allocs=", "xla_calls=", "solver_sweeps=",
+            "shrink_active=", "unshrink_passes=", "cell_units=", "cell_train_us=",
         ] {
             assert!(r.contains(key), "missing {key} in {r}");
         }

@@ -124,6 +124,7 @@ mod tests {
         for key in [
             "models=3", "requests=10", "batches=2", "rows=10", "pad_rows=6", "mean_batch=5.0",
             "p50_us=", "p95_us=", "p99_us=", "gram_hits=", "gram_allocs=", "xla_calls=",
+            "solver_sweeps=", "shrink_active=", "unshrink_passes=",
             "shards=2/4", "shard_bytes=2000/4000", "shard_hits=7", "shard_loads=2",
             "shard_evictions=1",
         ] {

@@ -1,0 +1,892 @@
+//! The shared solver engine — one shrinking coordinate-descent core
+//! under all four losses (see DESIGN.md §Solver-core).
+//!
+//! The paper's "very carefully implemented solvers" (§3, after
+//! Steinwart–Hush–Scovel 2011) previously existed four times over:
+//! each loss hand-rolled its own gradient maintenance, working-set
+//! selection, and stopping logic.  This module owns that machinery
+//! exactly once; `hinge`/`ls`/`quantile`/`expectile` are thin [`Loss`]
+//! plugins that contribute only what genuinely differs per loss — box
+//! bounds, the sign pattern folded into Q, the linear term, the exact
+//! 1-d/2-d subproblem solves, and the objective formula.
+//!
+//! Three iteration strategies reproduce the historical per-loss
+//! algorithms bit-for-bit when shrinking is off:
+//!
+//! * [`Mode::Greedy`] — greedy KKT-violation coordinate descent over a
+//!   box, single-coordinate (quantile) or two-coordinate with exact
+//!   2×2 solves (hinge).  Gradient updates and the next working-set
+//!   pick are fused into one sweep.
+//! * [`Mode::Cyclic`] — cyclic sweeps with exact per-coordinate
+//!   piecewise solves ([`Loss::prox`]), stopping on the largest
+//!   scaled coordinate move (expectile).
+//! * [`Mode::ConjugateGradient`] — CG on the shifted system
+//!   `(K + σI) x = b` (least squares; σ = nλ).
+//!
+//! **Shrinking** (Glasmachers 2022's biggest single-node win for the
+//! CV-grid workload): every `SolverParams::shrink_every` coordinate
+//! updates the greedy engine drops coordinates pinned at a box bound
+//! whose gradient is strongly feasible (the cyclic engine drops
+//! coordinates whose last sweep barely moved them), and subsequent
+//! sweeps touch only the active set through the Gram plane's
+//! [`GramSource::gather`] row-gather path — O(|active|) per sweep on
+//! cached, buffered, and streamed sources alike.  Gradients of shrunk
+//! coordinates go stale; before ANY termination the engine rebuilds
+//! them and re-checks the stopping criterion over *all* coordinates
+//! (the mandatory unshrink pass), so the returned solution satisfies
+//! exactly the same ε-KKT / sweep-convergence criterion as a
+//! shrink-off run — accuracy is preserved, not approximated.
+//! `shrink_every = 0` disables shrinking entirely, and a disabled run
+//! executes the identical instruction sequence as the pre-engine
+//! solvers (property-tested against reference implementations in
+//! `tests/solver_core.rs`).
+//!
+//! Work accounting: the process-wide `solver_sweeps` counter tallies
+//! gradient/state entries written (the O(n·iters) core cost shrinking
+//! attacks), `shrink_active` accumulates the active-set size at each
+//! refresh, and `unshrink_passes` counts stale-gradient
+//! reconstructions — all surfaced in the CV display and serve `stats`.
+
+use crate::kernel::plane::GramSource;
+use crate::metrics::counters;
+
+use super::{Solution, SolverParams};
+
+/// Diagonal entries at or below this floor are treated as exactly
+/// degenerate by [`clip_step`] (the 1-d objective is linear there).
+const Q_FLOOR: f32 = 1e-12;
+
+/// Fraction of the cyclic stopping threshold below which a
+/// coordinate's last move marks it shrinkable.
+const CYCLIC_SHRINK_FRACTION: f32 = 0.25;
+
+/// How the engine iterates for a loss — each variant reproduces the
+/// historical per-loss algorithm exactly (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Greedy KKT-violation selection over a box; `pairwise` adds the
+    /// exact 2-coordinate subproblem (hinge).
+    Greedy { pairwise: bool },
+    /// Cyclic sweeps with exact per-coordinate [`Loss::prox`] solves
+    /// (expectile).
+    Cyclic,
+    /// Conjugate gradients on `(K + σI) x = b` (least squares).
+    ConjugateGradient,
+}
+
+/// What a loss contributes to the shared engine: the box, the sign
+/// pattern, the linear term, the exact subproblem solves, and the
+/// objective.  Everything else — incremental gradient/state
+/// maintenance, fused select+update sweeps, KKT/sweep stopping,
+/// shrinking, warm-start clipping — lives in the engine, once.
+pub trait Loss {
+    /// Problem size (number of dual variables).
+    fn n(&self) -> usize;
+
+    /// Iteration strategy reproducing this loss's historical solver.
+    fn mode(&self) -> Mode;
+
+    /// Box `[lo, hi]` for coordinate `i` (`±∞` when unconstrained).
+    fn bounds(&self, i: usize) -> (f32, f32);
+
+    /// Sign `s_i` folded into the effective quadratic `Q = s sᵀ ∘ K`
+    /// (hinge: `y_i`; every other loss: `1`).
+    #[inline]
+    fn sign(&self, i: usize) -> f32 {
+        let _ = i;
+        1.0
+    }
+
+    /// Initial value of the maintained state vector at `x = 0`: the
+    /// negated linear term for gradient-state losses (`−1` hinge,
+    /// `−y_i` quantile/LS), `0` for the expectile `f = Kx` state.
+    fn init_state(&self, i: usize) -> f32;
+
+    /// Diagonal shift σ added to `K` (least squares: `nλ`).
+    #[inline]
+    fn diag_shift(&self) -> f32 {
+        0.0
+    }
+
+    /// Scale multiplying `eps` in the cyclic stopping criterion.
+    #[inline]
+    fn stop_scale(&self) -> f32 {
+        1.0
+    }
+
+    /// Exact 1-d subproblem solve → step for coordinate `i` with
+    /// gradient `g` and curvature `q`.  Default: Newton step clipped
+    /// into the box, degenerate diagonals going straight to the
+    /// descent-side bound.
+    #[inline]
+    fn solve1(&self, i: usize, x: f32, g: f32, q: f32) -> f32 {
+        let (lo, hi) = self.bounds(i);
+        clip_step(x, g, q, lo, hi)
+    }
+
+    /// Exact 2-d subproblem solve → steps for the pair `(i1, i2)`
+    /// with `q = (q11, q22, q12)` already sign-adjusted.  Default:
+    /// unconstrained 2×2 Newton, then the best of the four clamped
+    /// edges (exact for a 2-d box QP).
+    #[inline]
+    fn solve2(
+        &self,
+        i1: usize,
+        i2: usize,
+        x: (f32, f32),
+        g: (f32, f32),
+        q: (f32, f32, f32),
+    ) -> (f32, f32) {
+        let (lo1, hi1) = self.bounds(i1);
+        let (lo2, hi2) = self.bounds(i2);
+        solve2_box(x.0, x.1, g.0, g.1, q.0, q.1, q.2, lo1, hi1, lo2, hi2)
+    }
+
+    /// Exact per-coordinate solve for [`Mode::Cyclic`]: the new value
+    /// of `x_i` given the maintained state `state_i` and curvature
+    /// `q`.  Only cyclic losses implement this.
+    #[inline]
+    fn prox(&self, i: usize, x: f32, state: f32, q: f32) -> f32 {
+        let _ = (i, state, q);
+        x
+    }
+
+    /// Objective at termination from the final `x` and maintained
+    /// state (gradient for greedy/CG losses, `Kx` for cyclic).
+    fn objective(&self, x: &[f32], state: &[f32]) -> f32;
+
+    /// Map the optimization variable to expansion coefficients
+    /// (hinge: `α_i y_i`; default: identity).
+    #[inline]
+    fn coef(&self, x: Vec<f32>) -> Vec<f32> {
+        x
+    }
+}
+
+/// KKT violation of coordinate `x` with gradient `g` in `[lo, hi]`
+/// (how much the objective can decrease by moving it): positive ⇒
+/// movable.
+#[inline]
+pub(crate) fn violation(x: f32, g: f32, lo: f32, hi: f32) -> f32 {
+    let mut v: f32 = 0.0;
+    if x < hi {
+        v = v.max(-g); // can increase x
+    }
+    if x > lo {
+        v = v.max(g); // can decrease x
+    }
+    v
+}
+
+/// Exact minimizer of `½ q d² + g d` over `x + d ∈ [lo, hi]`, as a
+/// relative step.  A (numerically) zero diagonal makes the coordinate
+/// objective linear, so the exact solve goes straight to the
+/// descent-side box bound — not through a `g/ε`-scale Newton target
+/// (the degenerate-diagonal rule every loss inherits).
+#[inline]
+pub(crate) fn clip_step(x: f32, g: f32, q: f32, lo: f32, hi: f32) -> f32 {
+    if q <= Q_FLOOR {
+        return if g > 0.0 {
+            lo - x
+        } else if g < 0.0 {
+            hi - x
+        } else {
+            0.0
+        };
+    }
+    (x - g / q).clamp(lo, hi) - x
+}
+
+/// Exact 2-d box-QP solve: unconstrained 2×2 Newton step if it stays
+/// in the box, otherwise the best of the four clamped edges.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn solve2_box(
+    x1: f32,
+    x2: f32,
+    g1: f32,
+    g2: f32,
+    q11: f32,
+    q22: f32,
+    q12: f32,
+    lo1: f32,
+    hi1: f32,
+    lo2: f32,
+    hi2: f32,
+) -> (f32, f32) {
+    let det = q11 * q22 - q12 * q12;
+    let (mut d1, mut d2);
+    if det > 1e-12 * q11 * q22 {
+        d1 = (-g1 * q22 + g2 * q12) / det;
+        d2 = (-g2 * q11 + g1 * q12) / det;
+    } else {
+        d1 = -g1 / q11;
+        d2 = 0.0;
+    }
+    let in_box = |a: f32, lo: f32, hi: f32| a >= lo - 1e-12 && a <= hi + 1e-12;
+    if !(in_box(x1 + d1, lo1, hi1) && in_box(x2 + d2, lo2, hi2)) {
+        // best of the four clamped edges (exact for a 2-d box QP)
+        let mut best = (f32::INFINITY, 0.0f32, 0.0f32);
+        for &(fix1, bound) in &[(true, lo1), (true, hi1), (false, lo2), (false, hi2)] {
+            let (e1, e2) = if fix1 {
+                let dd1 = bound - x1;
+                // minimize over x2 with x1 fixed
+                let g2p = g2 + q12 * dd1;
+                let dd2 = clip_step(x2, g2p, q22, lo2, hi2);
+                (dd1, dd2)
+            } else {
+                let dd2 = bound - x2;
+                let g1p = g1 + q12 * dd2;
+                let dd1 = clip_step(x1, g1p, q11, lo1, hi1);
+                (dd1, dd2)
+            };
+            // objective change of the candidate step
+            let dobj =
+                g1 * e1 + g2 * e2 + 0.5 * (q11 * e1 * e1 + q22 * e2 * e2) + q12 * e1 * e2;
+            if dobj < best.0 {
+                best = (dobj, e1, e2);
+            }
+        }
+        d1 = best.1;
+        d2 = best.2;
+    }
+    (d1, d2)
+}
+
+/// Two-slot greedy tracker: top violation and runner-up, first index
+/// winning ties (the stability tie-break every greedy solver used).
+struct Top2 {
+    i1: usize,
+    v1: f32,
+    i2: usize,
+    v2: f32,
+}
+
+impl Top2 {
+    fn new() -> Top2 {
+        Top2 { i1: usize::MAX, v1: 0.0, i2: usize::MAX, v2: 0.0 }
+    }
+
+    #[inline]
+    fn push(&mut self, j: usize, v: f32) {
+        if v > self.v1 {
+            self.i2 = self.i1;
+            self.v2 = self.v1;
+            self.i1 = j;
+            self.v1 = v;
+        } else if v > self.v2 {
+            self.i2 = j;
+            self.v2 = v;
+        }
+    }
+}
+
+/// Batched per-solve tallies, flushed to the global counters once at
+/// exit (no atomics in the hot loop).
+#[derive(Default)]
+struct Tally {
+    sweeps: u64,
+    shrink_active: u64,
+    unshrinks: u64,
+}
+
+impl Tally {
+    fn flush(&self) {
+        counters::SOLVER_SWEEPS.add(self.sweeps);
+        counters::SOLVER_SHRINK_ACTIVE.add(self.shrink_active);
+        counters::SOLVER_UNSHRINK_PASSES.add(self.unshrinks);
+    }
+}
+
+/// Solve the loss's problem over a square Gram source — the single
+/// entry point behind [`crate::solver::solve`].
+pub fn solve_loss<L: Loss, K: GramSource + ?Sized>(
+    loss: &L,
+    k: &mut K,
+    params: &SolverParams,
+    warm: Option<&[f32]>,
+) -> Solution {
+    let n = loss.n();
+    assert_eq!(k.rows(), n);
+    assert_eq!(k.cols(), n);
+    match loss.mode() {
+        Mode::Greedy { pairwise } => greedy_cd(loss, k, params, warm, pairwise),
+        Mode::Cyclic => cyclic_cd(loss, k, params, warm),
+        Mode::ConjugateGradient => conj_grad(loss, k, params, warm),
+    }
+}
+
+/// Select the top-2 violators over the full set or an active list.
+fn select(
+    x: &[f32],
+    g: &[f32],
+    lo: &[f32],
+    hi: &[f32],
+    active: Option<&[usize]>,
+) -> Top2 {
+    let mut top = Top2::new();
+    match active {
+        None => {
+            for j in 0..x.len() {
+                top.push(j, violation(x[j], g[j], lo[j], hi[j]));
+            }
+        }
+        Some(idx) => {
+            for &j in idx {
+                top.push(j, violation(x[j], g[j], lo[j], hi[j]));
+            }
+        }
+    }
+    top
+}
+
+/// Rebuild the stale state entries of shrunk coordinates from
+/// scratch: `state_j = init_j + Σ_{i: x_i ≠ 0} s_j (x_i s_i) K_ij`
+/// with `sign = Some(s)` (the greedy gradient state), or the unsigned
+/// `state_j = init_j + Σ x_i K_ij` with `sign = None` (the cyclic
+/// `f = Kx` state).  Sources accumulate in ascending order — the same
+/// order as a fresh warm-start build.  Costs O(#nonzero·|stale|)
+/// through the gather path.
+#[allow(clippy::too_many_arguments)]
+fn rebuild_stale<L: Loss, K: GramSource + ?Sized>(
+    loss: &L,
+    k: &mut K,
+    x: &[f32],
+    sign: Option<&[f32]>,
+    state: &mut [f32],
+    is_active: &[bool],
+    buf: &mut Vec<f32>,
+    tally: &mut Tally,
+) {
+    let n = x.len();
+    let stale: Vec<usize> = (0..n).filter(|&j| !is_active[j]).collect();
+    if stale.is_empty() {
+        return;
+    }
+    for &j in &stale {
+        state[j] = loss.init_state(j);
+    }
+    buf.resize(stale.len(), 0.0);
+    for src in 0..n {
+        if x[src] != 0.0 {
+            k.gather(src, &stale, buf);
+            match sign {
+                Some(s) => {
+                    let sx = x[src] * s[src];
+                    for (t, &j) in stale.iter().enumerate() {
+                        state[j] += s[j] * sx * buf[t];
+                    }
+                }
+                None => {
+                    let bx = x[src];
+                    for (t, &j) in stale.iter().enumerate() {
+                        state[j] += bx * buf[t];
+                    }
+                }
+            }
+            tally.sweeps += stale.len() as u64;
+        }
+    }
+    tally.unshrinks += 1;
+}
+
+/// Greedy coordinate descent over a box with optional shrinking —
+/// the engine under hinge (`pairwise`) and quantile (single).
+fn greedy_cd<L: Loss, K: GramSource + ?Sized>(
+    loss: &L,
+    k: &mut K,
+    params: &SolverParams,
+    warm: Option<&[f32]>,
+    pairwise: bool,
+) -> Solution {
+    let n = loss.n();
+    let mut lo = vec![0.0f32; n];
+    let mut hi = vec![0.0f32; n];
+    for i in 0..n {
+        let (l, h) = loss.bounds(i);
+        lo[i] = l;
+        hi[i] = h;
+    }
+    let s: Vec<f32> = (0..n).map(|i| loss.sign(i)).collect();
+
+    // warm start: clip the previous solution into the new box (smaller
+    // λ ⇒ bigger box ⇒ a no-op on the canonical λ ordering; across γ
+    // the clip genuinely binds)
+    let mut x: Vec<f32> = match warm {
+        Some(prev) => prev.iter().enumerate().map(|(i, &a)| a.clamp(lo[i], hi[i])).collect(),
+        None => vec![0.0; n],
+    };
+
+    let mut tally = Tally::default();
+
+    // gradient state g = Qx − b, built from non-zero coordinates only
+    let mut g: Vec<f32> = (0..n).map(|i| loss.init_state(i)).collect();
+    for j in 0..n {
+        if x[j] != 0.0 {
+            let sxj = x[j] * s[j];
+            let krow = k.row(j);
+            for i in 0..n {
+                g[i] += s[i] * sxj * krow[i];
+            }
+            tally.sweeps += n as u64;
+        }
+    }
+
+    // shrinking state: `None` = all coordinates active (and the sweep
+    // code below takes the exact historical full-row path)
+    let shrink_every = params.shrink_every;
+    let mut active: Option<Vec<usize>> = None;
+    let mut is_active = vec![true; n];
+    let mut since_refresh = 0usize;
+    let (mut row1, mut row2): (Vec<f32>, Vec<f32>) = (Vec::new(), Vec::new());
+
+    let t = select(&x, &g, &lo, &hi, None);
+    let (mut i1, mut v1, mut i2) = (t.i1, t.v1, t.i2);
+
+    let mut iters = 0usize;
+    while iters < params.max_iter {
+        // periodic active-set refresh: drop coordinates pinned at a
+        // bound whose gradient is strongly feasible (they cannot move
+        // while the top violation stays above the margin)
+        if shrink_every > 0 && since_refresh >= shrink_every {
+            since_refresh = 0;
+            let margin = v1.max(params.eps);
+            let src: Vec<usize> = match &active {
+                None => (0..n).collect(),
+                Some(idx) => idx.clone(),
+            };
+            // exact bound equality is deliberate: a dropped coordinate
+            // then provably has zero KKT violation, so shrinking never
+            // removes an unconverged violator (which would force a
+            // guaranteed unshrink round later).  A coordinate landing
+            // one ulp inside its bound with an outward gradient is a
+            // live violator — selection steps it, and the final hop is
+            // a Sterbenz-exact subtraction that lands exactly ON the
+            // bound, after which it qualifies here.
+            let next: Vec<usize> = src
+                .into_iter()
+                .filter(|&j| {
+                    !((x[j] == lo[j] && g[j] > margin) || (x[j] == hi[j] && g[j] < -margin))
+                })
+                .collect();
+            tally.shrink_active += next.len() as u64;
+            if next.len() < n {
+                is_active.fill(false);
+                for &j in &next {
+                    is_active[j] = true;
+                }
+                active = Some(next);
+            } else {
+                active = None;
+            }
+        }
+
+        if i1 == usize::MAX || v1 <= params.eps {
+            // apparent convergence on the active set: the mandatory
+            // unshrink pass rebuilds stale gradients and re-checks the
+            // ε-KKT criterion over ALL coordinates before terminating
+            if active.is_some() {
+                rebuild_stale(loss, k, &x, Some(&s), &mut g, &is_active, &mut row1, &mut tally);
+                active = None;
+                is_active.fill(true);
+                since_refresh = 0;
+                let t = select(&x, &g, &lo, &hi, None);
+                (i1, v1, i2) = (t.i1, t.v1, t.i2);
+                if i1 == usize::MAX || v1 <= params.eps {
+                    break;
+                }
+                continue;
+            }
+            break;
+        }
+
+        if !pairwise {
+            // single-coordinate engine (quantile's historical loop):
+            // exact 1-d solve, then one fused update+select sweep
+            let d = loss.solve1(i1, x[i1], g[i1], k.diag(i1));
+            x[i1] += d;
+            let sd = s[i1] * d;
+            let mut top = Top2::new();
+            match &active {
+                None => {
+                    let krow = k.row(i1);
+                    for j in 0..n {
+                        let gj = g[j] + s[j] * (sd * krow[j]);
+                        g[j] = gj;
+                        top.push(j, violation(x[j], gj, lo[j], hi[j]));
+                    }
+                    tally.sweeps += n as u64;
+                }
+                Some(idx) => {
+                    row1.resize(idx.len(), 0.0);
+                    k.gather(i1, idx, &mut row1);
+                    for (t, &j) in idx.iter().enumerate() {
+                        let gj = g[j] + s[j] * (sd * row1[t]);
+                        g[j] = gj;
+                        top.push(j, violation(x[j], gj, lo[j], hi[j]));
+                    }
+                    tally.sweeps += idx.len() as u64;
+                }
+            }
+            (i1, v1, i2) = (top.i1, top.v1, top.i2);
+            iters += 1;
+            since_refresh += 1;
+            continue;
+        }
+
+        if i2 == usize::MAX || i2 == i1 {
+            // single movable coordinate (hinge's historical fallback):
+            // plain update pass, then a separate full reselect
+            let d = loss.solve1(i1, x[i1], g[i1], k.diag(i1));
+            if d != 0.0 {
+                x[i1] += d;
+                let sd = s[i1] * d;
+                match &active {
+                    None => {
+                        let krow = k.row(i1);
+                        for j in 0..n {
+                            g[j] += s[j] * (sd * krow[j]);
+                        }
+                        tally.sweeps += n as u64;
+                    }
+                    Some(idx) => {
+                        row1.resize(idx.len(), 0.0);
+                        k.gather(i1, idx, &mut row1);
+                        for (t, &j) in idx.iter().enumerate() {
+                            g[j] += s[j] * (sd * row1[t]);
+                        }
+                        tally.sweeps += idx.len() as u64;
+                    }
+                }
+            }
+            let t = select(&x, &g, &lo, &hi, active.as_deref());
+            (i1, v1, i2) = (t.i1, t.v1, t.i2);
+            iters += 1;
+            since_refresh += 1;
+            continue;
+        }
+
+        // exact 2-d solve on (i1, i2)
+        let q11 = k.diag(i1).max(1e-12);
+        let q22 = k.diag(i2).max(1e-12);
+        let q12 = s[i1] * s[i2] * k.get(i1, i2);
+        let (d1, d2) = loss.solve2(i1, i2, (x[i1], x[i2]), (g[i1], g[i2]), (q11, q22, q12));
+
+        // fused pass: apply both gradient updates AND pick the next
+        // working pair in a single sweep over the active set
+        x[i1] += d1;
+        x[i2] += d2;
+        let s1d = s[i1] * d1;
+        let s2d = s[i2] * d2;
+        let mut top = Top2::new();
+        match &active {
+            None => {
+                let (k1, k2) = k.row_pair(i1, i2);
+                for j in 0..n {
+                    let gj = g[j] + s[j] * (s1d * k1[j] + s2d * k2[j]);
+                    g[j] = gj;
+                    top.push(j, violation(x[j], gj, lo[j], hi[j]));
+                }
+                tally.sweeps += n as u64;
+            }
+            Some(idx) => {
+                row1.resize(idx.len(), 0.0);
+                row2.resize(idx.len(), 0.0);
+                k.gather(i1, idx, &mut row1);
+                k.gather(i2, idx, &mut row2);
+                for (t, &j) in idx.iter().enumerate() {
+                    let gj = g[j] + s[j] * (s1d * row1[t] + s2d * row2[t]);
+                    g[j] = gj;
+                    top.push(j, violation(x[j], gj, lo[j], hi[j]));
+                }
+                tally.sweeps += idx.len() as u64;
+            }
+        }
+        (i1, v1, i2) = (top.i1, top.v1, top.i2);
+        // a 2-coordinate step is 2 coordinate updates — counted as
+        // such so iteration totals compare like with like across losses
+        iters += 2;
+        since_refresh += 2;
+    }
+
+    // a max_iter exit can leave shrunk coordinates stale: rebuild so
+    // the reported objective is exact
+    if active.is_some() {
+        rebuild_stale(loss, k, &x, Some(&s), &mut g, &is_active, &mut row1, &mut tally);
+    }
+
+    let obj = loss.objective(&x, &g);
+    tally.flush();
+    let mut sol = Solution::from_coef(loss.coef(x), obj, iters);
+    sol.sweep_entries = tally.sweeps;
+    sol
+}
+
+/// Cyclic exact-solve sweeps with optional shrinking — the engine
+/// under expectile.  Maintains `state = Kx` incrementally; stops when
+/// a sweep's largest scaled move falls below `eps · stop_scale`.
+fn cyclic_cd<L: Loss, K: GramSource + ?Sized>(
+    loss: &L,
+    k: &mut K,
+    params: &SolverParams,
+    warm: Option<&[f32]>,
+) -> Solution {
+    let n = loss.n();
+    let mut x: Vec<f32> = warm.map(<[f32]>::to_vec).unwrap_or_else(|| vec![0.0; n]);
+
+    let mut tally = Tally::default();
+
+    // state f = Kx maintained incrementally, built sparsely
+    let mut f: Vec<f32> = (0..n).map(|i| loss.init_state(i)).collect();
+    for j in 0..n {
+        if x[j] != 0.0 {
+            let bj = x[j];
+            let krow = k.row(j);
+            for i in 0..n {
+                f[i] += bj * krow[i];
+            }
+            tally.sweeps += n as u64;
+        }
+    }
+
+    let threshold = params.eps * loss.stop_scale();
+    let shrink_every = params.shrink_every;
+    let mut active: Option<Vec<usize>> = None;
+    let mut is_active = vec![true; n];
+    let mut since_refresh = 0usize;
+    // last scaled move per coordinate, the cyclic shrink signal
+    let mut last_move = vec![f32::INFINITY; n];
+    let mut row = Vec::new();
+
+    let mut iters = 0usize;
+    let mut sweep_max = f32::INFINITY;
+    while sweep_max > threshold && iters < params.max_iter {
+        sweep_max = 0.0;
+        let idx = active.as_deref();
+        let len = idx.map_or(n, <[usize]>::len);
+        for t in 0..len {
+            let i = idx.map_or(t, |v| v[t]);
+            let kii = k.diag(i).max(1e-12);
+            let new_b = loss.prox(i, x[i], f[i], kii);
+            let d = new_b - x[i];
+            if d != 0.0 {
+                x[i] = new_b;
+                match idx {
+                    None => {
+                        let krow = k.row(i);
+                        for (j, fj) in f.iter_mut().enumerate() {
+                            *fj += d * krow[j];
+                        }
+                        tally.sweeps += n as u64;
+                    }
+                    Some(v) => {
+                        row.resize(v.len(), 0.0);
+                        k.gather(i, v, &mut row);
+                        for (u, &j) in v.iter().enumerate() {
+                            f[j] += d * row[u];
+                        }
+                        tally.sweeps += v.len() as u64;
+                    }
+                }
+                let mv = d.abs() * kii;
+                sweep_max = sweep_max.max(mv);
+                last_move[i] = mv;
+            } else {
+                last_move[i] = 0.0;
+            }
+            iters += 1;
+            since_refresh += 1;
+            if iters >= params.max_iter {
+                break;
+            }
+        }
+
+        if sweep_max <= threshold && active.is_some() {
+            // the active sweep converged: mandatory unshrink — rebuild
+            // stale state and keep sweeping the FULL set until it
+            // satisfies the same criterion as a shrink-off run
+            rebuild_stale(loss, k, &x, None, &mut f, &is_active, &mut row, &mut tally);
+            active = None;
+            is_active.fill(true);
+            since_refresh = 0;
+            sweep_max = f32::INFINITY;
+            continue;
+        }
+
+        // refresh at sweep boundaries only (a partial sweep must not
+        // change the set mid-flight)
+        if shrink_every > 0 && since_refresh >= shrink_every && iters < params.max_iter {
+            since_refresh = 0;
+            let margin = CYCLIC_SHRINK_FRACTION * threshold;
+            let src: Vec<usize> = match &active {
+                None => (0..n).collect(),
+                Some(idx) => idx.clone(),
+            };
+            let next: Vec<usize> = src.into_iter().filter(|&j| last_move[j] > margin).collect();
+            tally.shrink_active += next.len() as u64;
+            // an empty refresh result can only arise from a full set
+            // whose sweep already converged (the unshrink branch above
+            // owns that case) — leave the current set untouched so no
+            // stale coordinate is ever silently reactivated
+            if !next.is_empty() {
+                if next.len() < n {
+                    is_active.fill(false);
+                    for &j in &next {
+                        is_active[j] = true;
+                    }
+                    active = Some(next);
+                } else {
+                    active = None;
+                    is_active.fill(true);
+                }
+            }
+        }
+    }
+
+    if active.is_some() {
+        rebuild_stale(loss, k, &x, None, &mut f, &is_active, &mut row, &mut tally);
+    }
+
+    let obj = loss.objective(&x, &f);
+    tally.flush();
+    let mut sol = Solution::from_coef(loss.coef(x), obj, iters);
+    sol.sweep_entries = tally.sweeps;
+    sol
+}
+
+/// `out ← (K + σI)·x` — the fused matvec + shift under the CG engine
+/// (and the residual checks in the LS tests).
+pub fn matvec_shifted<K: GramSource + ?Sized>(k: &mut K, shift: f32, x: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    for i in 0..n {
+        let row = k.row(i);
+        let mut s = 0.0f32;
+        for j in 0..n {
+            s += row[j] * x[j];
+        }
+        out[i] = s + shift * x[i];
+    }
+}
+
+/// Conjugate gradients on `(K + σI) x = b` — the engine under least
+/// squares.  No box ⇒ nothing to shrink; `iterations` reports
+/// `rounds · n` (each CG round updates every coordinate once, so the
+/// totals compare like with like with the coordinate solvers), while
+/// `max_iter` keeps its historical meaning of a CG-round cap.
+fn conj_grad<L: Loss, K: GramSource + ?Sized>(
+    loss: &L,
+    k: &mut K,
+    params: &SolverParams,
+    warm: Option<&[f32]>,
+) -> Solution {
+    let n = loss.n();
+    let shift = loss.diag_shift();
+    let b: Vec<f32> = (0..n).map(|i| -loss.init_state(i)).collect();
+
+    let mut x: Vec<f32> = warm.map(<[f32]>::to_vec).unwrap_or_else(|| vec![0.0; n]);
+    let mut tmp = vec![0.0f32; n];
+    let mut tally = Tally::default();
+
+    // r = b − (K + σI)x
+    matvec_shifted(k, shift, &x, &mut tmp);
+    tally.sweeps += n as u64;
+    let mut r: Vec<f32> = b.iter().zip(&tmp).map(|(&a, &t)| a - t).collect();
+    let mut p = r.clone();
+    let mut rs: f32 = r.iter().map(|v| v * v).sum();
+    let b_norm: f32 = b.iter().map(|v| v * v).sum::<f32>().max(1e-12);
+    let tol2 = (params.eps * params.eps) * b_norm;
+
+    let mut rounds = 0usize;
+    let max_cg = params.max_iter.min(4 * n + 50);
+    while rs > tol2 && rounds < max_cg {
+        matvec_shifted(k, shift, &p, &mut tmp);
+        tally.sweeps += n as u64;
+        let pap: f32 = p.iter().zip(&tmp).map(|(&a, &t)| a * t).sum();
+        if pap <= 0.0 {
+            break; // K + σI is SPD; this only trips on round-off
+        }
+        let a = rs / pap;
+        for i in 0..n {
+            x[i] += a * p[i];
+            r[i] -= a * tmp[i];
+        }
+        let rs_new: f32 = r.iter().map(|v| v * v).sum();
+        let beta = rs_new / rs;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs = rs_new;
+        rounds += 1;
+    }
+
+    matvec_shifted(k, shift, &x, &mut tmp);
+    tally.sweeps += n as u64;
+    let obj = loss.objective(&x, &tmp);
+    tally.flush();
+    let mut sol = Solution::from_coef(loss.coef(x), obj, rounds * n);
+    sol.sweep_entries = tally.sweeps;
+    sol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn violation_respects_bounds() {
+        // pinned at the lower bound with a feasible gradient: immovable
+        assert_eq!(violation(0.0, 2.0, 0.0, 1.0), 0.0);
+        // pinned at the lower bound with a descent direction: movable
+        assert_eq!(violation(0.0, -2.0, 0.0, 1.0), 2.0);
+        // interior point: both directions checked
+        assert_eq!(violation(0.5, 3.0, 0.0, 1.0), 3.0);
+        assert_eq!(violation(0.5, -3.0, 0.0, 1.0), 3.0);
+        // pinned at the upper bound
+        assert_eq!(violation(1.0, -2.0, 0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn clip_step_newton_within_box() {
+        // q=2, g=1 from x=0.5: target 0 ⇒ step −0.5
+        assert!((clip_step(0.5, 1.0, 2.0, 0.0, 1.0) + 0.5).abs() < 1e-7);
+        // target outside the box clamps to the bound
+        assert!((clip_step(0.5, 10.0, 1.0, 0.0, 1.0) + 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn clip_step_degenerate_diag_goes_to_bound() {
+        // zero diagonal + positive gradient ⇒ exact step to the lower
+        // bound, not a 1e12-scale Newton target
+        let d = clip_step(0.4, 1e-20, 0.0, 0.0, 1.0);
+        assert_eq!(d, -0.4);
+        let d = clip_step(0.4, -1e-20, 0.0, 0.0, 1.0);
+        assert_eq!(d, 0.6);
+        assert_eq!(clip_step(0.4, 0.0, 0.0, 0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn solve2_box_unconstrained_newton() {
+        // identity Q, interior solution
+        let (d1, d2) = solve2_box(0.5, 0.5, 0.2, -0.1, 1.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0);
+        assert!((d1 + 0.2).abs() < 1e-6);
+        assert!((d2 - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn solve2_box_clamps_to_edges() {
+        // strong negative gradients push both coordinates to the top
+        let (d1, d2) = solve2_box(0.0, 0.0, -5.0, -5.0, 1.0, 1.0, 0.5, 0.0, 1.0, 0.0, 1.0);
+        assert!(0.0 + d1 <= 1.0 + 1e-6 && 0.0 + d2 <= 1.0 + 1e-6);
+        assert!(d1 > 0.0 && d2 > 0.0);
+    }
+
+    #[test]
+    fn top2_orders_and_breaks_ties_by_first_index() {
+        let mut t = Top2::new();
+        t.push(0, 1.0);
+        t.push(1, 1.0); // tie: first index keeps the top slot
+        t.push(2, 3.0);
+        assert_eq!((t.i1, t.i2), (2, 0));
+        assert_eq!((t.v1, t.v2), (3.0, 1.0));
+    }
+}

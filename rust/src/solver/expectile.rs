@@ -1,4 +1,4 @@
-//! Expectile solver (asymmetric least squares), after Farooq &
+//! Expectile plugin (asymmetric least squares), after Farooq &
 //! Steinwart (2017) — the solver the paper notes needed "more care".
 //!
 //! Loss: ℓ_τ(r) = τ r² for r ≥ 0, (1−τ) r² for r < 0 (r = y − f(x)).
@@ -7,93 +7,98 @@
 //!   β_i = C · ℓ'_τ(y_i − f(x_i)),   C = 1/(2λn),  ℓ'_τ(r) = 2τ' r,
 //!
 //! where τ' = τ on positive residuals and 1−τ on negatives.  Each
-//! coordinate therefore has an *exact* piecewise-linear 1-d solve: try
-//! both sign cases, keep the consistent one (exactly one is, by
-//! monotonicity).  Cyclic sweeps with incremental f-updates until the
-//! largest coordinate move falls below eps.
+//! coordinate therefore has an *exact* piecewise-linear 1-d solve:
+//! try both sign cases, keep the consistent one (exactly one is, by
+//! monotonicity) — that solve is this plugin's [`Loss::prox`].  The
+//! cyclic sweeps, the incremental `f = Kβ` state, shrinking of
+//! barely-moving coordinates, and the largest-move stopping rule are
+//! the shared engine's ([`Mode::Cyclic`] in [`crate::solver::core`]).
 
-use crate::kernel::plane::GramSource;
+use super::core::{Loss, Mode};
+use super::box_c;
 
-use super::{box_c, Solution, SolverParams};
-
-pub fn solve<K: GramSource + ?Sized>(
-    k: &mut K,
-    y: &[f32],
+/// The expectile [`Loss`] plugin: the piecewise 1-d solve and the
+/// primal objective.
+pub struct ExpectileLoss<'a> {
+    y: &'a [f32],
     lambda: f32,
     tau: f32,
-    params: &SolverParams,
-    warm: Option<&[f32]>,
-) -> Solution {
-    let n = y.len();
-    assert_eq!(k.rows(), n);
-    assert!((0.0..=1.0).contains(&tau));
-    let c = box_c(lambda, n);
+    c: f32,
+    scale: f32,
+}
 
-    let mut beta: Vec<f32> = warm.map(<[f32]>::to_vec).unwrap_or_else(|| vec![0.0; n]);
-    // f_i = (Kβ)_i maintained incrementally
-    let mut f = vec![0.0f32; n];
-    for j in 0..n {
-        if beta[j] != 0.0 {
-            let bj = beta[j];
-            let krow = k.row(j);
-            for i in 0..n {
-                f[i] += bj * krow[i];
-            }
-        }
+impl<'a> ExpectileLoss<'a> {
+    pub fn new(y: &'a [f32], lambda: f32, tau: f32) -> ExpectileLoss<'a> {
+        assert!((0.0..=1.0).contains(&tau));
+        let c = box_c(lambda, y.len());
+        let scale = y.iter().map(|v| v.abs()).fold(0.0, f32::max).max(1.0);
+        ExpectileLoss { y, lambda, tau, c, scale }
+    }
+}
+
+impl Loss for ExpectileLoss<'_> {
+    #[inline]
+    fn n(&self) -> usize {
+        self.y.len()
     }
 
-    let scale: f32 = y.iter().map(|v| v.abs()).fold(0.0, f32::max).max(1.0);
-    let mut iters = 0usize;
-    let mut sweep_max = f32::INFINITY;
-    while sweep_max > params.eps * scale && iters < params.max_iter {
-        sweep_max = 0.0;
-        for i in 0..n {
-            let kii = k.diag(i).max(1e-12);
-            // residual with β_i's own contribution removed:
-            // r_i(β_i) = y_i − (f_i − k_ii β_i) − k_ii β_i
-            let rest = y[i] - (f[i] - kii * beta[i]);
-            // case r >= 0 (τ' = τ):   β = 2Cτ (rest − k_ii β)
-            //   ⇒ β = 2Cτ·rest / (1 + 2Cτ·k_ii), consistent iff r >= 0
-            let mut new_b = beta[i];
-            let bp = 2.0 * c * tau * rest / (1.0 + 2.0 * c * tau * kii);
-            if rest - kii * bp >= 0.0 {
-                new_b = bp;
-            } else {
-                let tn = 1.0 - tau;
-                let bn = 2.0 * c * tn * rest / (1.0 + 2.0 * c * tn * kii);
-                if rest - kii * bn <= 0.0 {
-                    new_b = bn;
-                }
-            }
-            let d = new_b - beta[i];
-            if d != 0.0 {
-                beta[i] = new_b;
-                let krow = k.row(i);
-                for (j, fj) in f.iter_mut().enumerate() {
-                    *fj += d * krow[j];
-                }
-                sweep_max = sweep_max.max(d.abs() * kii);
-            }
-            iters += 1;
-            if iters >= params.max_iter {
-                break;
-            }
-        }
+    #[inline]
+    fn mode(&self) -> Mode {
+        Mode::Cyclic
     }
 
-    // primal objective (for selection comparisons): λ‖f‖² + mean loss
-    let reg: f32 = beta.iter().zip(&f).map(|(&b, &fi)| b * fi).sum();
-    let loss: f32 = y
-        .iter()
-        .zip(&f)
-        .map(|(&yi, &fi)| {
-            let r = yi - fi;
-            if r >= 0.0 { tau * r * r } else { (1.0 - tau) * r * r }
-        })
-        .sum::<f32>()
-        / n as f32;
-    let obj = lambda * reg + loss;
-    Solution::from_coef(beta, obj, iters)
+    #[inline]
+    fn bounds(&self, _i: usize) -> (f32, f32) {
+        (f32::NEG_INFINITY, f32::INFINITY)
+    }
+
+    #[inline]
+    fn init_state(&self, _i: usize) -> f32 {
+        0.0
+    }
+
+    #[inline]
+    fn stop_scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Exact piecewise 1-d solve: residual with β_i's own contribution
+    /// removed is r_i(β_i) = y_i − (f_i − k_ii β_i) − k_ii β_i; case
+    /// r ≥ 0 (τ' = τ) gives β = 2Cτ·rest / (1 + 2Cτ·k_ii), consistent
+    /// iff r ≥ 0, and symmetrically for the negative branch.
+    #[inline]
+    fn prox(&self, i: usize, x: f32, state: f32, q: f32) -> f32 {
+        let rest = self.y[i] - (state - q * x);
+        let mut new_b = x;
+        let bp = 2.0 * self.c * self.tau * rest / (1.0 + 2.0 * self.c * self.tau * q);
+        if rest - q * bp >= 0.0 {
+            new_b = bp;
+        } else {
+            let tn = 1.0 - self.tau;
+            let bn = 2.0 * self.c * tn * rest / (1.0 + 2.0 * self.c * tn * q);
+            if rest - q * bn <= 0.0 {
+                new_b = bn;
+            }
+        }
+        new_b
+    }
+
+    /// Primal objective (for selection comparisons): λ‖f‖² + mean
+    /// loss; `state` carries the final `f = Kβ`.
+    fn objective(&self, x: &[f32], state: &[f32]) -> f32 {
+        let reg: f32 = x.iter().zip(state).map(|(&b, &fi)| b * fi).sum();
+        let loss: f32 = self
+            .y
+            .iter()
+            .zip(state)
+            .map(|(&yi, &fi)| {
+                let r = yi - fi;
+                if r >= 0.0 { self.tau * r * r } else { (1.0 - self.tau) * r * r }
+            })
+            .sum::<f32>()
+            / self.y.len() as f32;
+        self.lambda * reg + loss
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +107,18 @@ mod tests {
     use crate::data::matrix::Matrix;
     use crate::kernel::plane::DenseGram;
     use crate::kernel::{GramBackend, KernelKind};
+    use crate::solver::{Solution, SolverKind, SolverParams};
+
+    fn solve(
+        k: &mut DenseGram,
+        y: &[f32],
+        lambda: f32,
+        tau: f32,
+        params: &SolverParams,
+        warm: Option<&[f32]>,
+    ) -> Solution {
+        crate::solver::solve(SolverKind::Expectile { tau }, k, y, lambda, params, warm)
+    }
 
     fn setup(n: usize, seed: u64) -> (Matrix, Vec<f32>) {
         let d = crate::data::synth::sinc_hetero(n, seed);
@@ -116,7 +133,15 @@ mod tests {
         let p = SolverParams { eps: 1e-5, ..Default::default() };
         let ex = solve(&mut DenseGram::new(&k), &y, 1e-3, 0.5, &p, None).decision_values(&k);
         // ℓ_{0.5}(r) = r²/2, so expectile λ matches LS λ at half weight:
-        let ls = crate::solver::ls::solve(&mut DenseGram::new(&k), &y, 2e-3, &p, None).decision_values(&k);
+        let ls = crate::solver::solve(
+            SolverKind::LeastSquares,
+            &mut DenseGram::new(&k),
+            &y,
+            2e-3,
+            &p,
+            None,
+        )
+        .decision_values(&k);
         let diff: f32 =
             ex.iter().zip(&ls).map(|(a, b)| (a - b).abs()).sum::<f32>() / y.len() as f32;
         assert!(diff < 0.05, "mean |expectile - ls| = {diff}");
@@ -137,7 +162,14 @@ mod tests {
         let (k, y) = setup(60, 3);
         let lambda = 1e-3;
         let tau = 0.7;
-        let sol = solve(&mut DenseGram::new(&k), &y, lambda, tau, &SolverParams { eps: 1e-6, ..Default::default() }, None);
+        let sol = solve(
+            &mut DenseGram::new(&k),
+            &y,
+            lambda,
+            tau,
+            &SolverParams { eps: 1e-6, ..Default::default() },
+            None,
+        );
         let f = sol.decision_values(&k);
         let c = box_c(lambda, y.len());
         for i in 0..y.len() {
@@ -160,5 +192,20 @@ mod tests {
         let a = solve(&mut DenseGram::new(&k), &y, 1e-3, 0.8, &p, None);
         let b = solve(&mut DenseGram::new(&k), &y, 8e-4, 0.8, &p, Some(&a.coef));
         assert!(b.iterations <= a.iterations * 2);
+    }
+
+    #[test]
+    fn shrinking_preserves_objective() {
+        let (k, y) = setup(90, 5);
+        let off = SolverParams { shrink_every: 0, ..Default::default() };
+        let on = SolverParams { shrink_every: 90, ..Default::default() };
+        let a = solve(&mut DenseGram::new(&k), &y, 1e-3, 0.8, &off, None);
+        let b = solve(&mut DenseGram::new(&k), &y, 1e-3, 0.8, &on, None);
+        assert!(
+            (a.objective - b.objective).abs() < 1e-2 * (1.0 + a.objective.abs()),
+            "{} vs {}",
+            a.objective,
+            b.objective
+        );
     }
 }

@@ -1,4 +1,4 @@
-//! Least-squares solver (mean regression and the OvA-LS multiclass
+//! Least-squares plugin (mean regression and the OvA-LS multiclass
 //! path used in the GURLS comparison, Table 2).
 //!
 //! With the representer expansion f = Σ β_j k(x_j, ·), the offset-free
@@ -6,82 +6,64 @@
 //!
 //!   (K + nλ I) β = y,
 //!
-//! which we solve by conjugate gradients.  CG warm-starts from the
-//! previous λ's solution, which is exactly the "straightforward
-//! modification" of the hinge machinery the paper describes — matvecs
-//! are the cost, and the Gram matrix is the one already cached for the
-//! γ at hand.
+//! which the shared engine solves by conjugate gradients
+//! ([`Mode::ConjugateGradient`] in [`crate::solver::core`]).  This
+//! plugin contributes only the diagonal shift `nλ`, the right-hand
+//! side, and the objective; CG warm-starts from the previous (γ, λ)
+//! solution, which is exactly the "straightforward modification" of
+//! the hinge machinery the paper describes.  No box ⇒ nothing to
+//! shrink, so shrink-on and shrink-off runs are identical by
+//! construction.
 
-use crate::kernel::plane::GramSource;
+use super::core::{Loss, Mode};
 
-use super::{Solution, SolverParams};
+/// The least-squares [`Loss`] plugin: unconstrained, shifted-diagonal.
+pub struct LsLoss<'a> {
+    y: &'a [f32],
+    shift: f32,
+}
 
-/// y ← (K + nλ I)·x  (fused matvec + shift)
-fn matvec_shifted<K: GramSource + ?Sized>(k: &mut K, shift: f32, x: &[f32], out: &mut [f32]) {
-    let n = x.len();
-    for i in 0..n {
-        let row = k.row(i);
-        let mut s = 0.0f32;
-        for j in 0..n {
-            s += row[j] * x[j];
-        }
-        out[i] = s + shift * x[i];
+impl<'a> LsLoss<'a> {
+    pub fn new(y: &'a [f32], lambda: f32) -> LsLoss<'a> {
+        LsLoss { y, shift: lambda * y.len() as f32 }
     }
 }
 
-pub fn solve<K: GramSource + ?Sized>(
-    k: &mut K,
-    y: &[f32],
-    lambda: f32,
-    params: &SolverParams,
-    warm: Option<&[f32]>,
-) -> Solution {
-    let n = y.len();
-    assert_eq!(k.rows(), n);
-    let shift = lambda * n as f32;
-
-    let mut beta: Vec<f32> = warm.map(<[f32]>::to_vec).unwrap_or_else(|| vec![0.0; n]);
-    let mut tmp = vec![0.0f32; n];
-
-    // r = y − (K + nλI)β
-    matvec_shifted(k, shift, &beta, &mut tmp);
-    let mut r: Vec<f32> = y.iter().zip(&tmp).map(|(&a, &b)| a - b).collect();
-    let mut p = r.clone();
-    let mut rs: f32 = r.iter().map(|v| v * v).sum();
-    let y_norm: f32 = y.iter().map(|v| v * v).sum::<f32>().max(1e-12);
-    let tol2 = (params.eps * params.eps) * y_norm;
-
-    let mut iters = 0usize;
-    let max_cg = params.max_iter.min(4 * n + 50);
-    while rs > tol2 && iters < max_cg {
-        matvec_shifted(k, shift, &p, &mut tmp);
-        let pap: f32 = p.iter().zip(&tmp).map(|(&a, &b)| a * b).sum();
-        if pap <= 0.0 {
-            break; // K + nλI is SPD; this only trips on round-off
-        }
-        let a = rs / pap;
-        for i in 0..n {
-            beta[i] += a * p[i];
-            r[i] -= a * tmp[i];
-        }
-        let rs_new: f32 = r.iter().map(|v| v * v).sum();
-        let b = rs_new / rs;
-        for i in 0..n {
-            p[i] = r[i] + b * p[i];
-        }
-        rs = rs_new;
-        iters += 1;
+impl Loss for LsLoss<'_> {
+    #[inline]
+    fn n(&self) -> usize {
+        self.y.len()
     }
 
-    // dual-ish objective: ½βᵀ(K+nλI)β − yᵀβ (monotone in the residual)
-    matvec_shifted(k, shift, &beta, &mut tmp);
-    let obj: f32 = beta
-        .iter()
-        .zip(&tmp)
-        .zip(y)
-        .map(|((&bi, &ti), &yi)| 0.5 * bi * ti - yi * bi)
-        .sum();
-    Solution::from_coef(beta, obj, iters)
+    #[inline]
+    fn mode(&self) -> Mode {
+        Mode::ConjugateGradient
+    }
+
+    #[inline]
+    fn bounds(&self, _i: usize) -> (f32, f32) {
+        (f32::NEG_INFINITY, f32::INFINITY)
+    }
+
+    #[inline]
+    fn init_state(&self, i: usize) -> f32 {
+        -self.y[i]
+    }
+
+    #[inline]
+    fn diag_shift(&self) -> f32 {
+        self.shift
+    }
+
+    /// Dual-ish objective ½βᵀ(K+nλI)β − yᵀβ (monotone in the
+    /// residual); `state` carries the final `(K+nλI)β` matvec.
+    fn objective(&self, x: &[f32], state: &[f32]) -> f32 {
+        x.iter()
+            .zip(state)
+            .zip(self.y)
+            .map(|((&bi, &ti), &yi)| 0.5 * bi * ti - yi * bi)
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -90,6 +72,18 @@ mod tests {
     use crate::data::matrix::Matrix;
     use crate::kernel::plane::DenseGram;
     use crate::kernel::{GramBackend, KernelKind};
+    use crate::solver::core::matvec_shifted;
+    use crate::solver::{Solution, SolverKind, SolverParams};
+
+    fn solve(
+        k: &mut DenseGram,
+        y: &[f32],
+        lambda: f32,
+        params: &SolverParams,
+        warm: Option<&[f32]>,
+    ) -> Solution {
+        crate::solver::solve(SolverKind::LeastSquares, k, y, lambda, params, warm)
+    }
 
     fn gram_1d(xs: &[f32], gamma: f32) -> (Matrix, Matrix) {
         let rows: Vec<Vec<f32>> = xs.iter().map(|&v| vec![v]).collect();
@@ -104,7 +98,13 @@ mod tests {
         let (_, k) = gram_1d(&[0.0, 0.5, 1.0, 1.5, 2.0], 1.0);
         let y = vec![0.0, 0.25, 1.0, 2.25, 4.0];
         let lambda = 0.01;
-        let sol = solve(&mut DenseGram::new(&k), &y, lambda, &SolverParams { eps: 1e-5, ..Default::default() }, None);
+        let sol = solve(
+            &mut DenseGram::new(&k),
+            &y,
+            lambda,
+            &SolverParams { eps: 1e-5, ..Default::default() },
+            None,
+        );
         // residual check: (K + nλI)β ≈ y
         let n = y.len();
         let mut out = vec![0.0; n];
@@ -119,7 +119,13 @@ mod tests {
         let xs: Vec<f32> = (0..50).map(|i| i as f32 / 10.0).collect();
         let (x, k) = gram_1d(&xs, 0.7);
         let y: Vec<f32> = xs.iter().map(|&v| (v).sin()).collect();
-        let sol = solve(&mut DenseGram::new(&k), &y, 1e-4, &SolverParams { eps: 1e-5, ..Default::default() }, None);
+        let sol = solve(
+            &mut DenseGram::new(&k),
+            &y,
+            1e-4,
+            &SolverParams { eps: 1e-5, ..Default::default() },
+            None,
+        );
         let kx = GramBackend::Blocked.gram(&x, &x, 0.7, KernelKind::Gauss);
         let f = sol.decision_values(&kx);
         let mse: f32 =
@@ -146,5 +152,20 @@ mod tests {
         let sol = solve(&mut DenseGram::new(&k), &y, 100.0, &SolverParams::default(), None);
         let norm: f32 = sol.coef.iter().map(|v| v.abs()).sum();
         assert!(norm < 0.02, "coef norm {norm}");
+    }
+
+    #[test]
+    fn shrink_setting_is_a_no_op_for_cg() {
+        // no box ⇒ nothing to shrink: bit-identical either way
+        let (_, k) = gram_1d(&[0.0, 0.4, 0.9, 1.7, 2.2, 3.0], 0.8);
+        let y = vec![0.1, 0.5, 0.9, 0.4, -0.2, -0.7];
+        let off = SolverParams { shrink_every: 0, ..Default::default() };
+        let on = SolverParams { shrink_every: 8, ..Default::default() };
+        let a = solve(&mut DenseGram::new(&k), &y, 1e-3, &off, None);
+        let b = solve(&mut DenseGram::new(&k), &y, 1e-3, &on, None);
+        let bits_a: Vec<u32> = a.coef.iter().map(|v| v.to_bits()).collect();
+        let bits_b: Vec<u32> = b.coef.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_a, bits_b);
+        assert_eq!(a.iterations, b.iterations);
     }
 }

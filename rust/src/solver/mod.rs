@@ -8,13 +8,26 @@
 //!   min_f  λ‖f‖²_H + (1/n) Σ L_w(y_i, f(x_i))           (paper eq. 1)
 //!
 //! without a bias term, by coordinate descent over the dual variables
-//! with greedy (two-coordinate) working-set selection, exact 1-d/2-d
-//! subproblem solves, KKT-violation stopping, and warm starts along the
-//! λ grid.  Predictions are `f(x) = Σ_j coef_j · k(x_j, x)` with signed
+//! with greedy working-set selection, exact 1-d/2-d subproblem solves,
+//! KKT-violation stopping, and warm starts along the (γ, λ) grid.
+//! Predictions are `f(x) = Σ_j coef_j · k(x_j, x)` with signed
 //! coefficients, so downstream code never needs labels again.
 //!
+//! Since the solver-core rebuild (DESIGN.md §Solver-core) the
+//! algorithmic machinery lives exactly once, in [`core`]: a [`Loss`]
+//! trait (box bounds, sign pattern, exact 1-d/2-d solves, objective)
+//! that the four losses implement as thin plugins, and a shared
+//! engine owning incremental gradient maintenance, fused
+//! select+update sweeps, KKT stopping, **shrinking** (periodically
+//! dropping coordinates pinned at a box bound, with a mandatory
+//! unshrink verification pass before any termination), and warm-start
+//! clipping.  `SolverParams::shrink_every` controls the shrink
+//! cadence; `0` disables it and reproduces the pre-engine solvers
+//! bit-for-bit.
+//!
 //! Solvers read kernel values through the Gram plane's
-//! [`GramSource`] contract (rows, row pairs, entries) rather than a
+//! [`GramSource`] contract (rows, row pairs, entries, and the
+//! active-set `gather` path shrinking relies on) rather than a
 //! concrete `&Matrix`, so the same code runs against a borrowed dense
 //! Gram ([`DenseGram`]), a worker's reusable exponentiation buffer
 //! (`kernel::plane::GramBuffer`), or a memory-capped streaming source
@@ -26,10 +39,13 @@
 //! * [`expectile`] — asymmetric LS, expectile regression (Farooq &
 //!                   Steinwart 2017)
 
+pub mod core;
 pub mod expectile;
 pub mod hinge;
 pub mod ls;
 pub mod quantile;
+
+pub use self::core::{Loss, Mode};
 
 use crate::data::matrix::Matrix;
 use crate::kernel::plane::{DenseGram, GramSource};
@@ -53,13 +69,23 @@ pub enum SolverKind {
 pub struct SolverParams {
     /// KKT-violation stopping threshold
     pub eps: f32,
-    /// hard cap on coordinate-descent iterations
+    /// hard cap on coordinate-descent iterations (coordinate updates;
+    /// a 2-coordinate step spends 2).  Exception: the CG
+    /// least-squares engine keeps its historical semantics and reads
+    /// this as a cap on CG *rounds* (further bounded at 4n+50), while
+    /// still *reporting* `Solution::iterations` as coordinate updates
+    /// (rounds·n)
     pub max_iter: usize,
+    /// coordinate updates between active-set refreshes of the
+    /// shrinking engine; `0` disables shrinking (every sweep touches
+    /// all n coordinates, reproducing the pre-engine solvers
+    /// bit-for-bit)
+    pub shrink_every: usize,
 }
 
 impl Default for SolverParams {
     fn default() -> Self {
-        SolverParams { eps: 1e-3, max_iter: 200_000 }
+        SolverParams { eps: 1e-3, max_iter: 200_000, shrink_every: 1000 }
     }
 }
 
@@ -70,16 +96,22 @@ pub struct Solution {
     pub coef: Vec<f32>,
     /// dual objective value at termination
     pub objective: f32,
-    /// coordinate updates performed
+    /// coordinate updates performed (a 2-coordinate step counts as 2,
+    /// a CG round as n — totals compare like with like across losses)
     pub iterations: usize,
     /// number of non-zero coefficients
     pub n_sv: usize,
+    /// gradient/state entries written by the engine's sweeps — the
+    /// O(n·iterations) core cost; a shrunk sweep writes |active|
+    /// entries instead of n, so this is the per-solve view of the
+    /// global `solver_sweeps` counter
+    pub sweep_entries: u64,
 }
 
 impl Solution {
     pub fn from_coef(coef: Vec<f32>, objective: f32, iterations: usize) -> Self {
         let n_sv = coef.iter().filter(|&&c| c != 0.0).count();
-        Solution { coef, objective, iterations, n_sv }
+        Solution { coef, objective, iterations, n_sv, sweep_entries: 0 }
     }
 
     /// Decision values on a precomputed cross-Gram `[m × n]`.
@@ -102,7 +134,7 @@ impl Solution {
 }
 
 /// Solve (1) for the given Gram source / labels / λ with an optional
-/// warm start; dispatches to the per-loss solver.
+/// warm start: build the loss plugin and hand it to the shared engine.
 pub fn solve<K: GramSource + ?Sized>(
     kind: SolverKind,
     k: &mut K,
@@ -112,10 +144,18 @@ pub fn solve<K: GramSource + ?Sized>(
     warm: Option<&[f32]>,
 ) -> Solution {
     match kind {
-        SolverKind::Hinge { w } => hinge::solve(k, y, lambda, w, params, warm),
-        SolverKind::LeastSquares => ls::solve(k, y, lambda, params, warm),
-        SolverKind::Quantile { tau } => quantile::solve(k, y, lambda, tau, params, warm),
-        SolverKind::Expectile { tau } => expectile::solve(k, y, lambda, tau, params, warm),
+        SolverKind::Hinge { w } => {
+            self::core::solve_loss(&hinge::HingeLoss::new(y, lambda, w), k, params, warm)
+        }
+        SolverKind::LeastSquares => {
+            self::core::solve_loss(&ls::LsLoss::new(y, lambda), k, params, warm)
+        }
+        SolverKind::Quantile { tau } => {
+            self::core::solve_loss(&quantile::QuantileLoss::new(y, lambda, tau), k, params, warm)
+        }
+        SolverKind::Expectile { tau } => {
+            self::core::solve_loss(&expectile::ExpectileLoss::new(y, lambda, tau), k, params, warm)
+        }
     }
 }
 
@@ -139,9 +179,12 @@ pub(crate) fn box_c(lambda: f32, n: usize) -> f32 {
     1.0 / (2.0 * lambda * n as f32)
 }
 
-/// Extract the warm-start vector for the *next* λ on the grid from a
+/// Extract the warm-start vector for the *next* grid point from a
 /// finished solution.  The hinge solver warm-starts on dual α (= coef·y);
 /// the regression solvers warm-start on the coefficients directly.
+/// The engine clips the vector into the target point's box, so the
+/// same vector serves both the λ chain and the γ handoff of the
+/// (γ, λ) warm-start plane.
 pub fn warm_vector(kind: SolverKind, sol: &Solution, y: &[f32]) -> Vec<f32> {
     match kind {
         SolverKind::Hinge { .. } => sol.coef.iter().zip(y).map(|(&c, &yi)| c * yi).collect(),
@@ -164,5 +207,14 @@ mod tests {
     #[test]
     fn box_c_scales_inverse_n_lambda() {
         assert!((box_c(0.5, 10) - 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn default_params_enable_shrinking() {
+        let p = SolverParams::default();
+        assert_eq!(p.shrink_every, 1000);
+        // struct-update syntax keeps call sites that only tweak eps
+        let q = SolverParams { eps: 1e-5, ..Default::default() };
+        assert_eq!(q.shrink_every, 1000);
     }
 }

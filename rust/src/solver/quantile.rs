@@ -1,102 +1,65 @@
-//! Pinball-loss solver for quantile regression.
+//! Pinball-loss plugin for quantile regression.
 //!
 //! Dual of the offset-free pinball problem at quantile τ:
 //!
 //!   min_β ½ βᵀKβ − yᵀβ,    C(τ−1) ≤ β_i ≤ Cτ,    C = 1/(2λn).
 //!
-//! Same greedy coordinate-descent skeleton as the hinge solver — the
-//! "straightforward modification" the paper mentions for the quantile
-//! case: only the box bounds and the linear term change.  The gradient
-//! g = Kβ − y is maintained incrementally; KKT-violation stopping.
+//! The "straightforward modification" of the hinge machinery the
+//! paper mentions for the quantile case: only the box bounds and the
+//! linear term change, so this plugin contributes exactly those two
+//! things (plus the objective formula) and selects the
+//! single-coordinate greedy engine.  Gradient maintenance, the fused
+//! select+update sweep, shrinking, and KKT stopping are the shared
+//! core's ([`crate::solver::core`]).
 
-use crate::kernel::plane::GramSource;
+use super::core::{Loss, Mode};
+use super::box_c;
 
-use super::{box_c, Solution, SolverParams};
-
-#[inline]
-fn violation(beta: f32, g: f32, lo: f32, hi: f32) -> f32 {
-    let mut v: f32 = 0.0;
-    if beta < hi {
-        v = v.max(-g);
-    }
-    if beta > lo {
-        v = v.max(g);
-    }
-    v
+/// The quantile [`Loss`] plugin: the τ-asymmetric box and the `y`
+/// linear term.
+pub struct QuantileLoss<'a> {
+    y: &'a [f32],
+    lo: f32,
+    hi: f32,
 }
 
-pub fn solve<K: GramSource + ?Sized>(
-    k: &mut K,
-    y: &[f32],
-    lambda: f32,
-    tau: f32,
-    params: &SolverParams,
-    warm: Option<&[f32]>,
-) -> Solution {
-    let n = y.len();
-    assert_eq!(k.rows(), n);
-    assert!((0.0..=1.0).contains(&tau), "quantile level in (0,1)");
-    let c = box_c(lambda, n);
-    let lo = c * (tau - 1.0);
-    let hi = c * tau;
+impl<'a> QuantileLoss<'a> {
+    pub fn new(y: &'a [f32], lambda: f32, tau: f32) -> QuantileLoss<'a> {
+        assert!((0.0..=1.0).contains(&tau), "quantile level in (0,1)");
+        let c = box_c(lambda, y.len());
+        QuantileLoss { y, lo: c * (tau - 1.0), hi: c * tau }
+    }
+}
 
-    let mut beta: Vec<f32> = match warm {
-        Some(prev) => prev.iter().map(|&b| b.clamp(lo, hi)).collect(),
-        None => vec![0.0; n],
-    };
-
-    // g = Kβ − y, built sparsely from the warm start
-    let mut g: Vec<f32> = y.iter().map(|&v| -v).collect();
-    for j in 0..n {
-        if beta[j] != 0.0 {
-            let bj = beta[j];
-            let krow = k.row(j);
-            for i in 0..n {
-                g[i] += bj * krow[i];
-            }
-        }
+impl Loss for QuantileLoss<'_> {
+    #[inline]
+    fn n(&self) -> usize {
+        self.y.len()
     }
 
-    // initial greedy pick; afterwards the next pick is fused into the
-    // gradient-update sweep (one O(n) pass per iteration)
-    let mut best = (usize::MAX, 0.0f32);
-    for i in 0..n {
-        let v = violation(beta[i], g[i], lo, hi);
-        if v > best.1 {
-            best = (i, v);
-        }
+    #[inline]
+    fn mode(&self) -> Mode {
+        Mode::Greedy { pairwise: false }
     }
 
-    let mut iters = 0usize;
-    while iters < params.max_iter {
-        if best.0 == usize::MAX || best.1 <= params.eps {
-            break;
-        }
-        let i = best.0;
-        let qii = k.diag(i).max(1e-12);
-        let d = (beta[i] - g[i] / qii).clamp(lo, hi) - beta[i];
-        beta[i] += d;
-        let krow = k.row(i);
-        best = (usize::MAX, 0.0f32);
-        for j in 0..n {
-            let gj = g[j] + d * krow[j];
-            g[j] = gj;
-            let v = violation(beta[j], gj, lo, hi);
-            if v > best.1 {
-                best = (j, v);
-            }
-        }
-        iters += 1;
+    #[inline]
+    fn bounds(&self, _i: usize) -> (f32, f32) {
+        (self.lo, self.hi)
     }
 
-    // ½βᵀKβ − yᵀβ = ½βᵀ(g+y) − yᵀβ = ½βᵀg − ½yᵀβ
-    let obj: f32 = beta
-        .iter()
-        .zip(&g)
-        .zip(y)
-        .map(|((&b, &gi), &yi)| 0.5 * b * gi - 0.5 * yi * b)
-        .sum();
-    Solution::from_coef(beta, obj, iters)
+    #[inline]
+    fn init_state(&self, i: usize) -> f32 {
+        -self.y[i]
+    }
+
+    /// ½βᵀKβ − yᵀβ = ½βᵀ(g+y) − yᵀβ = ½βᵀg − ½yᵀβ.
+    fn objective(&self, x: &[f32], g: &[f32]) -> f32 {
+        x.iter()
+            .zip(g)
+            .zip(self.y)
+            .map(|((&b, &gi), &yi)| 0.5 * b * gi - 0.5 * yi * b)
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -106,6 +69,18 @@ mod tests {
     use crate::kernel::plane::DenseGram;
     use crate::kernel::{GramBackend, KernelKind};
     use crate::metrics::Loss;
+    use crate::solver::{Solution, SolverKind, SolverParams};
+
+    fn solve(
+        k: &mut DenseGram,
+        y: &[f32],
+        lambda: f32,
+        tau: f32,
+        params: &SolverParams,
+        warm: Option<&[f32]>,
+    ) -> Solution {
+        crate::solver::solve(SolverKind::Quantile { tau }, k, y, lambda, params, warm)
+    }
 
     fn setup(n: usize, seed: u64) -> (Matrix, Matrix, Vec<f32>) {
         let d = crate::data::synth::sinc_hetero(n, seed);
@@ -164,5 +139,20 @@ mod tests {
         let loss = Loss::Pinball { tau: 0.7 };
         let zeros = vec![0.0; y.len()];
         assert!(loss.mean(&y, &f) < loss.mean(&y, &zeros));
+    }
+
+    #[test]
+    fn shrinking_preserves_objective() {
+        let (_, k, y) = setup(120, 8);
+        let off = SolverParams { shrink_every: 0, ..Default::default() };
+        let on = SolverParams { shrink_every: 32, ..Default::default() };
+        let a = solve(&mut DenseGram::new(&k), &y, 1e-4, 0.3, &off, None);
+        let b = solve(&mut DenseGram::new(&k), &y, 1e-4, 0.3, &on, None);
+        assert!(
+            (a.objective - b.objective).abs() < 1e-2 * (1.0 + a.objective.abs()),
+            "{} vs {}",
+            a.objective,
+            b.objective
+        );
     }
 }

@@ -1,0 +1,666 @@
+//! Solver-core contract tests (DESIGN.md §Solver-core).
+//!
+//! Three families:
+//!
+//! 1. **Bit-identity to the pre-engine solvers.**  The four per-loss
+//!    algorithms that existed before the shared engine are kept here
+//!    as reference implementations (verbatim arithmetic, dense Gram).
+//!    A shrink-off engine run must reproduce their coefficients and
+//!    objectives *bit for bit* on randomized problems — the proof
+//!    that the refactor moved code without changing a single float.
+//! 2. **Shrink-on ≡ shrink-off parity** for all four losses: same
+//!    ε-KKT criterion at exit, so objectives agree within tolerance,
+//!    and at the CV level the selected (γ*, λ*) and test error are
+//!    preserved.
+//! 3. **(γ, λ) warm-start plane**: warm-starting a γ's first λ from
+//!    the previous γ-chain's terminal α costs no more iterations than
+//!    a cold start, for every loss.
+
+use liquid_svm::data::matrix::Matrix;
+use liquid_svm::data::synth;
+use liquid_svm::kernel::{GramBackend, KernelKind};
+use liquid_svm::solver::{solve_dense, warm_vector, SolverKind, SolverParams};
+
+const CASES: u64 = 8;
+
+fn gram(x: &Matrix, gamma: f32) -> Matrix {
+    GramBackend::Blocked.gram(x, x, gamma, KernelKind::Gauss)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn off(p: &SolverParams) -> SolverParams {
+    SolverParams { shrink_every: 0, ..*p }
+}
+
+// ===================================================================
+// Reference implementations: the solvers exactly as they existed
+// before the shared engine (pre-refactor arithmetic, dense access).
+// ===================================================================
+
+fn ref_box_c(lambda: f32, n: usize) -> f32 {
+    1.0 / (2.0 * lambda * n as f32)
+}
+
+fn ref_violation(alpha: f32, g: f32, lo: f32, hi: f32) -> f32 {
+    let mut v: f32 = 0.0;
+    if alpha < hi {
+        v = v.max(-g);
+    }
+    if alpha > lo {
+        v = v.max(g);
+    }
+    v
+}
+
+fn ref_clip_step(alpha: f32, g: f32, q: f32, lo: f32, hi: f32) -> f32 {
+    let target = alpha - g / q.max(1e-12);
+    target.clamp(lo, hi) - alpha
+}
+
+/// The pre-engine hinge solver (greedy 2-coordinate, fused sweep).
+fn ref_hinge(
+    k: &Matrix,
+    y: &[f32],
+    lambda: f32,
+    w: f32,
+    params: &SolverParams,
+    warm: Option<&[f32]>,
+) -> (Vec<f32>, f32, usize) {
+    let n = y.len();
+    let c = ref_box_c(lambda, n);
+    let hi: Vec<f32> =
+        y.iter().map(|&yi| if yi > 0.0 { 2.0 * w * c } else { 2.0 * (1.0 - w) * c }).collect();
+    let mut alpha: Vec<f32> = match warm {
+        Some(prev) => prev.iter().zip(&hi).map(|(&a, &h)| a.clamp(0.0, h)).collect(),
+        None => vec![0.0; n],
+    };
+    let mut g: Vec<f32> = vec![-1.0; n];
+    for j in 0..n {
+        if alpha[j] != 0.0 {
+            let aj = alpha[j] * y[j];
+            let krow = k.row(j);
+            for i in 0..n {
+                g[i] += y[i] * aj * krow[i];
+            }
+        }
+    }
+    let select = |alpha: &[f32], g: &[f32]| {
+        let (mut i1, mut v1) = (usize::MAX, 0.0f32);
+        let (mut i2, mut v2) = (usize::MAX, 0.0f32);
+        for i in 0..alpha.len() {
+            let v = ref_violation(alpha[i], g[i], 0.0, hi[i]);
+            if v > v1 {
+                i2 = i1;
+                v2 = v1;
+                i1 = i;
+                v1 = v;
+            } else if v > v2 {
+                i2 = i;
+                v2 = v;
+            }
+        }
+        (i1, v1, i2, v2)
+    };
+    let (mut i1, mut v1, mut i2, mut _v2) = select(&alpha, &g);
+    let mut pair_steps = 0usize;
+    let mut single_steps = 0usize;
+    // the reference counted loop passes; the engine counts coordinate
+    // updates (pair = 2) — track both kinds so the caller can compare
+    let mut iters = 0usize;
+    while iters < params.max_iter {
+        if i1 == usize::MAX || v1 <= params.eps {
+            break;
+        }
+        if i2 == usize::MAX || i2 == i1 {
+            let d = ref_clip_step(alpha[i1], g[i1], k.get(i1, i1), 0.0, hi[i1]);
+            if d != 0.0 {
+                alpha[i1] += d;
+                let yi_d = y[i1] * d;
+                let krow = k.row(i1);
+                for (j, gj) in g.iter_mut().enumerate() {
+                    *gj += y[j] * yi_d * krow[j];
+                }
+            }
+            (i1, v1, i2, _v2) = select(&alpha, &g);
+            iters += 1;
+            single_steps += 1;
+            continue;
+        }
+        let q11 = k.get(i1, i1).max(1e-12);
+        let q22 = k.get(i2, i2).max(1e-12);
+        let q12 = y[i1] * y[i2] * k.get(i1, i2);
+        let (g1, g2) = (g[i1], g[i2]);
+        let det = q11 * q22 - q12 * q12;
+        let (mut d1, mut d2);
+        if det > 1e-12 * q11 * q22 {
+            d1 = (-g1 * q22 + g2 * q12) / det;
+            d2 = (-g2 * q11 + g1 * q12) / det;
+        } else {
+            d1 = -g1 / q11;
+            d2 = 0.0;
+        }
+        let in_box = |a: f32, lo: f32, hi_: f32| a >= lo - 1e-12 && a <= hi_ + 1e-12;
+        if !(in_box(alpha[i1] + d1, 0.0, hi[i1]) && in_box(alpha[i2] + d2, 0.0, hi[i2])) {
+            let mut best = (f32::INFINITY, 0.0f32, 0.0f32);
+            for &(fix1, bound) in &[(true, 0.0f32), (true, hi[i1]), (false, 0.0), (false, hi[i2])]
+            {
+                let (e1, e2) = if fix1 {
+                    let a1 = bound;
+                    let dd1 = a1 - alpha[i1];
+                    let g2p = g2 + q12 * dd1;
+                    let dd2 = ref_clip_step(alpha[i2], g2p, q22, 0.0, hi[i2]);
+                    (dd1, dd2)
+                } else {
+                    let a2 = bound;
+                    let dd2 = a2 - alpha[i2];
+                    let g1p = g1 + q12 * dd2;
+                    let dd1 = ref_clip_step(alpha[i1], g1p, q11, 0.0, hi[i1]);
+                    (dd1, dd2)
+                };
+                let dobj = g1 * e1
+                    + g2 * e2
+                    + 0.5 * (q11 * e1 * e1 + q22 * e2 * e2)
+                    + q12 * e1 * e2;
+                if dobj < best.0 {
+                    best = (dobj, e1, e2);
+                }
+            }
+            d1 = best.1;
+            d2 = best.2;
+        }
+        alpha[i1] += d1;
+        alpha[i2] += d2;
+        let yi_d1 = y[i1] * d1;
+        let yi_d2 = y[i2] * d2;
+        let (mut n1, mut w1) = (usize::MAX, 0.0f32);
+        let (mut n2, mut w2) = (usize::MAX, 0.0f32);
+        for j in 0..n {
+            let gj = g[j] + y[j] * (yi_d1 * k.get(i1, j) + yi_d2 * k.get(i2, j));
+            g[j] = gj;
+            let v = ref_violation(alpha[j], gj, 0.0, hi[j]);
+            if v > w1 {
+                n2 = n1;
+                w2 = w1;
+                n1 = j;
+                w1 = v;
+            } else if v > w2 {
+                n2 = j;
+                w2 = v;
+            }
+        }
+        (i1, v1, i2, _v2) = (n1, w1, n2, w2);
+        iters += 1;
+        pair_steps += 1;
+    }
+    let obj: f32 = alpha.iter().zip(&g).map(|(&a, &gi)| 0.5 * a * (gi - 1.0)).sum();
+    let coef: Vec<f32> = alpha.iter().zip(y).map(|(&a, &yi)| a * yi).collect();
+    (coef, obj, 2 * pair_steps + single_steps)
+}
+
+/// The pre-engine quantile solver (greedy single-coordinate).
+fn ref_quantile(
+    k: &Matrix,
+    y: &[f32],
+    lambda: f32,
+    tau: f32,
+    params: &SolverParams,
+    warm: Option<&[f32]>,
+) -> (Vec<f32>, f32, usize) {
+    let n = y.len();
+    let c = ref_box_c(lambda, n);
+    let lo = c * (tau - 1.0);
+    let hi = c * tau;
+    let mut beta: Vec<f32> = match warm {
+        Some(prev) => prev.iter().map(|&b| b.clamp(lo, hi)).collect(),
+        None => vec![0.0; n],
+    };
+    let mut g: Vec<f32> = y.iter().map(|&v| -v).collect();
+    for j in 0..n {
+        if beta[j] != 0.0 {
+            let bj = beta[j];
+            let krow = k.row(j);
+            for i in 0..n {
+                g[i] += bj * krow[i];
+            }
+        }
+    }
+    let mut best = (usize::MAX, 0.0f32);
+    for i in 0..n {
+        let v = ref_violation(beta[i], g[i], lo, hi);
+        if v > best.1 {
+            best = (i, v);
+        }
+    }
+    let mut iters = 0usize;
+    while iters < params.max_iter {
+        if best.0 == usize::MAX || best.1 <= params.eps {
+            break;
+        }
+        let i = best.0;
+        let qii = k.get(i, i).max(1e-12);
+        let d = (beta[i] - g[i] / qii).clamp(lo, hi) - beta[i];
+        beta[i] += d;
+        let krow = k.row(i);
+        best = (usize::MAX, 0.0f32);
+        for j in 0..n {
+            let gj = g[j] + d * krow[j];
+            g[j] = gj;
+            let v = ref_violation(beta[j], gj, lo, hi);
+            if v > best.1 {
+                best = (j, v);
+            }
+        }
+        iters += 1;
+    }
+    let obj: f32 =
+        beta.iter().zip(&g).zip(y).map(|((&b, &gi), &yi)| 0.5 * b * gi - 0.5 * yi * b).sum();
+    (beta, obj, iters)
+}
+
+fn ref_matvec_shifted(k: &Matrix, shift: f32, x: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    for i in 0..n {
+        let row = k.row(i);
+        let mut s = 0.0f32;
+        for j in 0..n {
+            s += row[j] * x[j];
+        }
+        out[i] = s + shift * x[i];
+    }
+}
+
+/// The pre-engine least-squares solver (CG on K + nλI).
+fn ref_ls(
+    k: &Matrix,
+    y: &[f32],
+    lambda: f32,
+    params: &SolverParams,
+    warm: Option<&[f32]>,
+) -> (Vec<f32>, f32, usize) {
+    let n = y.len();
+    let shift = lambda * n as f32;
+    let mut beta: Vec<f32> = warm.map(<[f32]>::to_vec).unwrap_or_else(|| vec![0.0; n]);
+    let mut tmp = vec![0.0f32; n];
+    ref_matvec_shifted(k, shift, &beta, &mut tmp);
+    let mut r: Vec<f32> = y.iter().zip(&tmp).map(|(&a, &b)| a - b).collect();
+    let mut p = r.clone();
+    let mut rs: f32 = r.iter().map(|v| v * v).sum();
+    let y_norm: f32 = y.iter().map(|v| v * v).sum::<f32>().max(1e-12);
+    let tol2 = (params.eps * params.eps) * y_norm;
+    let mut iters = 0usize;
+    let max_cg = params.max_iter.min(4 * n + 50);
+    while rs > tol2 && iters < max_cg {
+        ref_matvec_shifted(k, shift, &p, &mut tmp);
+        let pap: f32 = p.iter().zip(&tmp).map(|(&a, &b)| a * b).sum();
+        if pap <= 0.0 {
+            break;
+        }
+        let a = rs / pap;
+        for i in 0..n {
+            beta[i] += a * p[i];
+            r[i] -= a * tmp[i];
+        }
+        let rs_new: f32 = r.iter().map(|v| v * v).sum();
+        let b = rs_new / rs;
+        for i in 0..n {
+            p[i] = r[i] + b * p[i];
+        }
+        rs = rs_new;
+        iters += 1;
+    }
+    ref_matvec_shifted(k, shift, &beta, &mut tmp);
+    let obj: f32 = beta
+        .iter()
+        .zip(&tmp)
+        .zip(y)
+        .map(|((&bi, &ti), &yi)| 0.5 * bi * ti - yi * bi)
+        .sum();
+    (beta, obj, iters)
+}
+
+/// The pre-engine expectile solver (cyclic exact piecewise solves).
+fn ref_expectile(
+    k: &Matrix,
+    y: &[f32],
+    lambda: f32,
+    tau: f32,
+    params: &SolverParams,
+    warm: Option<&[f32]>,
+) -> (Vec<f32>, f32, usize) {
+    let n = y.len();
+    let c = ref_box_c(lambda, n);
+    let mut beta: Vec<f32> = warm.map(<[f32]>::to_vec).unwrap_or_else(|| vec![0.0; n]);
+    let mut f = vec![0.0f32; n];
+    for j in 0..n {
+        if beta[j] != 0.0 {
+            let bj = beta[j];
+            let krow = k.row(j);
+            for i in 0..n {
+                f[i] += bj * krow[i];
+            }
+        }
+    }
+    let scale: f32 = y.iter().map(|v| v.abs()).fold(0.0, f32::max).max(1.0);
+    let mut iters = 0usize;
+    let mut sweep_max = f32::INFINITY;
+    while sweep_max > params.eps * scale && iters < params.max_iter {
+        sweep_max = 0.0;
+        for i in 0..n {
+            let kii = k.get(i, i).max(1e-12);
+            let rest = y[i] - (f[i] - kii * beta[i]);
+            let mut new_b = beta[i];
+            let bp = 2.0 * c * tau * rest / (1.0 + 2.0 * c * tau * kii);
+            if rest - kii * bp >= 0.0 {
+                new_b = bp;
+            } else {
+                let tn = 1.0 - tau;
+                let bn = 2.0 * c * tn * rest / (1.0 + 2.0 * c * tn * kii);
+                if rest - kii * bn <= 0.0 {
+                    new_b = bn;
+                }
+            }
+            let d = new_b - beta[i];
+            if d != 0.0 {
+                beta[i] = new_b;
+                let krow = k.row(i);
+                for (j, fj) in f.iter_mut().enumerate() {
+                    *fj += d * krow[j];
+                }
+                sweep_max = sweep_max.max(d.abs() * kii);
+            }
+            iters += 1;
+            if iters >= params.max_iter {
+                break;
+            }
+        }
+    }
+    let reg: f32 = beta.iter().zip(&f).map(|(&b, &fi)| b * fi).sum();
+    let loss: f32 = y
+        .iter()
+        .zip(&f)
+        .map(|(&yi, &fi)| {
+            let r = yi - fi;
+            if r >= 0.0 { tau * r * r } else { (1.0 - tau) * r * r }
+        })
+        .sum::<f32>()
+        / n as f32;
+    (beta, lambda * reg + loss, iters)
+}
+
+// ===================================================================
+// 1. shrink-off engine ≡ pre-engine reference, bit for bit
+// ===================================================================
+
+#[test]
+fn engine_hinge_bit_identical_to_reference() {
+    let p = off(&SolverParams::default());
+    for seed in 0..CASES {
+        let d = synth::banana_binary(60 + (seed as usize) * 17, seed);
+        let k = gram(&d.x, 1.0 + 0.2 * seed as f32);
+        for lambda in [0.05f32, 0.005] {
+            let (rc, robj, riters) = ref_hinge(&k, &d.y, lambda, 0.5, &p, None);
+            let sol = solve_dense(SolverKind::Hinge { w: 0.5 }, &k, &d.y, lambda, &p, None);
+            assert_eq!(bits(&sol.coef), bits(&rc), "seed {seed} λ {lambda}");
+            assert_eq!(sol.objective.to_bits(), robj.to_bits(), "seed {seed} λ {lambda}");
+            assert_eq!(sol.iterations, riters, "seed {seed} λ {lambda}");
+            // warm-started runs must match too (clip + sparse rebuild)
+            let warm = warm_vector(SolverKind::Hinge { w: 0.5 }, &sol, &d.y);
+            let (rcw, robjw, _) = ref_hinge(&k, &d.y, lambda * 0.7, 0.5, &p, Some(&warm));
+            let solw = solve_dense(
+                SolverKind::Hinge { w: 0.5 }, &k, &d.y, lambda * 0.7, &p, Some(&warm),
+            );
+            assert_eq!(bits(&solw.coef), bits(&rcw), "warm seed {seed}");
+            assert_eq!(solw.objective.to_bits(), robjw.to_bits(), "warm seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn engine_quantile_bit_identical_to_reference() {
+    let p = off(&SolverParams::default());
+    for seed in 0..CASES {
+        let d = synth::sinc_hetero(50 + (seed as usize) * 13, seed);
+        let k = gram(&d.x, 0.8);
+        for tau in [0.2f32, 0.5, 0.9] {
+            let (rc, robj, riters) = ref_quantile(&k, &d.y, 1e-3, tau, &p, None);
+            let sol = solve_dense(SolverKind::Quantile { tau }, &k, &d.y, 1e-3, &p, None);
+            assert_eq!(bits(&sol.coef), bits(&rc), "seed {seed} tau {tau}");
+            assert_eq!(sol.objective.to_bits(), robj.to_bits(), "seed {seed} tau {tau}");
+            assert_eq!(sol.iterations, riters, "seed {seed} tau {tau}");
+            let (rcw, ..) = ref_quantile(&k, &d.y, 8e-4, tau, &p, Some(&rc));
+            let solw =
+                solve_dense(SolverKind::Quantile { tau }, &k, &d.y, 8e-4, &p, Some(&sol.coef));
+            assert_eq!(bits(&solw.coef), bits(&rcw), "warm seed {seed} tau {tau}");
+        }
+    }
+}
+
+#[test]
+fn engine_ls_bit_identical_to_reference() {
+    let p = off(&SolverParams { eps: 1e-5, ..Default::default() });
+    for seed in 0..CASES {
+        let d = synth::sinc_hetero(40 + (seed as usize) * 11, seed ^ 0x55);
+        let k = gram(&d.x, 1.2);
+        let (rc, robj, rrounds) = ref_ls(&k, &d.y, 1e-3, &p, None);
+        let sol = solve_dense(SolverKind::LeastSquares, &k, &d.y, 1e-3, &p, None);
+        assert_eq!(bits(&sol.coef), bits(&rc), "seed {seed}");
+        assert_eq!(sol.objective.to_bits(), robj.to_bits(), "seed {seed}");
+        // the engine reports coordinate updates: rounds · n
+        assert_eq!(sol.iterations, rrounds * d.y.len(), "seed {seed}");
+        let (rcw, ..) = ref_ls(&k, &d.y, 8e-4, &p, Some(&rc));
+        let solw = solve_dense(SolverKind::LeastSquares, &k, &d.y, 8e-4, &p, Some(&sol.coef));
+        assert_eq!(bits(&solw.coef), bits(&rcw), "warm seed {seed}");
+    }
+}
+
+#[test]
+fn engine_expectile_bit_identical_to_reference() {
+    let p = off(&SolverParams::default());
+    for seed in 0..CASES {
+        let d = synth::sinc_hetero(45 + (seed as usize) * 9, seed ^ 0xa1);
+        let k = gram(&d.x, 0.8);
+        for tau in [0.3f32, 0.8] {
+            let (rc, robj, riters) = ref_expectile(&k, &d.y, 1e-3, tau, &p, None);
+            let sol = solve_dense(SolverKind::Expectile { tau }, &k, &d.y, 1e-3, &p, None);
+            assert_eq!(bits(&sol.coef), bits(&rc), "seed {seed} tau {tau}");
+            assert_eq!(sol.objective.to_bits(), robj.to_bits(), "seed {seed} tau {tau}");
+            assert_eq!(sol.iterations, riters, "seed {seed} tau {tau}");
+            let (rcw, ..) = ref_expectile(&k, &d.y, 8e-4, tau, &p, Some(&rc));
+            let solw =
+                solve_dense(SolverKind::Expectile { tau }, &k, &d.y, 8e-4, &p, Some(&sol.coef));
+            assert_eq!(bits(&solw.coef), bits(&rcw), "warm seed {seed} tau {tau}");
+        }
+    }
+}
+
+// ===================================================================
+// 2. shrink-on parity: same ε criterion at exit, per loss
+// ===================================================================
+
+fn objective_parity(kind: SolverKind, k: &Matrix, y: &[f32], lambda: f32, shrink: usize) {
+    let p_off = off(&SolverParams::default());
+    let p_on = SolverParams { shrink_every: shrink, ..SolverParams::default() };
+    let a = solve_dense(kind, k, y, lambda, &p_off, None);
+    let b = solve_dense(kind, k, y, lambda, &p_on, None);
+    let tol = 1e-2 * (1.0 + a.objective.abs());
+    assert!(
+        (a.objective - b.objective).abs() < tol,
+        "{kind:?}: shrink-on objective {} vs off {}",
+        b.objective,
+        a.objective
+    );
+}
+
+#[test]
+fn prop_shrink_parity_all_losses() {
+    for seed in 0..CASES {
+        let db = synth::banana_binary(120 + (seed as usize) * 19, seed);
+        let kb = gram(&db.x, 1.2);
+        objective_parity(SolverKind::Hinge { w: 0.5 }, &kb, &db.y, 2e-3, 32);
+        let dr = synth::sinc_hetero(110 + (seed as usize) * 15, seed ^ 7);
+        let kr = gram(&dr.x, 0.8);
+        objective_parity(SolverKind::Quantile { tau: 0.3 }, &kr, &dr.y, 5e-4, 32);
+        objective_parity(SolverKind::Expectile { tau: 0.8 }, &kr, &dr.y, 1e-3, 64);
+        objective_parity(SolverKind::LeastSquares, &kr, &dr.y, 1e-3, 32);
+    }
+}
+
+#[test]
+fn shrinking_reduces_sweep_work_at_fixed_accuracy() {
+    // a problem big enough that shrinking engages well before
+    // convergence: many box-pinned coordinates at small λ.
+    // `sweep_entries` is the per-solve view of the `solver_sweeps`
+    // counter (tests share the process-global counters across
+    // threads, so the per-solve field is the race-free measure).
+    let d = synth::banana_binary(400, 3);
+    let k = gram(&d.x, 1.5);
+    let p_off = off(&SolverParams::default());
+    let p_on = SolverParams { shrink_every: 200, ..SolverParams::default() };
+    let a = solve_dense(SolverKind::Hinge { w: 0.5 }, &k, &d.y, 1e-4, &p_off, None);
+    let b = solve_dense(SolverKind::Hinge { w: 0.5 }, &k, &d.y, 1e-4, &p_on, None);
+    assert!(
+        b.sweep_entries < a.sweep_entries,
+        "shrink-on touched {} entries, shrink-off {}",
+        b.sweep_entries,
+        a.sweep_entries
+    );
+    let tol = 1e-2 * (1.0 + a.objective.abs());
+    assert!((a.objective - b.objective).abs() < tol);
+}
+
+// ===================================================================
+// 3. the (γ, λ) warm-start plane: γ handoff is never slower
+// ===================================================================
+
+fn gamma_handoff(kind: SolverKind, x: &Matrix, y: &[f32], lambdas: &[f32]) {
+    let p = SolverParams::default();
+    let (g0, g1) = (1.1f32, 1.0f32);
+    let k0 = gram(x, g0);
+    let k1 = gram(x, g1);
+    // walk γ0's λ chain to its terminal solution
+    let mut warm: Option<Vec<f32>> = None;
+    for &l in lambdas {
+        let sol = solve_dense(kind, &k0, y, l, &p, warm.as_deref());
+        warm = Some(warm_vector(kind, &sol, y));
+    }
+    // γ1's first λ: handoff vs cold
+    let warm_run = solve_dense(kind, &k1, y, lambdas[0], &p, warm.as_deref());
+    let cold_run = solve_dense(kind, &k1, y, lambdas[0], &p, None);
+    assert!(
+        warm_run.iterations <= cold_run.iterations,
+        "{kind:?}: γ-handoff took {} iterations, cold {}",
+        warm_run.iterations,
+        cold_run.iterations
+    );
+    let tol = 1e-2 * (1.0 + cold_run.objective.abs());
+    assert!((warm_run.objective - cold_run.objective).abs() < tol, "{kind:?} objective drift");
+}
+
+#[test]
+fn warm_across_gamma_no_slower_than_cold_all_losses() {
+    let db = synth::banana_binary(180, 11);
+    let lam_cls = [2e-3f32, 1e-3, 5e-4];
+    gamma_handoff(SolverKind::Hinge { w: 0.5 }, &db.x, &db.y, &lam_cls);
+    let dr = synth::sinc_hetero(150, 12);
+    let lam_reg = [2e-3f32, 1e-3, 5e-4];
+    gamma_handoff(SolverKind::LeastSquares, &dr.x, &dr.y, &lam_reg);
+    gamma_handoff(SolverKind::Quantile { tau: 0.5 }, &dr.x, &dr.y, &lam_reg);
+    gamma_handoff(SolverKind::Expectile { tau: 0.5 }, &dr.x, &dr.y, &lam_reg);
+}
+
+// ===================================================================
+// CV-level: selection/test-error parity and jobs-independence with
+// shrinking on
+// ===================================================================
+
+use liquid_svm::cv::{run_cv, predict_average, CvConfig, Grid};
+use liquid_svm::metrics::Loss;
+
+fn cv_cfg(n_fold: usize, shrink_every: usize) -> CvConfig {
+    let mut cfg = CvConfig::new(
+        Grid::default_grid(0, n_fold, 2),
+        SolverKind::Hinge { w: 0.5 },
+        Loss::Classification,
+    );
+    cfg.folds = 3;
+    cfg.params = SolverParams { shrink_every, ..SolverParams::default() };
+    cfg
+}
+
+#[test]
+fn cv_shrink_parity_selection_and_test_error() {
+    let d = synth::banana_binary(240, 21);
+    let test = synth::banana_binary(150, 22);
+    let cfg_off = cv_cfg(160, 0);
+    let cfg_on = cv_cfg(160, 64);
+    let a = run_cv(&d, &cfg_off);
+    let b = run_cv(&d, &cfg_on);
+    assert_eq!(a.best_gamma.to_bits(), b.best_gamma.to_bits(), "γ* changed under shrinking");
+    assert_eq!(a.best_lambda.to_bits(), b.best_lambda.to_bits(), "λ* changed under shrinking");
+    let pa = predict_average(
+        &a.models, &d, &test.x, a.best_gamma, cfg_off.kernel, &cfg_off.backend, None,
+    );
+    let pb = predict_average(
+        &b.models, &d, &test.x, b.best_gamma, cfg_on.kernel, &cfg_on.backend, None,
+    );
+    let ea = Loss::Classification.mean(&test.y, &pa);
+    let eb = Loss::Classification.mean(&test.y, &pb);
+    assert!(
+        (ea - eb).abs() < 0.02 + 1e-6,
+        "test error moved under shrinking: {ea} vs {eb}"
+    );
+}
+
+#[test]
+fn cv_shrink_parity_quantile_selection() {
+    use liquid_svm::data::folds::FoldKind;
+    let d = synth::sinc_hetero(180, 31);
+    let mut cfg_off = CvConfig::new(
+        Grid::default_grid(0, 120, 1),
+        SolverKind::Quantile { tau: 0.5 },
+        Loss::Pinball { tau: 0.5 },
+    );
+    cfg_off.folds = 3;
+    cfg_off.fold_kind = FoldKind::Random;
+    cfg_off.params = SolverParams { shrink_every: 0, ..SolverParams::default() };
+    let mut cfg_on = cfg_off.clone();
+    cfg_on.params = SolverParams { shrink_every: 48, ..SolverParams::default() };
+    let a = run_cv(&d, &cfg_off);
+    let b = run_cv(&d, &cfg_on);
+    assert_eq!(a.best_gamma.to_bits(), b.best_gamma.to_bits());
+    assert_eq!(a.best_lambda.to_bits(), b.best_lambda.to_bits());
+    assert!(
+        (a.best_val_loss - b.best_val_loss).abs() < 1e-2 * (1.0 + a.best_val_loss.abs()),
+        "val loss moved under shrinking: {} vs {}",
+        a.best_val_loss,
+        b.best_val_loss
+    );
+}
+
+#[test]
+fn cv_shrink_on_jobs_independent() {
+    let d = synth::banana_binary(180, 23);
+    let mut seq = cv_cfg(120, 48);
+    seq.jobs = 1;
+    let mut par = cv_cfg(120, 48);
+    par.jobs = 4;
+    let a = run_cv(&d, &seq);
+    let b = run_cv(&d, &par);
+    assert_eq!(a.best_gamma.to_bits(), b.best_gamma.to_bits());
+    assert_eq!(a.best_lambda.to_bits(), b.best_lambda.to_bits());
+    for (ra, rb) in a.val_matrix.iter().zip(&b.val_matrix) {
+        for (va, vb) in ra.iter().zip(rb) {
+            assert!(
+                va.to_bits() == vb.to_bits() || (va.is_nan() && vb.is_nan()),
+                "val {va} vs {vb}"
+            );
+        }
+    }
+    for (ma, mb) in a.models.iter().zip(&b.models) {
+        assert_eq!(ma.train_idx, mb.train_idx);
+        assert_eq!(bits(&ma.coef), bits(&mb.coef));
+    }
+}
