@@ -15,6 +15,8 @@
 
 use std::time::{Duration, Instant};
 
+use liquid_svm::metrics::counters::{self, CounterSnapshot};
+
 /// Benchmark scale from the environment.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scale {
@@ -101,4 +103,132 @@ pub fn rel(d: Duration, base: Duration) -> String {
 
 pub fn pct(e: f32) -> String {
     format!("{:.2}%", e * 100.0)
+}
+
+// --------------------------------------------------- perf snapshots
+
+/// One timed case inside a bench snapshot.
+struct SnapCase {
+    name: String,
+    wall_us: u64,
+    /// work rate in `unit` (0.0 = the case has no natural rate)
+    throughput: f64,
+    unit: String,
+}
+
+/// Machine-readable perf snapshot of one bench run, written as
+/// `BENCH_<name>.json` (schema: DESIGN.md §Observability).  Records
+/// per-case wall time and throughput, the global counter deltas across
+/// the whole run, and an environment fingerprint so two snapshots can
+/// be compared honestly (`scripts/bench_diff.py`).
+pub struct Snapshot {
+    bench: String,
+    cases: Vec<SnapCase>,
+    before: CounterSnapshot,
+}
+
+impl Snapshot {
+    /// Start a snapshot; captures the counter baseline now, so create
+    /// it before the timed work runs.
+    pub fn new(bench: &str) -> Snapshot {
+        Snapshot { bench: bench.to_string(), cases: Vec::new(), before: counters::snapshot() }
+    }
+
+    /// Record one finished case.  `throughput` is the case's natural
+    /// work rate (rows/s, entries/s, requests/s — named by `unit`);
+    /// pass 0.0 when there is none.
+    pub fn case(&mut self, name: &str, wall: Duration, throughput: f64, unit: &str) {
+        self.cases.push(SnapCase {
+            name: name.to_string(),
+            wall_us: wall.as_micros() as u64,
+            throughput: if throughput.is_finite() { throughput } else { 0.0 },
+            unit: unit.to_string(),
+        });
+    }
+
+    /// Write `BENCH_<name>.json` into `$BENCH_OUT_DIR` (or the current
+    /// directory).  Failures are reported, never fatal — a read-only
+    /// filesystem must not fail the bench itself.
+    pub fn write(&self) {
+        let delta = counters::snapshot().diff(&self.before);
+        let json = self.render(&delta);
+        let dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".into());
+        let path = std::path::PathBuf::from(dir).join(format!("BENCH_{}.json", self.bench));
+        match std::fs::write(&path, json) {
+            Ok(()) => eprintln!("snapshot: wrote {}", path.display()),
+            Err(e) => eprintln!("snapshot: could not write {}: {e}", path.display()),
+        }
+    }
+
+    fn render(&self, delta: &CounterSnapshot) -> String {
+        let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let profile = if cfg!(debug_assertions) { "debug" } else { "release" };
+        let scale = match scale() {
+            Scale::Smoke => "smoke",
+            Scale::Default => "default",
+            Scale::Full => "full",
+        };
+        let unix_time = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"schema\": \"liquidsvm-bench-snapshot/v1\",\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", esc(&self.bench)));
+        out.push_str("  \"seed\": false,\n");
+        out.push_str(&format!(
+            "  \"env\": {{\"cpus\": {cpus}, \"profile\": \"{profile}\", \"git_rev\": \"{}\", \
+             \"scale\": \"{scale}\", \"unix_time\": {unix_time}}},\n",
+            esc(&git_rev())
+        ));
+        out.push_str("  \"counters\": {");
+        let pairs = [
+            ("gram_cache_hits", delta.gram_cache_hits),
+            ("gram_cache_misses", delta.gram_cache_misses),
+            ("gram_allocs", delta.gram_allocs),
+            ("xla_calls", delta.xla_calls),
+            ("solver_sweeps", delta.solver_sweeps),
+            ("solver_shrink_active", delta.solver_shrink_active),
+            ("solver_unshrink_passes", delta.solver_unshrink_passes),
+            ("cell_units_trained", delta.cell_units_trained),
+            ("cell_train_us", delta.cell_train_us),
+        ];
+        for (i, (k, v)) in pairs.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{k}\": {v}"));
+        }
+        out.push_str("},\n");
+        out.push_str("  \"cases\": [\n");
+        for (i, c) in self.cases.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"wall_us\": {}, \"throughput\": {}, \"unit\": \"{}\"}}{}\n",
+                esc(&c.name),
+                c.wall_us,
+                if c.throughput.is_finite() { c.throughput } else { 0.0 },
+                esc(&c.unit),
+                if i + 1 < self.cases.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
 }

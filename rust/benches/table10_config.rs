@@ -14,7 +14,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{pct, sized, time_once, Table};
+use harness::{pct, sized, time_once, Snapshot, Table};
 use liquid_svm::cells::CellStrategy;
 use liquid_svm::data::synth;
 use liquid_svm::prelude::*;
@@ -29,12 +29,19 @@ fn main() {
     );
 
     let base_cfg = Config::default().folds(5);
+    let mut snap = Snapshot::new("table10_config");
     let mut base_times = Vec::new();
     let mut row_err = Vec::new();
     for name in datasets {
         let train = synth::by_name(name, n, 3).unwrap();
         let test = synth::by_name(name, n / 2, 4).unwrap();
         let (m, dt) = time_once(|| svm_binary(&train, 0.5, &base_cfg).unwrap());
+        snap.case(
+            &format!("baseline_{name}"),
+            dt,
+            n as f64 / dt.as_secs_f64().max(1e-9),
+            "rows/s",
+        );
         base_times.push(dt);
         row_err.push(m.test(&test).error);
     }
@@ -73,6 +80,7 @@ fn main() {
         let refs: Vec<&str> = cells.iter().map(String::as_str).collect();
         t.row(&refs);
     }
+    snap.write();
 
     println!("\npaper shape (Table 12, n=4000): grid_choice=1 ~x2-3, grid_choice=2");
     println!("~x7-15, adaptivity <x1, voronoi=6 <=x0.5 at n>=4000, errors stable.");

@@ -17,7 +17,7 @@ mod harness;
 
 use std::sync::Arc;
 
-use harness::{sized, time_median, time_once, Table};
+use harness::{sized, time_median, time_once, Snapshot, Table};
 use liquid_svm::coordinator::config::BackendChoice;
 use liquid_svm::data::synth;
 use liquid_svm::kernel::{GramBackend, KernelKind};
@@ -34,6 +34,7 @@ fn main() {
     }
 
     let gammas: Vec<f32> = (1..=10).map(|i| 0.3 * i as f32).collect();
+    let mut snap = Snapshot::new("table14_simd");
     let t = Table::new(
         &["dataset", "dim", "scalar", "blocked", "xla", "blocked-speedup", "xla-speedup"],
         &[14, 5, 9, 9, 9, 16, 12],
@@ -68,6 +69,20 @@ fn main() {
             &format!("x{:.1}", t_scalar.as_secs_f64() / t_blocked.as_secs_f64().max(1e-9)),
             &xla_speed,
         ]);
+        // 10 γ surfaces of n×n entries per gram_multi call
+        let entries = (n * n * gammas.len()) as f64;
+        snap.case(
+            &format!("{name}_scalar"),
+            t_scalar,
+            entries / t_scalar.as_secs_f64().max(1e-9),
+            "entries/s",
+        );
+        snap.case(
+            &format!("{name}_blocked"),
+            t_blocked,
+            entries / t_blocked.as_secs_f64().max(1e-9),
+            "entries/s",
+        );
     }
 
     // end-to-end: full training run per backend on one dataset
@@ -86,6 +101,13 @@ fn main() {
             &format!("{:.2}s", dt.as_secs_f64()),
             &format!("{:.3}", m.test(&test).error),
         ]);
+        snap.case(
+            &format!("train_covtype_{label}"),
+            dt,
+            train.len() as f64 / dt.as_secs_f64().max(1e-9),
+            "rows/s",
+        );
     }
+    snap.write();
     println!("\npaper shape: each vectorization rung up is faster, gap grows with dim.");
 }

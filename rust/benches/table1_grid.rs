@@ -18,7 +18,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{rel, secs, sized, time_once, Table};
+use harness::{rel, secs, sized, time_once, Snapshot, Table};
 use liquid_svm::cv::{run_cv, CvConfig, CvResult, Grid};
 use liquid_svm::data::synth;
 use liquid_svm::metrics::{counters, Loss};
@@ -42,6 +42,7 @@ fn main() {
         &["dataset", "seq", "par", "speedup", "points", "allocs", "identical"],
         &[14, 8, 8, 9, 8, 8, 10],
     );
+    let mut snap = Snapshot::new("table1_grid");
 
     for name in ["bank-marketing", "cod-rna", "thyroid-ann"] {
         let train = synth::by_name(name, n, 42).unwrap();
@@ -83,7 +84,20 @@ fn main() {
              ({}) — per-γ allocation crept back into the hot loop",
             par_res.points_evaluated
         );
+        snap.case(
+            &format!("{name}_seq"),
+            t_seq,
+            seq_res.points_evaluated as f64 / t_seq.as_secs_f64().max(1e-9),
+            "points/s",
+        );
+        snap.case(
+            &format!("{name}_par"),
+            t_par,
+            par_res.points_evaluated as f64 / t_par.as_secs_f64().max(1e-9),
+            "points/s",
+        );
     }
+    snap.write();
 
     println!("\nplane contract: allocs ~ O(workers+folds) while points ~ O(folds x grid);");
     println!("parallel selection and fold coefficients bitwise equal to sequential.");

@@ -16,7 +16,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{pct, rel, secs, sized, time_once, Table};
+use harness::{pct, rel, secs, sized, time_once, Snapshot, Table};
 use liquid_svm::baselines::{disk_wrapper::disk_wrapper_cv, naive_cv};
 use liquid_svm::cv::Grid;
 use liquid_svm::data::synth;
@@ -33,6 +33,7 @@ fn main() {
           "err-liq", "err-lib"],
         &[14, 8, 11, 8, 10, 8, 9, 8, 8],
     );
+    let mut snap = Snapshot::new("table1_small");
 
     for name in DATASETS {
         let train = synth::by_name(name, n, 42).unwrap();
@@ -78,7 +79,20 @@ fn main() {
             &pct(err_def),
             &pct(err_lib),
         ]);
+        snap.case(
+            &format!("{name}_default_grid"),
+            t_def,
+            n as f64 / t_def.as_secs_f64().max(1e-9),
+            "rows/s",
+        );
+        snap.case(
+            &format!("{name}_libsvm_grid"),
+            t_lib,
+            n as f64 / t_lib.as_secs_f64().max(1e-9),
+            "rows/s",
+        );
     }
+    snap.write();
 
     println!("\npaper shape: default-grid <= libsvm-grid time; outer-cv and libsvm");
     println!("an order of magnitude slower; svmlight slowest (disk tax).");

@@ -7,7 +7,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{pct, secs, sized, time_once, Table};
+use harness::{pct, secs, sized, time_once, Snapshot, Table};
 use liquid_svm::baselines::gurls::train_gurls;
 use liquid_svm::coordinator::scenarios::mc_svm_type;
 use liquid_svm::data::synth;
@@ -21,6 +21,7 @@ fn main() {
         &["dataset", "classes", "ours(s)", "gurls(s)", "factor", "err-ours", "err-gurls"],
         &[10, 8, 9, 9, 8, 9, 10],
     );
+    let mut snap = Snapshot::new("table2_gurls");
 
     for name in ["optdigit", "landsat", "pendigit", "covtype"] {
         let train = synth::by_name(name, n, 7).unwrap();
@@ -50,6 +51,19 @@ fn main() {
         ]);
         // binary covtype appears in the paper's Table 2 as the last row
         let _ = mc_svm_type; // (kept for API parity; OvA-LS used above)
+        snap.case(
+            &format!("{name}_ova_ls"),
+            t_ours,
+            n as f64 / t_ours.as_secs_f64().max(1e-9),
+            "rows/s",
+        );
+        snap.case(
+            &format!("{name}_gurls"),
+            t_gurls,
+            n as f64 / t_gurls.as_secs_f64().max(1e-9),
+            "rows/s",
+        );
     }
+    snap.write();
     println!("\npaper shape: ours faster by x7-x35 with comparable-or-better error.");
 }

@@ -15,7 +15,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{pct, rel, secs, sized, time_once, Table};
+use harness::{pct, rel, secs, sized, time_once, Snapshot, Table};
 use liquid_svm::baselines::{ensemble::train_ensemble, llsvm::train_llsvm};
 use liquid_svm::cells::CellStrategy;
 use liquid_svm::data::synth;
@@ -34,6 +34,7 @@ fn main() {
           "e-liq", "e-ovl", "e-bsvm", "e-esvm"],
         &[9, 7, 7, 8, 11, 8, 7, 7, 7, 7, 7, 7],
     );
+    let mut snap = Snapshot::new("table3_cells");
 
     for (name, n) in sets {
         let train = synth::by_name(name, n, 5).unwrap();
@@ -107,7 +108,20 @@ fn main() {
             &pct(e_bsvm),
             &pct(e_esvm),
         ]);
+        snap.case(
+            &format!("{name}_{n}_recursive_cells"),
+            t_liq,
+            n as f64 / t_liq.as_secs_f64().max(1e-9),
+            "rows/s",
+        );
+        snap.case(
+            &format!("{name}_{n}_overlap"),
+            t_ovl,
+            n as f64 / t_ovl.as_secs_f64().max(1e-9),
+            "rows/s",
+        );
     }
+    snap.write();
     println!("\npaper shape: budget baselines orders of magnitude slower at equal k,");
     println!("with worse errors; overlap slightly better error at a few x the time.");
 }

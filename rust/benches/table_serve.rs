@@ -19,7 +19,7 @@ mod harness;
 
 use std::time::Duration;
 
-use harness::{sized, Table};
+use harness::{sized, Snapshot, Table};
 use liquid_svm::coordinator::config::BackendChoice;
 use liquid_svm::data::synth;
 use liquid_svm::prelude::*;
@@ -99,6 +99,7 @@ fn main() {
         &["backend", "mode", "batch", "rps", "mean_batch", "p99", "speedup"],
         &[8, 9, 6, 10, 10, 9, 8],
     );
+    let mut snap = Snapshot::new("table_serve");
 
     for (label, backend) in backends {
         // baseline: lockstep single requests, no server-side batching
@@ -112,6 +113,12 @@ fn main() {
             &format!("{}us", single.p99_us),
             "x1.0",
         ]);
+        snap.case(
+            &format!("{label}_single"),
+            Duration::from_secs_f64((requests / 4) as f64 / single.rps.max(1e-9)),
+            single.rps,
+            "requests/s",
+        );
         for max_batch in [8usize, 32, 64] {
             let b = measure(backend, &train, &rows, max_batch, 16, 32, requests);
             t.row(&[
@@ -123,8 +130,15 @@ fn main() {
                 &format!("{}us", b.p99_us),
                 &format!("x{:.1}", b.rps / single.rps.max(1e-9)),
             ]);
+            snap.case(
+                &format!("{label}_batched_{max_batch}"),
+                Duration::from_secs_f64(requests as f64 / b.rps.max(1e-9)),
+                b.rps,
+                "requests/s",
+            );
         }
     }
+    snap.write();
 
     println!(
         "\npaper shape: batched rps climbs with the batch cap; the blocked rung's\n\

@@ -25,7 +25,7 @@ mod harness;
 
 use std::time::Duration;
 
-use harness::{secs, sized, time_once, Table};
+use harness::{secs, sized, time_once, Snapshot, Table};
 use liquid_svm::data::matrix::Matrix;
 use liquid_svm::data::synth;
 use liquid_svm::kernel::{GramBackend, KernelKind};
@@ -98,6 +98,7 @@ fn main() {
         &["loss", "shrink", "warm", "iters", "sweep_entries", "time"],
         &[9, 6, 8, 10, 14, 8],
     );
+    let mut snap = Snapshot::new("table_solver");
 
     for (name, kind, x, y) in losses {
         let grams: Vec<Matrix> = gammas
@@ -120,6 +121,17 @@ fn main() {
                     &cell.sweeps.to_string(),
                     &secs(cell.wall),
                 ]);
+                let wtag = match mode {
+                    WarmMode::Cold => "cold",
+                    WarmMode::Lambda => "lwarm",
+                    WarmMode::GammaLambda => "glwarm",
+                };
+                snap.case(
+                    &format!("{name}_shrink_{sname}_{wtag}"),
+                    cell.wall,
+                    cell.iterations as f64 / cell.wall.as_secs_f64().max(1e-9),
+                    "iters/s",
+                );
                 cells.push((sname, wname, cell));
             }
         }
@@ -153,5 +165,6 @@ fn main() {
             );
         }
     }
+    snap.write();
     println!("table_solver OK");
 }

@@ -19,7 +19,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{secs, sized, time_once, Table};
+use harness::{secs, sized, time_once, Snapshot, Table};
 use liquid_svm::coordinator::{train, train_sparse};
 use liquid_svm::data::synth;
 use liquid_svm::prelude::*;
@@ -44,6 +44,7 @@ fn main() {
         &[8, 8, 9, 9, 9, 9, 10],
     );
 
+    let mut snap = Snapshot::new("table_sparse");
     let mut cfg = Config::default().folds(2).max_gram_mb(256);
     cfg.scale = None; // scaling is a densification boundary; keep both paths identical
     let spec = TaskSpec::Binary { w: 0.5 };
@@ -58,6 +59,12 @@ fn main() {
             let m = train_sparse(&train_d, &spec, &cfg).unwrap();
             m.test_sparse(&test_d).predictions
         });
+        snap.case(
+            &format!("d{d}_csr"),
+            t_csr,
+            n as f64 / t_csr.as_secs_f64().max(1e-9),
+            "rows/s",
+        );
 
         let (dense_cell, identical) = if d <= dense_cap {
             let dd = train_d.to_dense();
@@ -72,6 +79,12 @@ fn main() {
                     .zip(&sparse_preds)
                     .all(|(a, b)| a.to_bits() == b.to_bits());
             assert!(same, "d={d}: sparse predictions diverged from the densified path");
+            snap.case(
+                &format!("d{d}_dense"),
+                t_dense,
+                n as f64 / t_dense.as_secs_f64().max(1e-9),
+                "rows/s",
+            );
             (secs(t_dense), "yes")
         } else {
             ("-".to_string(), "skipped")
@@ -94,6 +107,7 @@ fn main() {
             );
         }
     }
+    snap.write();
 
     println!("\ncontract: CSR sample bytes scale with nnz (dense with n*d), and the");
     println!("sparse path's predictions are bit-identical to training on the densified data.");

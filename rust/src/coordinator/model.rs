@@ -85,6 +85,10 @@ fn run_training(
     label: &str,
 ) -> SvmModel {
     let n_cells = partition.n_cells();
+    // scope the counter report to this run: the statics are
+    // process-global and monotonic, so the display diffs two snapshots
+    // instead of printing lifetime totals (see DESIGN.md §Observability)
+    let counters_before = crate::metrics::counters::snapshot();
     let (driver_threads, cv_jobs) = cfg.split_jobs(units.len());
     // like the thread budget, the Gram byte budget is a whole-process
     // figure: with `driver_threads` CV runs resident at once, each run
@@ -116,7 +120,10 @@ fn run_training(
             cv_jobs
         );
     }
-    let (units, report) = run_cell_grid(driver_threads, n_cells, jobs);
+    let (units, report) = {
+        let _sp = crate::obs::span("train.grid");
+        run_cell_grid(driver_threads, n_cells, jobs)
+    };
     let points_evaluated = units
         .iter()
         .filter_map(|u| u.cv.as_ref().map(|c| c.points_evaluated))
@@ -141,7 +148,7 @@ fn run_training(
             model.train_time.as_secs_f64(),
             report.summary(),
             model.points_evaluated,
-            crate::metrics::counters::snapshot().report()
+            crate::metrics::counters::snapshot().diff(&counters_before).report()
         );
     }
     model
@@ -150,6 +157,7 @@ fn run_training(
 /// Train a model for a task spec under a config — the whole training +
 /// selection phase.
 pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> {
+    let _sp = crate::obs::span("train");
     let t0 = Instant::now();
     if data.is_empty() {
         return Err(anyhow!("empty training set"));
@@ -158,14 +166,20 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
 
     // scaling fitted on the training set only (paper §B.1)
     let mut scaled = data.clone();
-    let scaler = cfg.scale.map(|kind| {
-        let s = Scaler::fit(&scaled.x, kind);
-        s.apply(&mut scaled.x);
-        s
-    });
+    let scaler = {
+        let _sp = crate::obs::span("train.scale");
+        cfg.scale.map(|kind| {
+            let s = Scaler::fit(&scaled.x, kind);
+            s.apply(&mut scaled.x);
+            s
+        })
+    };
 
     let classes = scaled.classes();
-    let partition = make_cells(&scaled, &cfg.cells, cfg.seed);
+    let partition = {
+        let _sp = crate::obs::span("train.cells");
+        make_cells(&scaled, &cfg.cells, cfg.seed)
+    };
 
     // build the (cell × task) working sets, each tagged with its cell
     // so the driver can aggregate per-cell timing.  The --jobs budget
@@ -208,6 +222,7 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
 /// sources; predictions are bit-identical to [`train`] on the
 /// densified data (tested in `tests/sparse_pipeline.rs`).
 pub fn train_sparse(data: &SparseDataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> {
+    let _sp = crate::obs::span("train");
     let t0 = Instant::now();
     if data.is_empty() {
         return Err(anyhow!("empty training set"));
@@ -219,6 +234,7 @@ pub fn train_sparse(data: &SparseDataset, spec: &TaskSpec, cfg: &Config) -> Resu
 
     let classes = distinct_labels(&data.y);
     let n = data.len();
+    let _sp_cells = crate::obs::span("train.cells");
     let partition = match &cfg.cells {
         CellStrategy::None => CellPartition::single(n),
         // label/geometry-free: the same shuffle-split as the dense path
@@ -230,6 +246,7 @@ pub fn train_sparse(data: &SparseDataset, spec: &TaskSpec, cfg: &Config) -> Resu
             ))
         }
     };
+    drop(_sp_cells);
 
     let mut units: Vec<(usize, usize, WorkingSet, crate::tasks::Task)> = Vec::new();
     let mut n_tasks = 0usize;
@@ -274,6 +291,7 @@ fn train_unit(
     if n < 8 {
         return None;
     }
+    let _sp = crate::obs::span("train.unit");
     let folds = cfg.folds.min(n / 2).max(2);
     let n_fold = n - n / folds;
     let grid = if cfg.use_libsvm_grid {
@@ -371,6 +389,7 @@ impl SvmModel {
 
     /// Decision values over either input layout.
     pub fn decision_values_x(&self, x: StoreRef) -> Vec<Vec<f32>> {
+        let _sp = crate::obs::span("predict");
         // scaling is a densification boundary: dense inputs transform
         // as before; sparse inputs densify only when a scaler demands
         // it (sparse-trained models never fit one)

@@ -42,6 +42,7 @@ pub const MANIFEST_FILE: &str = "MANIFEST";
 
 /// Serialize a trained model to the `.sol` text format.
 pub fn save_model(model: &SvmModel, path: &Path) -> Result<()> {
+    let _sp = crate::obs::span("persist.save");
     let mut s = String::new();
     writeln!(s, "{MAGIC}")?;
     write_header(&mut s, model)?;
@@ -187,6 +188,7 @@ pub fn load_model(path: &Path, config: &Config) -> Result<SvmModel> {
     if is_bundle_path(path) {
         return load_bundle(path, config);
     }
+    let _sp = crate::obs::span("persist.load");
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
     let mut lines = text.lines();
     macro_rules! next {
@@ -332,6 +334,7 @@ fn parse_strategy(tag: &str) -> Result<CellStrategy> {
 /// renamed into place as a whole, so readers never see a partial
 /// bundle (a pre-existing bundle at `path` is replaced).
 pub fn save_bundle(model: &SvmModel, path: &Path) -> Result<()> {
+    let _sp = crate::obs::span("persist.save");
     let mut tmp_name = path.as_os_str().to_owned();
     tmp_name.push(".tmp");
     let tmp = PathBuf::from(tmp_name);
@@ -494,6 +497,7 @@ pub fn load_shard(
 /// Load a whole bundle eagerly into an [`SvmModel`] (the test-phase /
 /// `liquidsvm predict` path; serving loads shards lazily instead).
 pub fn load_bundle(dir: &Path, config: &Config) -> Result<SvmModel> {
+    let _sp = crate::obs::span("persist.load");
     let manifest = read_manifest(dir)?;
     let mut cells = Vec::with_capacity(manifest.n_cells());
     let mut units = Vec::new();

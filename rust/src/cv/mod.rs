@@ -169,6 +169,9 @@ enum FoldData {
 
 impl FoldData {
     fn cached(backend: &GramBackend, ctx: &FoldCtx) -> FoldData {
+        let mut sp = crate::obs::span("cv.fold_data");
+        let (ntr, nva) = (ctx.ytr.len(), ctx.yva.len());
+        sp.add_bytes(4 * (ntr * ntr + nva * ntr) as u64);
         FoldData::Cached {
             d2_tr: backend.sq_dists_ref(ctx.xtr.as_ref(), ctx.xtr.as_ref()),
             d2_va: backend.sq_dists_ref(ctx.xva.as_ref(), ctx.xtr.as_ref()),
@@ -178,6 +181,7 @@ impl FoldData {
     }
 
     fn streamed(ctx: &FoldCtx) -> FoldData {
+        let _sp = crate::obs::span("cv.fold_data");
         FoldData::Streamed {
             tr_norms: ctx.xtr.as_ref().row_sq_norms(),
             va_norms: ctx.xva.as_ref().row_sq_norms(),
@@ -346,6 +350,7 @@ fn run_fold_task(
     active: &[Vec<bool>],
     bufs: &mut WorkerBufs,
 ) -> FoldOut {
+    let _sp = crate::obs::span("cv.fold_chain");
     let (ng, nl) = (cfg.grid.gammas.len(), cfg.grid.lambdas.len());
     let mut out = FoldOut::new(ng, nl);
     let mut warm: Option<Vec<f32>> = None;
@@ -408,6 +413,7 @@ pub fn run_cv_ws(ws: &WorkingSet, cfg: &CvConfig) -> CvResult {
 
 /// The CV engine over either sample layout.
 pub fn run_cv_x(x: StoreRef, y: &[f32], cfg: &CvConfig) -> CvResult {
+    let _sp = crate::obs::span("cv.run");
     let n = y.len();
     assert_eq!(x.rows(), n, "sample/label count mismatch");
     assert!(n >= cfg.folds, "working set smaller than fold count");
@@ -555,6 +561,7 @@ pub fn run_cv_x(x: StoreRef, y: &[f32], cfg: &CvConfig) -> CvResult {
     // budgets per worker) — halve that wave's parallelism to stay
     // inside (1+jobs)·max_fold.
     let final_jobs = if tier == Tier::PerFold { ((jobs + 1) / 2).max(1) } else { jobs };
+    let _sp_final = crate::obs::span("cv.final_models");
     let models = match cfg.select {
         SelectMethod::FoldAverage => run_wave(final_jobs, folds.k(), |f, bufs| {
             let fd = fold_data.as_ref().map(|v| &v[f]);

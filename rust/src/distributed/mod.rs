@@ -142,13 +142,22 @@ pub fn train_distributed(
     cluster: &ClusterSpec,
 ) -> Result<DistributedModel> {
     let t0 = Instant::now();
-    let (centers, coarse_cells) = coarse_partition(data, cluster, cfg.seed);
+    let (centers, coarse_cells) = {
+        let _sp = crate::obs::span("dist.driver");
+        coarse_partition(data, cluster, cfg.seed)
+    };
     let driver_time = t0.elapsed();
 
     // "shuffle": materialize every coarse cell (the bytes that would
     // cross the network in Spark)
     let t1 = Instant::now();
-    let cell_data: Vec<Dataset> = coarse_cells.iter().map(|idx| data.subset(idx)).collect();
+    let cell_data: Vec<Dataset> = {
+        let mut sp = crate::obs::span("dist.shuffle");
+        let cells: Vec<Dataset> = coarse_cells.iter().map(|idx| data.subset(idx)).collect();
+        let rows: u64 = cells.iter().map(|d| d.len() as u64).sum();
+        sp.add_bytes(rows * 4 * (data.x.cols() as u64 + 1));
+        cells
+    };
     let shuffle_time = t1.elapsed();
 
     // greedy longest-processing-time assignment of cells to workers
@@ -178,7 +187,10 @@ pub fn train_distributed(
         .collect();
     let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let driver_threads = cluster.workers.min(host).max(1);
-    let (trained, report) = run_cell_grid_untracked(driver_threads, cell_data.len(), jobs);
+    let (trained, report) = {
+        let _sp = crate::obs::span("dist.train");
+        run_cell_grid_untracked(driver_threads, cell_data.len(), jobs)
+    };
 
     let mut cell_models = Vec::with_capacity(trained.len());
     for m in trained {

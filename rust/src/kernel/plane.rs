@@ -156,7 +156,9 @@ impl GramBuffer {
             return;
         }
         counters::GRAM_CACHE_MISSES.inc();
+        let mut sp = crate::obs::span("gram.fill");
         let n = d2.rows() * d2.cols();
+        sp.add_bytes(4 * n as u64);
         if self.data.capacity() < n {
             counters::GRAM_ALLOCS.inc();
         }
@@ -365,6 +367,9 @@ impl GramSource for StreamedGram<'_> {
     /// because both go through the same per-pair distance kernels.
     fn gather(&mut self, i: usize, idx: &[usize], out: &mut [f32]) {
         debug_assert_eq!(idx.len(), out.len());
+        if crate::obs::enabled() {
+            counters::GRAM_GATHER_ENTRIES.add(idx.len() as u64);
+        }
         for slot in 0..2 {
             if self.resident[slot] == i {
                 for (o, &j) in out.iter_mut().zip(idx) {
@@ -514,6 +519,9 @@ impl GramSource for SparseGram<'_> {
     /// per pair through the sparse distance kernels (O(|idx|·nnz)).
     fn gather(&mut self, i: usize, idx: &[usize], out: &mut [f32]) {
         debug_assert_eq!(idx.len(), out.len());
+        if crate::obs::enabled() {
+            counters::GRAM_GATHER_ENTRIES.add(idx.len() as u64);
+        }
         for slot in 0..2 {
             if self.resident[slot] == i {
                 for (o, &j) in out.iter_mut().zip(idx) {
@@ -598,6 +606,8 @@ pub fn accumulate_decisions(
     if m == 0 || n == 0 {
         return;
     }
+    let mut sp = crate::obs::span("predict.tiles");
+    sp.add_bytes(4 * (m * n) as u64);
     let step = tile_rows(cap_mb, n);
     if matches!(backend, GramBackend::Xla(_)) && kind == KernelKind::Gauss {
         // fused artifact path: distances+exp happen inside the
@@ -677,6 +687,8 @@ pub fn accumulate_decisions_x(
         }
         pair => pair,
     };
+    let mut sp = crate::obs::span("predict.tiles");
+    sp.add_bytes(4 * (m * n) as u64);
     let scalar = matches!(backend, GramBackend::Scalar);
     let step = tile_rows(cap_mb, n);
     match sv {

@@ -46,6 +46,7 @@ pub mod data;
 pub mod distributed;
 pub mod kernel;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod solver;

@@ -90,6 +90,33 @@ impl Args {
     }
 }
 
+/// `--trace` / `--trace-json PATH` turn on the observability plane's
+/// phase tracing (see DESIGN.md §Observability).  Returns (enabled,
+/// json path); call [`trace_report`] with them after the command ran.
+fn trace_setup(args: &Args) -> (bool, Option<String>) {
+    let json = args.get("trace-json").map(str::to_string);
+    let on = args.get("trace").is_some() || json.is_some();
+    if on {
+        liquid_svm::obs::set_enabled(true);
+    }
+    (on, json)
+}
+
+/// End-of-run side of `--trace`: phase table to stderr (keeps stdout
+/// machine-parsable) plus the optional JSON dump.
+fn trace_report(on: bool, json: Option<&str>) -> Result<()> {
+    if !on {
+        return Ok(());
+    }
+    eprint!("{}", liquid_svm::obs::render_table());
+    if let Some(path) = json {
+        std::fs::write(path, liquid_svm::obs::render_json())
+            .with_context(|| format!("writing --trace-json to {path}"))?;
+        eprintln!("trace written to {path}");
+    }
+    Ok(())
+}
+
 fn load_dataset(args: &Args) -> Result<(Dataset, Dataset)> {
     let n: usize = args.num("n", 2000)?;
     let n_test: usize = args.num("n-test", n / 2)?;
@@ -261,22 +288,30 @@ fn run() -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    let (trace, trace_json) = trace_setup(args);
     let cfg = build_config(args)?;
-    if cfg.sparse {
-        return cmd_train_sparse(args, &cfg);
-    }
+    let out = if cfg.sparse {
+        cmd_train_sparse(args, &cfg)
+    } else {
+        cmd_train_dense(args, &cfg)
+    };
+    trace_report(trace, trace_json.as_deref())?;
+    out
+}
+
+fn cmd_train_dense(args: &Args, cfg: &Config) -> Result<()> {
     let (train_d, test_d) = load_dataset(args)?;
     let scenario = args.get("scenario").unwrap_or("mc");
     let t0 = std::time::Instant::now();
     let model = match scenario {
-        "binary" => scenarios::svm_binary(&train_d, args.num("weight", 0.5f32)?, &cfg)?,
-        "mc" => scenarios::mc_svm(&train_d, &cfg)?,
-        "mc-ava" => scenarios::mc_svm_type(&train_d, false, &cfg)?,
-        "ls" => scenarios::ls_svm(&train_d, &cfg)?,
-        "qt" => scenarios::qt_svm(&train_d, &[0.05, 0.5, 0.95], &cfg)?,
-        "ex" => scenarios::ex_svm(&train_d, &[0.05, 0.5, 0.95], &cfg)?,
-        "npl" => scenarios::npl_svm(&train_d, args.num("alpha", 0.05f32)?, &cfg)?,
-        "roc" => scenarios::roc_svm(&train_d, args.num("points", 6usize)?, &cfg)?,
+        "binary" => scenarios::svm_binary(&train_d, args.num("weight", 0.5f32)?, cfg)?,
+        "mc" => scenarios::mc_svm(&train_d, cfg)?,
+        "mc-ava" => scenarios::mc_svm_type(&train_d, false, cfg)?,
+        "ls" => scenarios::ls_svm(&train_d, cfg)?,
+        "qt" => scenarios::qt_svm(&train_d, &[0.05, 0.5, 0.95], cfg)?,
+        "ex" => scenarios::ex_svm(&train_d, &[0.05, 0.5, 0.95], cfg)?,
+        "npl" => scenarios::npl_svm(&train_d, args.num("alpha", 0.05f32)?, cfg)?,
+        "roc" => scenarios::roc_svm(&train_d, args.num("points", 6usize)?, cfg)?,
         other => bail!("unknown scenario `{other}`"),
     };
     let train_time = t0.elapsed();
@@ -308,10 +343,17 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// Test phase in a separate process: load a `.sol` file and predict —
 /// mirrors liquidSVM's svm-test tool.
 fn cmd_predict(args: &Args) -> Result<()> {
+    let (trace, trace_json) = trace_setup(args);
+    let out = cmd_predict_inner(args);
+    trace_report(trace, trace_json.as_deref())?;
+    out
+}
+
+fn cmd_predict_inner(args: &Args) -> Result<()> {
     let model_path = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
     let cfg = build_config(args)?;
     let model =
-        liquid_svm::coordinator::persist::load_model(std::path::Path::new(model_path), &cfg)?;
+        liquid_svm::coordinator::persist::load_model(std::path::Path::new(model_path), cfg)?;
     if cfg.sparse {
         let (_, test_d) = load_sparse_dataset(args, model.input_dim())?;
         let res = model.test_sparse(&test_d);
@@ -364,6 +406,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.num("workers", 2usize)?,
         max_models: args.num("max-models", 8usize)?,
         max_shard_bytes: args.num("max-shard-mb", 256u64)? << 20,
+        slow_log_us: args.num("slow-log-us", 0u64)?,
         model_config: build_config(args)?,
     };
     let server = Server::start(scfg)?;
@@ -388,7 +431,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
     }
-    println!("protocol: predict/load/unload/stats/shards/ping/quit — see README");
+    println!("protocol: predict/load/unload/stats/shards/metrics/ping/quit — see README");
     loop {
         std::thread::park(); // run until killed; requests drive the threads
     }
@@ -437,6 +480,7 @@ fn cmd_convert(args: &Args) -> Result<()> {
 }
 
 fn cmd_distributed(args: &Args) -> Result<()> {
+    let (trace, trace_json) = trace_setup(args);
     let (train_d, test_d) = load_dataset(args)?;
     let cfg = build_config(args)?;
     let cluster = ClusterSpec {
@@ -457,6 +501,7 @@ fn cmd_distributed(args: &Args) -> Result<()> {
         m.stats.speedup(),
         err
     );
+    trace_report(trace, trace_json.as_deref())?;
     Ok(())
 }
 
@@ -471,16 +516,19 @@ USAGE:
                   [--libsvm-grid] [--backend scalar|blocked|xla] [--folds K] [--seed S]
                   [--solver-eps E] [--max-iter N] [--shrink-every N]
                   [--sparse] [--dim D] [--density P]
+                  [--trace] [--trace-json PATH.json]
                   [--save MODEL.sol | --save MODEL.sol.d]
   liquidsvm predict --model MODEL.sol[.d] [--data NAME|--file PATH] [--sparse]
-                  [--out PREDICTIONS.txt]
+                  [--out PREDICTIONS.txt] [--trace] [--trace-json PATH.json]
   liquidsvm serve [--port P] [--host H] [--models name=a.sol,name2=b.sol.d]
                   [--max-batch B] [--max-delay-ms MS] [--workers W] [--queue-cap Q]
                   [--max-models M] [--max-shard-mb MB] [--backend scalar|blocked|xla]
+                  [--slow-log-us US]
   liquidsvm client --addr HOST:PORT --model NAME [--data NAME|--file PATH] [--n N]
                    [--connections C] [--pipeline P]
   liquidsvm convert --in DATA.[csv|libsvm] --out DATA.[csv|libsvm]
   liquidsvm distributed [--data NAME] [--workers W] [--coarse-size N] [--fine-size N]
+                  [--trace] [--trace-json PATH.json]
   liquidsvm list-datasets
 
 Options take `--key value` or `--key=value`; each key at most once.
@@ -505,6 +553,13 @@ into CSR and trains through the sparse data plane: no n x d
 densification anywhere, no scaling, cells limited to 0/chunks — the
 path for d in the tens of thousands at sub-percent density.  Without
 --file it generates a synthetic sparse set (--dim, --density).
+`--trace` turns on phase tracing and prints the per-phase wall-time
+table to stderr when the run finishes; `--trace-json PATH` additionally
+writes the same breakdown as JSON (implies --trace).  `serve
+--slow-log-us N` logs any request whose enqueue-to-response latency
+reaches N microseconds, and the serve protocol's `metrics` command
+exposes every registered counter/gauge/histogram as Prometheus text
+(`metrics json` for JSON) — see the README observability playbook.
 
 EXAMPLES (sparse):
   liquidsvm train --sparse --dim 50000 --density 0.005 --n 2000 --scenario binary
@@ -610,6 +665,19 @@ mod tests {
         let a = parse(&["train", "--n", "many"]).unwrap();
         assert!(a.num("n", 0usize).is_err());
         assert_eq!(a.num("missing", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn trace_and_slow_log_flags_parse() {
+        let a = parse(&["train", "--trace", "--trace-json", "t.json"]).unwrap();
+        assert_eq!(a.get("trace"), Some("true"));
+        assert_eq!(a.get("trace-json"), Some("t.json"));
+        // --trace-json alone must also select tracing (checked without
+        // calling trace_setup: it flips process-global state)
+        let a = parse(&["train", "--trace-json=t.json"]).unwrap();
+        assert!(a.get("trace").is_some() || a.get("trace-json").is_some());
+        let a = parse(&["serve", "--slow-log-us", "5000"]).unwrap();
+        assert_eq!(a.num("slow-log-us", 0u64).unwrap(), 5000);
     }
 
     #[test]

@@ -78,6 +78,15 @@ pub static CELL_UNITS_TRAINED: Counter = Counter::new();
 /// microseconds (per-unit times summed across driver runs).
 pub static CELL_TRAIN_US: Counter = Counter::new();
 
+/// Kernel entries produced through the streaming sources' per-pair
+/// `gather` overrides (the shrunk-sweep access path; see DESIGN.md
+/// §Compute-plane).  Advanced once per gather call (by `idx.len()`)
+/// and only while tracing is enabled, so the cap-respecting hot path
+/// pays a single branch when observability is off.  Surfaced through
+/// the metrics registry rather than [`CounterSnapshot`]: it is a
+/// volume diagnostic, not part of the stable CV report line.
+pub static GRAM_GATHER_ENTRIES: Counter = Counter::new();
+
 /// Point-in-time view of the global counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CounterSnapshot {
@@ -93,6 +102,29 @@ pub struct CounterSnapshot {
 }
 
 impl CounterSnapshot {
+    /// Per-field saturating difference `self − earlier`: the counter
+    /// activity inside a window bounded by two snapshots.  Counters
+    /// are monotonic, so with correctly ordered snapshots the
+    /// saturation never fires; it exists so a misordered pair degrades
+    /// to zeros instead of wrapping into astronomical deltas.
+    pub fn diff(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
+        CounterSnapshot {
+            gram_cache_hits: self.gram_cache_hits.saturating_sub(earlier.gram_cache_hits),
+            gram_cache_misses: self.gram_cache_misses.saturating_sub(earlier.gram_cache_misses),
+            gram_allocs: self.gram_allocs.saturating_sub(earlier.gram_allocs),
+            xla_calls: self.xla_calls.saturating_sub(earlier.xla_calls),
+            solver_sweeps: self.solver_sweeps.saturating_sub(earlier.solver_sweeps),
+            solver_shrink_active: self
+                .solver_shrink_active
+                .saturating_sub(earlier.solver_shrink_active),
+            solver_unshrink_passes: self
+                .solver_unshrink_passes
+                .saturating_sub(earlier.solver_unshrink_passes),
+            cell_units_trained: self.cell_units_trained.saturating_sub(earlier.cell_units_trained),
+            cell_train_us: self.cell_train_us.saturating_sub(earlier.cell_train_us),
+        }
+    }
+
     /// `key=value` report fragment shared by `liquidsvm serve`'s
     /// `stats` command and the CV engine's display output.
     pub fn report(&self) -> String {
@@ -147,5 +179,60 @@ mod tests {
         ] {
             assert!(r.contains(key), "missing {key} in {r}");
         }
+    }
+
+    #[test]
+    fn diff_scopes_nested_windows() {
+        // Two windows, the inner strictly contained in the outer: the
+        // outer delta must include the inner's activity plus whatever
+        // happened outside it.  Counters are process-global (other
+        // tests may advance them concurrently), so the assertions are
+        // one-sided: deltas are at least what this test contributed.
+        let outer0 = snapshot();
+        XLA_CALLS.add(2);
+        let inner0 = snapshot();
+        XLA_CALLS.add(3);
+        let inner1 = snapshot();
+        XLA_CALLS.add(1);
+        let outer1 = snapshot();
+
+        let inner = inner1.diff(&inner0);
+        let outer = outer1.diff(&outer0);
+        assert!(inner.xla_calls >= 3, "inner window lost increments: {inner:?}");
+        assert!(outer.xla_calls >= 6, "outer window lost increments: {outer:?}");
+        assert!(outer.xla_calls >= inner.xla_calls, "nested window larger than enclosing");
+        // untouched fields diff to zero-or-more, never wrap
+        assert!(outer.cell_train_us < u64::MAX / 2);
+    }
+
+    #[test]
+    fn diff_under_concurrent_increments_loses_nothing() {
+        let threads = 4u64;
+        let per_thread = 1000u64;
+        let before = snapshot();
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    for _ in 0..per_thread {
+                        SOLVER_UNSHRINK_PASSES.inc();
+                    }
+                });
+            }
+        });
+        let delta = snapshot().diff(&before);
+        assert!(
+            delta.solver_unshrink_passes >= threads * per_thread,
+            "dropped increments: {} < {}",
+            delta.solver_unshrink_passes,
+            threads * per_thread
+        );
+    }
+
+    #[test]
+    fn diff_saturates_on_misordered_snapshots() {
+        let a = CounterSnapshot { xla_calls: 5, ..Default::default() };
+        let b = CounterSnapshot { xla_calls: 9, ..Default::default() };
+        assert_eq!(a.diff(&b).xla_calls, 0);
+        assert_eq!(b.diff(&a).xla_calls, 4);
     }
 }

@@ -6,6 +6,10 @@
 //! `[2^i, 2^(i+1))` µs and a percentile reports the bucket's upper
 //! bound, so quantiles are conservative (never under-reported) with at
 //! most 2× resolution error — plenty for p50/p95/p99 serving stats.
+//! The exact observed maximum is tracked separately (`max_us`), so the
+//! true tail sits next to the ≤2×-resolution p99 in every report, and
+//! `sum_us` accumulates with saturating adds so a long-lived process
+//! can never wrap the mean into nonsense silently.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -17,6 +21,7 @@ const BUCKETS: usize = 40; // 2^40 µs ≈ 12.7 days; saturates above
 pub struct LatencyHistogram {
     buckets: [AtomicU64; BUCKETS],
     sum_us: AtomicU64,
+    max_us: AtomicU64,
 }
 
 impl Default for LatencyHistogram {
@@ -25,11 +30,21 @@ impl Default for LatencyHistogram {
     }
 }
 
+/// Saturating add on an atomic (Relaxed): once the accumulator hits
+/// `u64::MAX` it stays there instead of wrapping.
+fn saturating_fetch_add(a: &AtomicU64, n: u64) {
+    if n == 0 {
+        return;
+    }
+    let _ = a.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_add(n)));
+}
+
 impl LatencyHistogram {
     pub fn new() -> LatencyHistogram {
         LatencyHistogram {
             buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
         }
     }
 
@@ -43,7 +58,8 @@ impl LatencyHistogram {
     pub fn record(&self, d: Duration) {
         let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
         self.buckets[Self::bucket_index(us)].fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        saturating_fetch_add(&self.sum_us, us);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
     /// Total observations recorded.
@@ -51,10 +67,30 @@ impl LatencyHistogram {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
 
+    /// Sum of all recorded durations in µs (saturating at `u64::MAX`).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Largest single observation in µs (exact, not bucket-rounded).
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
     /// Mean latency in microseconds (0 if empty).
     pub fn mean_us(&self) -> u64 {
         let n = self.count();
         if n == 0 { 0 } else { self.sum_us.load(Ordering::Relaxed) / n }
+    }
+
+    /// Per-bucket `(upper_bound_us, count)` pairs, low to high — the
+    /// raw series Prometheus histogram exposition is built from.
+    pub fn buckets(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, b)| ((1u64 << (i + 1)).saturating_sub(1), b.load(Ordering::Relaxed)))
+            .collect()
     }
 
     /// Upper bound (µs) of the bucket containing quantile `q ∈ (0, 1]`.
@@ -81,16 +117,18 @@ impl LatencyHistogram {
         for (a, b) in self.buckets.iter().zip(&other.buckets) {
             a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
         }
-        self.sum_us.fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        saturating_fetch_add(&self.sum_us, other.sum_us.load(Ordering::Relaxed));
+        self.max_us.fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
-    /// `p50_us=… p95_us=… p99_us=…` report fragment.
+    /// `p50_us=… p95_us=… p99_us=… max_us=…` report fragment.
     pub fn report(&self) -> String {
         format!(
-            "p50_us={} p95_us={} p99_us={}",
+            "p50_us={} p95_us={} p99_us={} max_us={}",
             self.percentile_us(0.50),
             self.percentile_us(0.95),
-            self.percentile_us(0.99)
+            self.percentile_us(0.99),
+            self.max_us()
         )
     }
 }
@@ -143,6 +181,7 @@ mod tests {
         b.record(us(7));
         a.merge(&b);
         assert_eq!(a.count(), 2);
+        assert_eq!(a.max_us(), 7);
     }
 
     #[test]
@@ -151,6 +190,7 @@ mod tests {
         assert_eq!(h.percentile_us(0.99), 0);
         assert_eq!(h.mean_us(), 0);
         assert!(h.report().contains("p99_us=0"));
+        assert!(h.report().contains("max_us=0"));
     }
 
     #[test]
@@ -159,5 +199,47 @@ mod tests {
         h.record(Duration::ZERO);
         assert_eq!(h.count(), 1);
         assert_eq!(h.percentile_us(1.0), 1);
+    }
+
+    #[test]
+    fn max_tracks_exact_tail() {
+        let h = LatencyHistogram::new();
+        h.record(us(100));
+        h.record(us(9_321));
+        h.record(us(50));
+        // p100 is the bucket upper bound (2x-resolution)...
+        assert_eq!(h.percentile_us(1.0), 16_383);
+        // ...but max is the exact observation
+        assert_eq!(h.max_us(), 9_321);
+    }
+
+    #[test]
+    fn sum_saturates_instead_of_wrapping() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(u64::MAX));
+        h.record(Duration::from_micros(u64::MAX));
+        assert_eq!(h.sum_us(), u64::MAX, "sum wrapped");
+        assert_eq!(h.count(), 2);
+        // mean stays a sane (saturated) figure rather than ~0
+        assert_eq!(h.mean_us(), u64::MAX / 2);
+
+        // merge saturates the same way
+        let other = LatencyHistogram::new();
+        other.record(Duration::from_micros(u64::MAX));
+        h.merge(&other);
+        assert_eq!(h.sum_us(), u64::MAX);
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn buckets_expose_upper_bounds_and_counts() {
+        let h = LatencyHistogram::new();
+        h.record(us(100)); // [64, 128) -> upper bound 127
+        let b = h.buckets();
+        assert_eq!(b.len(), 40);
+        assert_eq!(b[0].0, 1);
+        let total: u64 = b.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 1);
+        assert_eq!(b[6], (127, 1));
     }
 }

@@ -1,0 +1,287 @@
+//! The **observability plane** — phase-level tracing, the unified
+//! metrics registry, and machine-readable perf snapshots (DESIGN.md
+//! §Observability).
+//!
+//! Three pillars:
+//!
+//! * **Phase tracing** (this module): a lightweight RAII [`Span`]
+//!   (`obs::span("cv.fold_chain")`) with thread-safe aggregation into
+//!   a per-phase table — calls, total/self wall µs, and bytes where
+//!   the phase knows them.  Nesting is thread-local: a span's *self*
+//!   time is its total minus the totals of the spans opened (and
+//!   closed) inside it on the same thread, so on a single-threaded
+//!   run the self-times of all phases partition the root's wall.
+//! * **Metrics registry** ([`registry`]): the process-wide counters
+//!   become registered, named handles with one snapshot path and
+//!   Prometheus-text / JSON encoders.
+//! * **Perf snapshots**: `benches/harness.rs` emits `BENCH_<name>.json`
+//!   per bench; `scripts/bench_diff.py` compares two snapshot sets.
+//!
+//! Tracing is **off by default** and gated by one process-global
+//! `AtomicBool`: a disabled [`span`] call is a relaxed load plus a
+//! branch — no clock read, no allocation, no lock — so leaving the
+//! instrumentation compiled into hot paths is free (bench-asserted in
+//! `benches/table_obs.rs`).  When enabled, spans cost two clock reads
+//! and one short mutex section at drop; phases are therefore placed at
+//! solve/fill/fold granularity, never per coordinate update.
+
+pub mod registry;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is tracing on?  Relaxed load — the single branch disabled call
+/// sites pay.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on/off (the `--trace` flag; tests).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Aggregated statistics for one phase name.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseStat {
+    /// spans closed under this name
+    pub calls: u64,
+    /// summed wall time, including child spans, in µs
+    pub total_us: u64,
+    /// summed wall time *excluding* same-thread child spans, in µs
+    pub self_us: u64,
+    /// bytes attributed via [`Span::add_bytes`]
+    pub bytes: u64,
+}
+
+fn table() -> &'static Mutex<HashMap<&'static str, PhaseStat>> {
+    static TABLE: OnceLock<Mutex<HashMap<&'static str, PhaseStat>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+thread_local! {
+    /// One child-time accumulator per live enabled span on this
+    /// thread; a closing span adds its total to its parent's slot.
+    static CHILD_US: RefCell<Vec<u64>> = RefCell::new(Vec::new());
+}
+
+struct SpanInner {
+    name: &'static str,
+    start: Instant,
+    bytes: u64,
+}
+
+/// RAII phase marker.  Create with [`span`]; the phase is recorded
+/// when the guard drops.  Inert (zero work at creation *and* drop)
+/// when tracing is disabled.
+pub struct Span(Option<SpanInner>);
+
+/// Open a phase span.  Phase names are static, dot-separated paths
+/// (`"train.scale"`, `"cv.fold_chain"`, `"serve.predict"`); the name
+/// contract is documented in DESIGN.md §Observability.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    span_slow(name)
+}
+
+#[cold]
+fn span_slow(name: &'static str) -> Span {
+    let _ = CHILD_US.try_with(|c| c.borrow_mut().push(0));
+    Span(Some(SpanInner { name, start: Instant::now(), bytes: 0 }))
+}
+
+impl Span {
+    /// Attribute processed bytes to this phase (e.g. a Gram fill's
+    /// output size).  No-op on an inert span.
+    #[inline]
+    pub fn add_bytes(&mut self, n: u64) {
+        if let Some(inner) = &mut self.0 {
+            inner.bytes += n;
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(inner) = self.0.take() else { return };
+        let total_us = inner.start.elapsed().as_micros() as u64;
+        // pop own child accumulator; credit own total to the parent
+        let child_us = CHILD_US
+            .try_with(|c| {
+                let mut stack = c.borrow_mut();
+                let own = stack.pop().unwrap_or(0);
+                if let Some(parent) = stack.last_mut() {
+                    *parent += total_us;
+                }
+                own
+            })
+            .unwrap_or(0);
+        let self_us = total_us.saturating_sub(child_us);
+        let mut t = table().lock().unwrap();
+        let s = t.entry(inner.name).or_default();
+        s.calls += 1;
+        s.total_us += total_us;
+        s.self_us += self_us;
+        s.bytes += inner.bytes;
+    }
+}
+
+/// Snapshot the phase table, sorted by phase name (deterministic).
+pub fn phases() -> Vec<(&'static str, PhaseStat)> {
+    let t = table().lock().unwrap();
+    let mut out: Vec<_> = t.iter().map(|(&k, &v)| (k, v)).collect();
+    out.sort_by_key(|&(k, _)| k);
+    out
+}
+
+/// Clear the phase table (tests; between traced runs).
+pub fn reset() {
+    table().lock().unwrap().clear();
+}
+
+/// Render the phase table for `--trace` output: one row per phase,
+/// sorted by total time descending, with a Σself footer.
+pub fn render_table() -> String {
+    let mut rows = phases();
+    rows.sort_by(|a, b| b.1.total_us.cmp(&a.1.total_us).then(a.0.cmp(b.0)));
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:>8} {:>12} {:>12} {:>12}\n",
+        "phase", "calls", "total_ms", "self_ms", "bytes"
+    ));
+    let mut sum_self = 0u64;
+    for (name, s) in &rows {
+        sum_self += s.self_us;
+        out.push_str(&format!(
+            "{:<28} {:>8} {:>12.3} {:>12.3} {:>12}\n",
+            name,
+            s.calls,
+            s.total_us as f64 / 1e3,
+            s.self_us as f64 / 1e3,
+            s.bytes
+        ));
+    }
+    out.push_str(&format!("{:<28} {:>8} {:>12} {:>12.3}\n", "(sum of self)", "", "", sum_self as f64 / 1e3));
+    out
+}
+
+/// Render the phase table as JSON (the `--trace-json` dump):
+/// `{"phases":[{"name":...,"calls":...,"total_us":...,"self_us":...,
+/// "bytes":...}]}`, sorted by name.
+pub fn render_json() -> String {
+    let rows = phases();
+    let mut out = String::from("{\"phases\":[");
+    for (i, (name, s)) in rows.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"calls\":{},\"total_us\":{},\"self_us\":{},\"bytes\":{}}}",
+            name, s.calls, s.total_us, s.self_us, s.bytes
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::MutexGuard;
+
+    /// The phase table and enable flag are process-global; tests that
+    /// touch them serialize on this lock.
+    pub(crate) fn guard() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        match LOCK.get_or_init(|| Mutex::new(())).lock() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        }
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = guard();
+        set_enabled(false);
+        reset();
+        {
+            let mut s = span("test.off");
+            s.add_bytes(64);
+        }
+        assert!(phases().is_empty());
+    }
+
+    #[test]
+    fn nesting_splits_self_from_total() {
+        let _g = guard();
+        set_enabled(true);
+        reset();
+        {
+            let _outer = span("test.outer");
+            std::thread::sleep(std::time::Duration::from_millis(4));
+            {
+                let _inner = span("test.inner");
+                std::thread::sleep(std::time::Duration::from_millis(4));
+            }
+        }
+        set_enabled(false);
+        let rows: HashMap<_, _> = phases().into_iter().collect();
+        let outer = rows["test.outer"];
+        let inner = rows["test.inner"];
+        assert_eq!(outer.calls, 1);
+        assert_eq!(inner.calls, 1);
+        assert!(inner.total_us >= 3_000, "inner too short: {inner:?}");
+        assert!(outer.total_us >= inner.total_us + 3_000, "outer {outer:?} vs inner {inner:?}");
+        // outer's self excludes inner's total
+        assert_eq!(outer.self_us, outer.total_us - inner.total_us);
+        // and the sum of self times equals the root total
+        assert_eq!(outer.self_us + inner.self_us, outer.total_us);
+        reset();
+    }
+
+    #[test]
+    fn bytes_and_calls_accumulate() {
+        let _g = guard();
+        set_enabled(true);
+        reset();
+        for i in 0..3u64 {
+            let mut s = span("test.bytes");
+            s.add_bytes(10 + i);
+        }
+        set_enabled(false);
+        let rows: HashMap<_, _> = phases().into_iter().collect();
+        let s = rows["test.bytes"];
+        assert_eq!(s.calls, 3);
+        assert_eq!(s.bytes, 33);
+        reset();
+    }
+
+    #[test]
+    fn json_and_table_render_all_phases() {
+        let _g = guard();
+        set_enabled(true);
+        reset();
+        {
+            let _a = span("test.render_a");
+            let _b = span("test.render_b");
+        }
+        set_enabled(false);
+        let j = render_json();
+        assert!(j.starts_with("{\"phases\":["));
+        assert!(j.contains("\"name\":\"test.render_a\""));
+        assert!(j.contains("\"name\":\"test.render_b\""));
+        let t = render_table();
+        assert!(t.contains("test.render_a"));
+        assert!(t.contains("(sum of self)"));
+        reset();
+    }
+}

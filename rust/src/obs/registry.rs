@@ -1,0 +1,388 @@
+//! The unified metrics registry (DESIGN.md §Observability).
+//!
+//! The process-wide counters in [`crate::metrics::counters`] stay
+//! exactly what they are — cheap relaxed atomics incremented from hot
+//! paths — but each is *registered* here once with a stable exposition
+//! name and help text, so every consumer (the serve `metrics` protocol
+//! command, bench snapshots, ad-hoc tooling) reads the same catalogue
+//! instead of hand-rolling format strings.  Components with
+//! non-`'static` state (a server's request counters, its latency
+//! histogram) contribute point-in-time [`Family`] values at scrape
+//! time and reuse the same encoders.
+//!
+//! Two encoders, one input shape:
+//!
+//! * [`prometheus_text`] — Prometheus exposition text (`# HELP` /
+//!   `# TYPE`, counters suffixed `_total`, histograms as cumulative
+//!   `le`-labeled buckets plus `_sum` / `_count`);
+//! * [`json_text`] — one JSON object keyed by metric name, each value
+//!   `{"type": ..., ...}`.
+
+use std::sync::{Mutex, OnceLock};
+
+use crate::metrics::counters::{self, Counter};
+use crate::metrics::histogram::LatencyHistogram;
+
+/// What kind of metric a family is (drives encoding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+/// Point-in-time value of one metric family.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistogramSnapshot),
+}
+
+/// A latency histogram frozen for encoding: per-bucket
+/// `(upper_bound_us, count)` pairs plus the exact sum/count/max.
+#[derive(Clone, Debug, Default)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<(u64, u64)>,
+    pub sum_us: u64,
+    pub count: u64,
+    pub max_us: u64,
+}
+
+impl From<&LatencyHistogram> for HistogramSnapshot {
+    fn from(h: &LatencyHistogram) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: h.buckets(),
+            sum_us: h.sum_us(),
+            count: h.count(),
+            max_us: h.max_us(),
+        }
+    }
+}
+
+/// One named metric with its current value — the unit both encoders
+/// consume.  Families carry values (not handles), so scrape-time
+/// builders can expose non-`'static` state.
+#[derive(Clone, Debug)]
+pub struct Family {
+    pub name: String,
+    pub help: String,
+    pub kind: MetricKind,
+    pub value: Value,
+}
+
+impl Family {
+    pub fn counter(name: &str, help: &str, value: u64) -> Family {
+        Family { name: name.into(), help: help.into(), kind: MetricKind::Counter, value: Value::Counter(value) }
+    }
+
+    pub fn gauge(name: &str, help: &str, value: f64) -> Family {
+        Family { name: name.into(), help: help.into(), kind: MetricKind::Gauge, value: Value::Gauge(value) }
+    }
+
+    pub fn histogram(name: &str, help: &str, h: &LatencyHistogram) -> Family {
+        Family {
+            name: name.into(),
+            help: help.into(),
+            kind: MetricKind::Histogram,
+            value: Value::Histogram(HistogramSnapshot::from(h)),
+        }
+    }
+}
+
+enum Source {
+    Counter(&'static Counter),
+    Gauge(fn() -> f64),
+}
+
+struct Entry {
+    name: &'static str,
+    help: &'static str,
+    source: Source,
+}
+
+/// A catalogue of registered metric handles.  The process-global one
+/// (via [`global`]) carries every `'static` counter; scrape paths call
+/// [`Registry::families`] for current values and append their own
+/// instance-local families.
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { entries: Mutex::new(Vec::new()) }
+    }
+
+    /// Register a static counter under `name` (no `_total` suffix —
+    /// the Prometheus encoder appends it).  Re-registering a name is
+    /// a no-op, so module init order cannot duplicate families.
+    pub fn register_counter(&self, name: &'static str, help: &'static str, c: &'static Counter) {
+        let mut e = self.entries.lock().unwrap();
+        if e.iter().any(|x| x.name == name) {
+            return;
+        }
+        e.push(Entry { name, help, source: Source::Counter(c) });
+    }
+
+    /// Register a gauge read through a plain function.
+    pub fn register_gauge(&self, name: &'static str, help: &'static str, f: fn() -> f64) {
+        let mut e = self.entries.lock().unwrap();
+        if e.iter().any(|x| x.name == name) {
+            return;
+        }
+        e.push(Entry { name, help, source: Source::Gauge(f) });
+    }
+
+    /// Registered metric names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.lock().unwrap().iter().map(|e| e.name.to_string()).collect()
+    }
+
+    /// Snapshot every registered metric into encodable families.
+    pub fn families(&self) -> Vec<Family> {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|e| match e.source {
+                Source::Counter(c) => Family::counter(e.name, e.help, c.get()),
+                Source::Gauge(f) => Family::gauge(e.name, e.help, f()),
+            })
+            .collect()
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+/// The process-global registry, lazily initialized with every static
+/// counter the crate maintains.  `GRAM_CACHE_HITS.inc()`-style call
+/// sites are untouched; this is where those statics acquire their
+/// exposition names.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let r = Registry::new();
+        r.register_counter(
+            "liquidsvm_gram_cache_hits",
+            "Gram requests answered by a resident exponentiation (no work)",
+            &counters::GRAM_CACHE_HITS,
+        );
+        r.register_counter(
+            "liquidsvm_gram_cache_misses",
+            "Gram requests that required an exponentiation pass",
+            &counters::GRAM_CACHE_MISSES,
+        );
+        r.register_counter(
+            "liquidsvm_gram_allocs",
+            "Gram-plane buffer growths (flat in steady state)",
+            &counters::GRAM_ALLOCS,
+        );
+        r.register_counter(
+            "liquidsvm_gram_gather_entries",
+            "Kernel entries recomputed through streaming gather (traced runs only)",
+            &counters::GRAM_GATHER_ENTRIES,
+        );
+        r.register_counter(
+            "liquidsvm_xla_calls",
+            "Artifact executions on the PJRT runtime",
+            &counters::XLA_CALLS,
+        );
+        r.register_counter(
+            "liquidsvm_solver_sweeps",
+            "Gradient/state entries written by solver sweeps",
+            &counters::SOLVER_SWEEPS,
+        );
+        r.register_counter(
+            "liquidsvm_solver_shrink_active",
+            "Sum of active-set sizes at shrink refreshes",
+            &counters::SOLVER_SHRINK_ACTIVE,
+        );
+        r.register_counter(
+            "liquidsvm_solver_unshrink_passes",
+            "Full-gradient verification passes before termination",
+            &counters::SOLVER_UNSHRINK_PASSES,
+        );
+        r.register_counter(
+            "liquidsvm_cell_units_trained",
+            "(cell x task) working sets trained by the cell driver",
+            &counters::CELL_UNITS_TRAINED,
+        );
+        r.register_counter(
+            "liquidsvm_cell_train_us",
+            "Accumulated unit training wall-clock in microseconds",
+            &counters::CELL_TRAIN_US,
+        );
+        r
+    })
+}
+
+/// Exposition name of a family: counters carry the conventional
+/// `_total` suffix, everything else is used as registered.
+fn expo_name(f: &Family) -> String {
+    if f.kind == MetricKind::Counter && !f.name.ends_with("_total") {
+        format!("{}_total", f.name)
+    } else {
+        f.name.clone()
+    }
+}
+
+/// Encode families as Prometheus exposition text.
+pub fn prometheus_text(families: &[Family]) -> String {
+    let mut out = String::new();
+    for f in families {
+        let name = expo_name(f);
+        out.push_str(&format!("# HELP {} {}\n", name, f.help));
+        match &f.value {
+            Value::Counter(v) => {
+                out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+            }
+            Value::Gauge(v) => {
+                out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+            }
+            Value::Histogram(h) => {
+                out.push_str(&format!("# TYPE {name} histogram\n"));
+                let mut cum = 0u64;
+                for &(le, c) in &h.buckets {
+                    cum += c;
+                    if c > 0 {
+                        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+                    }
+                }
+                out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+                out.push_str(&format!("{name}_sum {}\n", h.sum_us));
+                out.push_str(&format!("{name}_count {}\n", h.count));
+            }
+        }
+    }
+    out
+}
+
+/// Encode families as one JSON object keyed by (registered) name.
+pub fn json_text(families: &[Family]) -> String {
+    let mut out = String::from("{");
+    for (i, f) in families.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        match &f.value {
+            Value::Counter(v) => {
+                out.push_str(&format!("\"{}\":{{\"type\":\"counter\",\"value\":{}}}", f.name, v));
+            }
+            Value::Gauge(v) => {
+                let v = if v.is_finite() { *v } else { 0.0 };
+                out.push_str(&format!("\"{}\":{{\"type\":\"gauge\",\"value\":{}}}", f.name, v));
+            }
+            Value::Histogram(h) => {
+                out.push_str(&format!(
+                    "\"{}\":{{\"type\":\"histogram\",\"count\":{},\"sum_us\":{},\"max_us\":{},\"buckets\":[",
+                    f.name, h.count, h.sum_us, h.max_us
+                ));
+                let mut first = true;
+                for &(le, c) in &h.buckets {
+                    if c > 0 {
+                        if !first {
+                            out.push(',');
+                        }
+                        first = false;
+                        out.push_str(&format!("[{le},{c}]"));
+                    }
+                }
+                out.push_str("]}");
+            }
+        }
+    }
+    out.push('}');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_registers_every_static_counter() {
+        let names = global().names();
+        for expected in [
+            "liquidsvm_gram_cache_hits",
+            "liquidsvm_gram_cache_misses",
+            "liquidsvm_gram_allocs",
+            "liquidsvm_gram_gather_entries",
+            "liquidsvm_xla_calls",
+            "liquidsvm_solver_sweeps",
+            "liquidsvm_solver_shrink_active",
+            "liquidsvm_solver_unshrink_passes",
+            "liquidsvm_cell_units_trained",
+            "liquidsvm_cell_train_us",
+        ] {
+            assert!(names.iter().any(|n| n == expected), "missing {expected}");
+        }
+        assert_eq!(names.len(), 10);
+    }
+
+    #[test]
+    fn duplicate_registration_is_ignored() {
+        static C: Counter = Counter::new();
+        let r = Registry::new();
+        r.register_counter("x", "h", &C);
+        r.register_counter("x", "other", &C);
+        assert_eq!(r.names(), vec!["x".to_string()]);
+    }
+
+    #[test]
+    fn registry_reads_live_counter_values() {
+        static C: Counter = Counter::new();
+        let r = Registry::new();
+        r.register_counter("live", "h", &C);
+        C.add(7);
+        match &r.families()[0].value {
+            Value::Counter(v) => assert!(*v >= 7),
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prometheus_counter_gets_total_suffix() {
+        let fams = [Family::counter("liquidsvm_x", "help text", 3)];
+        let text = prometheus_text(&fams);
+        assert!(text.contains("# HELP liquidsvm_x_total help text\n"));
+        assert!(text.contains("# TYPE liquidsvm_x_total counter\n"));
+        assert!(text.contains("liquidsvm_x_total 3\n"));
+    }
+
+    #[test]
+    fn prometheus_histogram_is_cumulative_with_inf() {
+        let h = LatencyHistogram::new();
+        h.record(std::time::Duration::from_micros(100)); // bucket le=127
+        h.record(std::time::Duration::from_micros(100));
+        h.record(std::time::Duration::from_micros(10_000)); // le=16383
+        let fams = [Family::histogram("liquidsvm_lat", "lat", &h)];
+        let text = prometheus_text(&fams);
+        assert!(text.contains("# TYPE liquidsvm_lat histogram\n"));
+        assert!(text.contains("liquidsvm_lat_bucket{le=\"127\"} 2\n"));
+        assert!(text.contains("liquidsvm_lat_bucket{le=\"16383\"} 3\n"), "{text}");
+        assert!(text.contains("liquidsvm_lat_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("liquidsvm_lat_sum 10200\n"));
+        assert!(text.contains("liquidsvm_lat_count 3\n"));
+    }
+
+    #[test]
+    fn json_encodes_each_kind() {
+        let h = LatencyHistogram::new();
+        h.record(std::time::Duration::from_micros(3));
+        let fams = [
+            Family::counter("c", "", 1),
+            Family::gauge("g", "", 2.5),
+            Family::histogram("h", "", &h),
+        ];
+        let text = json_text(&fams);
+        assert!(text.starts_with('{') && text.ends_with('}'));
+        assert!(text.contains("\"c\":{\"type\":\"counter\",\"value\":1}"));
+        assert!(text.contains("\"g\":{\"type\":\"gauge\",\"value\":2.5}"));
+        assert!(text.contains("\"h\":{\"type\":\"histogram\",\"count\":1,\"sum_us\":3,\"max_us\":3,\"buckets\":[[3,1]]}"));
+    }
+}

@@ -100,6 +100,7 @@ impl Batcher {
         model: &Arc<ServedModel>,
         features: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<f32, String>>, SubmitError> {
+        let _sp = crate::obs::span("serve.enqueue");
         let (tx, rx) = mpsc::channel();
         let target = model.route(&features);
         let mut pending = self.pending.lock().unwrap();

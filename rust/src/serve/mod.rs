@@ -84,6 +84,9 @@ pub struct ServeConfig {
     pub max_models: usize,
     /// per-bundle byte budget for lazily loaded shards
     pub max_shard_bytes: u64,
+    /// log any request whose enqueue→response latency reaches this
+    /// many µs (0 = off) — the serve-side slow log
+    pub slow_log_us: u64,
     /// runtime choices (backend, threads) applied to loaded models
     pub model_config: Config,
 }
@@ -99,6 +102,7 @@ impl Default for ServeConfig {
             workers: 2,
             max_models: 8,
             max_shard_bytes: registry::DEFAULT_SHARD_BUDGET,
+            slow_log_us: 0,
             model_config: Config::default(),
         }
     }
@@ -125,6 +129,7 @@ impl Server {
         let addr = listener.local_addr()?;
 
         let stats = Arc::new(ServeStats::new());
+        stats.set_slow_log_us(cfg.slow_log_us);
         let registry = Arc::new(
             Registry::new(cfg.model_config.clone(), cfg.max_models)
                 .shard_budget(cfg.max_shard_bytes),
@@ -311,9 +316,12 @@ fn handle_request(
     batcher: &Batcher,
     stats: &ServeStats,
 ) -> Option<Reply> {
-    let req = match protocol::parse_request(line) {
-        Ok(r) => r,
-        Err(msg) => return Some(Reply::Ready(protocol::err_msg("bad-request", &msg))),
+    let req = {
+        let _sp = crate::obs::span("serve.parse");
+        match protocol::parse_request(line) {
+            Ok(r) => r,
+            Err(msg) => return Some(Reply::Ready(protocol::err_msg("bad-request", &msg))),
+        }
     };
     let reply = match req {
         Request::Quit => return None,
@@ -321,6 +329,20 @@ fn handle_request(
         Request::Stats => Reply::Ready(protocol::ok_msg(
             &stats.report(registry.len(), &registry.shard_usage()),
         )),
+        Request::Metrics { json } => {
+            let fams = metrics_families(registry, stats);
+            if json {
+                Reply::Ready(protocol::ok_msg(&crate::obs::registry::json_text(&fams)))
+            } else {
+                // the protocol's only multi-line response: the header
+                // announces the payload line count so lockstep readers
+                // know how much to consume (see `protocol` docs)
+                let body = crate::obs::registry::prometheus_text(&fams);
+                let body = body.trim_end_matches('\n');
+                let n = body.lines().count();
+                Reply::Ready(format!("ok metrics lines={n}\n{body}"))
+            }
+        }
         Request::Shards { name } => match registry.get(&name) {
             Ok(m) => match m.shard_info() {
                 Some(info) => {
@@ -433,10 +455,80 @@ fn handle_request(
                     }
                 }
             }
+            stats.note_model(&model, rxs.len() as u64);
             Reply::Pending(rxs)
         }
     };
     Some(reply)
+}
+
+/// Scrape-time metric families for this server: the process-global
+/// registry (solver/Gram/cell counters) plus the server's own
+/// instance-local counters, gauges, and the request-latency histogram
+/// (see DESIGN.md §Observability for the exposition contract).
+fn metrics_families(
+    registry: &Registry,
+    stats: &ServeStats,
+) -> Vec<crate::obs::registry::Family> {
+    use crate::obs::registry::Family;
+    let shards = registry.shard_usage();
+    let mut fams = crate::obs::registry::global().families();
+    fams.push(Family::gauge(
+        "liquidsvm_serve_uptime_seconds",
+        "Seconds since this server started",
+        stats.uptime_s() as f64,
+    ));
+    fams.push(Family::gauge(
+        "liquidsvm_serve_models",
+        "Models resident in the registry",
+        registry.len() as f64,
+    ));
+    fams.push(Family::counter(
+        "liquidsvm_serve_requests",
+        "Prediction rows accepted into the batcher",
+        stats.requests.get(),
+    ));
+    fams.push(Family::counter(
+        "liquidsvm_serve_rejected",
+        "Prediction rows rejected with backpressure",
+        stats.rejected.get(),
+    ));
+    fams.push(Family::counter(
+        "liquidsvm_serve_errors",
+        "Prediction rows that failed after acceptance",
+        stats.errors.get(),
+    ));
+    fams.push(Family::counter(
+        "liquidsvm_serve_slow_requests",
+        "Rows whose latency reached the slow-log threshold",
+        stats.slow.get(),
+    ));
+    fams.push(Family::counter(
+        "liquidsvm_serve_batches",
+        "Fused predict calls executed",
+        stats.batches.get(),
+    ));
+    fams.push(Family::counter(
+        "liquidsvm_serve_batched_rows",
+        "Real rows across all executed batches",
+        stats.batched_rows.get(),
+    ));
+    fams.push(Family::counter(
+        "liquidsvm_serve_padded_rows",
+        "Padding rows added to reach shape buckets",
+        stats.padded_rows.get(),
+    ));
+    fams.push(Family::gauge(
+        "liquidsvm_serve_shard_resident_bytes",
+        "Bytes of lazily loaded bundle shards currently resident",
+        shards.resident_bytes as f64,
+    ));
+    fams.push(Family::histogram(
+        "liquidsvm_serve_request_latency_us",
+        "Enqueue to response-ready latency per row (microseconds)",
+        &stats.latency,
+    ));
+    fams
 }
 
 fn collect_predictions(rxs: Vec<mpsc::Receiver<Result<f32, String>>>) -> String {

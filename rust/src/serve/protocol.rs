@@ -13,6 +13,8 @@
 //! unload <name>
 //! stats                       # server-wide counters incl. shard cache
 //! shards <name>               # per-shard residency/hits of a bundle
+//! metrics                     # Prometheus exposition of the registry
+//! metrics json                # same snapshot as one JSON object
 //! ping
 //! quit
 //! ```
@@ -22,8 +24,14 @@
 //! ```text
 //! ok <v1>[;<v2>...]          # predict
 //! ok <message>               # load/unload/stats/shards/ping
+//! ok metrics lines=<N>       # then exactly N payload lines follow
 //! err <code> <message>       # e.g. `err busy retry_after_ms=4`
 //! ```
+//!
+//! `metrics` is the only multi-line response: its header announces the
+//! payload line count so clients reading in lockstep know exactly how
+//! many lines to consume; `metrics json` stays single-line (`ok
+//! <json>`).  See DESIGN.md §Observability for the snapshot schema.
 //!
 //! Error codes: `bad-request` (parse failure), `unknown-model`,
 //! `load-failed`, `dim-mismatch`, `predict-failed`, `not-sharded`
@@ -90,6 +98,8 @@ pub enum Request {
     Stats,
     /// per-shard residency and hit counts of a sharded bundle
     Shards { name: String },
+    /// metrics-registry snapshot: Prometheus text, or JSON with `json`
+    Metrics { json: bool },
     Ping,
     Quit,
 }
@@ -135,6 +145,11 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             Ok(Request::Shards { name: rest.to_string() })
         }
         "stats" => Ok(Request::Stats),
+        "metrics" => match rest {
+            "" => Ok(Request::Metrics { json: false }),
+            "json" => Ok(Request::Metrics { json: true }),
+            other => Err(format!("metrics takes no argument or `json`, got `{other}`")),
+        },
         "ping" => Ok(Request::Ping),
         "quit" => Ok(Request::Quit),
         other => Err(format!("unknown command `{other}`")),
@@ -312,6 +327,9 @@ mod tests {
         );
         assert_eq!(parse_request("unload m").unwrap(), Request::Unload { name: "m".into() });
         assert_eq!(parse_request("shards m").unwrap(), Request::Shards { name: "m".into() });
+        assert_eq!(parse_request("metrics").unwrap(), Request::Metrics { json: false });
+        assert_eq!(parse_request("metrics json").unwrap(), Request::Metrics { json: true });
+        assert!(parse_request("metrics xml").is_err());
     }
 
     #[test]

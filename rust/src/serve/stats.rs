@@ -8,6 +8,9 @@
 //! verifies that a sharded bundle really is serving lazily (resident
 //! bytes below total bundle size).
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use super::registry::ShardUsage;
@@ -29,8 +32,15 @@ pub struct ServeStats {
     pub batched_rows: Counter,
     /// padding rows added to reach shape buckets
     pub padded_rows: Counter,
+    /// batches whose predict exceeded the slow-log threshold
+    pub slow: Counter,
     /// enqueue → response-ready latency per row
     pub latency: LatencyHistogram,
+    /// prediction rows routed per model name (BTreeMap: the `stats`
+    /// line must render deterministically for the golden-parse test)
+    per_model: Mutex<BTreeMap<String, u64>>,
+    /// slow-log threshold in µs (0 = off); set once at server start
+    slow_log_us: AtomicU64,
     started: Instant,
 }
 
@@ -49,15 +59,44 @@ impl ServeStats {
             batches: Counter::new(),
             batched_rows: Counter::new(),
             padded_rows: Counter::new(),
+            slow: Counter::new(),
             latency: LatencyHistogram::new(),
+            per_model: Mutex::new(BTreeMap::new()),
+            slow_log_us: AtomicU64::new(0),
             started: Instant::now(),
         }
+    }
+
+    /// Arm (or disarm, with 0) the slow-request log threshold.
+    pub fn set_slow_log_us(&self, us: u64) {
+        self.slow_log_us.store(us, Ordering::Relaxed);
+    }
+
+    /// Current slow-log threshold in µs (0 = off).
+    pub fn slow_log_us(&self) -> u64 {
+        self.slow_log_us.load(Ordering::Relaxed)
     }
 
     /// Mean real rows per fused predict call.
     pub fn mean_batch(&self) -> f64 {
         let b = self.batches.get();
         if b == 0 { 0.0 } else { self.batched_rows.get() as f64 / b as f64 }
+    }
+
+    /// Whole seconds since the server started.
+    pub fn uptime_s(&self) -> u64 {
+        self.started.elapsed().as_secs()
+    }
+
+    /// Credit `rows` accepted prediction rows to `model`.
+    pub fn note_model(&self, model: &str, rows: u64) {
+        let mut map = self.per_model.lock().unwrap();
+        *map.entry(model.to_string()).or_insert(0) += rows;
+    }
+
+    /// Per-model accepted row counts, sorted by model name.
+    pub fn per_model(&self) -> Vec<(String, u64)> {
+        self.per_model.lock().unwrap().iter().map(|(k, &v)| (k.clone(), v)).collect()
     }
 
     /// Completed rows per second since the server started.
@@ -70,14 +109,27 @@ impl ServeStats {
     /// `shards` carries the registry's aggregated shard-cache usage
     /// (all-zero when no bundle is resident).
     pub fn report(&self, n_models: usize, shards: &ShardUsage) -> String {
+        let per_model = self.per_model();
+        let model_rows = if per_model.is_empty() {
+            String::from("-")
+        } else {
+            per_model
+                .iter()
+                .map(|(name, rows)| format!("{name}:{rows}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
         format!(
-            "models={} requests={} rejected={} errors={} batches={} rows={} pad_rows={} \
-             mean_batch={:.1} rps={:.1} {} mean_us={} \
-             shards={}/{} shard_bytes={}/{} shard_hits={} shard_loads={} shard_evictions={} {}",
+            "models={} uptime_s={} requests={} rejected={} errors={} slow={} batches={} \
+             rows={} pad_rows={} mean_batch={:.1} rps={:.1} {} mean_us={} \
+             shards={}/{} shard_bytes={}/{} shard_hits={} shard_loads={} shard_evictions={} \
+             model_rows={} {}",
             n_models,
+            self.uptime_s(),
             self.requests.get(),
             self.rejected.get(),
             self.errors.get(),
+            self.slow.get(),
             self.batches.get(),
             self.batched_rows.get(),
             self.padded_rows.get(),
@@ -92,6 +144,7 @@ impl ServeStats {
             shards.hits,
             shards.loads,
             shards.evictions,
+            model_rows,
             counters::snapshot().report(),
         )
     }
@@ -120,16 +173,28 @@ mod tests {
             loads: 2,
             evictions: 1,
         };
+        s.note_model("banana", 7);
+        s.note_model("cov", 3);
+        s.note_model("banana", 2);
         let r = s.report(3, &usage);
         for key in [
-            "models=3", "requests=10", "batches=2", "rows=10", "pad_rows=6", "mean_batch=5.0",
-            "p50_us=", "p95_us=", "p99_us=", "gram_hits=", "gram_allocs=", "xla_calls=",
-            "solver_sweeps=", "shrink_active=", "unshrink_passes=",
+            "models=3", "uptime_s=", "requests=10", "slow=0", "batches=2", "rows=10",
+            "pad_rows=6", "mean_batch=5.0",
+            "p50_us=", "p95_us=", "p99_us=", "max_us=", "gram_hits=", "gram_allocs=",
+            "xla_calls=", "solver_sweeps=", "shrink_active=", "unshrink_passes=",
             "shards=2/4", "shard_bytes=2000/4000", "shard_hits=7", "shard_loads=2",
-            "shard_evictions=1",
+            "shard_evictions=1", "model_rows=banana:9,cov:3",
         ] {
             assert!(r.contains(key), "missing {key} in `{r}`");
         }
+    }
+
+    #[test]
+    fn empty_per_model_renders_dash() {
+        let s = ServeStats::new();
+        let r = s.report(0, &ShardUsage::default());
+        assert!(r.contains("model_rows=- "), "`{r}`");
+        assert!(s.per_model().is_empty());
     }
 
     #[test]

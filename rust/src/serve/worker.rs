@@ -139,18 +139,37 @@ pub(crate) fn process_batch(batch: Batch, stats: &ServeStats) {
     // batch's requests and keep draining the queue
     let model = &batch.model;
     let target = batch.target;
-    let preds = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        model.predict_routed(target, &x)
-    }));
+    let preds = {
+        let mut sp = crate::obs::span("serve.predict");
+        sp.add_bytes(4 * (rows * dim) as u64);
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            model.predict_routed(target, &x)
+        }))
+    };
     match preds {
         Ok(Ok(preds)) => {
             stats.batches.inc();
             stats.batched_rows.add(n as u64);
             stats.padded_rows.add((rows - n) as u64);
+            // the slow log fires on enqueue→response latency (the time
+            // a client actually experienced), once per offending batch
+            let slow_us = stats.slow_log_us();
+            let mut slow_max = 0u64;
             for (item, &p) in items.iter().zip(&preds) {
-                stats.latency.record(item.enqueued.elapsed());
+                let lat = item.enqueued.elapsed();
+                if slow_us > 0 && lat.as_micros() as u64 >= slow_us {
+                    stats.slow.inc();
+                    slow_max = slow_max.max(lat.as_micros() as u64);
+                }
+                stats.latency.record(lat);
                 // receiver gone = client disconnected mid-flight; drop silently
                 let _ = item.tx.send(Ok(p));
+            }
+            if slow_max > 0 {
+                eprintln!(
+                    "slow-log: model={} rows={n} max_latency_us={slow_max} threshold_us={slow_us}",
+                    model.name
+                );
             }
         }
         Ok(Err(e)) => {

@@ -309,6 +309,9 @@ pub fn solve_loss<L: Loss, K: GramSource + ?Sized>(
     let n = loss.n();
     assert_eq!(k.rows(), n);
     assert_eq!(k.cols(), n);
+    // one span per solve (never per sweep) — tracing cost stays out of
+    // the coordinate loops, matching the batched Tally idiom below
+    let _sp = crate::obs::span("solver.solve");
     match loss.mode() {
         Mode::Greedy { pairwise } => greedy_cd(loss, k, params, warm, pairwise),
         Mode::Cyclic => cyclic_cd(loss, k, params, warm),

@@ -1,0 +1,247 @@
+//! Integration tests of the observability plane (DESIGN.md
+//! §Observability): the phase-table accounting identity on a real
+//! training run, the serve `metrics` command's Prometheus/JSON wire
+//! formats, and a golden parse of the `stats` line.
+//!
+//! The phase table and enable flag are process-global, so every test
+//! that could record spans (training, or a live server answering
+//! predictions) serializes on [`obs_guard`].
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use liquid_svm::data::synth;
+use liquid_svm::obs;
+use liquid_svm::prelude::*;
+use liquid_svm::serve::{ServeConfig, Server};
+
+fn obs_guard() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poison) => poison.into_inner(),
+    }
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn roundtrip(&mut self, req: &str) -> String {
+        writeln!(self.writer, "{req}").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        line.trim_end().to_string()
+    }
+
+    fn read_line(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        line.trim_end().to_string()
+    }
+}
+
+fn serve_model(max_batch: usize) -> (Server, Client) {
+    let d = synth::banana_binary(150, 61);
+    let model = svm_binary(&d, 0.5, &Config::default().folds(2)).unwrap();
+    let server = Server::start(ServeConfig {
+        port: 0,
+        max_batch,
+        max_delay: Duration::from_millis(1),
+        workers: 2,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    server.registry.insert("banana", model);
+    let client = Client::connect(server.addr());
+    (server, client)
+}
+
+/// The acceptance identity: on a single-threaded traced training run,
+/// the per-phase self times partition the root's wall time — Σself
+/// must land within 10% of the measured wall.
+#[test]
+fn traced_train_self_times_partition_the_wall() {
+    let _g = obs_guard();
+    let train = synth::banana_binary(300, 41);
+    let cfg = Config::default().folds(3).threads(1);
+    // warm-up untraced (allocator, page faults), then the traced run
+    let _ = svm_binary(&train, 0.5, &cfg).unwrap();
+
+    obs::set_enabled(true);
+    obs::reset();
+    let t0 = Instant::now();
+    let _ = svm_binary(&train, 0.5, &cfg).unwrap();
+    let wall_us = t0.elapsed().as_micros() as u64;
+    obs::set_enabled(false);
+
+    let rows = obs::phases();
+    assert!(!rows.is_empty(), "traced run recorded no phases");
+    let names: Vec<&str> = rows.iter().map(|(n, _)| *n).collect();
+    for expect in ["train", "train.cells", "train.grid", "cv.run", "gram.fill", "solver.solve"] {
+        assert!(names.contains(&expect), "missing phase {expect} in {names:?}");
+    }
+
+    let sum_self: u64 = rows.iter().map(|(_, s)| s.self_us).sum();
+    let root = rows.iter().find(|(n, _)| *n == "train").unwrap().1;
+    assert!(root.total_us <= wall_us, "root {root:?} exceeds wall {wall_us}");
+    // Σself telescopes to the roots' totals; everything outside the
+    // `train` span (arg handling here, a few µs) is the only slack
+    let lo = wall_us as f64 * 0.9;
+    let hi = wall_us as f64 * 1.1;
+    assert!(
+        (sum_self as f64) >= lo && (sum_self as f64) <= hi,
+        "Σself {sum_self}µs not within 10% of wall {wall_us}µs: {rows:?}"
+    );
+    obs::reset();
+}
+
+/// `metrics` returns a multi-line Prometheus exposition under the
+/// `ok metrics lines=<N>` framing, covering every registered global
+/// metric and every serve-level family.
+#[test]
+fn serve_metrics_exposition_covers_every_registered_metric() {
+    let _g = obs_guard();
+    let (server, mut c) = serve_model(8);
+
+    // traffic so counters are non-trivial
+    assert!(c.roundtrip("predict banana 0.1,0.2").starts_with("ok "));
+    assert!(c.roundtrip("predict banana 0.3,-0.4").starts_with("ok "));
+
+    let head = c.roundtrip("metrics");
+    let n: usize = head
+        .strip_prefix("ok metrics lines=")
+        .unwrap_or_else(|| panic!("bad metrics header `{head}`"))
+        .parse()
+        .unwrap();
+    assert!(n > 0);
+    let body: Vec<String> = (0..n).map(|_| c.read_line()).collect();
+    let text = body.join("\n");
+
+    // every global registry metric appears…
+    for name in obs::registry::global().names() {
+        assert!(text.contains(&name), "global metric {name} missing from exposition");
+    }
+    // …and every serve-level family
+    for name in [
+        "liquidsvm_serve_uptime_seconds",
+        "liquidsvm_serve_models",
+        "liquidsvm_serve_requests",
+        "liquidsvm_serve_rejected",
+        "liquidsvm_serve_errors",
+        "liquidsvm_serve_slow_requests",
+        "liquidsvm_serve_batches",
+        "liquidsvm_serve_batched_rows",
+        "liquidsvm_serve_padded_rows",
+        "liquidsvm_serve_shard_resident_bytes",
+        "liquidsvm_serve_request_latency_us",
+    ] {
+        assert!(text.contains(name), "serve metric {name} missing from exposition");
+    }
+
+    // exposition-format shape: counters carry the `_total` suffix with
+    // HELP/TYPE comments, histograms end in a +Inf bucket + sum/count
+    assert!(text.contains("# TYPE liquidsvm_serve_requests_total counter"), "{text}");
+    assert!(text.contains("# HELP liquidsvm_serve_requests_total"), "{text}");
+    assert!(text.contains("# TYPE liquidsvm_serve_uptime_seconds gauge"), "{text}");
+    assert!(text.contains("liquidsvm_serve_request_latency_us_bucket{le=\"+Inf\"} 2"), "{text}");
+    assert!(text.contains("liquidsvm_serve_request_latency_us_count 2"), "{text}");
+
+    // every sample line parses as `name[{labels}] value`
+    let mut samples = 0;
+    for line in &body {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        let (_, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad sample `{line}`"));
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in `{line}`"));
+        assert!(v.is_finite() && v >= 0.0, "{line}");
+        samples += 1;
+    }
+    assert!(samples >= 21, "suspiciously few samples: {samples}");
+
+    // the two accepted rows are visible in the counter sample
+    assert!(text.contains("liquidsvm_serve_requests_total 2"), "{text}");
+
+    // the stream is still usable after the multi-line response
+    assert_eq!(c.roundtrip("ping"), "ok pong");
+    server.shutdown();
+}
+
+/// `metrics json` answers on a single line with every family present.
+#[test]
+fn serve_metrics_json_is_single_line() {
+    let _g = obs_guard();
+    let (server, mut c) = serve_model(8);
+    let resp = c.roundtrip("metrics json");
+    let body = resp.strip_prefix("ok ").unwrap_or_else(|| panic!("bad resp `{resp}`"));
+    assert!(body.starts_with('{') && body.ends_with('}'), "{body}");
+    assert!(!body.contains('\n'));
+    for name in obs::registry::global().names() {
+        assert!(body.contains(&format!("\"{name}\"")), "{name} missing from json");
+    }
+    assert!(body.contains("\"liquidsvm_serve_requests\""), "{body}");
+    assert!(body.contains("\"liquidsvm_serve_request_latency_us\""), "{body}");
+    assert!(c.roundtrip("metrics xml").starts_with("err "));
+    server.shutdown();
+}
+
+/// Golden parse of the `stats` wire format: one `ok`-prefixed line of
+/// space-separated `key=value` tokens with the documented keys, whose
+/// values parse under the documented shapes.
+#[test]
+fn stats_line_parses_token_by_token() {
+    let _g = obs_guard();
+    let (server, mut c) = serve_model(8);
+    assert!(c.roundtrip("predict banana 0.5,0.5").starts_with("ok "));
+    assert!(c.roundtrip("predict banana 1.0,-1.0;0.2,0.1").starts_with("ok "));
+
+    let resp = c.roundtrip("stats");
+    let body = resp.strip_prefix("ok ").unwrap_or_else(|| panic!("bad resp `{resp}`"));
+    let mut kv = std::collections::HashMap::new();
+    for tok in body.split_whitespace() {
+        let (k, v) = tok
+            .split_once('=')
+            .unwrap_or_else(|| panic!("token `{tok}` is not key=value in `{body}`"));
+        assert!(kv.insert(k, v).is_none(), "duplicate key {k}");
+    }
+
+    // integer-valued keys
+    for key in [
+        "models", "uptime_s", "requests", "rejected", "errors", "slow", "batches", "rows",
+        "pad_rows", "p50_us", "p95_us", "p99_us", "max_us", "mean_us", "shard_hits",
+        "shard_loads", "shard_evictions", "gram_hits", "gram_misses", "gram_allocs", "xla_calls",
+        "solver_sweeps", "shrink_active", "unshrink_passes", "cell_units", "cell_train_us",
+    ] {
+        let v = kv.get(key).unwrap_or_else(|| panic!("missing {key} in `{body}`"));
+        v.parse::<u64>().unwrap_or_else(|_| panic!("{key}={v} is not an integer"));
+    }
+    // float-valued keys
+    for key in ["mean_batch", "rps"] {
+        let v = kv.get(key).unwrap_or_else(|| panic!("missing {key} in `{body}`"));
+        v.parse::<f64>().unwrap_or_else(|_| panic!("{key}={v} is not a float"));
+    }
+    // ratio-shaped keys: `a/b`
+    for key in ["shards", "shard_bytes"] {
+        let v = kv.get(key).unwrap_or_else(|| panic!("missing {key} in `{body}`"));
+        let (a, b) = v.split_once('/').unwrap_or_else(|| panic!("{key}={v} is not a/b"));
+        a.parse::<u64>().unwrap();
+        b.parse::<u64>().unwrap();
+    }
+    // per-model routing: `name:rows[,name:rows]` after three rows
+    let mr = kv["model_rows"];
+    assert_eq!(mr, "banana:3", "model_rows `{mr}`");
+    assert_eq!(kv["models"], "1");
+    assert_eq!(kv["requests"], "3");
+    server.shutdown();
+}

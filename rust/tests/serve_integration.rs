@@ -95,9 +95,10 @@ fn protocol_end_to_end() {
     assert!(c.roundtrip("predict banana 1,2,3").starts_with("err dim-mismatch"));
 
     let stats = c.roundtrip("stats");
-    assert!(stats.starts_with("ok models=1 requests="), "{stats}");
+    assert!(stats.starts_with("ok models=1 uptime_s="), "{stats}");
     assert!(stats.contains("p99_us="), "{stats}");
     assert!(stats.contains("gram_hits="), "{stats}");
+    assert!(stats.contains("model_rows=banana:"), "{stats}");
 
     assert_eq!(c.roundtrip("unload banana"), "ok unloaded banana");
     assert!(c.roundtrip("predict banana 1,2").starts_with("err unknown-model"));

@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Compare two bench snapshot sets (schema liquidsvm-bench-snapshot/v1).
+
+Each set is a directory of BENCH_<name>.json files written by the
+bench harness (rust/benches/harness.rs, schema documented in
+DESIGN.md §Observability).  The diff is warn-only by design — missing
+benches, new/renamed cases, seed baselines (``"seed": true``, the
+structure-only files committed under rust/benches/snapshots/), and
+environment mismatches all produce warnings, never failures — except
+for one hard gate: a case whose throughput drops by more than the
+threshold (default 2x) against a comparable baseline fails the run.
+
+Usage:
+    bench_diff.py BASELINE_DIR CURRENT_DIR [--fail-threshold X]
+
+Exit status: 0 = ok (possibly with warnings), 1 = real regression,
+2 = usage / unreadable input.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+SCHEMA = "liquidsvm-bench-snapshot/v1"
+
+
+def load_set(dirname):
+    """Read every BENCH_*.json in `dirname`; skip unreadable files."""
+    out = {}
+    for path in sorted(glob.glob(os.path.join(dirname, "BENCH_*.json"))):
+        try:
+            with open(path, encoding="utf-8") as f:
+                snap = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warn: skipping unreadable {path}: {e}")
+            continue
+        if snap.get("schema") != SCHEMA:
+            print(f"warn: {path}: schema {snap.get('schema')!r} != {SCHEMA!r}, skipping")
+            continue
+        out[snap.get("bench", os.path.basename(path))] = snap
+    return out
+
+
+def env_comparable(base, cur):
+    """Timings are only gate-worthy when profile and scale match."""
+    be, ce = base.get("env", {}), cur.get("env", {})
+    reasons = []
+    for key in ("profile", "scale"):
+        if be.get(key) != ce.get(key):
+            reasons.append(f"{key} {be.get(key)!r} vs {ce.get(key)!r}")
+    if be.get("cpus") != ce.get("cpus"):
+        # different core count skews throughput but not catastrophically;
+        # warn, still compare
+        print(f"warn: cpu count differs ({be.get('cpus')} vs {ce.get('cpus')})")
+    return reasons
+
+
+def diff_bench(name, base, cur, threshold):
+    """Compare one bench pair; return the number of hard regressions."""
+    if base.get("seed"):
+        print(f"note: {name}: baseline is a seed snapshot (no timings) — structure check only")
+        base_names = {c.get("name") for c in base.get("cases", [])}
+        for c in cur.get("cases", []):
+            if base_names and c.get("name") not in base_names:
+                print(f"note: {name}/{c.get('name')}: new case (not in seed)")
+        return 0
+
+    mismatch = env_comparable(base, cur)
+    if mismatch:
+        print(f"warn: {name}: env not comparable ({', '.join(mismatch)}) — warn-only")
+
+    base_cases = {c.get("name"): c for c in base.get("cases", [])}
+    cur_cases = {c.get("name"): c for c in cur.get("cases", [])}
+    regressions = 0
+
+    for cname in sorted(base_cases.keys() | cur_cases.keys()):
+        b, c = base_cases.get(cname), cur_cases.get(cname)
+        if b is None:
+            print(f"note: {name}/{cname}: new case")
+            continue
+        if c is None:
+            print(f"warn: {name}/{cname}: case disappeared")
+            continue
+        bt, ct = b.get("throughput", 0) or 0, c.get("throughput", 0) or 0
+        if bt <= 0 or ct <= 0:
+            print(f"note: {name}/{cname}: no throughput to compare")
+            continue
+        ratio = bt / ct
+        unit = c.get("unit", "")
+        line = f"{name}/{cname}: {bt:.3g} -> {ct:.3g} {unit} ({'-' if ratio > 1 else '+'}{abs(1 - 1 / ratio) * 100:.0f}%)"
+        if ratio > threshold:
+            if mismatch:
+                print(f"warn: {line} — would fail, but env differs")
+            else:
+                print(f"REGRESSION: {line} (>{threshold}x slower)")
+                regressions += 1
+        elif ratio < 1 / threshold:
+            print(f"note: {line} (faster)")
+        else:
+            print(f"ok: {line}")
+    return regressions
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="directory with baseline BENCH_*.json")
+    ap.add_argument("current", help="directory with current BENCH_*.json")
+    ap.add_argument(
+        "--fail-threshold",
+        type=float,
+        default=2.0,
+        help="fail when throughput drops by more than this factor (default 2.0)",
+    )
+    args = ap.parse_args()
+
+    for d in (args.baseline, args.current):
+        if not os.path.isdir(d):
+            print(f"error: not a directory: {d}")
+            return 2
+    base_set, cur_set = load_set(args.baseline), load_set(args.current)
+    if not cur_set:
+        print(f"warn: no snapshots found in {args.current} — nothing to compare")
+        return 0
+
+    regressions = 0
+    for name in sorted(cur_set):
+        if name not in base_set:
+            print(f"note: {name}: no baseline snapshot — skipping")
+            continue
+        regressions += diff_bench(name, base_set[name], cur_set[name], args.fail_threshold)
+    for name in sorted(set(base_set) - set(cur_set)):
+        print(f"warn: {name}: baseline exists but no current snapshot")
+
+    if regressions:
+        print(f"bench diff FAILED: {regressions} regression(s) beyond {args.fail_threshold}x")
+        return 1
+    print("bench diff OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
