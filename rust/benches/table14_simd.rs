@@ -4,10 +4,14 @@
 //!
 //!   scalar   — naive per-pair loops            (paper's SSE2 column)
 //!   blocked  — norm-trick + unrolled dots      (paper's AVX/AVX2)
+//!   simd     — explicit std::arch kernels behind the runtime
+//!              dispatch seam (DESIGN.md §Compute-plane), plus the
+//!              opt-in f32 mixed-precision fill
 //!   xla      — AOT Pallas/XLA artifact (PJRT)  (the accelerator rung)
 //!
-//! Measured two ways: the raw multi-γ Gram kernel (10 γ, the CV hot
-//! spot) and a full small training run per backend.
+//! Measured three ways: the raw multi-γ Gram kernel (10 γ, the CV hot
+//! spot), a dimension sweep of the per-rung distance fill (where the
+//! SIMD win scales with d), and a full small training run per backend.
 //!
 //! Paper shape: each rung up is faster; the gap grows with dimension
 //! (d=8 barely moves, d=54/254 clearly does).
@@ -17,10 +21,13 @@ mod harness;
 
 use std::sync::Arc;
 
-use harness::{sized, time_median, time_once, Snapshot, Table};
+use harness::{scale, sized, time_median, time_once, Scale, Snapshot, Table};
 use liquid_svm::coordinator::config::BackendChoice;
+use liquid_svm::data::matrix::Matrix;
+use liquid_svm::data::rng::Rng;
 use liquid_svm::data::synth;
-use liquid_svm::kernel::{GramBackend, KernelKind};
+use liquid_svm::kernel::simd;
+use liquid_svm::kernel::{GramBackend, KernelKind, SimdLevel, SimdPlan};
 use liquid_svm::prelude::*;
 use liquid_svm::runtime::{default_artifact_dir, XlaRuntime};
 
@@ -85,11 +92,94 @@ fn main() {
         );
     }
 
+    // rung sweep: the per-pair distance fill itself, across the full
+    // dispatch ladder and the dimensions where SIMD starts to pay.
+    // (d=8 fits in one lane-group — overhead territory; by d=64 the
+    // vector rungs should clearly win; d=4096 is the wide-feature
+    // regime of the paper's Tables 16-17.)
+    let sweep_n = sized(160, 384, 768);
+    let detected = simd::detect();
+    println!(
+        "\n--- distance-fill rung sweep (n={sweep_n}, detected rung: {}) ---\n",
+        detected.name()
+    );
+    let mut rungs: Vec<(String, GramBackend)> = vec![
+        ("scalar".into(), GramBackend::Scalar),
+        ("blocked".into(), GramBackend::Blocked),
+    ];
+    for level in simd::available() {
+        rungs.push((
+            format!("simd-{}", level.name()),
+            GramBackend::Simd(SimdPlan::forced(level, false)),
+        ));
+    }
+    rungs.push((
+        format!("simd-{}-f32", detected.name()),
+        GramBackend::Simd(SimdPlan::forced(detected, true)),
+    ));
+    let headers: Vec<&str> =
+        std::iter::once("dim").chain(rungs.iter().map(|(l, _)| l.as_str())).collect();
+    let widths: Vec<usize> = std::iter::once(5).chain(rungs.iter().map(|_| 14)).collect();
+    let t_sweep = Table::new(&headers, &widths);
+    let mut sweep_times: Vec<(usize, String, std::time::Duration)> = Vec::new();
+    for d in [8usize, 64, 512, 4096] {
+        let mut rng = Rng::new(d as u64);
+        let x = Matrix::from_vec(
+            (0..sweep_n * d).map(|_| rng.range(-2.0, 2.0)).collect(),
+            sweep_n,
+            d,
+        );
+        let entries = (sweep_n * sweep_n) as f64;
+        let reps = if d >= 512 { 2 } else { 3 };
+        let mut cells: Vec<String> = vec![d.to_string()];
+        for (label, be) in &rungs {
+            let dt = time_median(reps, || be.sq_dists(&x, &x));
+            let eps = entries / dt.as_secs_f64().max(1e-9);
+            cells.push(format!("{:.1}M/s", eps / 1e6));
+            snap.case(&format!("d{d}_{label}"), dt, eps, "entries/s");
+            sweep_times.push((d, label.clone(), dt));
+        }
+        let refs: Vec<&str> = cells.iter().map(|s| s.as_str()).collect();
+        t_sweep.row(&refs);
+    }
+    // smoke-mode regression gate: the auto-detected SIMD rung must not
+    // lose to blocked once the dimension amortizes dispatch (d ≥ 64).
+    // On machines where detection lands on the portable level there is
+    // no vector rung to gate — skip loudly rather than assert noise.
+    if scale() == Scale::Smoke {
+        if detected == SimdLevel::Portable {
+            println!("\n(no vector rung detected — skipping simd≥blocked assertion)");
+        } else {
+            let auto_label = format!("simd-{}", detected.name());
+            for d in [64usize, 512, 4096] {
+                let of = |l: &str| {
+                    sweep_times
+                        .iter()
+                        .find(|(sd, sl, _)| *sd == d && sl == l)
+                        .map(|(_, _, t)| t.as_secs_f64())
+                        .unwrap()
+                };
+                let (t_simd, t_blocked) = (of(&auto_label), of("blocked"));
+                assert!(
+                    t_simd <= t_blocked * 1.10,
+                    "simd rung slower than blocked at d={d}: {t_simd:.4}s vs {t_blocked:.4}s"
+                );
+            }
+            println!("\n(smoke gate: {auto_label} ≥ blocked at d ≥ 64 — ok)");
+        }
+    }
+
     // end-to-end: full training run per backend on one dataset
     println!("\n--- end-to-end training, covtype n={} ---\n", n.min(1000));
     let train = synth::by_name("covtype", n.min(1000), 10).unwrap();
     let t2 = Table::new(&["backend", "train time", "error"], &[10, 11, 8]);
-    for (label, be) in [("scalar", BackendChoice::Scalar), ("blocked", BackendChoice::Blocked), ("xla", BackendChoice::Xla)] {
+    for (label, be) in [
+        ("scalar", BackendChoice::Scalar),
+        ("blocked", BackendChoice::Blocked),
+        ("simd", BackendChoice::Simd),
+        ("simd-f32", BackendChoice::SimdF32),
+        ("xla", BackendChoice::Xla),
+    ] {
         if be == BackendChoice::Xla && xla.is_none() {
             continue;
         }

@@ -17,6 +17,17 @@ pub enum BackendChoice {
     Scalar,
     /// blocked/unrolled CPU loops (the "AVX2" rung) — default
     Blocked,
+    /// explicit-SIMD dispatch seam, auto-detected level
+    /// (DESIGN.md §Compute-plane; `LIQUIDSVM_SIMD` overrides)
+    Simd,
+    /// Simd rung pinned to the AVX2 level (clamped to the CPU)
+    SimdAvx2,
+    /// Simd rung pinned to the AVX-512 level (needs the `avx512`
+    /// cargo feature; clamped to the CPU/build)
+    SimdAvx512,
+    /// Simd rung with the opt-in f32 mixed-precision Gram fill
+    /// (ULP-bounded against the f64-accumulate rungs, not bit-exact)
+    SimdF32,
     /// AOT Pallas/XLA artifacts via PJRT (the CUDA/TPU rung)
     Xla,
 }

@@ -17,7 +17,7 @@ use crate::data::csr::SparseDataset;
 use crate::data::dataset::{distinct_labels, Dataset};
 use crate::data::scale::Scaler;
 use crate::data::store::{Store, StoreRef, WorkingSet};
-use crate::kernel::GramBackend;
+use crate::kernel::{GramBackend, SimdLevel, SimdPlan};
 use crate::metrics::{multiclass_error, Confusion, Loss};
 use crate::runtime::{default_artifact_dir, XlaRuntime};
 use crate::tasks::{combine_predictions, create_tasks_for_classes, TaskSpec};
@@ -54,11 +54,25 @@ pub struct SvmModel {
     backend: GramBackend,
 }
 
-/// Resolve the configured backend into a concrete GramBackend.
+/// Resolve the configured backend into a concrete GramBackend.  The
+/// Simd choices resolve their dispatch plan here — once, up front —
+/// with the documented override order (`LIQUIDSVM_SIMD` env > CLI
+/// level > auto-detect; see DESIGN.md §Compute-plane).
 pub fn make_backend(cfg: &Config) -> Result<GramBackend> {
+    let simd = |cli: Option<SimdLevel>, mixed: bool| -> Result<GramBackend> {
+        let plan = SimdPlan::resolve(cli, mixed).map_err(|e| anyhow!(e))?;
+        if cfg.display > 0 {
+            eprintln!("[backend] {}", plan.describe());
+        }
+        Ok(GramBackend::Simd(plan))
+    };
     Ok(match cfg.backend {
         BackendChoice::Scalar => GramBackend::Scalar,
         BackendChoice::Blocked => GramBackend::Blocked,
+        BackendChoice::Simd => simd(None, false)?,
+        BackendChoice::SimdAvx2 => simd(Some(SimdLevel::Avx2), false)?,
+        BackendChoice::SimdAvx512 => simd(Some(SimdLevel::Avx512), false)?,
+        BackendChoice::SimdF32 => simd(None, true)?,
         BackendChoice::Xla => {
             let dir = cfg.artifact_dir.clone().unwrap_or_else(default_artifact_dir);
             GramBackend::Xla(Arc::new(XlaRuntime::open(dir)?))

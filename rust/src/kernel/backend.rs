@@ -4,6 +4,9 @@
 //! * [`GramBackend::Scalar`]  — naive per-pair loop (the "SSE2" rung);
 //! * [`GramBackend::Blocked`] — norm-trick + register-blocked dot
 //!   products the autovectorizer can chew on (the "AVX/AVX2" rung);
+//! * [`GramBackend::Simd`]    — explicit `std::arch` kernels behind the
+//!   runtime-dispatch seam in [`super::simd`] (portable/AVX2/AVX-512
+//!   levels, all bit-identical to each other);
 //! * [`GramBackend::Xla`]     — the AOT Pallas/XLA artifact executed via
 //!   PJRT (the CUDA/TPU rung).
 
@@ -14,6 +17,7 @@ use crate::data::matrix::{sq_dist, Matrix};
 use crate::data::store::StoreRef;
 use crate::runtime::XlaRuntime;
 
+use super::simd::{self, SimdPlan};
 use super::KernelKind;
 
 /// Strategy for computing (squared-distance and) Gram matrices.
@@ -21,6 +25,7 @@ use super::KernelKind;
 pub enum GramBackend {
     Scalar,
     Blocked,
+    Simd(SimdPlan),
     Xla(Arc<XlaRuntime>),
 }
 
@@ -29,9 +34,22 @@ impl std::fmt::Debug for GramBackend {
         match self {
             GramBackend::Scalar => write!(f, "Scalar"),
             GramBackend::Blocked => write!(f, "Blocked"),
+            GramBackend::Simd(p) => {
+                write!(f, "Simd({}{})", p.level.name(), if p.mixed { "-f32" } else { "" })
+            }
             GramBackend::Xla(_) => write!(f, "Xla"),
         }
     }
+}
+
+/// The per-pair distance rung a streamed Gram source should use —
+/// resolved once at source construction so the per-row/per-pair hot
+/// paths dispatch on a `Copy` tag instead of re-matching the backend.
+#[derive(Clone, Copy, Debug)]
+pub enum PairKernel {
+    Scalar,
+    Blocked,
+    Simd(SimdPlan),
 }
 
 impl Default for GramBackend {
@@ -45,9 +63,23 @@ impl GramBackend {
     pub fn sq_dists(&self, x: &Matrix, y: &Matrix) -> Matrix {
         match self {
             GramBackend::Scalar => sq_dists_scalar(x, y),
+            GramBackend::Simd(p) => simd::sq_dists_simd(*p, x, y),
             // the XLA artifact fuses distances+exp, so the distance-only
             // entry point falls back to the blocked CPU path
             GramBackend::Blocked | GramBackend::Xla(_) => sq_dists_blocked(x, y),
+        }
+    }
+
+    /// The per-pair rung streamed sources should read through — the
+    /// dispatch-seam hook that lets `StreamedGram`/`SparseGram` pick
+    /// up the Simd tables with zero call-site changes.  The Xla rung
+    /// maps to Blocked: its streamed/per-pair fallbacks always were
+    /// the blocked CPU kernels.
+    pub fn pair_kernel(&self) -> PairKernel {
+        match self {
+            GramBackend::Scalar => PairKernel::Scalar,
+            GramBackend::Blocked | GramBackend::Xla(_) => PairKernel::Blocked,
+            GramBackend::Simd(p) => PairKernel::Simd(*p),
         }
     }
 
@@ -85,6 +117,9 @@ impl GramBackend {
     pub fn sq_dists_csr(&self, x: &CsrMatrix, y: &CsrMatrix) -> Matrix {
         let (m, n) = (x.rows(), y.rows());
         assert_eq!(x.cols(), y.cols(), "dimension mismatch");
+        if let GramBackend::Simd(p) = self {
+            return simd::sq_dists_csr_simd(*p, x, y);
+        }
         let mut out = Matrix::zeros(m, n);
         match self {
             GramBackend::Scalar => {
@@ -92,6 +127,7 @@ impl GramBackend {
                     sq_dists_row_csr_scalar(x.row(i), y, out.row_mut(i));
                 }
             }
+            GramBackend::Simd(_) => unreachable!("handled above"),
             GramBackend::Blocked | GramBackend::Xla(_) => {
                 let xn = x.row_sq_norms();
                 let yn = y.row_sq_norms();
@@ -137,6 +173,7 @@ impl GramBackend {
             let row = &mut out[t * n..(t + 1) * n];
             match self {
                 GramBackend::Scalar => sq_dists_row_scalar(x.row(i), y, row),
+                GramBackend::Simd(p) => simd::sq_dists_row_simd(*p, x.row(i), y, xn[i], yn, row),
                 GramBackend::Blocked | GramBackend::Xla(_) => {
                     sq_dists_row_blocked(x.row(i), y, xn[i], yn, row)
                 }

@@ -10,9 +10,11 @@
 
 pub mod backend;
 pub mod plane;
+pub mod simd;
 
 pub use backend::GramBackend;
 pub use plane::{DenseGram, GramBuffer, GramSource, SparseGram, StreamedGram};
+pub use simd::{SimdLevel, SimdPlan};
 
 use crate::data::matrix::Matrix;
 

@@ -31,7 +31,8 @@ use crate::data::matrix::{sq_dist, Matrix};
 use crate::data::store::StoreRef;
 use crate::metrics::counters;
 
-use super::backend::{self, GramBackend};
+use super::backend::{self, GramBackend, PairKernel};
+use super::simd;
 use super::KernelKind;
 
 /// Hand out a fresh identity for a distance source.  [`GramBuffer`]
@@ -246,7 +247,7 @@ pub struct StreamedGram<'a> {
     y: &'a Matrix,
     xn: &'a [f32],
     yn: &'a [f32],
-    scalar: bool,
+    pk: PairKernel,
     kind: KernelKind,
     gamma: f32,
     scratch: [Vec<f32>; 2],
@@ -274,7 +275,7 @@ impl<'a> StreamedGram<'a> {
             y,
             xn,
             yn,
-            scalar: matches!(backend, GramBackend::Scalar),
+            pk: backend.pair_kernel(),
             kind,
             gamma,
             scratch: [vec![0.0; y.rows()], vec![0.0; y.rows()]],
@@ -289,10 +290,14 @@ impl<'a> StreamedGram<'a> {
         }
         let xi = self.x.row(i);
         let buf = &mut self.scratch[slot];
-        if self.scalar {
-            backend::sq_dists_row_scalar(xi, self.y, buf);
-        } else {
-            backend::sq_dists_row_blocked(xi, self.y, self.xn[i], self.yn, buf);
+        match self.pk {
+            PairKernel::Scalar => backend::sq_dists_row_scalar(xi, self.y, buf),
+            PairKernel::Blocked => {
+                backend::sq_dists_row_blocked(xi, self.y, self.xn[i], self.yn, buf)
+            }
+            PairKernel::Simd(p) => {
+                simd::sq_dists_row_simd(p, xi, self.y, self.xn[i], self.yn, buf)
+            }
         }
         for v in buf.iter_mut() {
             *v = self.kind.of_sq_dist(*v, self.gamma);
@@ -301,10 +306,14 @@ impl<'a> StreamedGram<'a> {
     }
 
     fn d2_pair(&self, i: usize, j: usize) -> f32 {
-        if self.scalar {
-            sq_dist(self.x.row(i), self.y.row(j))
-        } else {
-            backend::sq_dist_norms(self.x.row(i), self.y.row(j), self.xn[i], self.yn[j])
+        match self.pk {
+            PairKernel::Scalar => sq_dist(self.x.row(i), self.y.row(j)),
+            PairKernel::Blocked => {
+                backend::sq_dist_norms(self.x.row(i), self.y.row(j), self.xn[i], self.yn[j])
+            }
+            PairKernel::Simd(p) => {
+                simd::sq_dist_norms_simd(p, self.x.row(i), self.y.row(j), self.xn[i], self.yn[j])
+            }
         }
     }
 }
@@ -397,12 +406,15 @@ pub struct SparseGram<'a> {
     y: &'a CsrMatrix,
     xn: &'a [f32],
     yn: &'a [f32],
-    scalar: bool,
+    pk: PairKernel,
     kind: KernelKind,
     gamma: f32,
     scratch: [Vec<f32>; 2],
     resident: [usize; 2],
     flip: usize,
+    /// dense scatter surface for the Simd rung's gather kernels
+    /// (stays empty on the merge-join rungs)
+    scatter: simd::ScatterScratch,
 }
 
 impl<'a> SparseGram<'a> {
@@ -423,12 +435,13 @@ impl<'a> SparseGram<'a> {
             y,
             xn,
             yn,
-            scalar: matches!(backend, GramBackend::Scalar),
+            pk: backend.pair_kernel(),
             kind,
             gamma,
             scratch: [vec![0.0; y.rows()], vec![0.0; y.rows()]],
             resident: [usize::MAX, usize::MAX],
             flip: 0,
+            scatter: simd::ScatterScratch::new(),
         }
     }
 
@@ -438,12 +451,14 @@ impl<'a> SparseGram<'a> {
         }
         let xi = self.x.row(i);
         let buf = &mut self.scratch[slot];
-        if self.scalar {
-            backend::sq_dists_row_csr_scalar(xi, self.y, buf);
-        } else {
-            backend::sq_dists_row_csr_blocked(
+        match self.pk {
+            PairKernel::Scalar => backend::sq_dists_row_csr_scalar(xi, self.y, buf),
+            PairKernel::Blocked => backend::sq_dists_row_csr_blocked(
                 xi, self.y, self.xn[i], self.yn, self.x.cols(), buf,
-            );
+            ),
+            PairKernel::Simd(p) => simd::sq_dists_row_csr_simd(
+                p, xi, self.y, self.xn[i], self.yn, &mut self.scatter, buf,
+            ),
         }
         for v in buf.iter_mut() {
             *v = self.kind.of_sq_dist(*v, self.gamma);
@@ -451,17 +466,25 @@ impl<'a> SparseGram<'a> {
         self.resident[slot] = i;
     }
 
-    fn d2_pair(&self, i: usize, j: usize) -> f32 {
-        if self.scalar {
-            backend::sq_dist_sp(self.x.row(i), self.y.row(j))
-        } else {
-            backend::sq_dist_norms_sp(
+    fn d2_pair(&mut self, i: usize, j: usize) -> f32 {
+        match self.pk {
+            PairKernel::Scalar => backend::sq_dist_sp(self.x.row(i), self.y.row(j)),
+            PairKernel::Blocked => backend::sq_dist_norms_sp(
                 self.x.row(i),
                 self.y.row(j),
                 self.xn[i],
                 self.yn[j],
                 self.x.cols(),
-            )
+            ),
+            PairKernel::Simd(p) => simd::sq_dist_sp_simd(
+                p,
+                self.x.row(i),
+                self.y.row(j),
+                self.xn[i],
+                self.yn[j],
+                self.x.cols(),
+                &mut self.scatter,
+            ),
         }
     }
 }
@@ -511,12 +534,15 @@ impl GramSource for SparseGram<'_> {
         if self.resident[1] == i {
             return self.scratch[1][j];
         }
-        self.kind.of_sq_dist(self.d2_pair(i, j), self.gamma)
+        let d2 = self.d2_pair(i, j);
+        self.kind.of_sq_dist(d2, self.gamma)
     }
 
     /// Active-set gather — same contract as the dense streamed
     /// source: resident rows are indexed, everything else recomputed
-    /// per pair through the sparse distance kernels (O(|idx|·nnz)).
+    /// per pair through the sparse distance kernels (O(|idx|·nnz) for
+    /// the merge-join rungs, O(nnz_i + |idx|·nnz) for the Simd rung's
+    /// scatter/gather route).
     fn gather(&mut self, i: usize, idx: &[usize], out: &mut [f32]) {
         debug_assert_eq!(idx.len(), out.len());
         if crate::obs::enabled() {
@@ -531,7 +557,8 @@ impl GramSource for SparseGram<'_> {
             }
         }
         for (o, &j) in out.iter_mut().zip(idx) {
-            *o = self.kind.of_sq_dist(self.d2_pair(i, j), self.gamma);
+            let d2 = self.d2_pair(i, j);
+            *o = self.kind.of_sq_dist(d2, self.gamma);
         }
     }
 }
@@ -689,21 +716,49 @@ pub fn accumulate_decisions_x(
     };
     let mut sp = crate::obs::span("predict.tiles");
     sp.add_bytes(4 * (m * n) as u64);
-    let scalar = matches!(backend, GramBackend::Scalar);
+    let pk = backend.pair_kernel();
     let step = tile_rows(cap_mb, n);
     match sv {
         StoreRef::Sparse(sv) => {
             let yn = sv.row_sq_norms();
             let d = sv.cols();
             // scratch for sparsifying dense test rows on the fly
+            // (merge-join rungs) / the Simd rung's scatter surface
             let mut si: Vec<u32> = Vec::new();
             let mut sval: Vec<f32> = Vec::new();
+            let mut scatter = simd::ScatterScratch::new();
             let mut r0 = 0;
             while r0 < m {
                 let r1 = (r0 + step).min(m);
                 let tile = buf.ensure((r1 - r0) * n);
                 for (t, i) in (r0..r1).enumerate() {
                     let row = &mut tile[t * n..(t + 1) * n];
+                    if let PairKernel::Simd(p) = pk {
+                        // a dense test row already *is* a scatter
+                        // surface; a sparse one scatters into scratch —
+                        // identical bits either way (dropped zeros only
+                        // contribute exact ±0 products)
+                        match test_x {
+                            StoreRef::Sparse(tm) => simd::sq_dists_row_csr_simd(
+                                p,
+                                tm.row(i),
+                                sv,
+                                xn[i],
+                                &yn,
+                                &mut scatter,
+                                row,
+                            ),
+                            StoreRef::Dense(tm) => simd::sq_dists_row_surface_csr_simd(
+                                p,
+                                tm.row(i),
+                                sv,
+                                xn[i],
+                                &yn,
+                                row,
+                            ),
+                        }
+                        continue;
+                    }
                     let xi: backend::SparseRow = match test_x {
                         StoreRef::Sparse(tm) => tm.row(i),
                         StoreRef::Dense(tm) => {
@@ -718,7 +773,7 @@ pub fn accumulate_decisions_x(
                             (&si, &sval)
                         }
                     };
-                    if scalar {
+                    if matches!(pk, PairKernel::Scalar) {
                         backend::sq_dists_row_csr_scalar(xi, sv, row);
                     } else {
                         backend::sq_dists_row_csr_blocked(xi, sv, xn[i], &yn, d, row);
@@ -744,10 +799,14 @@ pub fn accumulate_decisions_x(
                 for (t, i) in (r0..r1).enumerate() {
                     let row = &mut tile[t * n..(t + 1) * n];
                     test_x.densify_row_into(i, &mut dense_row);
-                    if scalar {
-                        backend::sq_dists_row_scalar(&dense_row, sv, row);
-                    } else {
-                        backend::sq_dists_row_blocked(&dense_row, sv, xn[i], &yn, row);
+                    match pk {
+                        PairKernel::Scalar => backend::sq_dists_row_scalar(&dense_row, sv, row),
+                        PairKernel::Blocked => {
+                            backend::sq_dists_row_blocked(&dense_row, sv, xn[i], &yn, row)
+                        }
+                        PairKernel::Simd(p) => {
+                            simd::sq_dists_row_simd(p, &dense_row, sv, xn[i], &yn, row)
+                        }
                     }
                 }
                 for v in tile.iter_mut() {

@@ -1,0 +1,688 @@
+//! Explicit-SIMD rung of the Gram ladder — runtime-dispatched
+//! `std::arch` kernels behind a single seam (DESIGN.md §Compute-plane).
+//!
+//! The existing rungs are untouched: `Scalar` and `Blocked` keep their
+//! exact accumulation orders and stay the executable bit-exactness
+//! references.  This module adds a third rung, `GramBackend::Simd`,
+//! with three levels sharing ONE canonical accumulation order:
+//!
+//! * `Portable` — plain Rust, 8 f64 accumulator lanes striding the
+//!   element index (`lanes[l] += x[8c+l] as f64 * y[8c+l] as f64`),
+//!   lanes reduced left-to-right from `+0.0`, then a sequential f64
+//!   tail, one final rounding to f32.  This is the executable
+//!   specification of the rung.
+//! * `Avx2` — AVX2+FMA intrinsics.  Bit-identical to `Portable` by
+//!   construction: an f32·f32 product is *exact* in f64 (24×24 ≤ 48
+//!   significand bits < 53), so `fma(x, y, acc)` rounds the same value
+//!   `mul`+`add` rounds, and the per-lane sequences match the portable
+//!   loop term for term.
+//! * `Avx512` — AVX-512F (behind the off-by-default `avx512` cargo
+//!   feature; stdarch stabilized these intrinsics only recently), one
+//!   zmm holding the same 8 lanes.  Same argument, same bits.
+//!
+//! Because every level computes identical bits, clamping a requested
+//! level down to what the CPU/build supports can never change results
+//! — only throughput.  Level resolution (env > CLI > auto-detect) and
+//! the per-level function tables live here; `backend.rs` holds the
+//! `GramBackend::Simd` arms that call through them.
+//!
+//! The opt-in mixed-precision path (`SimdPlan { mixed: true }`)
+//! accumulates in f32 instead (8 lanes, mul+add on every level, so it
+//! is also bit-stable *across levels*) and is only ULP-bounded against
+//! the f64-accumulate rung — the contract `tests/kernel_parity.rs`
+//! pins.
+//!
+//! Sparse rows take a scatter/gather route: the x row is scattered
+//! into a dense zero scratch ([`ScatterScratch`]), each y row's stored
+//! entries are gathered out of it, and the 8 f64 lanes are keyed by
+//! *entry position* rather than column index.  That makes the sparse
+//! Simd plane self-consistent (row/pair/tile all bit-identical) but a
+//! different exactness class from the dense Simd plane — which is why
+//! the default backend stays `Blocked`, whose sparse kernels replicate
+//! the dense bits exactly.
+
+use crate::data::csr::CsrMatrix;
+use crate::data::matrix::Matrix;
+
+use super::backend::SparseRow;
+
+/// SIMD instruction level of the `Simd` rung.  Ordered so that
+/// clamping is `min(requested, detected)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// plain-Rust twin of the vector kernels — the rung's fallback and
+    /// its executable specification (named `scalar` on the CLI/env)
+    Portable,
+    /// AVX2 + FMA
+    Avx2,
+    /// AVX-512F (requires the `avx512` cargo feature)
+    Avx512,
+}
+
+impl SimdLevel {
+    /// Grammar shared by `LIQUIDSVM_SIMD` and the parity tests.
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s {
+            "scalar" | "portable" => Some(SimdLevel::Portable),
+            "avx2" => Some(SimdLevel::Avx2),
+            "avx512" => Some(SimdLevel::Avx512),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Portable => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+        }
+    }
+}
+
+/// Best level this CPU *and* this build support.  Detected once per
+/// process (the paper's ladder is a compile-time choice; here it is a
+/// one-time `cpuid`).
+pub fn detect() -> SimdLevel {
+    static DETECTED: std::sync::OnceLock<SimdLevel> = std::sync::OnceLock::new();
+    *DETECTED.get_or_init(detect_raw)
+}
+
+fn detect_raw() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx512_available() {
+            return SimdLevel::Avx512;
+        }
+        if std::arch::is_x86_64_feature_detected!("avx2")
+            && std::arch::is_x86_64_feature_detected!("fma")
+        {
+            return SimdLevel::Avx2;
+        }
+    }
+    SimdLevel::Portable
+}
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+fn avx512_available() -> bool {
+    std::arch::is_x86_64_feature_detected!("avx512f")
+        && std::arch::is_x86_64_feature_detected!("avx2")
+        && std::arch::is_x86_64_feature_detected!("fma")
+}
+
+#[cfg(all(target_arch = "x86_64", not(feature = "avx512")))]
+fn avx512_available() -> bool {
+    false
+}
+
+/// Every level runnable here, worst to best — what the parity suite
+/// sweeps.
+pub fn available() -> Vec<SimdLevel> {
+    let mut v = vec![SimdLevel::Portable];
+    if detect() >= SimdLevel::Avx2 {
+        v.push(SimdLevel::Avx2);
+    }
+    if detect() >= SimdLevel::Avx512 {
+        v.push(SimdLevel::Avx512);
+    }
+    v
+}
+
+/// Resolved dispatch decision carried inside `GramBackend::Simd`:
+/// which level's function table to use and whether the opt-in f32
+/// mixed-precision accumulation is on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimdPlan {
+    pub level: SimdLevel,
+    /// f32-compute/f32-accumulate Gram fill: faster, ULP-bounded (not
+    /// bit-exact) against the default f64-accumulate rung
+    pub mixed: bool,
+}
+
+impl SimdPlan {
+    /// Resolve a plan with the documented override order: the
+    /// `LIQUIDSVM_SIMD` env escape hatch beats the CLI's level, which
+    /// beats auto-detection; whatever was requested is clamped to what
+    /// this CPU/build can run (safe because all levels compute
+    /// identical bits).  Errors only on an unparseable env value.
+    pub fn resolve(cli: Option<SimdLevel>, mixed: bool) -> Result<SimdPlan, String> {
+        let requested = match env_level()? {
+            Some(l) => Some(l),
+            None => cli,
+        };
+        let level = match requested {
+            Some(l) => l.min(detect()),
+            None => detect(),
+        };
+        Ok(SimdPlan { level, mixed })
+    }
+
+    /// A clamped plan with no env consultation — what tests and benches
+    /// use to pin a level without racing on the process environment.
+    pub fn forced(level: SimdLevel, mixed: bool) -> SimdPlan {
+        SimdPlan { level: level.min(detect()), mixed }
+    }
+
+    /// Table of kernel entry points for this plan's level.
+    #[inline]
+    pub fn kernels(&self) -> &'static SimdKernels {
+        kernels(self.level)
+    }
+
+    /// One-line rung report — tests print this so CI logs show what
+    /// was actually exercised.
+    pub fn describe(&self) -> String {
+        format!(
+            "simd rung: detected={} selected={}{}",
+            detect().name(),
+            self.level.name(),
+            if self.mixed { " precision=f32-mixed" } else { " precision=f64-acc" }
+        )
+    }
+}
+
+fn env_level() -> Result<Option<SimdLevel>, String> {
+    match std::env::var("LIQUIDSVM_SIMD") {
+        Ok(v) if v.trim().is_empty() => Ok(None),
+        Ok(v) => SimdLevel::parse(v.trim()).map(Some).ok_or_else(|| {
+            format!("LIQUIDSVM_SIMD: unknown rung `{v}` (expected scalar|avx2|avx512)")
+        }),
+        Err(_) => Ok(None),
+    }
+}
+
+/// Per-level function table.  All entries share the canonical
+/// accumulation orders documented at the top of this module, so every
+/// table computes identical bits for `dot`/`sp_dot`, and identical
+/// bits for `dot_mp`.
+pub struct SimdKernels {
+    pub level: SimdLevel,
+    /// dense dot, 8-lane f64 accumulation (the bit-exact class)
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// dense dot, 8-lane f32 accumulation (mixed-precision class)
+    pub dot_mp: fn(&[f32], &[f32]) -> f32,
+    /// dot of a dense surface against one CSR row's stored entries,
+    /// 8-lane f64 accumulation keyed by entry position
+    pub sp_dot: fn(&[f32], &[u32], &[f32]) -> f32,
+}
+
+/// Function table for a level.  Levels this build cannot run fall back
+/// to the portable table — bit-identical by the module contract, and
+/// unreachable anyway because [`SimdPlan`] construction clamps.
+pub fn kernels(level: SimdLevel) -> &'static SimdKernels {
+    match level {
+        SimdLevel::Portable => &PORTABLE,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => &x86::AVX2,
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        SimdLevel::Avx512 => &x86::AVX512,
+        #[allow(unreachable_patterns)]
+        _ => &PORTABLE,
+    }
+}
+
+static PORTABLE: SimdKernels = SimdKernels {
+    level: SimdLevel::Portable,
+    dot: dot_f64_portable,
+    dot_mp: dot_f32_portable,
+    sp_dot: sp_dot_portable,
+};
+
+// ------------------------------------------------ portable reference
+
+/// The canonical order, spelled out: 8 f64 lanes striding the element
+/// index, left-to-right lane reduction from `+0.0`, sequential f64
+/// tail, one rounding at the end.
+fn dot_f64_portable(x: &[f32], y: &[f32]) -> f32 {
+    let d = x.len();
+    debug_assert_eq!(d, y.len());
+    let chunks = d / 8;
+    let mut lanes = [0.0f64; 8];
+    for c in 0..chunks {
+        let k = c * 8;
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane += x[k + l] as f64 * y[k + l] as f64;
+        }
+    }
+    let mut dot = 0.0f64;
+    for lane in lanes {
+        dot += lane;
+    }
+    for k in chunks * 8..d {
+        dot += x[k] as f64 * y[k] as f64;
+    }
+    dot as f32
+}
+
+/// Mixed-precision twin: same lane structure, f32 mul+add per term
+/// (two roundings — deliberately *not* fma, so every level reproduces
+/// these bits too and only the contract against the f64 rung is ULP).
+fn dot_f32_portable(x: &[f32], y: &[f32]) -> f32 {
+    let d = x.len();
+    debug_assert_eq!(d, y.len());
+    let chunks = d / 8;
+    let mut lanes = [0.0f32; 8];
+    for c in 0..chunks {
+        let k = c * 8;
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane += x[k + l] * y[k + l];
+        }
+    }
+    let mut dot = 0.0f32;
+    for lane in lanes {
+        dot += lane;
+    }
+    for k in chunks * 8..d {
+        dot += x[k] * y[k];
+    }
+    dot
+}
+
+/// Gather-style sparse dot: `surface` is a dense row (or a scattered
+/// scratch), `(yi, yv)` one CSR row.  Lanes are keyed by the *stored
+/// entry position* `t % 8` — the order a vector gather consumes them.
+fn sp_dot_portable(surface: &[f32], yi: &[u32], yv: &[f32]) -> f32 {
+    let n = yi.len();
+    debug_assert_eq!(n, yv.len());
+    let chunks = n / 8;
+    let mut lanes = [0.0f64; 8];
+    for c in 0..chunks {
+        let k = c * 8;
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane += surface[yi[k + l] as usize] as f64 * yv[k + l] as f64;
+        }
+    }
+    let mut dot = 0.0f64;
+    for lane in lanes {
+        dot += lane;
+    }
+    for k in chunks * 8..n {
+        dot += surface[yi[k] as usize] as f64 * yv[k] as f64;
+    }
+    dot as f32
+}
+
+// ------------------------------------------------------ x86 intrinsics
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{SimdKernels, SimdLevel};
+    use std::arch::x86_64::*;
+
+    pub(super) static AVX2: SimdKernels = SimdKernels {
+        level: SimdLevel::Avx2,
+        dot: dot_f64_avx2,
+        dot_mp: dot_f32_avx2,
+        sp_dot: sp_dot_avx2,
+    };
+
+    #[cfg(feature = "avx512")]
+    pub(super) static AVX512: SimdKernels = SimdKernels {
+        level: SimdLevel::Avx512,
+        dot: dot_f64_avx512,
+        dot_mp: dot_f32_avx2, // same 8-lane mul+add order on purpose
+        sp_dot: sp_dot_avx2,  // gather width is 8 on both levels
+    };
+
+    fn dot_f64_avx2(x: &[f32], y: &[f32]) -> f32 {
+        // SAFETY: this table is only reachable through SimdPlan
+        // clamping, which requires runtime-detected avx2+fma.
+        unsafe { dot_f64_avx2_inner(x, y) }
+    }
+
+    fn dot_f32_avx2(x: &[f32], y: &[f32]) -> f32 {
+        // SAFETY: as above — avx2 detected before this table is used.
+        unsafe { dot_f32_avx2_inner(x, y) }
+    }
+
+    fn sp_dot_avx2(surface: &[f32], yi: &[u32], yv: &[f32]) -> f32 {
+        // SAFETY: as above — avx2+fma detected before this table is
+        // used; gather indices are CSR column indices < surface.len().
+        unsafe { sp_dot_avx2_inner(surface, yi, yv) }
+    }
+
+    /// 8 f64 lanes as two ymm accumulators: lanes 0–3 take element
+    /// positions `8c..8c+3`, lanes 4–7 take `8c+4..8c+7`.  Per-lane
+    /// term sequences are exactly the portable loop's; the products
+    /// are exact in f64, so each fma rounds the same value the
+    /// portable mul+add rounds.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot_f64_avx2_inner(x: &[f32], y: &[f32]) -> f32 {
+        let d = x.len();
+        debug_assert_eq!(d, y.len());
+        let chunks = d / 8;
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let (xp, yp) = (x.as_ptr(), y.as_ptr());
+        for c in 0..chunks {
+            let k = c * 8;
+            let xv = _mm256_loadu_ps(xp.add(k));
+            let yv = _mm256_loadu_ps(yp.add(k));
+            let x_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(xv));
+            let x_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(xv));
+            let y_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(yv));
+            let y_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(yv));
+            acc_lo = _mm256_fmadd_pd(x_lo, y_lo, acc_lo);
+            acc_hi = _mm256_fmadd_pd(x_hi, y_hi, acc_hi);
+        }
+        let mut lanes = [0.0f64; 8];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+        let mut dot = 0.0f64;
+        for lane in lanes {
+            dot += lane;
+        }
+        for k in chunks * 8..d {
+            dot += x[k] as f64 * y[k] as f64;
+        }
+        dot as f32
+    }
+
+    /// f32 mixed-precision path: mul+add (NOT fma) so the per-term
+    /// double rounding matches the portable twin bit for bit.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_f32_avx2_inner(x: &[f32], y: &[f32]) -> f32 {
+        let d = x.len();
+        debug_assert_eq!(d, y.len());
+        let chunks = d / 8;
+        let mut acc = _mm256_setzero_ps();
+        let (xp, yp) = (x.as_ptr(), y.as_ptr());
+        for c in 0..chunks {
+            let k = c * 8;
+            let xv = _mm256_loadu_ps(xp.add(k));
+            let yv = _mm256_loadu_ps(yp.add(k));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, yv));
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut dot = 0.0f32;
+        for lane in lanes {
+            dot += lane;
+        }
+        for k in chunks * 8..d {
+            dot += x[k] * y[k];
+        }
+        dot
+    }
+
+    /// Gather-based sparse dot: 8 column indices per iteration pull
+    /// f32s out of the dense surface, then the same two-ymm f64
+    /// accumulation as the dense kernel, lanes keyed by entry
+    /// position (matching `sp_dot_portable`).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn sp_dot_avx2_inner(surface: &[f32], yi: &[u32], yv: &[f32]) -> f32 {
+        let n = yi.len();
+        debug_assert_eq!(n, yv.len());
+        let chunks = n / 8;
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let sp = surface.as_ptr();
+        for c in 0..chunks {
+            let k = c * 8;
+            let idx = _mm256_loadu_si256(yi.as_ptr().add(k) as *const __m256i);
+            let gathered = _mm256_i32gather_ps::<4>(sp, idx);
+            let vv = _mm256_loadu_ps(yv.as_ptr().add(k));
+            let g_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(gathered));
+            let g_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(gathered));
+            let v_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(vv));
+            let v_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(vv));
+            acc_lo = _mm256_fmadd_pd(g_lo, v_lo, acc_lo);
+            acc_hi = _mm256_fmadd_pd(g_hi, v_hi, acc_hi);
+        }
+        let mut lanes = [0.0f64; 8];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+        let mut dot = 0.0f64;
+        for lane in lanes {
+            dot += lane;
+        }
+        for k in chunks * 8..n {
+            dot += surface[yi[k] as usize] as f64 * yv[k] as f64;
+        }
+        dot as f32
+    }
+
+    #[cfg(feature = "avx512")]
+    fn dot_f64_avx512(x: &[f32], y: &[f32]) -> f32 {
+        // SAFETY: this table is only reachable through SimdPlan
+        // clamping, which requires runtime-detected avx512f.
+        unsafe { dot_f64_avx512_inner(x, y) }
+    }
+
+    /// One zmm holds all 8 f64 lanes; per-lane sequences are identical
+    /// to the avx2 and portable versions, so the bits are too.
+    #[cfg(feature = "avx512")]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn dot_f64_avx512_inner(x: &[f32], y: &[f32]) -> f32 {
+        let d = x.len();
+        debug_assert_eq!(d, y.len());
+        let chunks = d / 8;
+        let mut acc = _mm512_setzero_pd();
+        let (xp, yp) = (x.as_ptr(), y.as_ptr());
+        for c in 0..chunks {
+            let k = c * 8;
+            let xv = _mm512_cvtps_pd(_mm256_loadu_ps(xp.add(k)));
+            let yv = _mm512_cvtps_pd(_mm256_loadu_ps(yp.add(k)));
+            acc = _mm512_fmadd_pd(xv, yv, acc);
+        }
+        let mut lanes = [0.0f64; 8];
+        _mm512_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut dot = 0.0f64;
+        for lane in lanes {
+            dot += lane;
+        }
+        for k in chunks * 8..d {
+            dot += x[k] as f64 * y[k] as f64;
+        }
+        dot as f32
+    }
+}
+
+// ----------------------------------------------- distance entry points
+
+/// One Simd-rung squared distance from precomputed norms.  The clamp
+/// lives here — at the source, exactly where the blocked rung clamps
+/// (`backend::sq_dist_norms`) — so near-duplicate cancellation can
+/// never leak a negative d² downstream.
+#[inline]
+pub fn sq_dist_norms_simd(p: SimdPlan, xi: &[f32], yj: &[f32], xn_i: f32, yn_j: f32) -> f32 {
+    let k = p.kernels();
+    let dot = if p.mixed { (k.dot_mp)(xi, yj) } else { (k.dot)(xi, yj) };
+    (xn_i + yn_j - 2.0 * dot).max(0.0)
+}
+
+/// Squared distances of one dense row against every `y` row —
+/// bit-identical to the corresponding row of [`sq_dists_simd`].
+pub fn sq_dists_row_simd(
+    p: SimdPlan,
+    xi: &[f32],
+    y: &Matrix,
+    xn_i: f32,
+    yn: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), y.rows());
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = sq_dist_norms_simd(p, xi, y.row(j), xn_i, yn[j]);
+    }
+}
+
+/// Full dense distance matrix on the Simd rung.
+pub fn sq_dists_simd(p: SimdPlan, x: &Matrix, y: &Matrix) -> Matrix {
+    let (m, n) = (x.rows(), y.rows());
+    assert_eq!(x.cols(), y.cols(), "dimension mismatch");
+    let xn = x.row_sq_norms();
+    let yn = y.row_sq_norms();
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        sq_dists_row_simd(p, x.row(i), y, xn[i], &yn, out.row_mut(i));
+    }
+    out
+}
+
+/// Reusable dense scratch for the sparse scatter/gather route: sized
+/// to the dimension once, kept all-zero between uses (each scatter is
+/// undone entry-by-entry, so clearing costs O(nnz), not O(d)).
+#[derive(Debug, Default)]
+pub struct ScatterScratch {
+    buf: Vec<f32>,
+}
+
+impl ScatterScratch {
+    pub fn new() -> ScatterScratch {
+        ScatterScratch::default()
+    }
+
+    /// Scatter `row` onto the zeroed surface, run `f` over the dense
+    /// view, then restore the zeros.
+    fn with_row<R>(&mut self, row: SparseRow, d: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        if self.buf.len() < d {
+            self.buf.resize(d, 0.0);
+        }
+        let (idx, val) = row;
+        for (t, &c) in idx.iter().enumerate() {
+            self.buf[c as usize] = val[t];
+        }
+        let out = f(&self.buf[..d]);
+        for &c in idx {
+            self.buf[c as usize] = 0.0;
+        }
+        out
+    }
+}
+
+/// Simd-rung squared distances of a *dense* surface row against every
+/// CSR `y` row.  Shared by the scattered-sparse and dense-test paths
+/// of the predict plane so both produce identical bits.
+pub fn sq_dists_row_surface_csr_simd(
+    p: SimdPlan,
+    surface: &[f32],
+    y: &CsrMatrix,
+    xn_i: f32,
+    yn: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), y.rows());
+    debug_assert!(surface.len() >= y.cols());
+    let k = p.kernels();
+    for (j, o) in out.iter_mut().enumerate() {
+        let (yi, yv) = y.row(j);
+        *o = (xn_i + yn[j] - 2.0 * (k.sp_dot)(surface, yi, yv)).max(0.0);
+    }
+}
+
+/// Simd-rung squared distances of one CSR row against every `y` row:
+/// scatter, gather-dot each `y` row, unscatter.
+pub fn sq_dists_row_csr_simd(
+    p: SimdPlan,
+    xi: SparseRow,
+    y: &CsrMatrix,
+    xn_i: f32,
+    yn: &[f32],
+    scratch: &mut ScatterScratch,
+    out: &mut [f32],
+) {
+    scratch.with_row(xi, y.cols(), |surface| {
+        sq_dists_row_surface_csr_simd(p, surface, y, xn_i, yn, out)
+    })
+}
+
+/// Simd-rung single sparse pair — same scatter route and same clamp
+/// as the row kernel, so per-pair gathers are bit-identical to row
+/// fills (the `SparseGram` streamed source depends on this).
+pub fn sq_dist_sp_simd(
+    p: SimdPlan,
+    a: SparseRow,
+    b: SparseRow,
+    an: f32,
+    bn: f32,
+    d: usize,
+    scratch: &mut ScatterScratch,
+) -> f32 {
+    let k = p.kernels();
+    let (bi, bv) = b;
+    let dot = scratch.with_row(a, d, |surface| (k.sp_dot)(surface, bi, bv));
+    (an + bn - 2.0 * dot).max(0.0)
+}
+
+/// Full CSR distance matrix on the Simd rung.
+pub fn sq_dists_csr_simd(p: SimdPlan, x: &CsrMatrix, y: &CsrMatrix) -> Matrix {
+    let (m, n) = (x.rows(), y.rows());
+    assert_eq!(x.cols(), y.cols(), "dimension mismatch");
+    let xn = x.row_sq_norms();
+    let yn = y.row_sq_norms();
+    let mut scratch = ScatterScratch::new();
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        sq_dists_row_csr_simd(p, x.row(i), y, xn[i], &yn, &mut scratch, out.row_mut(i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randvec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        (0..d).map(|_| rng.range(-2.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn portable_dot_is_correctly_rounded_ref() {
+        // against a plain sequential f64 dot the portable kernel is a
+        // reassociation — both stay within one ulp of the exact value
+        for d in [0usize, 1, 7, 8, 9, 33, 64, 129] {
+            let x = randvec(d, d as u64);
+            let y = randvec(d, d as u64 + 1000);
+            let exact: f64 = x.iter().zip(&y).map(|(a, b)| *a as f64 * *b as f64).sum();
+            let got = dot_f64_portable(&x, &y) as f64;
+            assert!(
+                (got - exact).abs() <= 1e-4 * (1.0 + exact.abs()),
+                "d={d}: {got} vs {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_available_level_matches_portable_bits() {
+        for level in available() {
+            let k = kernels(level);
+            for d in 0..=67usize {
+                let x = randvec(d, d as u64);
+                let y = randvec(d, d as u64 + 500);
+                assert_eq!(
+                    (k.dot)(&x, &y).to_bits(),
+                    dot_f64_portable(&x, &y).to_bits(),
+                    "level={} d={d}",
+                    level.name()
+                );
+                assert_eq!(
+                    (k.dot_mp)(&x, &y).to_bits(),
+                    dot_f32_portable(&x, &y).to_bits(),
+                    "mp level={} d={d}",
+                    level.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_scratch_restores_zeros() {
+        let mut s = ScatterScratch::new();
+        let idx = [1u32, 4, 7];
+        let val = [3.0f32, -2.0, 0.5];
+        let got = s.with_row((&idx, &val), 9, |surf| surf.to_vec());
+        assert_eq!(got, vec![0.0, 3.0, 0.0, 0.0, -2.0, 0.0, 0.0, 0.5, 0.0]);
+        assert!(s.buf.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn detection_is_stable_and_level_order_clamps() {
+        assert_eq!(detect(), detect());
+        assert!(SimdLevel::Portable < SimdLevel::Avx2);
+        assert!(SimdLevel::Avx2 < SimdLevel::Avx512);
+        let p = SimdPlan::forced(SimdLevel::Avx512, false);
+        assert!(p.level <= detect());
+        assert!(p.describe().contains("selected="));
+    }
+}

@@ -190,8 +190,14 @@ fn build_config(args: &Args) -> Result<Config> {
     cfg.backend = match args.get("backend").unwrap_or("blocked") {
         "scalar" => BackendChoice::Scalar,
         "blocked" => BackendChoice::Blocked,
+        "simd" => BackendChoice::Simd,
+        "avx2" => BackendChoice::SimdAvx2,
+        "avx512" => BackendChoice::SimdAvx512,
+        "simd-f32" => BackendChoice::SimdF32,
         "xla" => BackendChoice::Xla,
-        other => bail!("--backend: unknown `{other}`"),
+        other => bail!(
+            "--backend: unknown `{other}` (scalar|blocked|simd|avx2|avx512|simd-f32|xla)"
+        ),
     };
     // sparse data plane: explicit --sparse, or auto-detected from a
     // `.csr` file extension (LIBSVM text read straight into CSR)
@@ -513,7 +519,8 @@ USAGE:
   liquidsvm train [--data NAME|--file PATH] [--scenario binary|mc|mc-ava|ls|qt|ex|npl|roc]
                   [--n N] [--threads T] [--jobs J] [--max-gram-mb MB] [--display D]
                   [--grid-choice 0|1|2] [--adaptivity 0|1|2] [--cells SPEC|--voronoi SPEC]
-                  [--libsvm-grid] [--backend scalar|blocked|xla] [--folds K] [--seed S]
+                  [--libsvm-grid] [--backend scalar|blocked|simd|avx2|avx512|simd-f32|xla]
+                  [--folds K] [--seed S]
                   [--solver-eps E] [--max-iter N] [--shrink-every N]
                   [--sparse] [--dim D] [--density P]
                   [--trace] [--trace-json PATH.json]
@@ -522,7 +529,7 @@ USAGE:
                   [--out PREDICTIONS.txt] [--trace] [--trace-json PATH.json]
   liquidsvm serve [--port P] [--host H] [--models name=a.sol,name2=b.sol.d]
                   [--max-batch B] [--max-delay-ms MS] [--workers W] [--queue-cap Q]
-                  [--max-models M] [--max-shard-mb MB] [--backend scalar|blocked|xla]
+                  [--max-models M] [--max-shard-mb MB] [--backend scalar|blocked|simd|...]
                   [--slow-log-us US]
   liquidsvm client --addr HOST:PORT --model NAME [--data NAME|--file PATH] [--n N]
                    [--connections C] [--pipeline P]
@@ -553,6 +560,15 @@ into CSR and trains through the sparse data plane: no n x d
 densification anywhere, no scaling, cells limited to 0/chunks — the
 path for d in the tens of thousands at sub-percent density.  Without
 --file it generates a synthetic sparse set (--dim, --density).
+`--backend simd` switches the Gram hot loop onto the explicit-SIMD
+dispatch seam: the instruction level (scalar fallback / AVX2 / AVX-512)
+is detected once at startup and can be pinned with `--backend avx2`,
+`--backend avx512`, or the `LIQUIDSVM_SIMD=scalar|avx2|avx512` env
+escape hatch (env beats CLI beats auto-detect; requests the CPU or
+build cannot run are clamped down, which never changes results — all
+levels are bit-identical).  `--backend simd-f32` adds the opt-in f32
+mixed-precision Gram fill (ULP-bounded, not bit-exact) — see the
+README SIMD playbook.
 `--trace` turns on phase tracing and prints the per-phase wall-time
 table to stderr when the run finishes; `--trace-json PATH` additionally
 writes the same breakdown as JSON (implies --trace).  `serve

@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# Regenerate the committed bench baselines under rust/benches/snapshots/.
+#
+# The committed files start life as structure-only seeds ("seed": true,
+# empty cases) so scripts/bench_diff.py has the filenames to compare
+# against without anyone pretending a number was measured.  Running
+# this script on a real machine replaces them with honest measurements
+# (the harness stamps cpu count, git rev, and scale into each file);
+# commit the result and bench_diff's >2x regression gate arms itself.
+#
+# Usage:
+#   scripts/refresh_snapshots.sh            # all benches, smoke scale
+#   scripts/refresh_snapshots.sh --full     # full scale (slow; hours)
+#   scripts/refresh_snapshots.sh table14_simd table_sparse
+#
+# Scale notes: smoke (--quick) is what CI runs and is the right
+# baseline for the CI diff; --full matches the paper's table sizes.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SCALE_ARG="--quick"
+BENCHES=()
+for arg in "$@"; do
+  case "$arg" in
+    --full) SCALE_ARG="" ;;
+    --*) echo "unknown flag: $arg" >&2; exit 2 ;;
+    *) BENCHES+=("$arg") ;;
+  esac
+done
+
+if [ ${#BENCHES[@]} -eq 0 ]; then
+  # every [[bench]] target in the manifest
+  mapfile -t BENCHES < <(sed -n 's/^name = "\(table[^"]*\)"/\1/p' rust/Cargo.toml)
+fi
+
+OUT="$(pwd)/rust/benches/snapshots"
+mkdir -p "$OUT"
+
+for b in "${BENCHES[@]}"; do
+  echo "=== $b ==="
+  if [ -n "$SCALE_ARG" ]; then
+    (cd rust && BENCH_OUT_DIR="$OUT" cargo bench --bench "$b" -- "$SCALE_ARG")
+  else
+    (cd rust && BENCH_OUT_DIR="$OUT" BENCH_SCALE=full cargo bench --bench "$b")
+  fi
+done
+
+echo
+echo "snapshots refreshed under rust/benches/snapshots/ — review and commit:"
+git -C . status --short rust/benches/snapshots/ || true
