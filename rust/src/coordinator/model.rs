@@ -168,16 +168,49 @@ fn run_training(
     model
 }
 
-/// Train a model for a task spec under a config — the whole training +
-/// selection phase.
-pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> {
-    let _sp = crate::obs::span("train");
-    let t0 = Instant::now();
+/// Output of the dense training front-end (scale → classes → cells →
+/// working sets), shared verbatim between the in-process [`train`]
+/// path and the wire coordinator (`distributed::wire`).  One copy on
+/// purpose: the distributed bundle's byte-identity with the
+/// single-process one starts here — both must build the exact same
+/// `(cell, task, working set)` roster in the exact same order.
+pub(crate) struct TrainFrontEnd {
+    pub scaler: Option<Scaler>,
+    pub partition: CellPartition,
+    pub classes: Vec<f32>,
+    pub n_tasks: usize,
+    pub units: Vec<(usize, usize, WorkingSet, crate::tasks::Task)>,
+}
+
+impl TrainFrontEnd {
+    /// The model dimension the bundle manifest records — same
+    /// precedence as [`SvmModel::input_dim`] (the unit list here is in
+    /// the same order the model's units end up in).
+    pub(crate) fn input_dim(&self) -> usize {
+        if let Some(s) = &self.scaler {
+            return s.parts().0.len();
+        }
+        if let Some((_, _, ws, _)) = self.units.iter().find(|(_, _, ws, _)| !ws.is_empty()) {
+            return ws.dim();
+        }
+        match &self.partition.router {
+            CellRouter::Centers(c) => c.cols(),
+            _ => 0,
+        }
+    }
+}
+
+/// Dense training front-end: fit + apply scaling, derive the class
+/// list, cut cells, and cross them with the task roster into
+/// working sets.
+pub(crate) fn build_dense_units(
+    data: &Dataset,
+    spec: &TaskSpec,
+    cfg: &Config,
+) -> Result<TrainFrontEnd> {
     if data.is_empty() {
         return Err(anyhow!("empty training set"));
     }
-    let backend = make_backend(cfg)?;
-
     // scaling fitted on the training set only (paper §B.1)
     let mut scaled = data.clone();
     let scaler = {
@@ -213,7 +246,28 @@ pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> 
             units.push((c, t, ws, task));
         }
     }
-    Ok(run_training(cfg, backend, spec, scaler, partition, classes, n_tasks, units, t0, "train"))
+    Ok(TrainFrontEnd { scaler, partition, classes, n_tasks, units })
+}
+
+/// Train a model for a task spec under a config — the whole training +
+/// selection phase.
+pub fn train(data: &Dataset, spec: &TaskSpec, cfg: &Config) -> Result<SvmModel> {
+    let _sp = crate::obs::span("train");
+    let t0 = Instant::now();
+    let backend = make_backend(cfg)?;
+    let fe = build_dense_units(data, spec, cfg)?;
+    Ok(run_training(
+        cfg,
+        backend,
+        spec,
+        fe.scaler,
+        fe.partition,
+        fe.classes,
+        fe.n_tasks,
+        fe.units,
+        t0,
+        "train",
+    ))
 }
 
 /// Train on a CSR dataset without ever densifying the samples — the
@@ -291,7 +345,7 @@ pub fn train_sparse(data: &SparseDataset, spec: &TaskSpec, cfg: &Config) -> Resu
 /// `cv_jobs` / `cv_gram_mb` are this unit's shares of the process-wide
 /// `--jobs` / `--max-gram-mb` budgets (see [`Config::split_jobs`]).
 #[allow(clippy::too_many_arguments)]
-fn train_unit(
+pub(crate) fn train_unit(
     ws: &WorkingSet,
     solver: crate::solver::SolverKind,
     val_loss: Loss,

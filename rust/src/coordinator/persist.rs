@@ -67,11 +67,29 @@ pub fn save_model(model: &SvmModel, path: &Path) -> Result<()> {
 /// Shared `spec`/`kernel`/`classes`/`n_tasks`/`scaler` header of both
 /// the `.sol` format and the bundle manifest.
 fn write_header(s: &mut String, model: &SvmModel) -> Result<()> {
-    writeln!(s, "spec {}", spec_tag(&model.spec))?;
-    writeln!(s, "kernel {:?}", model.config.kernel)?;
-    writeln!(s, "classes {}", join_f32(&model.classes))?;
-    writeln!(s, "n_tasks {}", model.n_tasks)?;
-    match &model.scaler {
+    write_header_parts(
+        s,
+        &model.spec,
+        model.config.kernel,
+        &model.classes,
+        model.n_tasks,
+        model.scaler.as_ref(),
+    )
+}
+
+fn write_header_parts(
+    s: &mut String,
+    spec: &TaskSpec,
+    kernel: crate::kernel::KernelKind,
+    classes: &[f32],
+    n_tasks: usize,
+    scaler: Option<&Scaler>,
+) -> Result<()> {
+    writeln!(s, "spec {}", spec_tag(spec))?;
+    writeln!(s, "kernel {kernel:?}")?;
+    writeln!(s, "classes {}", join_f32(classes))?;
+    writeln!(s, "n_tasks {n_tasks}")?;
+    match scaler {
         Some(sc) => {
             let (shift, scale) = scaler_parts(sc);
             writeln!(s, "scaler {} {}", join_f32(&shift), join_f32(&scale))?;
@@ -329,19 +347,148 @@ fn parse_strategy(tag: &str) -> Result<CellStrategy> {
     })
 }
 
+/// Serialize one cell's shard — the cell's training indices plus its
+/// solved (cell × task) units — to the exact bytes a `.sol.d/` shard
+/// file holds.  This is the unit of exchange of the distributed wire
+/// protocol (DESIGN.md §Distributed-wire): a worker encodes its shard
+/// with this function and the coordinator writes the bytes verbatim,
+/// which is what makes a distributed bundle byte-identical to a
+/// single-process one by construction.
+pub fn encode_shard(cell: usize, indices: &[usize], units: &[&TrainedUnit]) -> Result<Vec<u8>> {
+    let mut s = String::new();
+    writeln!(s, "{SHARD_MAGIC}")?;
+    writeln!(s, "cell {cell}")?;
+    writeln!(s, "indices {}", join_usize(indices))?;
+    writeln!(s, "units {}", units.len())?;
+    for u in units {
+        write_unit(&mut s, u)?;
+    }
+    Ok(s.into_bytes())
+}
+
+/// Everything the bundle `MANIFEST` records besides the shard table.
+/// [`save_bundle`] derives one from a trained [`SvmModel`]; the wire
+/// coordinator builds one from its training front-end state (it never
+/// holds the full model — shards stream from workers straight to disk).
+#[derive(Clone, Debug)]
+pub struct BundleHeader {
+    pub spec: TaskSpec,
+    pub kernel: crate::kernel::KernelKind,
+    pub classes: Vec<f32>,
+    pub n_tasks: usize,
+    pub scaler: Option<Scaler>,
+    /// expected input dimension (0 = unknown)
+    pub dim: usize,
+    pub strategy: CellStrategy,
+    pub router: CellRouter,
+}
+
+impl BundleHeader {
+    fn manifest_text(&self, shard_lines: &[String]) -> Result<String> {
+        let mut m = String::new();
+        writeln!(m, "{BUNDLE_MAGIC}")?;
+        write_header_parts(
+            &mut m,
+            &self.spec,
+            self.kernel,
+            &self.classes,
+            self.n_tasks,
+            self.scaler.as_ref(),
+        )?;
+        writeln!(m, "dim {}", self.dim)?;
+        writeln!(m, "strategy {}", strategy_tag(&self.strategy))?;
+        write_router(&mut m, &self.router)?;
+        writeln!(m, "shards {}", shard_lines.len())?;
+        for line in shard_lines {
+            writeln!(m, "{line}")?;
+        }
+        Ok(m)
+    }
+}
+
+/// Incremental `.sol.d/` bundle assembly: shards arrive in any order
+/// (the wire coordinator ingests them as workers finish, including
+/// re-dispatched cells), each is written under its cell-derived file
+/// name, and [`finish`](BundleWriter::finish) writes the manifest in
+/// cell order and atomically swaps the bundle into place.  Until then
+/// everything lives in a `<path>.tmp` directory, so readers never see
+/// a partial bundle.
+pub struct BundleWriter {
+    path: PathBuf,
+    tmp: PathBuf,
+    /// per-cell `(file, len, fnv)` — filled as shards arrive
+    shards: Vec<Option<(String, usize, u64)>>,
+}
+
+impl BundleWriter {
+    pub fn create(path: &Path, n_cells: usize) -> Result<BundleWriter> {
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        let tmp = PathBuf::from(tmp_name);
+        if tmp.exists() {
+            std::fs::remove_dir_all(&tmp).with_context(|| format!("clearing {tmp:?}"))?;
+        }
+        std::fs::create_dir_all(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        Ok(BundleWriter { path: path.to_path_buf(), tmp, shards: vec![None; n_cells] })
+    }
+
+    /// Write one cell's shard bytes (as produced by [`encode_shard`]).
+    /// Re-ingesting a cell overwrites the previous copy — harmless,
+    /// since `encode_shard` is deterministic per cell.
+    pub fn put_shard(&mut self, cell: usize, bytes: &[u8]) -> Result<()> {
+        if cell >= self.shards.len() {
+            bail!("shard for cell {cell} out of range ({} cells)", self.shards.len());
+        }
+        let file = format!("shard-{cell:05}.sol");
+        std::fs::write(self.tmp.join(&file), bytes)
+            .with_context(|| format!("writing shard {file}"))?;
+        self.shards[cell] = Some((file, bytes.len(), fnv1a64(bytes)));
+        Ok(())
+    }
+
+    /// Write the manifest and swap the bundle into place.  Errors if
+    /// any cell's shard never arrived.
+    pub fn finish(self, header: &BundleHeader) -> Result<()> {
+        let mut shard_lines = Vec::with_capacity(self.shards.len());
+        for (c, slot) in self.shards.iter().enumerate() {
+            let (file, len, sum) =
+                slot.as_ref().ok_or_else(|| anyhow!("bundle incomplete: no shard for cell {c}"))?;
+            shard_lines.push(format!("shard {c} {file} {len} {sum:016x}"));
+        }
+        let m = header.manifest_text(&shard_lines)?;
+        std::fs::write(self.tmp.join(MANIFEST_FILE), m).context("writing MANIFEST")?;
+        swap_into_place(&self.tmp, &self.path)
+    }
+}
+
+/// Swap a fully-written temporary bundle directory into place.  When
+/// replacing, the previous bundle is renamed aside first and deleted
+/// only after the new one is in place, so a crash at any point leaves
+/// a loadable bundle on disk (at `path`, or recoverable at
+/// `<path>.old`) — never nothing.
+fn swap_into_place(tmp: &Path, path: &Path) -> Result<()> {
+    if path.exists() {
+        let mut old_name = path.as_os_str().to_owned();
+        old_name.push(".old");
+        let old = PathBuf::from(old_name);
+        if old.exists() {
+            std::fs::remove_dir_all(&old).with_context(|| format!("clearing {old:?}"))?;
+        }
+        std::fs::rename(path, &old).with_context(|| format!("setting aside {path:?}"))?;
+        std::fs::rename(tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+        let _ = std::fs::remove_dir_all(&old);
+    } else {
+        std::fs::rename(tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    }
+    Ok(())
+}
+
 /// Write a model as a sharded `.sol.d/` bundle: one shard file per
 /// cell plus a `MANIFEST`, assembled in a temporary directory and
 /// renamed into place as a whole, so readers never see a partial
 /// bundle (a pre-existing bundle at `path` is replaced).
 pub fn save_bundle(model: &SvmModel, path: &Path) -> Result<()> {
     let _sp = crate::obs::span("persist.save");
-    let mut tmp_name = path.as_os_str().to_owned();
-    tmp_name.push(".tmp");
-    let tmp = PathBuf::from(tmp_name);
-    if tmp.exists() {
-        std::fs::remove_dir_all(&tmp).with_context(|| format!("clearing {tmp:?}"))?;
-    }
-    std::fs::create_dir_all(&tmp).with_context(|| format!("creating {tmp:?}"))?;
 
     // group units by cell in one linear pass (models at scale have
     // thousands of cells — an inner filter scan per cell is quadratic)
@@ -353,54 +500,21 @@ pub fn save_bundle(model: &SvmModel, path: &Path) -> Result<()> {
         }
     }
 
-    // one shard per cell: the cell's training indices + its units
-    let mut shard_lines = Vec::with_capacity(n_cells);
+    let mut writer = BundleWriter::create(path, n_cells)?;
     for (c, indices) in model.partition.cells.iter().enumerate() {
-        let mut s = String::new();
-        writeln!(s, "{SHARD_MAGIC}")?;
-        writeln!(s, "cell {c}")?;
-        writeln!(s, "indices {}", join_usize(indices))?;
-        writeln!(s, "units {}", by_cell[c].len())?;
-        for u in &by_cell[c] {
-            write_unit(&mut s, u)?;
-        }
-        let bytes = s.into_bytes();
-        let file = format!("shard-{c:05}.sol");
-        std::fs::write(tmp.join(&file), &bytes)
-            .with_context(|| format!("writing shard {file}"))?;
-        shard_lines.push(format!("shard {c} {file} {} {:016x}", bytes.len(), fnv1a64(&bytes)));
+        let bytes = encode_shard(c, indices, &by_cell[c])?;
+        writer.put_shard(c, &bytes)?;
     }
-
-    let mut m = String::new();
-    writeln!(m, "{BUNDLE_MAGIC}")?;
-    write_header(&mut m, model)?;
-    writeln!(m, "dim {}", model.input_dim())?;
-    writeln!(m, "strategy {}", strategy_tag(&model.config.cells))?;
-    write_router(&mut m, &model.partition.router)?;
-    writeln!(m, "shards {}", shard_lines.len())?;
-    for line in shard_lines {
-        writeln!(m, "{line}")?;
-    }
-    std::fs::write(tmp.join(MANIFEST_FILE), m).context("writing MANIFEST")?;
-
-    // swap the whole bundle into place.  When replacing, the previous
-    // bundle is renamed aside first and deleted only after the new one
-    // is in place, so a crash at any point leaves a loadable bundle on
-    // disk (at `path`, or recoverable at `<path>.old`) — never nothing.
-    if path.exists() {
-        let mut old_name = path.as_os_str().to_owned();
-        old_name.push(".old");
-        let old = PathBuf::from(old_name);
-        if old.exists() {
-            std::fs::remove_dir_all(&old).with_context(|| format!("clearing {old:?}"))?;
-        }
-        std::fs::rename(path, &old).with_context(|| format!("setting aside {path:?}"))?;
-        std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
-        let _ = std::fs::remove_dir_all(&old);
-    } else {
-        std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
-    }
-    Ok(())
+    writer.finish(&BundleHeader {
+        spec: model.spec.clone(),
+        kernel: model.config.kernel,
+        classes: model.classes.clone(),
+        n_tasks: model.n_tasks,
+        scaler: model.scaler.clone(),
+        dim: model.input_dim(),
+        strategy: model.config.cells.clone(),
+        router: model.partition.router.clone(),
+    })
 }
 
 /// Read and parse a bundle's `MANIFEST` (cheap: no shard data).

@@ -1,0 +1,1112 @@
+//! Real distributed training over TCP (DESIGN.md §Distributed-wire).
+//!
+//! The coordinator runs the exact same training front-end as the
+//! in-process [`train`](crate::coordinator::model::train) path —
+//! scale, class list, `make_cells`, the (cell × task) working-set
+//! roster — then ships each cell's working sets to a worker process as
+//! one binary `Job` frame (raw little-endian f32 row blocks; see
+//! [`crate::serve::protocol`]).  Workers run the same per-unit CV grid
+//! ([`train_unit`](crate::coordinator::model::train_unit)) with the
+//! same per-unit seed mix and budget split, serialize the solved cell
+//! with [`persist::encode_shard`] and stream the bytes back; the
+//! coordinator writes them verbatim into a `.sol.d` bundle via
+//! [`persist::BundleWriter`].  Because every stage reuses the
+//! single-process code (front-end, solver, shard encoder, manifest
+//! writer), the distributed bundle is **byte-identical** to
+//! `save_bundle(train(...))` by construction — the integration tests
+//! in `tests/dist_wire.rs` compare the files byte for byte.
+//!
+//! Fault handling: cells are LPT-assigned to workers up front
+//! ([`lpt_assign`]); when a worker disconnects or times out, its
+//! in-flight cell and its remaining queue move to a shared retry queue
+//! that surviving workers drain — a lost worker costs one cell's
+//! re-train, not the run.  A worker that *reports* a deterministic
+//! failure (an `Err` frame) aborts the run instead: re-dispatching a
+//! poison cell would just kill every worker in turn.
+//!
+//! Wall-clock: `measured_wall` in [`WireReport`] is the socket-level
+//! elapsed time of the whole run — the number the Table-4 harness was
+//! previously *modelling*.  The modelled figures (critical path over
+//! the planned assignment; sequential sum + 10%) are computed from the
+//! worker-reported per-cell train times and reported alongside.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cells::CellStrategy;
+use crate::coordinator::config::{BackendChoice, Config};
+use crate::coordinator::driver::lpt_assign;
+use crate::coordinator::model::{build_dense_units, make_backend, train_unit, TrainedUnit};
+use crate::coordinator::persist::{self, BundleHeader, BundleWriter};
+use crate::data::dataset::Dataset;
+use crate::data::folds::FoldKind;
+use crate::data::matrix::Matrix;
+use crate::data::store::WorkingSet;
+use crate::kernel::KernelKind;
+use crate::metrics::counters::{
+    DIST_BYTES_RX, DIST_BYTES_TX, DIST_CELLS_DISPATCHED, DIST_CELLS_REDISPATCHED,
+};
+use crate::metrics::Loss;
+use crate::serve::protocol::{
+    bytes_to_f32s, f32s_to_bytes, hello_ack, hello_line, parse_hello, parse_hello_ack,
+    read_frame, write_frame, FrameTag, WireMode, MAX_LINE,
+};
+use crate::solver::SolverKind;
+use crate::tasks::TaskSpec;
+
+// ------------------------------------------------------------ wire codecs
+
+fn solver_tag(s: &SolverKind) -> String {
+    match s {
+        SolverKind::Hinge { w } => format!("h:{w}"),
+        SolverKind::LeastSquares => "ls".into(),
+        SolverKind::Quantile { tau } => format!("q:{tau}"),
+        SolverKind::Expectile { tau } => format!("e:{tau}"),
+    }
+}
+
+fn parse_solver(tag: &str) -> Result<SolverKind> {
+    let (kind, rest) = tag.split_once(':').unwrap_or((tag, ""));
+    Ok(match kind {
+        "h" => SolverKind::Hinge { w: rest.parse()? },
+        "ls" => SolverKind::LeastSquares,
+        "q" => SolverKind::Quantile { tau: rest.parse()? },
+        "e" => SolverKind::Expectile { tau: rest.parse()? },
+        other => bail!("unknown solver tag `{other}`"),
+    })
+}
+
+fn loss_tag(l: &Loss) -> String {
+    match l {
+        Loss::Classification => "c".into(),
+        Loss::WeightedClassification { w } => format!("wc:{w}"),
+        Loss::LeastSquares => "ls".into(),
+        Loss::Pinball { tau } => format!("p:{tau}"),
+        Loss::Expectile { tau } => format!("ex:{tau}"),
+        Loss::Hinge => "h".into(),
+    }
+}
+
+fn parse_loss(tag: &str) -> Result<Loss> {
+    let (kind, rest) = tag.split_once(':').unwrap_or((tag, ""));
+    Ok(match kind {
+        "c" => Loss::Classification,
+        "wc" => Loss::WeightedClassification { w: rest.parse()? },
+        "ls" => Loss::LeastSquares,
+        "p" => Loss::Pinball { tau: rest.parse()? },
+        "ex" => Loss::Expectile { tau: rest.parse()? },
+        "h" => Loss::Hinge,
+        other => bail!("unknown loss tag `{other}`"),
+    })
+}
+
+fn backend_tag(b: BackendChoice) -> &'static str {
+    match b {
+        BackendChoice::Scalar => "scalar",
+        BackendChoice::Blocked => "blocked",
+        BackendChoice::Simd => "simd",
+        BackendChoice::SimdAvx2 => "avx2",
+        BackendChoice::SimdAvx512 => "avx512",
+        BackendChoice::SimdF32 => "simd-f32",
+        BackendChoice::Xla => "xla",
+    }
+}
+
+fn parse_backend(tag: &str) -> Result<BackendChoice> {
+    Ok(match tag {
+        "scalar" => BackendChoice::Scalar,
+        "blocked" => BackendChoice::Blocked,
+        "simd" => BackendChoice::Simd,
+        "avx2" => BackendChoice::SimdAvx2,
+        "avx512" => BackendChoice::SimdAvx512,
+        "simd-f32" => BackendChoice::SimdF32,
+        "xla" => BackendChoice::Xla,
+        other => bail!("unknown backend tag `{other}`"),
+    })
+}
+
+fn field<'a>(line: &'a str, key: &str) -> Result<&'a str> {
+    line.strip_prefix(key)
+        .map(str::trim)
+        .ok_or_else(|| anyhow!("expected `{key} ...`, got `{line}`"))
+}
+
+/// Encode the session config the worker trains under.  Only the
+/// fields [`train_unit`] reads travel; everything a worker must not
+/// second-guess (scaling, cells) already happened on the coordinator.
+fn encode_cfg(cfg: &Config) -> Vec<u8> {
+    let p = cfg.solver_params;
+    let mut s = String::new();
+    s.push_str("cfg v1\n");
+    s.push_str(&format!("seed {}\n", cfg.seed));
+    s.push_str(&format!("folds {}\n", cfg.folds));
+    s.push_str(&format!("fold_kind {:?}\n", cfg.fold_kind));
+    s.push_str(&format!("grid_choice {}\n", cfg.grid_choice));
+    s.push_str(&format!("libsvm_grid {}\n", cfg.use_libsvm_grid));
+    s.push_str(&format!("adaptivity {}\n", cfg.adaptivity_control));
+    s.push_str(&format!("kernel {:?}\n", cfg.kernel));
+    s.push_str(&format!("select {:?}\n", cfg.select));
+    s.push_str(&format!("solver {} {} {}\n", p.eps, p.max_iter, p.shrink_every));
+    s.push_str(&format!("backend {}\n", backend_tag(cfg.backend)));
+    s.into_bytes()
+}
+
+/// Decode a `Cfg` payload into a worker-side [`Config`].  Starts from
+/// defaults with the coordinator-only knobs neutralized.
+fn decode_cfg(payload: &[u8]) -> Result<Config> {
+    let text = std::str::from_utf8(payload).context("cfg payload not UTF-8")?;
+    let mut lines = text.lines();
+    let mut next = || lines.next().ok_or_else(|| anyhow!("truncated cfg payload"));
+    if next()? != "cfg v1" {
+        bail!("not a cfg v1 payload");
+    }
+    let mut cfg = Config::default().display(0).threads(1);
+    cfg.scale = None; // rows arrive already scaled
+    cfg.cells = CellStrategy::None; // cells were cut on the coordinator
+    cfg.seed = field(next()?, "seed")?.parse()?;
+    cfg.folds = field(next()?, "folds")?.parse()?;
+    cfg.fold_kind = match field(next()?, "fold_kind")? {
+        "Random" => FoldKind::Random,
+        "Stratified" => FoldKind::Stratified,
+        "Block" => FoldKind::Block,
+        "Alternating" => FoldKind::Alternating,
+        other => bail!("unknown fold kind `{other}`"),
+    };
+    cfg.grid_choice = field(next()?, "grid_choice")?.parse()?;
+    cfg.use_libsvm_grid = field(next()?, "libsvm_grid")?.parse()?;
+    cfg.adaptivity_control = field(next()?, "adaptivity")?.parse()?;
+    cfg.kernel = match field(next()?, "kernel")? {
+        "Gauss" => KernelKind::Gauss,
+        "Laplace" => KernelKind::Laplace,
+        other => bail!("unknown kernel `{other}`"),
+    };
+    cfg.select = match field(next()?, "select")? {
+        "FoldAverage" => crate::cv::SelectMethod::FoldAverage,
+        "RetrainOnFull" => crate::cv::SelectMethod::RetrainOnFull,
+        other => bail!("unknown select method `{other}`"),
+    };
+    let toks: Vec<&str> = field(next()?, "solver")?.split_whitespace().collect();
+    if toks.len() != 3 {
+        bail!("solver line arity");
+    }
+    cfg.solver_params.eps = toks[0].parse()?;
+    cfg.solver_params.max_iter = toks[1].parse()?;
+    cfg.solver_params.shrink_every = toks[2].parse()?;
+    cfg.backend = parse_backend(field(next()?, "backend")?)?;
+    Ok(cfg)
+}
+
+/// One cell's training job as it travels the wire.
+struct WireJob {
+    cell: usize,
+    cv_jobs: usize,
+    cv_gram_mb: Option<usize>,
+    /// the cell's training indices (recorded in the shard)
+    indices: Vec<usize>,
+    /// (task index, working set, solver, validation loss)
+    units: Vec<(usize, WorkingSet, SolverKind, Loss)>,
+}
+
+/// `Job` payload: a `u32` header length, a UTF-8 header describing the
+/// cell and its unit roster, then one raw little-endian f32 block pair
+/// (x rows, then y) per unit.
+fn encode_job(
+    cell: usize,
+    cv_jobs: usize,
+    cv_gram_mb: Option<usize>,
+    indices: &[usize],
+    units: &[(usize, &WorkingSet, SolverKind, Loss)],
+) -> Result<Vec<u8>> {
+    let mut h = String::new();
+    h.push_str("job v1\n");
+    h.push_str(&format!("cell {cell}\n"));
+    h.push_str(&format!("budget {} {}\n", cv_jobs, cv_gram_mb.unwrap_or(0)));
+    h.push_str(&format!(
+        "indices {}\n",
+        indices.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(" ")
+    ));
+    h.push_str(&format!("units {}\n", units.len()));
+    for (t, ws, solver, loss) in units {
+        h.push_str(&format!(
+            "unit {t} {} {} {} {}\n",
+            ws.len(),
+            ws.dim(),
+            solver_tag(solver),
+            loss_tag(loss)
+        ));
+    }
+    let header = h.into_bytes();
+    let mut out = Vec::with_capacity(4 + header.len());
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(&header);
+    for (_, ws, _, _) in units {
+        let crate::data::store::Store::Dense(x) = &ws.x else {
+            bail!("wire training is dense-only (sparse cells never reach encode_job)");
+        };
+        out.extend_from_slice(&f32s_to_bytes(x.as_slice()));
+        out.extend_from_slice(&f32s_to_bytes(&ws.y));
+    }
+    Ok(out)
+}
+
+fn decode_job(payload: &[u8]) -> Result<WireJob> {
+    if payload.len() < 4 {
+        bail!("job payload truncated");
+    }
+    let hlen = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+    let body = payload
+        .get(4..4 + hlen)
+        .ok_or_else(|| anyhow!("job header length {hlen} exceeds payload"))?;
+    let text = std::str::from_utf8(body).context("job header not UTF-8")?;
+    let mut lines = text.lines();
+    let mut next = || lines.next().ok_or_else(|| anyhow!("truncated job header"));
+    if next()? != "job v1" {
+        bail!("not a job v1 payload");
+    }
+    let cell: usize = field(next()?, "cell")?.parse()?;
+    let toks: Vec<&str> = field(next()?, "budget")?.split_whitespace().collect();
+    if toks.len() != 2 {
+        bail!("budget line arity");
+    }
+    let cv_jobs: usize = toks[0].parse()?;
+    let gram: usize = toks[1].parse()?;
+    let cv_gram_mb = if gram == 0 { None } else { Some(gram) };
+    let indices: Vec<usize> = field(next()?, "indices")?
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|_| anyhow!("bad index `{t}`")))
+        .collect::<Result<_>>()?;
+    let n_units: usize = field(next()?, "units")?.parse()?;
+    let mut roster = Vec::with_capacity(n_units);
+    for _ in 0..n_units {
+        let toks: Vec<&str> = field(next()?, "unit")?.split_whitespace().collect();
+        if toks.len() != 5 {
+            bail!("unit line arity");
+        }
+        let t: usize = toks[0].parse()?;
+        let rows: usize = toks[1].parse()?;
+        let dim: usize = toks[2].parse()?;
+        roster.push((t, rows, dim, parse_solver(toks[3])?, parse_loss(toks[4])?));
+    }
+    // the f32 blocks follow the header, one (x, y) pair per unit
+    let mut at = 4 + hlen;
+    let mut units = Vec::with_capacity(n_units);
+    for (t, rows, dim, solver, loss) in roster {
+        let xb = rows * dim * 4;
+        let yb = rows * 4;
+        let x_bytes = payload
+            .get(at..at + xb)
+            .ok_or_else(|| anyhow!("job payload truncated in unit {t} x block"))?;
+        let y_bytes = payload
+            .get(at + xb..at + xb + yb)
+            .ok_or_else(|| anyhow!("job payload truncated in unit {t} y block"))?;
+        at += xb + yb;
+        let x = bytes_to_f32s(x_bytes).map_err(|e| anyhow!(e))?;
+        let y = bytes_to_f32s(y_bytes).map_err(|e| anyhow!(e))?;
+        let ws = WorkingSet::dense(Matrix::from_vec(x, rows, dim), y);
+        units.push((t, ws, solver, loss));
+    }
+    if at != payload.len() {
+        bail!("job payload has {} trailing bytes", payload.len() - at);
+    }
+    Ok(WireJob { cell, cv_jobs, cv_gram_mb, indices, units })
+}
+
+/// `Shard` payload: `u32` cell, `u64` worker-measured train µs, then
+/// the exact shard-file bytes ([`persist::encode_shard`]).
+fn encode_shard_reply(cell: usize, train_us: u64, shard: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + shard.len());
+    out.extend_from_slice(&(cell as u32).to_le_bytes());
+    out.extend_from_slice(&train_us.to_le_bytes());
+    out.extend_from_slice(shard);
+    out
+}
+
+fn decode_shard_reply(payload: &[u8]) -> Result<(usize, u64, &[u8])> {
+    if payload.len() < 12 {
+        bail!("shard payload truncated");
+    }
+    let cell = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+    let train_us = u64::from_le_bytes(payload[4..12].try_into().unwrap());
+    Ok((cell, train_us, &payload[12..]))
+}
+
+// ------------------------------------------------------------- worker side
+
+/// Worker-process knobs (the `liquidsvm worker` subcommand).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerOptions {
+    /// override the coordinator-shipped CV job budget (None = obey it)
+    pub jobs: Option<usize>,
+    /// chaos knob for fault-tolerance tests: exit(3) after streaming
+    /// this many shards
+    pub fail_after: Option<usize>,
+    pub display: u8,
+}
+
+/// Serve one coordinator connection: text handshake, then either a
+/// text debug session (`ping`/`quit`) or the binary train session
+/// (`Cfg`, then `Job` → `Shard` until `Done`).
+fn handle_coordinator(
+    stream: TcpStream,
+    opts: &WorkerOptions,
+    shards_sent: &AtomicUsize,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut writer = BufWriter::new(stream);
+
+    // ---- text handshake
+    let mut line = String::new();
+    reader.by_ref().take(MAX_LINE as u64).read_line(&mut line)?;
+    let mode = match parse_hello(&line) {
+        Ok(m) => m,
+        Err(e) => {
+            writeln!(writer, "{}", crate::serve::protocol::err_msg("bad-hello", &e))?;
+            writer.flush()?;
+            return Ok(());
+        }
+    };
+    writeln!(writer, "{}", hello_ack(mode))?;
+    writer.flush()?;
+
+    if mode == WireMode::Text {
+        // debug session: line in, line out
+        loop {
+            let mut line = String::new();
+            if reader.by_ref().take(MAX_LINE as u64).read_line(&mut line)? == 0 {
+                return Ok(());
+            }
+            match line.trim() {
+                "ping" => writeln!(writer, "{}", crate::serve::protocol::ok_msg("pong"))?,
+                "quit" => {
+                    writeln!(writer, "{}", crate::serve::protocol::ok_msg("bye"))?;
+                    writer.flush()?;
+                    return Ok(());
+                }
+                other => writeln!(
+                    writer,
+                    "{}",
+                    crate::serve::protocol::err_msg("bad-request", other)
+                )?,
+            }
+            writer.flush()?;
+        }
+    }
+
+    // ---- binary train session
+    let (tag, payload) = read_frame(&mut reader)?;
+    if tag != FrameTag::Cfg {
+        bail!("expected Cfg frame, got {tag:?}");
+    }
+    let mut cfg = decode_cfg(&payload)?;
+    cfg.display = opts.display;
+    let backend = make_backend(&cfg).map_err(|e| anyhow!("backend: {e}"))?;
+
+    loop {
+        let (tag, payload) = {
+            let mut sp = crate::obs::span("dist.rpc.recv");
+            let got = read_frame(&mut reader)?;
+            sp.add_bytes(got.1.len() as u64 + 5);
+            got
+        };
+        match tag {
+            FrameTag::Job => {
+                let job = match decode_job(&payload) {
+                    Ok(j) => j,
+                    Err(e) => {
+                        // malformed job is deterministic: report, don't die
+                        write_frame(&mut writer, FrameTag::Err, e.to_string().as_bytes())?;
+                        continue;
+                    }
+                };
+                let cv_jobs = opts.jobs.unwrap_or(job.cv_jobs).max(1);
+                let t0 = Instant::now();
+                let mut trained = Vec::with_capacity(job.units.len());
+                for (t, ws, solver, loss) in job.units {
+                    // the exact per-unit seed mix of the in-process driver
+                    let seed = cfg.seed ^ ((job.cell as u64) << 20) ^ t as u64;
+                    let cv = train_unit(
+                        &ws,
+                        solver,
+                        loss,
+                        &cfg,
+                        backend.clone(),
+                        seed,
+                        cv_jobs,
+                        job.cv_gram_mb,
+                    );
+                    trained.push(TrainedUnit { cell: job.cell, task: t, data: ws, cv });
+                }
+                let train_us = t0.elapsed().as_micros() as u64;
+                let refs: Vec<&TrainedUnit> = trained.iter().collect();
+                let shard = persist::encode_shard(job.cell, &job.indices, &refs)?;
+                let reply = encode_shard_reply(job.cell, train_us, &shard);
+                {
+                    let mut sp = crate::obs::span("dist.rpc.send");
+                    write_frame(&mut writer, FrameTag::Shard, &reply)?;
+                    sp.add_bytes(reply.len() as u64 + 5);
+                }
+                if opts.display > 0 {
+                    eprintln!(
+                        "[worker] cell {} done: {} units, {} shard bytes, {:.2}s",
+                        job.cell,
+                        refs.len(),
+                        shard.len(),
+                        train_us as f64 / 1e6
+                    );
+                }
+                let sent = shards_sent.fetch_add(1, Ordering::SeqCst) + 1;
+                if let Some(limit) = opts.fail_after {
+                    if sent >= limit {
+                        // chaos: die abruptly mid-run, like a lost node
+                        eprintln!("[worker] --fail-after {limit} reached, exiting");
+                        std::process::exit(3);
+                    }
+                }
+            }
+            FrameTag::Done => return Ok(()),
+            FrameTag::Err => {
+                let msg = String::from_utf8_lossy(&payload).into_owned();
+                bail!("coordinator error: {msg}");
+            }
+            other => bail!("unexpected frame {other:?} in train session"),
+        }
+    }
+}
+
+/// Accept-and-serve loop of a worker process.  Connections are served
+/// one at a time (a worker is one training engine); `stop` ends the
+/// loop between connections — [`WireWorker`] uses it, the CLI passes
+/// `None` and serves forever.
+pub fn worker_listen(
+    listener: TcpListener,
+    opts: &WorkerOptions,
+    stop: Option<&AtomicBool>,
+) -> Result<()> {
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let shards_sent = AtomicUsize::new(0);
+    loop {
+        if stop.map(|s| s.load(Ordering::SeqCst)).unwrap_or(false) {
+            return Ok(());
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                stream.set_nonblocking(false).ok();
+                if opts.display > 0 {
+                    eprintln!("[worker] coordinator connected from {peer}");
+                }
+                if let Err(e) = handle_coordinator(stream, opts, &shards_sent) {
+                    // a dropped coordinator is routine; log and re-accept
+                    if opts.display > 0 {
+                        eprintln!("[worker] session ended: {e}");
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accepting"),
+        }
+    }
+}
+
+/// An in-process worker on an ephemeral loopback port — the bench and
+/// unit tests use this to exercise the *real* socket path without
+/// spawning processes.  (The fault-tolerance tests spawn real
+/// `liquidsvm worker` processes instead: `--fail-after` has to kill a
+/// process, not a thread.)
+pub struct WireWorker {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WireWorker {
+    pub fn spawn_local(opts: WorkerOptions) -> Result<WireWorker> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding loopback")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            let _ = worker_listen(listener, &opts, Some(&*stop2));
+        });
+        Ok(WireWorker { addr, stop, handle: Some(handle) })
+    }
+
+    /// `host:port` string to pass as a `--workers` entry.
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+}
+
+impl Drop for WireWorker {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// -------------------------------------------------------- coordinator side
+
+/// Coordinator-side socket knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct WireOptions {
+    pub connect_timeout: Duration,
+    /// per-reply read timeout; a worker silent for this long is
+    /// declared lost and its cells re-dispatched (None = wait forever)
+    pub io_timeout: Option<Duration>,
+}
+
+impl Default for WireOptions {
+    fn default() -> Self {
+        WireOptions {
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Some(Duration::from_secs(600)),
+        }
+    }
+}
+
+/// Outcome and accounting of a wire training run.
+#[derive(Clone, Debug)]
+pub struct WireReport {
+    /// worker addresses given
+    pub workers: usize,
+    /// workers still connected when the run finished
+    pub live_workers: usize,
+    pub n_cells: usize,
+    /// worker-reported train time per cell (re-dispatches keep the
+    /// successful attempt's time)
+    pub per_cell_train: Vec<Duration>,
+    /// socket-level wall-clock of the whole run — genuinely measured
+    pub measured_wall: Duration,
+    pub bytes_tx: u64,
+    pub bytes_rx: u64,
+    /// Job frames sent (≥ n_cells when cells were re-dispatched)
+    pub dispatched: u64,
+    /// cells moved to the retry queue after a worker loss
+    pub redispatched: u64,
+    /// modelled distributed wall (critical path over the planned LPT
+    /// assignment) — the simulation's accounting, for comparison
+    pub modelled_distributed: Duration,
+    /// modelled single-node wall (sequential sum + 10% overhead)
+    pub modelled_single_node: Duration,
+}
+
+impl WireReport {
+    pub fn modelled_speedup(&self) -> f64 {
+        self.modelled_single_node.as_secs_f64() / self.modelled_distributed.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Shared dispatch state across the per-worker coordinator threads.
+struct DispatchState {
+    /// per-worker cell queues (the planned LPT assignment)
+    queues: Vec<VecDeque<usize>>,
+    /// cells orphaned by a lost worker, drained by survivors
+    retry: VecDeque<usize>,
+    in_flight: usize,
+    /// per-cell (shard bytes, train µs) as they arrive
+    done: Vec<Option<(Vec<u8>, u64)>>,
+    n_done: usize,
+    live_workers: usize,
+    /// deterministic failure reported by a worker — abort, don't retry
+    failed: Option<String>,
+    redispatched: u64,
+}
+
+struct Shared {
+    state: Mutex<DispatchState>,
+    cv: Condvar,
+}
+
+/// One worker connection's dispatch loop.  Returns when all cells are
+/// done, the run failed, or this worker died (in which case its cells
+/// have been moved to the retry queue).
+#[allow(clippy::too_many_arguments)]
+fn worker_thread(
+    w: usize,
+    stream: TcpStream,
+    shared: &Shared,
+    payloads: &[Vec<u8>],
+    opts: &WireOptions,
+    bytes_tx: &AtomicU64,
+    bytes_rx: &AtomicU64,
+    dispatched: &AtomicU64,
+) {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(opts.io_timeout).ok();
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return mark_worker_dead(w, shared, None),
+    });
+    let mut writer = BufWriter::new(stream);
+    let total = payloads.len();
+
+    loop {
+        // claim the next cell: own queue first, then the retry queue
+        let cell = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.failed.is_some() || st.n_done == total {
+                    drop(st);
+                    // clean end: tell the worker the session is over
+                    let _ = write_frame(&mut writer, FrameTag::Done, &[]);
+                    return;
+                }
+                if let Some(c) = st.queues[w].pop_front().or_else(|| st.retry.pop_front()) {
+                    st.in_flight += 1;
+                    break c;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+
+        // send the job, wait for the shard
+        let send = {
+            let mut sp = crate::obs::span("dist.rpc.send");
+            let r = write_frame(&mut writer, FrameTag::Job, &payloads[cell]);
+            sp.add_bytes(payloads[cell].len() as u64 + 5);
+            r
+        };
+        if send.is_ok() {
+            let n = payloads[cell].len() as u64 + 5;
+            DIST_BYTES_TX.add(n);
+            bytes_tx.fetch_add(n, Ordering::Relaxed);
+            DIST_CELLS_DISPATCHED.inc();
+            dispatched.fetch_add(1, Ordering::Relaxed);
+        }
+        let reply = send.and_then(|_| {
+            let mut sp = crate::obs::span("dist.rpc.recv");
+            let got = read_frame(&mut reader)?;
+            sp.add_bytes(got.1.len() as u64 + 5);
+            Ok(got)
+        });
+
+        match reply {
+            Ok((FrameTag::Shard, payload)) => {
+                let n = payload.len() as u64 + 5;
+                DIST_BYTES_RX.add(n);
+                bytes_rx.fetch_add(n, Ordering::Relaxed);
+                match decode_shard_reply(&payload) {
+                    Ok((got_cell, train_us, shard)) if got_cell == cell => {
+                        let mut st = shared.state.lock().unwrap();
+                        st.in_flight -= 1;
+                        if st.done[cell].is_none() {
+                            st.done[cell] = Some((shard.to_vec(), train_us));
+                            st.n_done += 1;
+                        }
+                        shared.cv.notify_all();
+                    }
+                    Ok((got_cell, _, _)) => {
+                        let mut st = shared.state.lock().unwrap();
+                        st.in_flight -= 1;
+                        st.failed =
+                            Some(format!("worker {w} answered cell {got_cell} for cell {cell}"));
+                        shared.cv.notify_all();
+                        return;
+                    }
+                    Err(e) => {
+                        let mut st = shared.state.lock().unwrap();
+                        st.in_flight -= 1;
+                        st.failed = Some(format!("worker {w} shard reply: {e}"));
+                        shared.cv.notify_all();
+                        return;
+                    }
+                }
+            }
+            Ok((FrameTag::Err, payload)) => {
+                // deterministic failure — re-dispatching would poison
+                // the next worker too
+                let msg = String::from_utf8_lossy(&payload).into_owned();
+                let mut st = shared.state.lock().unwrap();
+                st.in_flight -= 1;
+                st.failed = Some(format!("worker {w} failed on cell {cell}: {msg}"));
+                shared.cv.notify_all();
+                return;
+            }
+            Ok((tag, _)) => {
+                let mut st = shared.state.lock().unwrap();
+                st.in_flight -= 1;
+                st.failed = Some(format!("worker {w}: unexpected {tag:?} frame"));
+                shared.cv.notify_all();
+                return;
+            }
+            Err(_) => {
+                // disconnect or timeout: this worker is lost — requeue
+                // its in-flight cell plus everything still assigned to it
+                return mark_worker_dead(w, shared, Some(cell));
+            }
+        }
+    }
+}
+
+/// Requeue a lost worker's cells and retire it from the pool.
+fn mark_worker_dead(w: usize, shared: &Shared, in_flight_cell: Option<usize>) {
+    let mut st = shared.state.lock().unwrap();
+    let mut moved = 0u64;
+    if let Some(c) = in_flight_cell {
+        st.in_flight -= 1;
+        st.retry.push_back(c);
+        moved += 1;
+    }
+    while let Some(c) = st.queues[w].pop_front() {
+        st.retry.push_back(c);
+        moved += 1;
+    }
+    st.redispatched += moved;
+    DIST_CELLS_REDISPATCHED.add(moved);
+    st.live_workers -= 1;
+    if st.live_workers == 0 && st.n_done < st.done.len() {
+        st.failed = Some("all workers lost".into());
+    }
+    shared.cv.notify_all();
+}
+
+/// Open a train session to one worker: connect, text handshake in
+/// binary mode, ship the session config.
+fn connect_worker(addr: &str, cfg_payload: &[u8], opts: &WireOptions) -> Result<TcpStream> {
+    let sock_addr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("{addr}: no address"))?;
+    let stream = TcpStream::connect_timeout(&sock_addr, opts.connect_timeout)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(opts.connect_timeout)).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream.try_clone()?);
+    writeln!(writer, "{}", hello_line(WireMode::Binary))?;
+    writer.flush()?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mode = parse_hello_ack(&line).map_err(|e| anyhow!("{addr}: {e}"))?;
+    if mode != WireMode::Binary {
+        bail!("{addr}: worker negotiated {mode:?}, wanted Binary");
+    }
+    write_frame(&mut writer, FrameTag::Cfg, cfg_payload)?;
+    Ok(stream)
+}
+
+/// Distributed training over real sockets.  Shards the model's cells
+/// (the `cfg.cells` strategy — the same partition `train` would cut)
+/// across the given workers and assembles the streamed-back shards
+/// into a `.sol.d` bundle at `out`, byte-identical to
+/// `save_bundle(train(data, spec, cfg))`.
+pub fn train_distributed_wire(
+    data: &Dataset,
+    spec: &TaskSpec,
+    cfg: &Config,
+    workers: &[String],
+    out: &Path,
+    opts: &WireOptions,
+) -> Result<WireReport> {
+    let _sp = crate::obs::span("dist.wire");
+    if workers.is_empty() {
+        bail!("no workers given");
+    }
+    let t0 = Instant::now();
+
+    // the exact front-end of the in-process train() path
+    let fe = build_dense_units(data, spec, cfg)?;
+    let n_cells = fe.partition.n_cells();
+    // ship the same per-unit budget shares the in-process driver computes
+    let (driver_threads, cv_jobs) = cfg.split_jobs(fe.units.len());
+    let cv_gram_mb = cfg.max_gram_mb.map(|mb| (mb / driver_threads.max(1)).max(1));
+
+    // group the unit roster by cell and pre-encode every Job frame
+    let mut by_cell: Vec<Vec<(usize, &WorkingSet, SolverKind, Loss)>> = vec![Vec::new(); n_cells];
+    for (c, t, ws, task) in &fe.units {
+        by_cell[*c].push((*t, ws, task.solver, task.val_loss));
+    }
+    let mut payloads = Vec::with_capacity(n_cells);
+    for (c, units) in by_cell.iter().enumerate() {
+        payloads.push(encode_job(c, cv_jobs, cv_gram_mb, &fe.partition.cells[c], units)?);
+    }
+
+    // LPT-plan cells onto workers by training-row weight
+    let weights: Vec<u64> = by_cell
+        .iter()
+        .map(|units| units.iter().map(|(_, ws, _, _)| ws.len() as u64).sum::<u64>().max(1))
+        .collect();
+    let assignment = lpt_assign(&weights, workers.len());
+
+    // connect everyone up front; a worker that never answers is simply
+    // not part of the pool (its planned cells start on the retry queue)
+    let cfg_payload = encode_cfg(cfg);
+    let mut streams: Vec<Option<TcpStream>> = Vec::with_capacity(workers.len());
+    for addr in workers {
+        match connect_worker(addr, &cfg_payload, opts) {
+            Ok(s) => {
+                s.set_read_timeout(opts.io_timeout).ok();
+                streams.push(Some(s));
+            }
+            Err(e) => {
+                if cfg.display > 0 {
+                    eprintln!("[dist] worker {addr} unavailable: {e}");
+                }
+                streams.push(None);
+            }
+        }
+    }
+    let live = streams.iter().filter(|s| s.is_some()).count();
+    if live == 0 {
+        bail!("none of the {} workers are reachable", workers.len());
+    }
+
+    let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); workers.len()];
+    let mut retry = VecDeque::new();
+    for (c, &w) in assignment.iter().enumerate() {
+        if streams[w].is_some() {
+            queues[w].push_back(c);
+        } else {
+            retry.push_back(c);
+        }
+    }
+    let shared = Arc::new(Shared {
+        state: Mutex::new(DispatchState {
+            queues,
+            retry,
+            in_flight: 0,
+            done: vec![None; n_cells],
+            n_done: 0,
+            live_workers: live,
+            failed: None,
+            redispatched: 0,
+        }),
+        cv: Condvar::new(),
+    });
+    let payloads = Arc::new(payloads);
+    let bytes_tx = Arc::new(AtomicU64::new(0));
+    let bytes_rx = Arc::new(AtomicU64::new(0));
+    let dispatched = Arc::new(AtomicU64::new(0));
+
+    std::thread::scope(|scope| {
+        for (w, slot) in streams.into_iter().enumerate() {
+            let Some(stream) = slot else { continue };
+            let shared = Arc::clone(&shared);
+            let payloads = Arc::clone(&payloads);
+            let bytes_tx = Arc::clone(&bytes_tx);
+            let bytes_rx = Arc::clone(&bytes_rx);
+            let dispatched = Arc::clone(&dispatched);
+            let opts = *opts;
+            scope.spawn(move || {
+                worker_thread(
+                    w, stream, &shared, &payloads, &opts, &bytes_tx, &bytes_rx, &dispatched,
+                )
+            });
+        }
+    });
+
+    let st = shared.state.lock().unwrap();
+    if let Some(msg) = &st.failed {
+        bail!("distributed train failed: {msg}");
+    }
+    if st.n_done != n_cells {
+        bail!("distributed train incomplete: {}/{} cells", st.n_done, n_cells);
+    }
+
+    // stream the shards into the bundle, manifest in cell order
+    let mut writer = BundleWriter::create(out, n_cells)?;
+    let mut per_cell_train = Vec::with_capacity(n_cells);
+    for (c, slot) in st.done.iter().enumerate() {
+        let (bytes, train_us) = slot.as_ref().expect("n_done == n_cells");
+        writer.put_shard(c, bytes)?;
+        per_cell_train.push(Duration::from_micros(*train_us));
+    }
+    writer.finish(&BundleHeader {
+        spec: spec.clone(),
+        kernel: cfg.kernel,
+        classes: fe.classes.clone(),
+        n_tasks: fe.n_tasks,
+        scaler: fe.scaler.clone(),
+        dim: fe.input_dim(),
+        strategy: cfg.cells.clone(),
+        router: fe.partition.router.clone(),
+    })?;
+
+    // modelled accounting (the simulation's formulas) for comparison
+    let mut worker_time = vec![Duration::ZERO; workers.len()];
+    for (c, &w) in assignment.iter().enumerate() {
+        worker_time[w] += per_cell_train[c];
+    }
+    let modelled_distributed =
+        worker_time.into_iter().max().unwrap_or(Duration::ZERO).max(Duration::from_micros(1));
+    let total: Duration = per_cell_train.iter().sum();
+    let modelled_single_node = total + total / 10;
+
+    Ok(WireReport {
+        workers: workers.len(),
+        live_workers: st.live_workers,
+        n_cells,
+        per_cell_train,
+        measured_wall: t0.elapsed(),
+        bytes_tx: bytes_tx.load(Ordering::Relaxed),
+        bytes_rx: bytes_rx.load(Ordering::Relaxed),
+        dispatched: dispatched.load(Ordering::Relaxed),
+        redispatched: st.redispatched,
+        modelled_distributed,
+        modelled_single_node,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn cfg_payload_roundtrip() {
+        let cfg = Config::default()
+            .folds(4)
+            .seed(7)
+            .grid_choice(1)
+            .libsvm_grid(true)
+            .solver_eps(5e-4);
+        let back = decode_cfg(&encode_cfg(&cfg)).unwrap();
+        assert_eq!(back.folds, 4);
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.grid_choice, 1);
+        assert!(back.use_libsvm_grid);
+        assert_eq!(back.solver_params.eps.to_bits(), 5e-4f32.to_bits());
+        assert_eq!(back.kernel, cfg.kernel);
+        assert_eq!(back.backend, cfg.backend);
+        assert!(decode_cfg(b"not a cfg").is_err());
+    }
+
+    #[test]
+    fn job_payload_roundtrip_bit_exact() {
+        let d = synth::banana_binary(40, 9);
+        let ws = WorkingSet::dense(d.x.clone(), d.y.clone());
+        let units = vec![(0usize, &ws, SolverKind::Hinge { w: 0.5 }, Loss::Classification)];
+        let indices: Vec<usize> = (0..40).collect();
+        let payload = encode_job(3, 2, Some(64), &indices, &units).unwrap();
+        let job = decode_job(&payload).unwrap();
+        assert_eq!(job.cell, 3);
+        assert_eq!(job.cv_jobs, 2);
+        assert_eq!(job.cv_gram_mb, Some(64));
+        assert_eq!(job.indices, indices);
+        assert_eq!(job.units.len(), 1);
+        let (t, back, solver, loss) = &job.units[0];
+        assert_eq!(*t, 0);
+        assert_eq!(*solver, SolverKind::Hinge { w: 0.5 });
+        assert_eq!(*loss, Loss::Classification);
+        let crate::data::store::Store::Dense(x) = &back.x else { panic!() };
+        // bit-exact: the wire never converts floats through text
+        assert!(x
+            .as_slice()
+            .iter()
+            .zip(d.x.as_slice())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(back.y, d.y);
+        // truncation is an error, not a panic
+        assert!(decode_job(&payload[..payload.len() - 8]).is_err());
+        assert!(decode_job(&payload[..2]).is_err());
+    }
+
+    #[test]
+    fn shard_reply_roundtrip() {
+        let reply = encode_shard_reply(12, 34_567, b"shard-bytes");
+        let (cell, us, bytes) = decode_shard_reply(&reply).unwrap();
+        assert_eq!((cell, us), (12, 34_567));
+        assert_eq!(bytes, b"shard-bytes");
+        assert!(decode_shard_reply(&reply[..7]).is_err());
+    }
+
+    #[test]
+    fn solver_and_loss_tags_roundtrip() {
+        for s in [
+            SolverKind::Hinge { w: 0.31 },
+            SolverKind::LeastSquares,
+            SolverKind::Quantile { tau: 0.05 },
+            SolverKind::Expectile { tau: 0.95 },
+        ] {
+            assert_eq!(parse_solver(&solver_tag(&s)).unwrap(), s);
+        }
+        for l in [
+            Loss::Classification,
+            Loss::WeightedClassification { w: 0.7 },
+            Loss::LeastSquares,
+            Loss::Pinball { tau: 0.1 },
+            Loss::Expectile { tau: 0.9 },
+            Loss::Hinge,
+        ] {
+            assert_eq!(parse_loss(&loss_tag(&l)).unwrap(), l);
+        }
+        assert!(parse_solver("zz").is_err());
+        assert!(parse_loss("zz").is_err());
+    }
+
+    #[test]
+    fn loopback_wire_matches_single_process_bundle() {
+        use crate::coordinator::model::train;
+        use crate::coordinator::persist::save_bundle;
+
+        let d = synth::by_name("covtype", 500, 21).unwrap();
+        let cfg = Config::default().folds(2).voronoi(CellStrategy::Voronoi { size: 120 });
+        let spec = TaskSpec::Binary { w: 0.5 };
+
+        let dir = std::env::temp_dir().join(format!("lsvm-wire-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mono = dir.join("mono.sol.d");
+        let dist = dir.join("dist.sol.d");
+
+        let model = train(&d, &spec, &cfg).unwrap();
+        save_bundle(&model, &mono).unwrap();
+
+        let w1 = WireWorker::spawn_local(WorkerOptions::default()).unwrap();
+        let w2 = WireWorker::spawn_local(WorkerOptions::default()).unwrap();
+        let report = train_distributed_wire(
+            &d,
+            &spec,
+            &cfg,
+            &[w1.addr(), w2.addr()],
+            &dist,
+            &WireOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(report.live_workers, 2);
+        assert_eq!(report.redispatched, 0);
+        assert!(report.n_cells >= 2, "want a real multi-cell run");
+        assert!(report.bytes_tx > 0 && report.bytes_rx > 0);
+        assert!(report.measured_wall > Duration::ZERO);
+
+        // byte identity: manifest and every shard file
+        let m1 = std::fs::read(mono.join(persist::MANIFEST_FILE)).unwrap();
+        let m2 = std::fs::read(dist.join(persist::MANIFEST_FILE)).unwrap();
+        assert_eq!(m1, m2, "MANIFEST differs");
+        for c in 0..report.n_cells {
+            let f = format!("shard-{c:05}.sol");
+            let a = std::fs::read(mono.join(&f)).unwrap();
+            let b = std::fs::read(dist.join(&f)).unwrap();
+            assert_eq!(a, b, "shard {c} differs");
+        }
+    }
+
+    #[test]
+    fn unreachable_workers_fail_cleanly() {
+        let d = synth::banana_binary(60, 3);
+        let cfg = Config::default().folds(2);
+        let out = std::env::temp_dir().join("lsvm-wire-unreachable.sol.d");
+        let opts = WireOptions { connect_timeout: Duration::from_millis(200), io_timeout: None };
+        let err = train_distributed_wire(
+            &d,
+            &TaskSpec::Binary { w: 0.5 },
+            &cfg,
+            &["127.0.0.1:1".into()],
+            &out,
+            &opts,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("workers"), "{err}");
+    }
+}

@@ -87,6 +87,27 @@ pub static CELL_TRAIN_US: Counter = Counter::new();
 /// volume diagnostic, not part of the stable CV report line.
 pub static GRAM_GATHER_ENTRIES: Counter = Counter::new();
 
+/// Cells dispatched to wire workers as binary `Job` frames by the
+/// distributed coordinator (`distributed::wire`; DESIGN.md
+/// §Distributed-wire).  Counts every send, so re-dispatched cells
+/// advance it more than once.  Like [`GRAM_GATHER_ENTRIES`], the four
+/// `DIST_*` counters surface through the metrics registry (Prometheus
+/// exposition + `--trace`), not [`CounterSnapshot`]: they describe a
+/// distributed run, not the per-process CV report line.
+pub static DIST_CELLS_DISPATCHED: Counter = Counter::new();
+
+/// Cells moved to the coordinator's retry queue after a worker
+/// disconnect or timeout — the fault-tolerance path.  Zero on a
+/// healthy run.
+pub static DIST_CELLS_REDISPATCHED: Counter = Counter::new();
+
+/// Bytes sent to workers over the train wire (frame headers included).
+pub static DIST_BYTES_TX: Counter = Counter::new();
+
+/// Bytes received from workers over the train wire (frame headers
+/// included) — dominated by the solved shard payloads.
+pub static DIST_BYTES_RX: Counter = Counter::new();
+
 /// Point-in-time view of the global counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CounterSnapshot {

@@ -217,6 +217,26 @@ pub fn global() -> &'static Registry {
             "Accumulated unit training wall-clock in microseconds",
             &counters::CELL_TRAIN_US,
         );
+        r.register_counter(
+            "liquidsvm_dist_cells_dispatched",
+            "Cells dispatched to wire workers (re-dispatches counted)",
+            &counters::DIST_CELLS_DISPATCHED,
+        );
+        r.register_counter(
+            "liquidsvm_dist_cells_redispatched",
+            "Cells re-queued after a worker disconnect or timeout",
+            &counters::DIST_CELLS_REDISPATCHED,
+        );
+        r.register_counter(
+            "liquidsvm_dist_bytes_tx",
+            "Bytes sent to workers over the train wire",
+            &counters::DIST_BYTES_TX,
+        );
+        r.register_counter(
+            "liquidsvm_dist_bytes_rx",
+            "Bytes received from workers over the train wire",
+            &counters::DIST_BYTES_RX,
+        );
         r
     })
 }
@@ -318,10 +338,14 @@ mod tests {
             "liquidsvm_solver_unshrink_passes",
             "liquidsvm_cell_units_trained",
             "liquidsvm_cell_train_us",
+            "liquidsvm_dist_cells_dispatched",
+            "liquidsvm_dist_cells_redispatched",
+            "liquidsvm_dist_bytes_tx",
+            "liquidsvm_dist_bytes_rx",
         ] {
             assert!(names.iter().any(|n| n == expected), "missing {expected}");
         }
-        assert_eq!(names.len(), 10);
+        assert_eq!(names.len(), 14);
     }
 
     #[test]

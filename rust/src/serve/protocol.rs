@@ -47,6 +47,192 @@
 /// buffering from a misbehaving client).
 pub const MAX_LINE: usize = 1 << 20;
 
+// ------------------------------------------------- binary train framing
+//
+// The distributed training plane (`liquidsvm worker` + the wire
+// coordinator, see DESIGN.md §Distributed-wire) extends this protocol
+// with a compact length-prefixed binary framing for bulk payloads:
+// f32 row blocks travel coordinator → worker, solved shard bytes come
+// back.  The text protocol above stays the handshake/debugging
+// surface — a session opens with one text `train-hello` line that
+// negotiates text or binary mode, and only then switches to frames.
+//
+// Frame layout (all integers little-endian):
+//
+// ```text
+// +-----+-------------+------------------+
+// | tag |   len: u32  |  payload (len B) |
+// | u8  |             |                  |
+// +-----+-------------+------------------+
+// ```
+//
+// `len` is bounded by [`FRAME_MAX`]; an oversized prefix is rejected
+// *before* any allocation, so a corrupt or adversarial header costs a
+// 5-byte read, not 4 GiB of memory.
+
+/// Largest accepted frame payload (256 MiB — a full coarse cell of
+/// ~20k × 3k f32 features fits with headroom).
+pub const FRAME_MAX: usize = 1 << 28;
+
+/// Frame type tags of the binary train protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameTag {
+    /// coordinator → worker: session config (UTF-8 text payload)
+    Cfg = 1,
+    /// coordinator → worker: one cell's training job (header + f32 blocks)
+    Job = 2,
+    /// worker → coordinator: one solved shard (cell, train_us, shard bytes)
+    Shard = 3,
+    /// coordinator → worker: clean end of session (empty payload)
+    Done = 4,
+    /// either direction: deterministic failure (UTF-8 message) — the
+    /// receiver must NOT re-dispatch, the same job would fail again
+    Err = 5,
+}
+
+impl FrameTag {
+    pub fn from_u8(b: u8) -> Option<FrameTag> {
+        Some(match b {
+            1 => FrameTag::Cfg,
+            2 => FrameTag::Job,
+            3 => FrameTag::Shard,
+            4 => FrameTag::Done,
+            5 => FrameTag::Err,
+            _ => return None,
+        })
+    }
+}
+
+/// Serialized size of a frame carrying `payload_len` bytes.
+pub fn frame_overhead() -> usize {
+    5
+}
+
+/// Encode one frame into a buffer (tests; in-memory pipes).  Errors
+/// when the payload exceeds [`FRAME_MAX`].
+pub fn encode_frame(tag: FrameTag, payload: &[u8]) -> Result<Vec<u8>, String> {
+    if payload.len() > FRAME_MAX {
+        return Err(format!("frame payload {} exceeds FRAME_MAX {FRAME_MAX}", payload.len()));
+    }
+    let mut out = Vec::with_capacity(5 + payload.len());
+    out.push(tag as u8);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    Ok(out)
+}
+
+/// Write one frame.  Same bounds as [`encode_frame`].
+pub fn write_frame(
+    w: &mut impl std::io::Write,
+    tag: FrameTag,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    if payload.len() > FRAME_MAX {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("frame payload {} exceeds FRAME_MAX {FRAME_MAX}", payload.len()),
+        ));
+    }
+    let mut head = [0u8; 5];
+    head[0] = tag as u8;
+    head[1..5].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame.  A truncated stream surfaces as `UnexpectedEof`
+/// (from `read_exact`); an unknown tag or an oversized length prefix
+/// is `InvalidData` — and the oversized case errors on the 5-byte
+/// header alone, before any payload allocation.
+pub fn read_frame(r: &mut impl std::io::Read) -> std::io::Result<(FrameTag, Vec<u8>)> {
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head)?;
+    let tag = FrameTag::from_u8(head[0]).ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, format!("unknown frame tag {}", head[0]))
+    })?;
+    let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]) as usize;
+    if len > FRAME_MAX {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds FRAME_MAX {FRAME_MAX}"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok((tag, payload))
+}
+
+/// f32 slice → little-endian bytes (the bulk row-block encoding).
+pub fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Little-endian bytes → f32 slice; bit-exact round-trip of
+/// [`f32s_to_bytes`] (NaN payloads included — the wire never goes
+/// through text, so worker-side floats are the coordinator's floats).
+pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>, String> {
+    if bytes.len() % 4 != 0 {
+        return Err(format!("f32 block length {} not a multiple of 4", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Bulk transfer mode negotiated by the `train-hello` handshake.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireMode {
+    /// debugging sessions: only text `ping`/`quit` after the handshake
+    Text,
+    /// real sessions: binary frames after the handshake
+    Binary,
+}
+
+const HELLO_PREFIX: &str = "train-hello v1";
+
+/// The client's opening line: `train-hello v1 <text|binary>`.
+pub fn hello_line(mode: WireMode) -> String {
+    match mode {
+        WireMode::Text => format!("{HELLO_PREFIX} text"),
+        WireMode::Binary => format!("{HELLO_PREFIX} binary"),
+    }
+}
+
+/// Worker's acknowledgement: `ok train-hello v1 <mode>` — echoes the
+/// accepted mode so the client knows what the stream speaks next.
+pub fn hello_ack(mode: WireMode) -> String {
+    ok_msg(&hello_line(mode))
+}
+
+/// Parse a `train-hello` line (strict: one version, two modes).
+pub fn parse_hello(line: &str) -> Result<WireMode, String> {
+    let rest = line
+        .trim()
+        .strip_prefix(HELLO_PREFIX)
+        .ok_or_else(|| format!("expected `{HELLO_PREFIX} <mode>`, got `{line}`"))?;
+    match rest.trim() {
+        "binary" => Ok(WireMode::Binary),
+        "text" => Ok(WireMode::Text),
+        other => Err(format!("unknown wire mode `{other}` (text|binary)")),
+    }
+}
+
+/// Parse the worker's `ok train-hello v1 <mode>` acknowledgement.
+pub fn parse_hello_ack(line: &str) -> Result<WireMode, String> {
+    match parse_response(line) {
+        Response::Ok(body) => parse_hello(&body),
+        Response::Busy { .. } => Err("worker busy".into()),
+        Response::Err { code, msg } => Err(format!("handshake rejected: {code} {msg}")),
+    }
+}
+
 /// One prediction row off the wire: dense (`v1,v2,...`) or sparse
 /// (`idx:val` pairs, 1-based like LIBSVM).  Sparse rows densify at the
 /// server boundary against the target model's dimension — the serving
@@ -355,5 +541,141 @@ mod tests {
             parse_response(&err_msg("unknown-model", "no `m`")),
             Response::Err { code: "unknown-model".into(), msg: "no `m`".into() }
         );
+    }
+
+    // ------------------------------------------ binary framing (fuzz/property)
+
+    use crate::data::rng::Rng;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip_all_tags() {
+        for tag in [FrameTag::Cfg, FrameTag::Job, FrameTag::Shard, FrameTag::Done, FrameTag::Err] {
+            let payload = b"hello shard".to_vec();
+            let mut buf = Vec::new();
+            write_frame(&mut buf, tag, &payload).unwrap();
+            assert_eq!(buf, encode_frame(tag, &payload).unwrap());
+            let (t, p) = read_frame(&mut Cursor::new(&buf)).unwrap();
+            assert_eq!(t, tag);
+            assert_eq!(p, payload);
+        }
+        // empty payload (Done's usual shape)
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameTag::Done, &[]).unwrap();
+        assert_eq!(buf.len(), frame_overhead());
+        let (t, p) = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!((t, p.len()), (FrameTag::Done, 0));
+    }
+
+    #[test]
+    fn frame_roundtrip_random_payloads() {
+        // property: write_frame ∘ read_frame is identity for arbitrary
+        // payload bytes and lengths, including multi-frame streams
+        let mut rng = Rng::new(0xf4a3);
+        for round in 0..50 {
+            let n_frames = 1 + (round % 4);
+            let mut buf = Vec::new();
+            let mut sent = Vec::new();
+            for _ in 0..n_frames {
+                let len = rng.below(4096);
+                let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+                let tag = FrameTag::from_u8(1 + rng.below(5) as u8).unwrap();
+                write_frame(&mut buf, tag, &payload).unwrap();
+                sent.push((tag, payload));
+            }
+            let mut cur = Cursor::new(&buf);
+            for (tag, payload) in &sent {
+                let (t, p) = read_frame(&mut cur).unwrap();
+                assert_eq!((&t, &p), (tag, payload));
+            }
+            // stream exhausted: next read is a clean EOF, not garbage
+            assert_eq!(
+                read_frame(&mut cur).unwrap_err().kind(),
+                std::io::ErrorKind::UnexpectedEof
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_unexpected_eof() {
+        let full = encode_frame(FrameTag::Job, b"0123456789").unwrap();
+        // cut at every possible byte boundary: header-truncated and
+        // payload-truncated frames both surface as UnexpectedEof
+        for cut in 0..full.len() {
+            let err = read_frame(&mut Cursor::new(&full[..cut])).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocation() {
+        // a 5-byte header claiming a u32::MAX payload must be rejected
+        // from the header alone with a bounded InvalidData error — no
+        // 4 GiB allocation, no read attempt past the header
+        let mut head = vec![FrameTag::Shard as u8];
+        head.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&head)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("FRAME_MAX"));
+
+        // just past the limit is rejected too; writes enforce the same cap
+        let mut head = vec![FrameTag::Cfg as u8];
+        head.extend_from_slice(&((FRAME_MAX as u32) + 1).to_le_bytes());
+        assert_eq!(
+            read_frame(&mut Cursor::new(&head)).unwrap_err().kind(),
+            std::io::ErrorKind::InvalidData
+        );
+        assert!(encode_frame(FrameTag::Cfg, &vec![0u8; FRAME_MAX + 1]).is_err());
+    }
+
+    #[test]
+    fn unknown_tags_and_garbage_never_panic() {
+        // unknown tag byte → InvalidData
+        for bad in [0u8, 6, 7, 255] {
+            let mut buf = vec![bad];
+            buf.extend_from_slice(&0u32.to_le_bytes());
+            let err = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "tag {bad}");
+        }
+        // fuzz: arbitrary byte soup either parses or errors — never panics
+        let mut rng = Rng::new(0xbeef);
+        for _ in 0..200 {
+            let len = rng.below(64);
+            let soup: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let _ = read_frame(&mut Cursor::new(&soup));
+        }
+    }
+
+    #[test]
+    fn f32_blocks_roundtrip_bit_exact() {
+        let vals = vec![0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, f32::MAX, f32::NEG_INFINITY, f32::NAN];
+        let bytes = f32s_to_bytes(&vals);
+        assert_eq!(bytes.len(), vals.len() * 4);
+        let back = bytes_to_f32s(&bytes).unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits()); // bit-exact, NaN included
+        }
+        // random floats, any bit pattern
+        let mut rng = Rng::new(0x51ab);
+        let vals: Vec<f32> = (0..1000).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+        let back = bytes_to_f32s(&f32s_to_bytes(&vals)).unwrap();
+        assert!(vals.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // misaligned block length is an error, not a silent truncation
+        assert!(bytes_to_f32s(&[0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn hello_negotiation() {
+        assert_eq!(parse_hello(&hello_line(WireMode::Binary)).unwrap(), WireMode::Binary);
+        assert_eq!(parse_hello(&hello_line(WireMode::Text)).unwrap(), WireMode::Text);
+        assert_eq!(parse_hello("train-hello v1 binary\n").unwrap(), WireMode::Binary);
+        assert!(parse_hello("train-hello v1 gzip").is_err());
+        assert!(parse_hello("train-hello v2 binary").is_err());
+        assert!(parse_hello("predict m 1,2").is_err());
+
+        assert_eq!(parse_hello_ack(&hello_ack(WireMode::Binary)).unwrap(), WireMode::Binary);
+        assert_eq!(parse_hello_ack(&hello_ack(WireMode::Text)).unwrap(), WireMode::Text);
+        assert!(parse_hello_ack(&err_msg("bad-hello", "nope")).is_err());
+        assert!(parse_hello_ack(&err_busy(5)).is_err());
     }
 }

@@ -1,0 +1,239 @@
+//! Process-level tests of the distributed train wire (DESIGN.md
+//! §Distributed-wire): a coordinator CLI process sharding cells to
+//! real `liquidsvm worker` processes over loopback TCP.
+//!
+//! The contract under test is byte-identity: whatever the worker fleet
+//! looks like — two healthy workers, or one that dies mid-run and has
+//! its cells re-dispatched — the assembled `.sol.d` bundle must equal
+//! the single-process `train --save` bundle byte for byte.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::process::{Child, Command, Stdio};
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_liquidsvm"))
+}
+
+/// A spawned `liquidsvm worker` process, killed on drop.  The first
+/// stdout line is the documented parseable contract:
+/// `worker listening on HOST:PORT`.
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl WorkerProc {
+    fn spawn(extra: &[&str]) -> WorkerProc {
+        let mut child = bin()
+            .args(["worker", "--port", "0"])
+            .args(extra)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning worker");
+        let mut line = String::new();
+        BufReader::new(child.stdout.as_mut().expect("worker stdout"))
+            .read_line(&mut line)
+            .expect("reading worker banner");
+        let addr = line
+            .trim()
+            .strip_prefix("worker listening on ")
+            .unwrap_or_else(|| panic!("bad worker banner: `{line}`"))
+            .to_string();
+        WorkerProc { child, addr }
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Read every file of a `.sol.d` bundle into (name → bytes).
+fn read_bundle(dir: &std::path::Path) -> BTreeMap<String, Vec<u8>> {
+    let mut files = BTreeMap::new();
+    for entry in std::fs::read_dir(dir).unwrap_or_else(|e| panic!("reading {dir:?}: {e}")) {
+        let entry = entry.unwrap();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        files.insert(name, std::fs::read(entry.path()).unwrap());
+    }
+    files
+}
+
+fn assert_bundles_identical(mono: &std::path::Path, dist: &std::path::Path) {
+    let a = read_bundle(mono);
+    let b = read_bundle(dist);
+    assert_eq!(
+        a.keys().collect::<Vec<_>>(),
+        b.keys().collect::<Vec<_>>(),
+        "bundle file sets differ"
+    );
+    for (name, bytes) in &a {
+        assert_eq!(bytes, &b[name], "bundle file {name} differs between mono and wire");
+    }
+}
+
+/// Shared flags: both the mono `train` and the wire `distributed` run
+/// must see the same data, partition, and CV configuration.
+const DATA_FLAGS: &[&str] = &[
+    "--data", "banana", "--n", "500", "--seed", "21", "--folds", "2", "--cells", "1,100",
+];
+
+fn train_mono_bundle(out: &std::path::Path) {
+    let r = bin()
+        .args(["train", "--scenario", "binary"])
+        .args(DATA_FLAGS)
+        .args(["--save", out.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(r.status.success(), "mono train: {}", String::from_utf8_lossy(&r.stderr));
+}
+
+#[test]
+fn wire_bundle_is_byte_identical_to_single_process() {
+    let dir = std::env::temp_dir().join(format!("lsvm-wire-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mono = dir.join("mono.sol.d");
+    let dist = dir.join("dist.sol.d");
+    train_mono_bundle(&mono);
+
+    let w1 = WorkerProc::spawn(&[]);
+    let w2 = WorkerProc::spawn(&[]);
+    let r = bin()
+        .args(["distributed", "--workers", &format!("{},{}", w1.addr, w2.addr)])
+        .args(DATA_FLAGS)
+        .args(["--save", dist.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(r.status.success(), "wire train: {}", String::from_utf8_lossy(&r.stderr));
+    let text = String::from_utf8_lossy(&r.stdout);
+    assert!(text.contains("measured_wall="), "no measured wall in: {text}");
+    assert!(text.contains("modelled_distributed="), "no modelled wall in: {text}");
+    assert!(text.contains("redispatched=0"), "healthy run re-dispatched: {text}");
+
+    assert_bundles_identical(&mono, &dist);
+
+    // and the bundle predicts like any other saved model
+    let r = bin()
+        .args(["predict", "--model", dist.to_str().unwrap(), "--data", "banana", "--n", "200"])
+        .output()
+        .unwrap();
+    assert!(r.status.success(), "predict: {}", String::from_utf8_lossy(&r.stderr));
+    assert!(String::from_utf8_lossy(&r.stdout).contains("error="));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn killed_worker_is_redispatched_with_identical_output() {
+    let dir = std::env::temp_dir().join(format!("lsvm-wire-kill-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mono = dir.join("mono.sol.d");
+    let dist = dir.join("dist.sol.d");
+    train_mono_bundle(&mono);
+
+    // worker 1 dies (exit 3) after streaming one shard; with ~5 cells
+    // over 2 workers its remaining cells must flow to the survivor
+    let w1 = WorkerProc::spawn(&["--fail-after", "1"]);
+    let w2 = WorkerProc::spawn(&[]);
+    let r = bin()
+        .args(["distributed", "--workers", &format!("{},{}", w1.addr, w2.addr)])
+        .args(DATA_FLAGS)
+        .args(["--save", dist.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        r.status.success(),
+        "wire train with dying worker: {}",
+        String::from_utf8_lossy(&r.stderr)
+    );
+    let text = String::from_utf8_lossy(&r.stdout);
+    let redispatched: u64 = text
+        .split_whitespace()
+        .find_map(|kv| kv.strip_prefix("redispatched="))
+        .expect("no redispatched= in output")
+        .parse()
+        .unwrap();
+    assert!(redispatched >= 1, "worker death did not trigger re-dispatch: {text}");
+    assert!(text.contains("live=1"), "dead worker still counted live: {text}");
+
+    // fault tolerance must not cost bit-exactness
+    assert_bundles_identical(&mono, &dist);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn text_mode_is_a_debug_session() {
+    let w = WorkerProc::spawn(&[]);
+    let mut stream = std::net::TcpStream::connect(&w.addr).unwrap();
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+
+    writeln!(stream, "train-hello v1 text").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "ok train-hello v1 text");
+
+    line.clear();
+    writeln!(stream, "ping").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "ok pong");
+
+    line.clear();
+    writeln!(stream, "flarp").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("err bad-request"), "{line}");
+
+    line.clear();
+    writeln!(stream, "quit").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "ok bye");
+}
+
+#[test]
+fn bad_hello_is_rejected_politely() {
+    let w = WorkerProc::spawn(&[]);
+    let mut stream = std::net::TcpStream::connect(&w.addr).unwrap();
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    writeln!(stream, "GET / HTTP/1.1").unwrap();
+    let mut reply = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_line(&mut reply).unwrap();
+    assert!(reply.starts_with("err bad-hello"), "{reply}");
+    // the worker closes the session after a bad hello…
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    // …but keeps accepting: a well-formed session still works
+    let mut stream = std::net::TcpStream::connect(&w.addr).unwrap();
+    writeln!(stream, "train-hello v1 text").unwrap();
+    let mut line = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "ok train-hello v1 text");
+}
+
+#[test]
+fn wire_mode_requires_a_bundle_path() {
+    let r = bin()
+        .args(["distributed", "--workers", "127.0.0.1:1", "--data", "banana", "--n", "100"])
+        .output()
+        .unwrap();
+    assert!(!r.status.success());
+    let err = String::from_utf8_lossy(&r.stderr);
+    assert!(err.contains("--save"), "unexpected error: {err}");
+
+    let r = bin()
+        .args([
+            "distributed", "--workers", "127.0.0.1:1", "--data", "banana", "--n", "100",
+            "--save", "not-a-bundle.sol",
+        ])
+        .output()
+        .unwrap();
+    assert!(!r.status.success());
+    assert!(String::from_utf8_lossy(&r.stderr).contains(".sol.d"));
+}

@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# End-to-end smoke of the distributed train wire (DESIGN.md
+# §Distributed-wire): start two real `liquidsvm worker` processes on
+# ephemeral loopback ports, run the coordinator against them, and hold
+# the result to the byte-identity contract — the assembled `.sol.d`
+# bundle must equal a monolithic `train --save` bundle file for file,
+# and both must predict identically.
+#
+# CI runs this as the dist-smoke job after a release build; locally:
+#   cargo build --release --manifest-path rust/Cargo.toml
+#   bash scripts/dist_smoke.sh
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=rust/target/release/liquidsvm
+[ -x "$BIN" ] || { echo "error: $BIN not built (cargo build --release)" >&2; exit 2; }
+
+WORK="$(mktemp -d)"
+PIDS=()
+cleanup() {
+  for pid in "${PIDS[@]:-}"; do kill "$pid" 2>/dev/null || true; done
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+# identical data/partition/CV flags for every run — the contract needs
+# all three paths to see the same problem
+FLAGS=(--data banana --n 500 --seed 21 --folds 2 --cells 1,100 --scenario binary)
+
+start_worker() { # $1 = banner file, extra args follow
+  local banner="$1"; shift
+  "$BIN" worker --port 0 "$@" > "$banner" &
+  PIDS+=($!)
+  # the first stdout line is the parseable contract: `worker listening on ADDR`
+  for _ in $(seq 1 100); do
+    if grep -q "worker listening on " "$banner"; then break; fi
+    sleep 0.1
+  done
+  sed -n 's/^worker listening on //p' "$banner" | head -n1
+}
+
+echo "== monolithic reference bundle"
+"$BIN" train "${FLAGS[@]}" --save "$WORK/mono.sol.d"
+
+echo "== starting 2 workers"
+ADDR1="$(start_worker "$WORK/w1.log")"
+ADDR2="$(start_worker "$WORK/w2.log")"
+[ -n "$ADDR1" ] && [ -n "$ADDR2" ] || { echo "error: workers did not report an address" >&2; exit 1; }
+echo "   workers at $ADDR1 and $ADDR2"
+
+echo "== distributed train over the wire"
+"$BIN" distributed "${FLAGS[@]}" \
+  --workers "$ADDR1,$ADDR2" --save "$WORK/dist.sol.d" | tee "$WORK/dist.log"
+grep -q "measured_wall=" "$WORK/dist.log" || { echo "error: no measured wall reported" >&2; exit 1; }
+grep -q "redispatched=0" "$WORK/dist.log" || { echo "error: healthy run re-dispatched cells" >&2; exit 1; }
+
+echo "== byte-identity: distributed bundle vs monolithic bundle"
+diff -r "$WORK/mono.sol.d" "$WORK/dist.sol.d"
+
+echo "== predictions agree"
+"$BIN" predict --model "$WORK/mono.sol.d" --data banana --n 300 --seed 21 --out "$WORK/mono.pred"
+"$BIN" predict --model "$WORK/dist.sol.d" --data banana --n 300 --seed 21 --out "$WORK/dist.pred"
+cmp "$WORK/mono.pred" "$WORK/dist.pred"
+
+echo "dist-smoke OK: bundle byte-identical, predictions identical"
