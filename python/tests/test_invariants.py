@@ -1,0 +1,41 @@
+"""The project-invariant lint pass (scripts/check_invariants.py) must
+hold on the checked-in tree, and its --self-test must prove it still
+catches every seeded violation class (DESIGN.md §Static-analysis)."""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+CHECKER = os.path.join(REPO, "scripts", "check_invariants.py")
+
+
+def run(*args):
+    return subprocess.run(
+        [sys.executable, CHECKER, *args],
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+    )
+
+
+def test_repo_satisfies_invariants():
+    r = run()
+    assert r.returncode == 0, f"invariant violations:\n{r.stdout}{r.stderr}"
+    assert "OK: 5 invariants hold" in r.stdout
+
+
+def test_checker_catches_seeded_violations():
+    r = run("--self-test")
+    assert r.returncode == 0, f"self-test broken:\n{r.stdout}{r.stderr}"
+    assert "self-test OK" in r.stdout
+
+
+def test_checker_fails_on_violating_tree(tmp_path):
+    src = tmp_path / "rust" / "src" / "serve"
+    src.mkdir(parents=True)
+    (src / "mod.rs").write_text("use std::sync::Mutex;\n")
+    (tmp_path / "DESIGN.md").write_text("")
+    r = run("--root", str(tmp_path))
+    assert r.returncode == 1
+    assert "sync-shim" in r.stdout

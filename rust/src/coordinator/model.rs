@@ -4,8 +4,9 @@
 //! crosses cells with tasks, schedules the per-working-set CV runs on
 //! the thread pool, and owns the trained model used by the test phase.
 
-use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::sync::Arc;
 
 use anyhow::{anyhow, Result};
 

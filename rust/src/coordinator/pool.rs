@@ -2,7 +2,34 @@
 //! liquidSVM `threads=` knob.  No external crates in this image, so
 //! this is a straight work-queue over `std::thread::scope`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::Mutex;
+
+/// The work-claim seam of [`run_parallel`]: a fetch-add ticket counter
+/// where every index in `0..n` is claimed by exactly one thread.
+/// Extracted (`#[doc(hidden)] pub`) so the loom models in
+/// `tests/loom_models.rs` can prove claim exclusivity directly.
+/// Relaxed suffices: the claim only needs atomicity of the counter —
+/// job/result hand-off ordering comes from the per-slot mutexes and
+/// the scope join.
+#[doc(hidden)]
+pub struct JobCounter {
+    next: AtomicUsize,
+    n: usize,
+}
+
+impl JobCounter {
+    pub fn new(n: usize) -> JobCounter {
+        JobCounter { next: AtomicUsize::new(0), n }
+    }
+
+    /// Claim the next unclaimed job index, or `None` when all are
+    /// taken.  No index is ever handed out twice.
+    pub fn claim(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        (i < self.n).then_some(i)
+    }
+}
 
 /// Run `jobs` closures on `threads` workers; returns results in job
 /// order.  Falls back to a plain loop for a single thread (no spawn
@@ -17,24 +44,20 @@ where
     if threads <= 1 || n <= 1 {
         return jobs.into_iter().map(|j| j()).collect();
     }
-    let next = AtomicUsize::new(0);
+    let next = JobCounter::new(n);
     let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
     // hand each job exactly one slot; unsafe-free: split slots into
     // per-job cells via Mutex-free claim over an index counter
-    let jobs: Vec<std::sync::Mutex<Option<F>>> =
-        jobs.into_iter().map(|j| std::sync::Mutex::new(Some(j))).collect();
-    let results: Vec<std::sync::Mutex<&mut Option<T>>> =
-        slots.iter_mut().map(std::sync::Mutex::new).collect();
+    let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let results: Vec<Mutex<&mut Option<T>>> = slots.iter_mut().map(Mutex::new).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads.min(n) {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                while let Some(i) = next.claim() {
+                    let job = jobs[i].lock().unwrap().take().expect("job claimed twice");
+                    let out = job();
+                    **results[i].lock().unwrap() = Some(out);
                 }
-                let job = jobs[i].lock().unwrap().take().expect("job claimed twice");
-                let out = job();
-                **results[i].lock().unwrap() = Some(out);
             });
         }
     });

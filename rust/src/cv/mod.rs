@@ -52,8 +52,8 @@ pub mod grid;
 
 pub use grid::Grid;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::Mutex;
 
 use crate::data::csr::CsrMatrix;
 use crate::data::dataset::{distinct_labels, Dataset};

@@ -34,9 +34,10 @@ use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -608,24 +609,133 @@ impl WireReport {
 }
 
 /// Shared dispatch state across the per-worker coordinator threads.
-struct DispatchState {
+/// `#[doc(hidden)] pub` (fields included) so the loom models in
+/// `tests/loom_models.rs` can drive the claim / complete /
+/// worker-death transitions directly and assert the no-lost-cell,
+/// no-double-dispatch invariants; not a public API.
+#[doc(hidden)]
+pub struct DispatchState {
     /// per-worker cell queues (the planned LPT assignment)
-    queues: Vec<VecDeque<usize>>,
+    pub queues: Vec<VecDeque<usize>>,
     /// cells orphaned by a lost worker, drained by survivors
-    retry: VecDeque<usize>,
-    in_flight: usize,
+    pub retry: VecDeque<usize>,
+    pub in_flight: usize,
     /// per-cell (shard bytes, train µs) as they arrive
-    done: Vec<Option<(Vec<u8>, u64)>>,
-    n_done: usize,
-    live_workers: usize,
+    pub done: Vec<Option<(Vec<u8>, u64)>>,
+    pub n_done: usize,
+    pub live_workers: usize,
     /// deterministic failure reported by a worker — abort, don't retry
-    failed: Option<String>,
-    redispatched: u64,
+    pub failed: Option<String>,
+    pub redispatched: u64,
 }
 
-struct Shared {
-    state: Mutex<DispatchState>,
-    cv: Condvar,
+#[doc(hidden)]
+pub struct Shared {
+    pub state: Mutex<DispatchState>,
+    pub cv: Condvar,
+}
+
+/// What [`Shared::claim`] handed a worker thread.
+#[doc(hidden)]
+#[derive(Debug, PartialEq, Eq)]
+pub enum Claim {
+    /// train this cell (the claim is exclusive; `in_flight` was bumped)
+    Cell(usize),
+    /// the run is over — all cells done, or someone failed
+    Finished,
+}
+
+impl Shared {
+    pub fn new(
+        queues: Vec<VecDeque<usize>>,
+        retry: VecDeque<usize>,
+        n_cells: usize,
+        live_workers: usize,
+    ) -> Shared {
+        Shared {
+            state: Mutex::new(DispatchState {
+                queues,
+                retry,
+                in_flight: 0,
+                done: vec![None; n_cells],
+                n_done: 0,
+                live_workers,
+                failed: None,
+                redispatched: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Claim the next cell for worker `w`: its own queue first, then
+    /// the retry queue of orphaned cells.  Blocks on the condvar while
+    /// other workers still have cells in flight (one of them may die
+    /// and orphan work for us); returns [`Claim::Finished`] once every
+    /// cell is done or the run failed.
+    pub fn claim(&self, w: usize) -> Claim {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.failed.is_some() || st.n_done == st.done.len() {
+                return Claim::Finished;
+            }
+            if let Some(c) = st.queues[w].pop_front().or_else(|| st.retry.pop_front()) {
+                st.in_flight += 1;
+                return Claim::Cell(c);
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Record a trained shard for a claimed cell.  First writer wins:
+    /// a re-dispatched cell whose original worker turns out to have
+    /// answered after all does not overwrite (or double-count) the
+    /// finished result.
+    pub fn complete(&self, cell: usize, shard: Vec<u8>, train_us: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.in_flight -= 1;
+        if st.done[cell].is_none() {
+            st.done[cell] = Some((shard, train_us));
+            st.n_done += 1;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Abort the run with a deterministic failure while holding a
+    /// claimed cell (releases the in-flight slot so waiters can see a
+    /// quiescent final state).
+    pub fn fail_in_flight(&self, msg: String) {
+        let mut st = self.state.lock().unwrap();
+        st.in_flight -= 1;
+        st.failed = Some(msg);
+        self.cv.notify_all();
+    }
+
+    /// Requeue a lost worker's cells (its in-flight claim plus
+    /// everything still assigned to it) and retire it from the pool.
+    /// Returns how many cells moved to the retry queue.  When the last
+    /// worker dies with work remaining the run is failed — nobody is
+    /// left to drain the retry queue, and without this the surviving
+    /// claim loops would block forever.
+    pub fn worker_dead(&self, w: usize, in_flight_cell: Option<usize>) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        let mut moved = 0u64;
+        if let Some(c) = in_flight_cell {
+            st.in_flight -= 1;
+            st.retry.push_back(c);
+            moved += 1;
+        }
+        while let Some(c) = st.queues[w].pop_front() {
+            st.retry.push_back(c);
+            moved += 1;
+        }
+        st.redispatched += moved;
+        st.live_workers -= 1;
+        if st.live_workers == 0 && st.n_done < st.done.len() {
+            st.failed = Some("all workers lost".into());
+        }
+        self.cv.notify_all();
+        moved
+    }
 }
 
 /// One worker connection's dispatch loop.  Returns when all cells are
@@ -649,25 +759,15 @@ fn worker_thread(
         Err(_) => return mark_worker_dead(w, shared, None),
     });
     let mut writer = BufWriter::new(stream);
-    let total = payloads.len();
 
     loop {
-        // claim the next cell: own queue first, then the retry queue
-        let cell = {
-            let mut st = shared.state.lock().unwrap();
-            loop {
-                if st.failed.is_some() || st.n_done == total {
-                    drop(st);
-                    // clean end: tell the worker the session is over
-                    let _ = write_frame(&mut writer, FrameTag::Done, &[]);
-                    return;
-                }
-                if let Some(c) = st.queues[w].pop_front().or_else(|| st.retry.pop_front()) {
-                    st.in_flight += 1;
-                    break c;
-                }
-                st = shared.cv.wait(st).unwrap();
+        let cell = match shared.claim(w) {
+            Claim::Finished => {
+                // clean end: tell the worker the session is over
+                let _ = write_frame(&mut writer, FrameTag::Done, &[]);
+                return;
             }
+            Claim::Cell(c) => c,
         };
 
         // send the job, wait for the shard
@@ -698,27 +798,16 @@ fn worker_thread(
                 bytes_rx.fetch_add(n, Ordering::Relaxed);
                 match decode_shard_reply(&payload) {
                     Ok((got_cell, train_us, shard)) if got_cell == cell => {
-                        let mut st = shared.state.lock().unwrap();
-                        st.in_flight -= 1;
-                        if st.done[cell].is_none() {
-                            st.done[cell] = Some((shard.to_vec(), train_us));
-                            st.n_done += 1;
-                        }
-                        shared.cv.notify_all();
+                        shared.complete(cell, shard.to_vec(), train_us);
                     }
                     Ok((got_cell, _, _)) => {
-                        let mut st = shared.state.lock().unwrap();
-                        st.in_flight -= 1;
-                        st.failed =
-                            Some(format!("worker {w} answered cell {got_cell} for cell {cell}"));
-                        shared.cv.notify_all();
+                        shared.fail_in_flight(format!(
+                            "worker {w} answered cell {got_cell} for cell {cell}"
+                        ));
                         return;
                     }
                     Err(e) => {
-                        let mut st = shared.state.lock().unwrap();
-                        st.in_flight -= 1;
-                        st.failed = Some(format!("worker {w} shard reply: {e}"));
-                        shared.cv.notify_all();
+                        shared.fail_in_flight(format!("worker {w} shard reply: {e}"));
                         return;
                     }
                 }
@@ -727,17 +816,11 @@ fn worker_thread(
                 // deterministic failure — re-dispatching would poison
                 // the next worker too
                 let msg = String::from_utf8_lossy(&payload).into_owned();
-                let mut st = shared.state.lock().unwrap();
-                st.in_flight -= 1;
-                st.failed = Some(format!("worker {w} failed on cell {cell}: {msg}"));
-                shared.cv.notify_all();
+                shared.fail_in_flight(format!("worker {w} failed on cell {cell}: {msg}"));
                 return;
             }
             Ok((tag, _)) => {
-                let mut st = shared.state.lock().unwrap();
-                st.in_flight -= 1;
-                st.failed = Some(format!("worker {w}: unexpected {tag:?} frame"));
-                shared.cv.notify_all();
+                shared.fail_in_flight(format!("worker {w}: unexpected {tag:?} frame"));
                 return;
             }
             Err(_) => {
@@ -749,26 +832,13 @@ fn worker_thread(
     }
 }
 
-/// Requeue a lost worker's cells and retire it from the pool.
+/// Requeue a lost worker's cells and retire it from the pool,
+/// crediting the process-wide re-dispatch counter (kept out of
+/// [`Shared::worker_dead`] so the loom models exercise the transition
+/// without mutating global metrics).
 fn mark_worker_dead(w: usize, shared: &Shared, in_flight_cell: Option<usize>) {
-    let mut st = shared.state.lock().unwrap();
-    let mut moved = 0u64;
-    if let Some(c) = in_flight_cell {
-        st.in_flight -= 1;
-        st.retry.push_back(c);
-        moved += 1;
-    }
-    while let Some(c) = st.queues[w].pop_front() {
-        st.retry.push_back(c);
-        moved += 1;
-    }
-    st.redispatched += moved;
+    let moved = shared.worker_dead(w, in_flight_cell);
     DIST_CELLS_REDISPATCHED.add(moved);
-    st.live_workers -= 1;
-    if st.live_workers == 0 && st.n_done < st.done.len() {
-        st.failed = Some("all workers lost".into());
-    }
-    shared.cv.notify_all();
 }
 
 /// Open a train session to one worker: connect, text handshake in
@@ -872,19 +942,7 @@ pub fn train_distributed_wire(
             retry.push_back(c);
         }
     }
-    let shared = Arc::new(Shared {
-        state: Mutex::new(DispatchState {
-            queues,
-            retry,
-            in_flight: 0,
-            done: vec![None; n_cells],
-            n_done: 0,
-            live_workers: live,
-            failed: None,
-            redispatched: 0,
-        }),
-        cv: Condvar::new(),
-    });
+    let shared = Arc::new(Shared::new(queues, retry, n_cells, live));
     let payloads = Arc::new(payloads);
     let bytes_tx = Arc::new(AtomicU64::new(0));
     let bytes_rx = Arc::new(AtomicU64::new(0));

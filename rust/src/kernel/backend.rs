@@ -10,7 +10,7 @@
 //! * [`GramBackend::Xla`]     — the AOT Pallas/XLA artifact executed via
 //!   PJRT (the CUDA/TPU rung).
 
-use std::sync::Arc;
+use crate::sync::Arc;
 
 use crate::data::csr::CsrMatrix;
 use crate::data::matrix::{sq_dist, Matrix};

@@ -41,7 +41,9 @@ use super::KernelKind;
 /// mistaking a new distance matrix at a recycled address for the one
 /// it last exponentiated.
 pub fn next_epoch() -> u64 {
-    use std::sync::atomic::{AtomicU64, Ordering};
+    // always-std: a `static` needs the const constructor, and an epoch
+    // ticket is not a synchronization edge (see sync.rs §static_atomic)
+    use crate::sync::static_atomic::{AtomicU64, Ordering};
     static EPOCH: AtomicU64 = AtomicU64::new(1);
     EPOCH.fetch_add(1, Ordering::Relaxed)
 }

@@ -41,6 +41,14 @@
 //! the default backend stays `Blocked`, whose sparse kernels replicate
 //! the dense bits exactly.
 
+// One of the two modules allowed to opt back into `unsafe` (the crate
+// root denies it): the `std::arch` intrinsics below require it, every
+// call is behind the runtime `detect()` gate, and every unsafe block
+// carries a SAFETY comment (CI denies
+// `clippy::undocumented_unsafe_blocks`).  See DESIGN.md
+// §Static-analysis.
+#![allow(unsafe_code)]
+
 use crate::data::csr::CsrMatrix;
 use crate::data::matrix::Matrix;
 
@@ -83,7 +91,7 @@ impl SimdLevel {
 /// process (the paper's ladder is a compile-time choice; here it is a
 /// one-time `cpuid`).
 pub fn detect() -> SimdLevel {
-    static DETECTED: std::sync::OnceLock<SimdLevel> = std::sync::OnceLock::new();
+    static DETECTED: crate::sync::OnceLock<SimdLevel> = crate::sync::OnceLock::new();
     *DETECTED.get_or_init(detect_raw)
 }
 

@@ -37,6 +37,16 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::type_complexity)]
 #![allow(clippy::new_without_default)]
+// The correctness-tooling plane (DESIGN.md §Static-analysis):
+// `unsafe` is confined to the two modules that genuinely need it —
+// `kernel/simd.rs` (std::arch intrinsics behind runtime detection)
+// and `runtime` (FFI Send/Sync contracts for the PJRT client) — each
+// opting back in with a module-level `allow` next to its safety
+// argument.  Every unsafe block must carry a `// SAFETY:` contract;
+// CI denies `clippy::undocumented_unsafe_blocks` so an uncommented
+// block cannot land.
+#![deny(unsafe_code)]
+#![deny(clippy::undocumented_unsafe_blocks)]
 
 pub mod baselines;
 pub mod cells;
@@ -50,6 +60,7 @@ pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod solver;
+pub mod sync;
 pub mod tasks;
 
 /// Convenience re-exports for the common learning scenarios

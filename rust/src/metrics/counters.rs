@@ -6,7 +6,11 @@
 //! threading per-component tallies through every layer.  Counters only
 //! ever increase; consumers diff two [`snapshot`]s to scope a window.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+// Always-std atomics (sync.rs §static_atomic): the global counter
+// statics need `const fn new`, which loom's atomics don't provide, and
+// telemetry tallies are never used as synchronization edges — exactly
+// the carve-out the shim documents.
+use crate::sync::static_atomic::{AtomicU64, Ordering};
 
 /// A monotonic, thread-safe event counter.
 #[derive(Debug, Default)]

@@ -11,7 +11,10 @@
 //! `sum_us` accumulates with saturating adds so a long-lived process
 //! can never wrap the mean into nonsense silently.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+// Always-std atomics (sync.rs §static_atomic): pure telemetry (no
+// synchronization edges), and `record` leans on fetch_max/fetch_update,
+// which the loom twin does not model.
+use crate::sync::static_atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 const BUCKETS: usize = 40; // 2^40 µs ≈ 12.7 days; saturates above

@@ -29,9 +29,14 @@ pub mod registry;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
+
+use crate::sync::{Mutex, OnceLock};
+// always-std (sync.rs §static_atomic): a `static` needs the const
+// constructor, and the gate is a telemetry toggle, not a
+// synchronization edge — the mutex inside [`PhaseTable`] orders the
+// actual recorded data
+use crate::sync::static_atomic::{AtomicBool, Ordering};
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
 
@@ -60,9 +65,47 @@ pub struct PhaseStat {
     pub bytes: u64,
 }
 
-fn table() -> &'static Mutex<HashMap<&'static str, PhaseStat>> {
-    static TABLE: OnceLock<Mutex<HashMap<&'static str, PhaseStat>>> = OnceLock::new();
-    TABLE.get_or_init(|| Mutex::new(HashMap::new()))
+/// The span aggregation table — the concurrency seam under the RAII
+/// [`Span`]s, extracted (`#[doc(hidden)] pub`) so the loom models in
+/// `tests/loom_models.rs` can drive concurrent recording against a
+/// non-global instance.  The process-global table lives in a
+/// `OnceLock` behind [`phases`]/[`reset`].
+#[doc(hidden)]
+pub struct PhaseTable {
+    map: Mutex<HashMap<&'static str, PhaseStat>>,
+}
+
+impl PhaseTable {
+    pub fn new() -> PhaseTable {
+        PhaseTable { map: Mutex::new(HashMap::new()) }
+    }
+
+    /// Merge one closed span into its phase row.
+    pub fn record(&self, name: &'static str, total_us: u64, self_us: u64, bytes: u64) {
+        let mut t = self.map.lock().unwrap();
+        let s = t.entry(name).or_default();
+        s.calls += 1;
+        s.total_us += total_us;
+        s.self_us += self_us;
+        s.bytes += bytes;
+    }
+
+    /// Snapshot, sorted by phase name (deterministic).
+    pub fn phases(&self) -> Vec<(&'static str, PhaseStat)> {
+        let t = self.map.lock().unwrap();
+        let mut out: Vec<_> = t.iter().map(|(&k, &v)| (k, v)).collect();
+        out.sort_by_key(|&(k, _)| k);
+        out
+    }
+
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+fn table() -> &'static PhaseTable {
+    static TABLE: OnceLock<PhaseTable> = OnceLock::new();
+    TABLE.get_or_init(PhaseTable::new)
 }
 
 thread_local! {
@@ -126,26 +169,18 @@ impl Drop for Span {
             })
             .unwrap_or(0);
         let self_us = total_us.saturating_sub(child_us);
-        let mut t = table().lock().unwrap();
-        let s = t.entry(inner.name).or_default();
-        s.calls += 1;
-        s.total_us += total_us;
-        s.self_us += self_us;
-        s.bytes += inner.bytes;
+        table().record(inner.name, total_us, self_us, inner.bytes);
     }
 }
 
 /// Snapshot the phase table, sorted by phase name (deterministic).
 pub fn phases() -> Vec<(&'static str, PhaseStat)> {
-    let t = table().lock().unwrap();
-    let mut out: Vec<_> = t.iter().map(|(&k, &v)| (k, v)).collect();
-    out.sort_by_key(|&(k, _)| k);
-    out
+    table().phases()
 }
 
 /// Clear the phase table (tests; between traced runs).
 pub fn reset() {
-    table().lock().unwrap().clear();
+    table().clear();
 }
 
 /// Render the phase table for `--trace` output: one row per phase,
@@ -196,7 +231,7 @@ pub fn render_json() -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::MutexGuard;
+    use crate::sync::MutexGuard;
 
     /// The phase table and enable flag are process-global; tests that
     /// touch them serialize on this lock.

@@ -18,7 +18,7 @@
 //! * [`json_text`] — one JSON object keyed by metric name, each value
 //!   `{"type": ..., ...}`.
 
-use std::sync::{Mutex, OnceLock};
+use crate::sync::{Mutex, OnceLock};
 
 use crate::metrics::counters::{self, Counter};
 use crate::metrics::histogram::LatencyHistogram;

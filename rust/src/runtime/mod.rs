@@ -7,11 +7,25 @@
 //! up to the artifact's shape bucket (exact for every graph we lower;
 //! see python/compile/kernels/*.py) and outputs sliced back.
 
+// One of the two modules allowed to opt back into `unsafe` (the crate
+// root denies it): the `unsafe impl Send/Sync for XlaRuntime` below is
+// an FFI thread-safety contract the compiler cannot check.  Every
+// unsafe item must carry a SAFETY comment (CI denies
+// `clippy::undocumented_unsafe_blocks`); see DESIGN.md
+// §Static-analysis.
+#![cfg_attr(feature = "xla", allow(unsafe_code))]
+
 #[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+
 #[cfg(feature = "xla")]
-use std::sync::Mutex;
+use crate::sync::Mutex;
+// always-std (sync.rs §static_atomic): a plain call tally for perf
+// reports, not a synchronization edge
+use crate::sync::static_atomic::AtomicUsize;
+#[cfg(feature = "xla")]
+use crate::sync::static_atomic::Ordering;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -86,13 +100,34 @@ pub struct XlaRuntime {
     manifest: Manifest,
     inner: Mutex<Inner>,
     /// executions served, for perf reporting
-    pub calls: std::sync::atomic::AtomicUsize,
+    pub calls: AtomicUsize,
 }
 
-// SAFETY: the xla crate wraps C++ objects that the PJRT CPU plugin
-// documents as thread-safe; all mutation is behind `Mutex<Inner>`.
+// SAFETY: `XlaRuntime` is not auto-Send/Sync only because the xla
+// crate's `PjRtClient` / `PjRtLoadedExecutable` wrap raw pointers to
+// C++ PJRT objects.  The contract justifying the impls:
+//
+// 1. *Ownership* — the wrapped pointers are uniquely owned by `Inner`
+//    (they are not borrowed from elsewhere and nothing else frees
+//    them), so moving the struct to another thread (`Send`) transfers
+//    ownership without aliasing.
+// 2. *Synchronized access* — every use of the pointers goes through
+//    `self.inner.lock()` ([`XlaRuntime::run`] is the only call site),
+//    so `&XlaRuntime` shared across threads (`Sync`) never yields
+//    concurrent access to the C++ objects, even if the plugin's own
+//    thread-safety documentation were wrong.
+// 3. *No thread affinity* — the PJRT CPU plugin does not require
+//    calls to come from the thread that created the client (it is
+//    documented thread-safe and thread-agnostic), so crossing threads
+//    between calls is permitted.
+//
+// The remaining fields (`PathBuf`, `Manifest`, atomic counter) are
+// ordinarily Send + Sync.  Any new field holding FFI state MUST go
+// inside `Inner`, behind the mutex, or this contract is void.
 #[cfg(feature = "xla")]
 unsafe impl Send for XlaRuntime {}
+// SAFETY: see the Send contract above — points 2 and 3 are exactly
+// the shared-reference guarantees `Sync` requires.
 #[cfg(feature = "xla")]
 unsafe impl Sync for XlaRuntime {}
 
@@ -110,7 +145,7 @@ impl XlaRuntime {
             dir,
             manifest,
             inner: Mutex::new(Inner { client, executables: HashMap::new() }),
-            calls: std::sync::atomic::AtomicUsize::new(0),
+            calls: AtomicUsize::new(0),
         })
     }
 
@@ -158,7 +193,7 @@ impl XlaRuntime {
             inner.executables.insert(name.to_string(), exe);
         }
         let exe = &inner.executables[name];
-        self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
         crate::metrics::counters::XLA_CALLS.inc();
         let result = exe
             .execute::<xla::Literal>(args)
@@ -256,7 +291,7 @@ impl XlaRuntime {
 pub struct XlaRuntime {
     manifest: Manifest,
     /// executions served, for perf reporting
-    pub calls: std::sync::atomic::AtomicUsize,
+    pub calls: AtomicUsize,
 }
 
 #[cfg(not(feature = "xla"))]

@@ -22,8 +22,9 @@
 //! server's whole memory budget for in-flight work.
 
 use std::collections::HashMap;
-use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::sync::{mpsc, Arc, Mutex};
 
 use super::registry::{RouteTarget, ServedModel};
 use super::worker::BoundedQueue;
@@ -65,6 +66,9 @@ impl Default for BatcherConfig {
 pub enum SubmitError {
     /// worker queue full — retry after the hinted backoff
     Busy { retry_after_ms: u64 },
+    /// the batcher was closed by shutdown — no flusher will run again,
+    /// so accepting the row would strand its reply receiver forever
+    Closed,
 }
 
 struct Pending {
@@ -74,17 +78,31 @@ struct Pending {
     oldest: Instant,
 }
 
+/// The pending map plus its lifecycle bit.  `closed` lives under the
+/// same mutex as the map on purpose: a lone atomic flag would leave a
+/// check-then-insert window in which a row lands in the map *after*
+/// the shutdown drain emptied it — exactly the stranded-client race
+/// `discard_pending` exists to prevent.
+struct PendingState {
+    map: HashMap<(String, RouteTarget), Pending>,
+    closed: bool,
+}
+
 /// Per-(model, target) pending batches in front of the worker queue.
 pub struct Batcher {
     cfg: BatcherConfig,
-    pending: Mutex<HashMap<(String, RouteTarget), Pending>>,
+    pending: Mutex<PendingState>,
     queue: Arc<BoundedQueue<Batch>>,
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig, queue: Arc<BoundedQueue<Batch>>) -> Batcher {
         let cfg = BatcherConfig { max_batch: cfg.max_batch.max(1), ..cfg };
-        Batcher { cfg, pending: Mutex::new(HashMap::new()), queue }
+        Batcher {
+            cfg,
+            pending: Mutex::new(PendingState { map: HashMap::new(), closed: false }),
+            queue,
+        }
     }
 
     pub fn config(&self) -> &BatcherConfig {
@@ -104,7 +122,11 @@ impl Batcher {
         let (tx, rx) = mpsc::channel();
         let target = model.route(&features);
         let mut pending = self.pending.lock().unwrap();
+        if pending.closed {
+            return Err(SubmitError::Closed);
+        }
         let p = pending
+            .map
             .entry((model.name.clone(), target))
             .or_insert_with(|| Pending {
                 model: model.clone(),
@@ -176,7 +198,7 @@ impl Batcher {
     fn flush(&self, should: impl Fn(&Pending) -> bool) -> usize {
         let mut pending = self.pending.lock().unwrap();
         let mut flushed = 0;
-        for p in pending.values_mut() {
+        for p in pending.map.values_mut() {
             if p.items.is_empty() || !should(p) {
                 continue;
             }
@@ -200,7 +222,7 @@ impl Batcher {
         // traffic must not pin its ServedModel Arc — after a
         // hot-reload or unload that would keep a whole old generation
         // (and its resident shards) alive indefinitely
-        pending.retain(|_, p| !p.items.is_empty());
+        pending.map.retain(|_, p| !p.items.is_empty());
         flushed
     }
 
@@ -210,6 +232,7 @@ impl Batcher {
         self.pending
             .lock()
             .unwrap()
+            .map
             .iter()
             .filter(|((name, _), _)| name == model)
             .map(|(_, p)| p.items.len())
@@ -218,15 +241,22 @@ impl Batcher {
 
     /// Any unflushed rows at all (shutdown drain check).
     pub fn has_pending(&self) -> bool {
-        self.pending.lock().unwrap().values().any(|p| !p.items.is_empty())
+        self.pending.lock().unwrap().map.values().any(|p| !p.items.is_empty())
     }
 
     /// Drop every pending row, failing its waiter (the reply senders
-    /// are dropped, so blocked receivers error out instead of hanging).
-    /// Returns the number of discarded rows.
+    /// are dropped, so blocked receivers error out instead of hanging),
+    /// and close the batcher: any later `submit` fails with
+    /// [`SubmitError::Closed`].  Closing under the pending lock is what
+    /// makes the shutdown drain race-free — a connection thread that
+    /// read its request before noticing the stop flag either lands its
+    /// row in the map before this drain (and gets drained) or observes
+    /// `closed` (and fails fast).  It can never park a row that no
+    /// flusher will visit again.  Returns the number of discarded rows.
     pub fn discard_pending(&self) -> usize {
         let mut pending = self.pending.lock().unwrap();
-        pending.values_mut().map(|p| std::mem::take(&mut p.items).len()).sum()
+        pending.closed = true;
+        pending.map.values_mut().map(|p| std::mem::take(&mut p.items).len()).sum()
     }
 }
 
@@ -284,7 +314,9 @@ mod tests {
         b.submit(&model, vec![0.0, 0.0]).unwrap();
         assert_eq!(queue.len(), 1);
         let err = b.submit(&model, vec![1.0, 1.0]).unwrap_err();
-        let SubmitError::Busy { retry_after_ms } = err;
+        let SubmitError::Busy { retry_after_ms } = err else {
+            panic!("expected Busy, got {err:?}");
+        };
         assert!(retry_after_ms >= 1);
         // earlier rows were not lost: queue still has the first batch
         assert_eq!(queue.len(), 1);
@@ -305,6 +337,18 @@ mod tests {
         // the first of the two stays pending for a later flush
         assert_eq!(b.pending_rows("m"), 1);
         let _ = queue.pop();
+    }
+
+    #[test]
+    fn discard_closes_the_batcher() {
+        let model = served();
+        let (b, _queue) = batcher(4, 8);
+        b.submit(&model, vec![0.1, 0.2]).unwrap();
+        assert_eq!(b.discard_pending(), 1);
+        // the shutdown drain ran: a late submit must fail fast instead
+        // of parking a row no flusher will ever visit again
+        assert_eq!(b.submit(&model, vec![0.3, 0.4]).unwrap_err(), SubmitError::Closed);
+        assert!(!b.has_pending());
     }
 
     #[test]

@@ -56,9 +56,10 @@ pub use worker::{BoundedQueue, WorkerPool};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
 use std::thread;
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -151,7 +152,9 @@ impl Server {
             let stop = stop.clone();
             let tick = (cfg.max_delay / 4).max(Duration::from_micros(250));
             threads.push(thread::spawn(move || {
-                while !stop.load(Ordering::Relaxed) {
+                // Acquire pairs with shutdown's Release store: everything
+                // written before the stop was requested is visible here
+                while !stop.load(Ordering::Acquire) {
                     batcher.flush_expired();
                     thread::sleep(tick);
                 }
@@ -167,7 +170,7 @@ impl Server {
             let stop = stop.clone();
             threads.push(thread::spawn(move || {
                 loop {
-                    if stop.load(Ordering::Relaxed) {
+                    if stop.load(Ordering::Acquire) {
                         break;
                     }
                     match listener.accept() {
@@ -199,7 +202,13 @@ impl Server {
     /// Stop acceptor/flusher/workers and join them.  Connection
     /// threads notice the stop flag on their next read timeout.
     pub fn shutdown(self) {
-        self.stop.store(true, Ordering::Relaxed);
+        // Release, paired with the Acquire loads in the flusher /
+        // acceptor / connection loops.  With Relaxed on both sides a
+        // thread could observe `stop` while missing writes sequenced
+        // before it (loom catches this: see `stop_flag_publishes` in
+        // tests/loom_models.rs); the flag is a publication edge, not a
+        // mere counter.
+        self.stop.store(true, Ordering::Release);
         // drain pending rows before closing so in-flight clients get
         // answers instead of hung receivers; the flush can find the
         // queue full under load, so keep retrying (bounded) while the
@@ -213,7 +222,11 @@ impl Server {
             thread::sleep(Duration::from_millis(1));
         }
         // anything still pending after the deadline fails fast instead
-        // of leaving its waiters blocked forever
+        // of leaving its waiters blocked forever; this also closes the
+        // batcher, so a connection thread that read a request before
+        // noticing `stop` cannot park a fresh row in a pending map no
+        // flusher will ever visit again (its client would block on the
+        // reply receiver forever)
         self.batcher.discard_pending();
         self.queue.close();
         for h in self.threads {
@@ -297,7 +310,7 @@ fn handle_conn(
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                if stop.load(Ordering::Relaxed) {
+                if stop.load(Ordering::Acquire) {
                     break;
                 }
             }
@@ -452,6 +465,13 @@ fn handle_request(
                         // in flight; their receivers are dropped here
                         // and the worker's sends fail silently
                         return Some(Reply::Ready(protocol::err_busy(retry_after_ms)));
+                    }
+                    Err(SubmitError::Closed) => {
+                        stats.errors.add(total_rows);
+                        return Some(Reply::Ready(protocol::err_msg(
+                            "unavailable",
+                            "server shutting down",
+                        )));
                     }
                 }
             }

@@ -27,9 +27,10 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
 use std::time::SystemTime;
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -135,14 +136,16 @@ impl ServedModel {
     /// Per-shard residency and hit counts (bundles only).
     pub fn shard_info(&self) -> Option<Vec<ShardInfo>> {
         let b = self.bundle.as_ref()?;
-        let cache = b.cache.lock().unwrap();
         Some(
-            (0..b.manifest.n_cells())
-                .map(|c| ShardInfo {
+            b.cache
+                .cell_stats()
+                .into_iter()
+                .enumerate()
+                .map(|(c, (resident, hits))| ShardInfo {
                     cell: c,
-                    resident: cache.map.contains_key(&c),
+                    resident,
                     bytes: b.manifest.shards[c].bytes,
-                    hits: cache.hits_per_cell[c],
+                    hits,
                 })
                 .collect(),
         )
@@ -159,18 +162,172 @@ pub struct ShardInfo {
     pub hits: u64,
 }
 
-struct ShardEntry {
-    model: Arc<SvmModel>,
+struct LruEntry<V> {
+    value: V,
     bytes: u64,
     last_used: u64,
 }
 
-struct ShardCache {
-    map: HashMap<usize, ShardEntry>,
+struct LruState<V> {
+    map: HashMap<usize, LruEntry<V>>,
     tick: u64,
     resident_bytes: u64,
     /// cumulative accesses per cell (survives eviction)
-    hits_per_cell: Vec<u64>,
+    accesses: Vec<u64>,
+}
+
+/// Outcome of [`ShardLru::insert`].
+#[doc(hidden)]
+pub enum LruInsert<V> {
+    /// the value went in; `evicted` older entries left to stay under
+    /// the byte budget
+    Inserted { evicted: usize },
+    /// another thread inserted this cell while the caller was loading
+    /// it outside the lock — the caller adopts the winner's copy and
+    /// drops its own (the loser-adopts-winner protocol)
+    Adopted(V),
+}
+
+/// A byte-budgeted LRU over cell-indexed values — the concurrency seam
+/// under [`BundleHandle`]'s lazy shard cache, extracted so the loom
+/// models in `tests/loom_models.rs` can drive eviction races directly
+/// (hence `#[doc(hidden)] pub`; not a public API).
+///
+/// Values load *outside* the lock (they are expensive disk parses), so
+/// the LRU must absorb the two races that creates: a duplicate insert
+/// (solved by adopt-winner) and an eviction sweep racing a lazy load
+/// (solved by never evicting the cell being inserted).
+#[doc(hidden)]
+pub struct ShardLru<V> {
+    max_bytes: u64,
+    state: Mutex<LruState<V>>,
+}
+
+impl<V: Clone> ShardLru<V> {
+    pub fn new(n_cells: usize, max_bytes: u64) -> ShardLru<V> {
+        ShardLru {
+            max_bytes: max_bytes.max(1),
+            state: Mutex::new(LruState {
+                map: HashMap::new(),
+                tick: 0,
+                resident_bytes: 0,
+                accesses: vec![0; n_cells],
+            }),
+        }
+    }
+
+    /// Look up `cell`, counting the access and bumping recency on a
+    /// hit.  A miss still counts as an access (the caller will load
+    /// and [`ShardLru::insert`]).
+    pub fn touch(&self, cell: usize) -> Option<V> {
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        if cell < st.accesses.len() {
+            st.accesses[cell] += 1;
+        }
+        let e = st.map.get_mut(&cell)?;
+        e.last_used = tick;
+        Some(e.value.clone())
+    }
+
+    /// Insert a freshly loaded value, evicting least-recently-used
+    /// entries past the byte budget — never the entry being inserted,
+    /// even when it alone exceeds the budget.  If another thread won
+    /// the load race, returns its copy instead.
+    pub fn insert(&self, cell: usize, value: V, bytes: u64) -> LruInsert<V> {
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(existing) = st.map.get_mut(&cell) {
+            existing.last_used = tick;
+            return LruInsert::Adopted(existing.value.clone());
+        }
+        st.resident_bytes += bytes;
+        st.map.insert(cell, LruEntry { value, bytes, last_used: tick });
+        let mut evicted = 0;
+        while st.resident_bytes > self.max_bytes && st.map.len() > 1 {
+            let victim = st
+                .map
+                .iter()
+                .filter(|(&c, _)| c != cell)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&c, _)| c);
+            match victim {
+                Some(v) => {
+                    if let Some(e) = st.map.remove(&v) {
+                        st.resident_bytes -= e.bytes;
+                        evicted += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        LruInsert::Inserted { evicted }
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.state.lock().unwrap().resident_bytes
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.state.lock().unwrap().map.len()
+    }
+
+    /// `(resident, accesses)` per cell, read under one lock.
+    pub fn cell_stats(&self) -> Vec<(bool, u64)> {
+        let st = self.state.lock().unwrap();
+        (0..st.accesses.len()).map(|c| (st.map.contains_key(&c), st.accesses[c])).collect()
+    }
+
+    /// Structural invariant probe for the model checker: the byte
+    /// accounting must equal the sum over resident entries, and the
+    /// budget may only be exceeded by a single oversized entry.
+    pub fn invariants_hold(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        let sum: u64 = st.map.values().map(|e| e.bytes).sum();
+        sum == st.resident_bytes && (st.resident_bytes <= self.max_bytes || st.map.len() == 1)
+    }
+}
+
+/// A try-lock-shaped guard over an [`AtomicBool`]: at most one caller
+/// holds the flight at a time; everyone else moves on immediately
+/// (they keep serving the resident model).  Extracted from
+/// [`Registry::get`]'s hot-reload path so the loom models can prove
+/// mutual exclusion; the guard releases on drop, so a panicking
+/// reload no longer wedges the flag permanently shut.
+#[doc(hidden)]
+pub struct SingleFlight {
+    busy: AtomicBool,
+}
+
+#[doc(hidden)]
+pub struct SingleFlightGuard<'a> {
+    busy: &'a AtomicBool,
+}
+
+impl SingleFlight {
+    // not `const`: under `cfg(loom)` the atomic's constructor is a
+    // tracked runtime operation
+    pub fn new() -> SingleFlight {
+        SingleFlight { busy: AtomicBool::new(false) }
+    }
+
+    /// Acquire the flight, or `None` if another caller holds it.
+    /// Acquire on success pairs with the guard's Release store so the
+    /// next winner observes everything the previous flight wrote.
+    pub fn try_begin(&self) -> Option<SingleFlightGuard<'_>> {
+        self.busy
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+            .then_some(SingleFlightGuard { busy: &self.busy })
+    }
+}
+
+impl Drop for SingleFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.busy.store(false, Ordering::Release);
+    }
 }
 
 /// The lazily-loading shard store of one `.sol.d/` bundle.
@@ -187,8 +344,7 @@ pub struct BundleHandle {
     /// runtime config applied to shard mini-models (kernel pinned from
     /// the manifest)
     cfg: Config,
-    max_bytes: u64,
-    cache: Mutex<ShardCache>,
+    cache: ShardLru<Arc<SvmModel>>,
     /// shard accesses answered from the cache
     pub hits: Counter,
     /// shard loads from disk (cache misses)
@@ -222,13 +378,7 @@ impl BundleHandle {
             dir: dir.to_path_buf(),
             manifest,
             cfg,
-            max_bytes: max_bytes.max(1),
-            cache: Mutex::new(ShardCache {
-                map: HashMap::new(),
-                tick: 0,
-                resident_bytes: 0,
-                hits_per_cell: vec![0; n_cells],
-            }),
+            cache: ShardLru::new(n_cells, max_bytes),
             hits: Counter::new(),
             loads: Counter::new(),
             evictions: Counter::new(),
@@ -241,29 +391,20 @@ impl BundleHandle {
     }
 
     pub fn resident_bytes(&self) -> u64 {
-        self.cache.lock().unwrap().resident_bytes
+        self.cache.resident_bytes()
     }
 
     pub fn resident_shards(&self) -> usize {
-        self.cache.lock().unwrap().map.len()
+        self.cache.resident_count()
     }
 
     /// Fetch the mini-model of `cell`, loading (and checksumming) its
     /// shard from disk on first use and evicting least-recently-used
     /// shards past the byte budget.
     fn shard(&self, cell: usize) -> Result<Arc<SvmModel>, String> {
-        {
-            let mut cache = self.cache.lock().unwrap();
-            cache.tick += 1;
-            let tick = cache.tick;
-            if cell < cache.hits_per_cell.len() {
-                cache.hits_per_cell[cell] += 1;
-            }
-            if let Some(e) = cache.map.get_mut(&cell) {
-                e.last_used = tick;
-                self.hits.inc();
-                return Ok(e.model.clone());
-            }
+        if let Some(m) = self.cache.touch(cell) {
+            self.hits.inc();
+            return Ok(m);
         }
         // miss: read + parse *outside* the lock so traffic for
         // already-resident shards (and the stats commands) never
@@ -295,37 +436,14 @@ impl BundleHandle {
         .map_err(|e| format!("{e:#}"))?;
         let bytes = self.manifest.shards[cell].bytes;
         let arc = Arc::new(mini);
-
-        let mut cache = self.cache.lock().unwrap();
-        cache.tick += 1;
-        let tick = cache.tick;
-        if let Some(existing) = cache.map.get_mut(&cell) {
+        match self.cache.insert(cell, arc.clone(), bytes) {
             // another thread loaded this shard while we parsed
-            existing.last_used = tick;
-            return Ok(existing.model.clone());
-        }
-        cache.resident_bytes += bytes;
-        cache
-            .map
-            .insert(cell, ShardEntry { model: arc.clone(), bytes, last_used: tick });
-        while cache.resident_bytes > self.max_bytes && cache.map.len() > 1 {
-            let victim = cache
-                .map
-                .iter()
-                .filter(|(&c, _)| c != cell)
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(&c, _)| c);
-            match victim {
-                Some(v) => {
-                    if let Some(e) = cache.map.remove(&v) {
-                        cache.resident_bytes -= e.bytes;
-                        self.evictions.inc();
-                    }
-                }
-                None => break,
+            LruInsert::Adopted(winner) => Ok(winner),
+            LruInsert::Inserted { evicted } => {
+                self.evictions.add(evicted as u64);
+                Ok(arc)
             }
         }
-        Ok(arc)
     }
 
     /// Predict a batch that routes entirely to one cell.
@@ -424,7 +542,7 @@ pub struct Registry {
     inner: Mutex<Inner>,
     /// single-flight guard: at most one hot-reload parses at a time,
     /// everyone else keeps serving the resident model meanwhile
-    reloading: AtomicBool,
+    reloading: SingleFlight,
 }
 
 /// Fingerprint of a model source: the `.sol` file itself, or a
@@ -452,7 +570,7 @@ impl Registry {
             max_models: max_models.max(1),
             shard_budget: DEFAULT_SHARD_BUDGET,
             inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
-            reloading: AtomicBool::new(false),
+            reloading: SingleFlight::new(),
         }
     }
 
@@ -546,16 +664,13 @@ impl Registry {
         if let Some(path) = &served.path {
             if let Some((mtime, size)) = fingerprint(path) {
                 let changed = mtime != served.mtime || size != served.size;
-                if changed
-                    && self
-                        .reloading
-                        .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
-                        .is_ok()
-                {
-                    let reloaded = self.load(name, path);
-                    self.reloading.store(false, Ordering::Release);
-                    if let Ok(fresh) = reloaded {
-                        return Ok(fresh);
+                if changed {
+                    if let Some(_flight) = self.reloading.try_begin() {
+                        // the guard releases on drop, so a reload that
+                        // panics (or errors) cannot wedge the flag shut
+                        if let Ok(fresh) = self.load(name, path) {
+                            return Ok(fresh);
+                        }
                     }
                 }
             }
@@ -592,9 +707,8 @@ impl Registry {
             u.bundles += 1;
             u.total_shards += b.manifest.n_cells();
             u.total_bytes += b.manifest.total_bytes();
-            let cache = b.cache.lock().unwrap();
-            u.resident_shards += cache.map.len();
-            u.resident_bytes += cache.resident_bytes;
+            u.resident_shards += b.cache.resident_count();
+            u.resident_bytes += b.cache.resident_bytes();
             u.hits += b.hits.get();
             u.loads += b.loads.get();
             u.evictions += b.evictions.get();

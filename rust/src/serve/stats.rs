@@ -9,9 +9,12 @@
 //! bytes below total bundle size).
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::sync::Mutex;
+// the slow-log threshold is a config cell (armed once at startup,
+// read with Relaxed), not a synchronization edge — always-std atomics
+use crate::sync::static_atomic::{AtomicU64, Ordering};
 
 use super::registry::ShardUsage;
 use crate::metrics::counters::{self, Counter};

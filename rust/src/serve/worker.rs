@@ -21,8 +21,9 @@
 //! the model config's `max_gram_mb` (see DESIGN.md §Compute-plane).
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+
+use crate::sync::{Arc, Condvar, Mutex};
 
 use crate::data::matrix::Matrix;
 

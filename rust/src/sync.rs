@@ -1,0 +1,79 @@
+//! The crate's single concurrency seam (DESIGN.md §Static-analysis).
+//!
+//! Every lock, condition variable, and control-flow atomic in this
+//! crate is imported from here, never from `std::sync` directly — a
+//! project invariant enforced by `scripts/check_invariants.py`.  In a
+//! normal build the re-exports below *are* the `std::sync` types
+//! (zero wrappers, zero behavior change — pinned by
+//! `tests/sync_shim.rs`).  Under `RUSTFLAGS="--cfg loom"` they become
+//! the [loom](https://docs.rs/loom) model checker's permutation-tested
+//! twins, and `tests/loom_models.rs` drives the hand-rolled
+//! concurrent structures (bounded MPMC queue, dispatch/retry state,
+//! shard LRU, phase table, work claim counter) through every
+//! interleaving loom's bounded exploration can reach.
+//!
+//! Three deliberate carve-outs stay on `std` in both modes:
+//!
+//! * [`static_atomic`] — atomics for `const`-initialized process-wide
+//!   statics (the `metrics::counters` statics, the obs enable flag)
+//!   and pure-telemetry accumulators (the latency histogram).  Loom
+//!   atomics have no `const fn new` and loom cannot model state that
+//!   outlives a single model run, so globals are out of its reach by
+//!   construction; nothing in this module's carve-out ever guards
+//!   control flow, which is what keeps that sound.
+//! * [`mpsc`] — reply channels.  Loom does not ship an mpsc; the
+//!   channels only ferry results out of already-modeled critical
+//!   sections, so std's implementation is used verbatim.
+//! * [`OnceLock`] — lazy statics (the phase table, SIMD detection).
+//!   Same `'static` argument as above.
+//!
+//! When adding a new concurrency seam: take `Mutex`/`Condvar`/
+//! `RwLock`/`Arc`/[`atomic`] from this module, then add (or extend) a
+//! loom model for the new interleaving in `tests/loom_models.rs`.
+
+#[cfg(not(loom))]
+mod imp {
+    pub use std::sync::{
+        Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    };
+
+    /// Loom-switched atomics: use these for flags and counters that
+    /// participate in synchronization or control flow.
+    pub mod atomic {
+        pub use std::sync::atomic::{
+            AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+        };
+    }
+}
+
+#[cfg(loom)]
+mod imp {
+    pub use loom::sync::{
+        Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    };
+
+    /// Loom-switched atomics: use these for flags and counters that
+    /// participate in synchronization or control flow.
+    pub mod atomic {
+        pub use loom::sync::atomic::{
+            AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+        };
+    }
+}
+
+pub use imp::*;
+
+/// Always-`std` atomics for `const`-initialized statics and
+/// pure-telemetry accumulators (see the module docs for why these are
+/// deliberately outside loom's model).  Never use one of these to
+/// guard control flow between threads — that is what [`atomic`] is
+/// for.
+pub mod static_atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Reply channels (always `std`; loom has no mpsc — see module docs).
+pub use std::sync::mpsc;
+
+/// Lazy statics (always `std`; loom cannot model `'static` state).
+pub use std::sync::OnceLock;

@@ -1,0 +1,382 @@
+//! Bounded model checks for every concurrency seam in the crate
+//! (DESIGN.md §Static-analysis).
+//!
+//! This file only compiles under `RUSTFLAGS="--cfg loom"`, where the
+//! `crate::sync` shim swaps `std::sync` for loom's modeled primitives
+//! and every `loom::model(..)` closure is executed once per reachable
+//! interleaving (real loom; the vendored std-backed facade runs it
+//! once as a smoke pass — see `vendor/loom`).  Each model follows the
+//! loom playbook:
+//!
+//! * all shared state is created *inside* the closure, so every
+//!   explored interleaving starts fresh;
+//! * at most two spawned threads plus the main thread — state-space
+//!   size is exponential in threads;
+//! * assertions check the seam's invariant, not timing.
+//!
+//! Adding a new concurrency seam to `src/` means adding a model here —
+//! that rule is stated in `src/sync.rs` and DESIGN.md §Static-analysis.
+
+#![cfg(loom)]
+
+use liquid_svm::coordinator::pool::JobCounter;
+use liquid_svm::distributed::wire::{Claim, Shared};
+use liquid_svm::obs::PhaseTable;
+use liquid_svm::serve::registry::{LruInsert, ShardLru, SingleFlight};
+use liquid_svm::serve::worker::BoundedQueue;
+use liquid_svm::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use liquid_svm::sync::{Arc, Condvar, Mutex};
+
+use std::collections::VecDeque;
+
+// ---------------------------------------------------------------- shim
+
+/// The shim itself: a mutex/condvar handshake must round-trip under
+/// the model — if `crate::sync` ever re-exported mismatched types this
+/// would fail to compile, and a lost-wakeup bug in the pattern would
+/// deadlock loom.
+#[test]
+fn sync_shim_handshake() {
+    loom::model(|| {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let t = loom::thread::spawn(move || {
+            let (lock, cv) = &*p2;
+            *lock.lock().unwrap() = true;
+            cv.notify_one();
+        });
+        let (lock, cv) = &*pair;
+        let mut ready = lock.lock().unwrap();
+        while !*ready {
+            ready = cv.wait(ready).unwrap();
+        }
+        drop(ready);
+        t.join().unwrap();
+    });
+}
+
+// ---------------------------------------------- serve: shutdown races
+
+/// Regression model for the serve stop-flag ordering fix
+/// (`serve/mod.rs::shutdown`): the `Release` store must publish every
+/// write sequenced before it to a thread that `Acquire`-loads the
+/// flag.  With both sides `Relaxed` — the original bug — loom finds an
+/// execution where the observer sees `stop == true` but stale data.
+#[test]
+fn stop_flag_publishes() {
+    loom::model(|| {
+        let stop = Arc::new(AtomicBool::new(false));
+        let data = Arc::new(AtomicUsize::new(0));
+        let (s2, d2) = (Arc::clone(&stop), Arc::clone(&data));
+        let t = loom::thread::spawn(move || {
+            // shutdown path: finish the work, then publish the flag
+            d2.store(42, Ordering::Relaxed);
+            s2.store(true, Ordering::Release);
+        });
+        // worker loop: an Acquire load that observes the flag must
+        // also observe everything before the Release store
+        if stop.load(Ordering::Acquire) {
+            assert_eq!(data.load(Ordering::Relaxed), 42);
+        }
+        t.join().unwrap();
+    });
+}
+
+/// Regression model for the batcher shutdown race
+/// (`serve/batcher.rs`): `closed` lives under the *same* mutex as the
+/// pending map, so a submit that loses the race with
+/// `discard_pending` is rejected instead of parking a row no flusher
+/// will ever drain.  Modeled as (closed, pending-count) under one
+/// lock; the invariant is "accepted ⇒ drained" — an accepted row is
+/// always visible to the discard that closes the batcher.
+#[test]
+fn batcher_close_strands_no_row() {
+    loom::model(|| {
+        // (closed, pending rows)
+        let state = Arc::new(Mutex::new((false, 0usize)));
+        let s2 = Arc::clone(&state);
+        let submit = loom::thread::spawn(move || {
+            let mut st = s2.lock().unwrap();
+            if st.0 {
+                false // SubmitError::Closed
+            } else {
+                st.1 += 1;
+                true
+            }
+        });
+        // shutdown: close, then drain — atomically w.r.t. submit
+        let drained = {
+            let mut st = state.lock().unwrap();
+            st.0 = true;
+            std::mem::take(&mut st.1)
+        };
+        let accepted = submit.join().unwrap();
+        let final_pending = state.lock().unwrap().1;
+        if accepted {
+            assert_eq!(drained, 1, "accepted row must be seen by the drain");
+        }
+        assert_eq!(final_pending, 0, "no row may remain parked after close");
+    });
+}
+
+// ------------------------------------------- serve: the bounded queue
+
+/// Backpressure accounting: with capacity 1 and a racing consumer,
+/// every row the producer's `try_push` accepted is popped exactly
+/// once — none lost, none duplicated — and the final `pop` after
+/// `close` returns `None` instead of hanging.
+#[test]
+fn bounded_queue_loses_no_accepted_row() {
+    loom::model(|| {
+        let q = Arc::new(BoundedQueue::new(1));
+        let q2 = Arc::clone(&q);
+        let producer = loom::thread::spawn(move || {
+            let mut accepted = 0usize;
+            for row in 0..2usize {
+                if q2.try_push(row).is_ok() {
+                    accepted += 1;
+                }
+            }
+            q2.close();
+            accepted
+        });
+        let mut received = 0usize;
+        while q.pop().is_some() {
+            received += 1;
+        }
+        let accepted = producer.join().unwrap();
+        assert!(accepted >= 1, "first push into an empty queue cannot fail");
+        assert_eq!(received, accepted);
+    });
+}
+
+/// Close-wakes-consumer: a consumer blocked in `pop` on an empty queue
+/// must be woken by `close` and return `None`.  A missed
+/// `notify_all` would show up as a loom-detected deadlock.
+#[test]
+fn bounded_queue_close_wakes_blocked_pop() {
+    loom::model(|| {
+        let q: Arc<BoundedQueue<usize>> = Arc::new(BoundedQueue::new(1));
+        let q2 = Arc::clone(&q);
+        let consumer = loom::thread::spawn(move || q2.pop());
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+    });
+}
+
+// --------------------------------------- distributed: cell dispatch
+
+/// Worker death vs. concurrent completion: worker 1 dies while holding
+/// its claimed cell; worker 0 keeps draining its own queue *and* the
+/// retry queue.  No cell may be lost (all `done` slots filled), no
+/// cell dispatched twice into `done` (`n_done` equals the slot count),
+/// and the in-flight ledger must return to zero.
+#[test]
+fn dispatch_survives_worker_death() {
+    loom::model(|| {
+        let queues = vec![VecDeque::from(vec![0usize]), VecDeque::from(vec![1usize])];
+        let shared = Arc::new(Shared::new(queues, VecDeque::new(), 2, 2));
+
+        let s0 = Arc::clone(&shared);
+        let survivor = loom::thread::spawn(move || {
+            while let Claim::Cell(c) = s0.claim(0) {
+                s0.complete(c, vec![c as u8], 1);
+            }
+        });
+
+        let s1 = Arc::clone(&shared);
+        let dying = loom::thread::spawn(move || match s1.claim(1) {
+            // died mid-train: the claimed cell must reach the retry queue
+            Claim::Cell(c) => s1.worker_dead(1, Some(c)),
+            // the survivor already finished everything before we ran
+            Claim::Finished => 0,
+        });
+
+        survivor.join().unwrap();
+        let moved = dying.join().unwrap();
+
+        let st = shared.state.lock().unwrap();
+        assert!(st.failed.is_none(), "run must not fail: {:?}", st.failed);
+        assert_eq!(st.n_done, 2, "every cell trained exactly once");
+        assert!(st.done.iter().all(Option::is_some), "no lost cell");
+        assert_eq!(st.in_flight, 0, "in-flight ledger must drain");
+        assert_eq!(st.redispatched, moved, "requeue accounting matches");
+    });
+}
+
+/// Two live workers racing over disjoint queues: claims are exclusive
+/// (each cell trained once), and the condvar protocol terminates —
+/// both workers observe `Finished` without a lost wakeup.
+#[test]
+fn dispatch_claims_are_exclusive() {
+    loom::model(|| {
+        let queues = vec![VecDeque::from(vec![0usize]), VecDeque::from(vec![1usize])];
+        let shared = Arc::new(Shared::new(queues, VecDeque::new(), 2, 2));
+        let mut handles = Vec::new();
+        for w in 0..2usize {
+            let s = Arc::clone(&shared);
+            handles.push(loom::thread::spawn(move || {
+                let mut trained = 0usize;
+                while let Claim::Cell(c) = s.claim(w) {
+                    s.complete(c, vec![c as u8], 1);
+                    trained += 1;
+                }
+                trained
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 2, "each cell claimed exactly once across workers");
+        let st = shared.state.lock().unwrap();
+        assert_eq!(st.n_done, 2);
+        assert_eq!(st.in_flight, 0);
+    });
+}
+
+// ------------------------------------------------- serve: shard LRU
+
+/// Two threads lazily loading the *same* cold shard: exactly one
+/// `insert` wins, the loser adopts the winner's value, and both end up
+/// holding the same resident model — the adopt-winner contract that
+/// keeps a race from double-caching one shard.
+#[test]
+fn shard_lru_adopts_single_winner() {
+    loom::model(|| {
+        let lru: Arc<ShardLru<usize>> = Arc::new(ShardLru::new(4, 1024));
+        let l2 = Arc::clone(&lru);
+        let t = loom::thread::spawn(move || match l2.insert(2, 111, 8) {
+            LruInsert::Inserted { .. } => 111usize,
+            LruInsert::Adopted(v) => v,
+        });
+        let mine = match lru.insert(2, 222, 8) {
+            LruInsert::Inserted { .. } => 222usize,
+            LruInsert::Adopted(v) => v,
+        };
+        let theirs = t.join().unwrap();
+        assert_eq!(mine, theirs, "both threads must converge on one winner");
+        assert_eq!(lru.touch(2), Some(mine), "the winner is resident");
+        assert_eq!(lru.resident_count(), 1, "the race must not double-cache");
+        assert!(lru.invariants_hold());
+    });
+}
+
+/// Eviction racing a lazy load on a *different* cell: the byte budget
+/// forces whichever insert runs second to evict the other entry, and
+/// the resident-bytes ledger must stay consistent in every
+/// interleaving (`invariants_hold` re-sums the map under the lock).
+#[test]
+fn shard_lru_eviction_keeps_ledger_consistent() {
+    loom::model(|| {
+        // budget 10, entries of 8 bytes: two residents never fit
+        let lru: Arc<ShardLru<usize>> = Arc::new(ShardLru::new(4, 10));
+        let l2 = Arc::clone(&lru);
+        let t = loom::thread::spawn(move || {
+            if l2.touch(0).is_none() {
+                l2.insert(0, 100, 8);
+            }
+        });
+        if lru.touch(1).is_none() {
+            lru.insert(1, 200, 8);
+        }
+        t.join().unwrap();
+        assert_eq!(lru.resident_count(), 1, "budget admits exactly one entry");
+        assert_eq!(lru.resident_bytes(), 8);
+        assert!(lru.invariants_hold());
+    });
+}
+
+// ------------------------------------------------- serve: hot reload
+
+/// Single-flight reload gate: two threads race `try_begin`; at most
+/// one may be inside the critical section at a time, and the
+/// drop-based release re-opens the gate (a panicking reload can no
+/// longer wedge it shut — the guard's `Drop` runs during unwind).
+#[test]
+fn single_flight_admits_one_reloader() {
+    loom::model(|| {
+        let sf = Arc::new(SingleFlight::new());
+        let in_crit = Arc::new(AtomicUsize::new(0));
+        let entered = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let (sf, in_crit, entered) =
+                (Arc::clone(&sf), Arc::clone(&in_crit), Arc::clone(&entered));
+            handles.push(loom::thread::spawn(move || {
+                if let Some(_flight) = sf.try_begin() {
+                    assert_eq!(
+                        in_crit.fetch_add(1, Ordering::SeqCst),
+                        0,
+                        "two reloaders inside the single-flight section"
+                    );
+                    entered.fetch_add(1, Ordering::SeqCst);
+                    in_crit.fetch_sub(1, Ordering::SeqCst);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // the gate may reject a racing thread, but never both
+        assert!(entered.load(Ordering::SeqCst) >= 1);
+        // and it must be open again once the guards dropped
+        assert!(sf.try_begin().is_some(), "gate must re-open after release");
+    });
+}
+
+// ------------------------------------------------ obs: span table
+
+/// Concurrent span recording: two threads and main merge rows into
+/// one table; counts and sums must equal the sequential totals in
+/// every interleaving (the mutex is the whole story — this model
+/// guards against anyone "optimizing" the table into racy shards).
+#[test]
+fn phase_table_merges_concurrent_records() {
+    loom::model(|| {
+        let table = Arc::new(PhaseTable::new());
+        let t1 = {
+            let t = Arc::clone(&table);
+            loom::thread::spawn(move || t.record("test.a", 10, 5, 1))
+        };
+        let t2 = {
+            let t = Arc::clone(&table);
+            loom::thread::spawn(move || t.record("test.b", 20, 10, 2))
+        };
+        table.record("test.a", 30, 15, 4);
+        t1.join().unwrap();
+        t2.join().unwrap();
+        let rows = table.phases();
+        assert_eq!(rows.len(), 2);
+        let (name_a, a) = rows[0];
+        let (name_b, b) = rows[1];
+        assert_eq!((name_a, a.calls, a.total_us, a.self_us, a.bytes), ("test.a", 2, 40, 20, 5));
+        assert_eq!((name_b, b.calls, b.total_us, b.self_us, b.bytes), ("test.b", 1, 20, 10, 2));
+    });
+}
+
+// ------------------------------------------- coordinator: job claims
+
+/// The thread-pool job counter: racing claimants partition the job
+/// indices — every index claimed exactly once, no index skipped, and
+/// the counter drains to `None` for everyone.
+#[test]
+fn job_counter_partitions_jobs() {
+    loom::model(|| {
+        let counter = Arc::new(JobCounter::new(3));
+        let c2 = Arc::clone(&counter);
+        let t = loom::thread::spawn(move || {
+            let mut mine = Vec::new();
+            while let Some(i) = c2.claim() {
+                mine.push(i);
+            }
+            mine
+        });
+        let mut mine = Vec::new();
+        while let Some(i) = counter.claim() {
+            mine.push(i);
+        }
+        let theirs = t.join().unwrap();
+        let mut all: Vec<usize> = mine.iter().chain(theirs.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2], "claims must partition the job range");
+        assert_eq!(counter.claim(), None, "drained counter stays drained");
+    });
+}

@@ -1,0 +1,57 @@
+//! Std-mode contract for the `liquid_svm::sync` shim (DESIGN.md
+//! §Static-analysis): without `--cfg loom` the shim must re-export
+//! `std::sync` types *unchanged* — same `TypeId`, same poisoning
+//! behavior — so routing the whole crate through it costs nothing.
+//! The loom leg of the contract lives in `tests/loom_models.rs`.
+
+#![cfg(not(loom))]
+
+use std::any::TypeId;
+
+#[test]
+fn shim_types_are_std_types() {
+    assert_eq!(
+        TypeId::of::<liquid_svm::sync::Mutex<u64>>(),
+        TypeId::of::<std::sync::Mutex<u64>>()
+    );
+    assert_eq!(
+        TypeId::of::<liquid_svm::sync::RwLock<u64>>(),
+        TypeId::of::<std::sync::RwLock<u64>>()
+    );
+    assert_eq!(TypeId::of::<liquid_svm::sync::Condvar>(), TypeId::of::<std::sync::Condvar>());
+    assert_eq!(
+        TypeId::of::<liquid_svm::sync::Arc<u64>>(),
+        TypeId::of::<std::sync::Arc<u64>>()
+    );
+    assert_eq!(
+        TypeId::of::<liquid_svm::sync::atomic::AtomicU64>(),
+        TypeId::of::<std::sync::atomic::AtomicU64>()
+    );
+    assert_eq!(
+        TypeId::of::<liquid_svm::sync::static_atomic::AtomicU64>(),
+        TypeId::of::<std::sync::atomic::AtomicU64>()
+    );
+    assert_eq!(
+        TypeId::of::<liquid_svm::sync::mpsc::Sender<u64>>(),
+        TypeId::of::<std::sync::mpsc::Sender<u64>>()
+    );
+    assert_eq!(
+        TypeId::of::<liquid_svm::sync::OnceLock<u64>>(),
+        TypeId::of::<std::sync::OnceLock<u64>>()
+    );
+}
+
+#[test]
+fn shim_mutex_preserves_poisoning() {
+    let m = liquid_svm::sync::Arc::new(liquid_svm::sync::Mutex::new(0u32));
+    let m2 = liquid_svm::sync::Arc::clone(&m);
+    let _ = std::thread::spawn(move || {
+        let _g = m2.lock().unwrap();
+        panic!("poison the lock");
+    })
+    .join();
+    // std semantics: a panic while holding the lock poisons it, and
+    // the data stays reachable through the poison error
+    let err = m.lock().expect_err("poisoned mutex must surface the panic");
+    assert_eq!(*err.into_inner(), 0);
+}

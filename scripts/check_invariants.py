@@ -1,0 +1,370 @@
+#!/usr/bin/env python3
+"""Project-invariant lint pass for liquid_svm (DESIGN.md §Static-analysis).
+
+Five whole-project invariants that rustc and clippy cannot see, checked
+with nothing but the Python standard library so the pass runs in any
+container (no Rust toolchain required) and in CI's `invariants` job:
+
+  1. metrics    — every `pub static NAME: Counter` in metrics/counters.rs
+                  is registered exactly once in obs/registry.rs, and every
+                  `liquidsvm_*` exposition name in non-test code is
+                  defined at exactly one site (no duplicate names across
+                  the registry and the serve endpoint).
+  2. spans      — every `obs::span("name")` in non-test code appears
+                  backticked in DESIGN.md (the span-name contract);
+                  `test.*` names are reserved for unit tests.
+  3. determinism— no wall-clock (`SystemTime::now`) or ambient RNG
+                  (`thread_rng`, `rand::random`, `from_entropy`) in the
+                  deterministic paths: solver/, kernel/, cv/, persist.
+  4. sync-shim  — no `std::sync` import outside src/sync.rs: every
+                  concurrency seam must go through the loom-checkable
+                  `crate::sync` shim (telemetry uses its `static_atomic`
+                  carve-out, which is still inside sync.rs).
+  5. clamp      — every squared-distance site using the
+                  ‖x‖²+‖y‖²−2⟨x,y⟩ cancellation form clamps negative
+                  rounding residue at the source (`.max(0.0)` on the
+                  same expression), so no kernel ever sees d² < 0.
+
+`--self-test` seeds one violation of each class into a temp tree and
+asserts the checker catches it (and that commented-out decoys do NOT
+trip it); python/tests/test_invariants.py runs both modes.
+
+Exit status: 0 clean, 1 violations found, 2 self-test failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+import tempfile
+from pathlib import Path
+
+# ----------------------------------------------------------------- helpers
+
+
+def rust_files(src: Path) -> list[Path]:
+    return sorted(src.rglob("*.rs"))
+
+
+def strip_tests(text: str) -> str:
+    """Drop everything from a trailing `#[cfg(test)] mod tests` on.
+
+    The repo convention keeps the test module last in the file, so
+    truncating at the attribute is exact; if code ever follows a test
+    module this stays conservative (it checks less, never wrongly
+    flags more).
+    """
+    lines = text.splitlines()
+    for i, line in enumerate(lines):
+        if line.strip().startswith("#[cfg(test)]"):
+            follow = "\n".join(lines[i + 1 : i + 4])
+            if re.search(r"\bmod\s+\w+", follow):
+                return "\n".join(lines[:i])
+    return text
+
+
+def code_lines(text: str):
+    """Yield (1-based lineno, comment-stripped line) for code lines.
+
+    Whole-line comments (`//`, `///`, `//!`) are skipped and trailing
+    `//` comments dropped — naive about `//` inside string literals,
+    which the checked patterns never contain.
+    """
+    for i, raw in enumerate(text.splitlines(), start=1):
+        stripped = raw.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        yield i, raw.split("//")[0]
+
+
+def rel(path: Path, root: Path) -> str:
+    try:
+        return str(path.relative_to(root))
+    except ValueError:
+        return str(path)
+
+
+# ------------------------------------------------------------- the checks
+
+
+def check_metrics(root: Path) -> list[str]:
+    """Invariant 1: counters registered exactly once; names unique."""
+    src = root / "rust" / "src"
+    out: list[str] = []
+
+    counters_rs = src / "metrics" / "counters.rs"
+    registry_rs = src / "obs" / "registry.rs"
+    if not counters_rs.is_file() or not registry_rs.is_file():
+        return [f"metrics: missing {rel(counters_rs, root)} or {rel(registry_rs, root)}"]
+
+    statics = re.findall(
+        r"^pub static (\w+): Counter", counters_rs.read_text(), re.MULTILINE
+    )
+    registry = strip_tests(registry_rs.read_text())
+    for name in statics:
+        n = len(re.findall(rf"\bcounters::{name}\b", registry))
+        if n != 1:
+            out.append(
+                f"metrics: {rel(counters_rs, root)}: static `{name}` is "
+                f"registered {n} times in obs/registry.rs (want exactly 1)"
+            )
+
+    # every liquidsvm_* exposition name is defined at exactly one site
+    sites: dict[str, list[str]] = {}
+    for path in rust_files(src):
+        body = strip_tests(path.read_text())
+        for lineno, line in code_lines(body):
+            for name in re.findall(r'"(liquidsvm_\w+)"', line):
+                sites.setdefault(name, []).append(f"{rel(path, root)}:{lineno}")
+    for name, where in sorted(sites.items()):
+        if len(where) != 1:
+            out.append(
+                f"metrics: exposition name `{name}` defined at "
+                f"{len(where)} sites (want 1): {', '.join(where)}"
+            )
+    return out
+
+
+def check_spans(root: Path) -> list[str]:
+    """Invariant 2: span names live in DESIGN.md's span contract."""
+    src = root / "rust" / "src"
+    design_path = root / "DESIGN.md"
+    if not design_path.is_file():
+        return ["spans: DESIGN.md not found"]
+    design = design_path.read_text()
+    out = []
+    for path in rust_files(src):
+        body = strip_tests(path.read_text())
+        for lineno, line in code_lines(body):
+            for name in re.findall(r'\bspan(?:_slow)?\(\s*"([^"]+)"', line):
+                if name.startswith("test."):
+                    out.append(
+                        f"spans: {rel(path, root)}:{lineno}: `test.*` span "
+                        f"`{name}` outside a #[cfg(test)] module"
+                    )
+                elif f"`{name}`" not in design:
+                    out.append(
+                        f"spans: {rel(path, root)}:{lineno}: span `{name}` "
+                        f"is not documented (backticked) in DESIGN.md"
+                    )
+    return out
+
+
+DETERMINISM_TOKENS = ("SystemTime::now", "thread_rng", "rand::random", "from_entropy")
+
+
+def deterministic_paths(root: Path) -> list[Path]:
+    src = root / "rust" / "src"
+    paths: list[Path] = []
+    for sub in ("solver", "kernel", "cv"):
+        d = src / sub
+        if d.is_dir():
+            paths.extend(rust_files(d))
+    persist = src / "coordinator" / "persist.rs"
+    if persist.is_file():
+        paths.append(persist)
+    return paths
+
+
+def check_determinism(root: Path) -> list[str]:
+    """Invariant 3: no wall clock / ambient RNG in deterministic paths."""
+    out = []
+    for path in deterministic_paths(root):
+        # test modules count too: deterministic-path tests must not
+        # smuggle in wall-clock either, so scan the full file
+        for lineno, line in code_lines(path.read_text()):
+            for tok in DETERMINISM_TOKENS:
+                if tok in line:
+                    out.append(
+                        f"determinism: {rel(path, root)}:{lineno}: `{tok}` "
+                        f"in a deterministic path (solver/kernel/cv/persist)"
+                    )
+    return out
+
+
+def check_sync_imports(root: Path) -> list[str]:
+    """Invariant 4: `std::sync` only inside the src/sync.rs shim."""
+    src = root / "rust" / "src"
+    out = []
+    for path in rust_files(src):
+        if path == src / "sync.rs":
+            continue
+        for lineno, line in code_lines(path.read_text()):
+            if "std::sync" in line:
+                out.append(
+                    f"sync-shim: {rel(path, root)}:{lineno}: raw `std::sync` "
+                    f"use outside src/sync.rs — route it through crate::sync "
+                    f"so loom can model it (or sync.rs §static_atomic)"
+                )
+    return out
+
+
+CANCELLATION = re.compile(r"-\s*2\.0\s*\*")
+
+
+def clamp_paths(root: Path) -> list[Path]:
+    src = root / "rust" / "src"
+    paths = []
+    kernel = src / "kernel"
+    if kernel.is_dir():
+        paths.extend(rust_files(kernel))
+    matrix = src / "data" / "matrix.rs"
+    if matrix.is_file():
+        paths.append(matrix)
+    return paths
+
+
+def check_clamp(root: Path) -> list[str]:
+    """Invariant 5: clamp-at-source on every cancellation-form d²."""
+    out = []
+    for path in clamp_paths(root):
+        for lineno, line in code_lines(path.read_text()):
+            if CANCELLATION.search(line) and ".max(0.0)" not in line:
+                out.append(
+                    f"clamp: {rel(path, root)}:{lineno}: cancellation-form "
+                    f"squared distance without `.max(0.0)` on the same "
+                    f"expression — rounding can make it negative"
+                )
+    return out
+
+
+CHECKS = [
+    ("metrics", check_metrics),
+    ("spans", check_spans),
+    ("determinism", check_determinism),
+    ("sync-shim", check_sync_imports),
+    ("clamp", check_clamp),
+]
+
+
+def run_checks(root: Path) -> list[str]:
+    findings: list[str] = []
+    for _, fn in CHECKS:
+        findings.extend(fn(root))
+    return findings
+
+
+# ------------------------------------------------------------- self-test
+
+
+def write(path: Path, text: str) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(text)
+
+
+def self_test() -> int:
+    """Seed one violation per class; assert each is caught and that
+    commented-out decoys are not."""
+    failures = []
+    with tempfile.TemporaryDirectory(prefix="liquidsvm_inv_") as tmp:
+        root = Path(tmp)
+        src = root / "rust" / "src"
+
+        # class 1a: a counter static never registered;
+        # class 1b: an exposition name defined twice
+        write(
+            src / "metrics" / "counters.rs",
+            "pub static ORPHAN_COUNTER: Counter = Counter::new();\n",
+        )
+        write(
+            src / "obs" / "registry.rs",
+            'r.register_counter("liquidsvm_dup", "a", &x);\n'
+            'r.register_counter("liquidsvm_dup", "b", &y);\n'
+            "#[cfg(test)]\nmod tests {\n"
+            '    // names in tests are exempt: "liquidsvm_dup" again\n'
+            '    const T: &str = "liquidsvm_test_only";\n'
+            "}\n",
+        )
+        # class 2: an undocumented span (plus a commented decoy that
+        # must NOT be flagged)
+        write(
+            src / "coordinator" / "driver.rs",
+            '// let s = obs::span("commented.out");\n'
+            'let _s = obs::span("mystery.phase");\n',
+        )
+        write(root / "DESIGN.md", "Spans: `train`, `predict`.\n")
+        # class 3: wall clock in a deterministic path
+        write(
+            src / "solver" / "mod.rs",
+            "// SystemTime::now in a comment is fine\n"
+            "let t = std::time::SystemTime::now();\n",
+        )
+        # class 4: raw std::sync outside the shim
+        write(
+            src / "serve" / "mod.rs",
+            "// use std::sync::Mutex; (decoy comment)\n"
+            "use std::sync::Mutex;\n",
+        )
+        # class 5: unclamped cancellation-form distance
+        write(
+            src / "kernel" / "backend.rs",
+            "let good = (xn + yn - 2.0 * dot).max(0.0);\n"
+            "let bad = xn + yn - 2.0 * dot;\n",
+        )
+
+        expected = {
+            "metrics: .*`ORPHAN_COUNTER` is registered 0 times": check_metrics,
+            "metrics: .*`liquidsvm_dup` defined at 2 sites": check_metrics,
+            "spans: .*`mystery.phase`": check_spans,
+            "determinism: .*SystemTime::now": check_determinism,
+            "sync-shim: .*serve/mod.rs:2": check_sync_imports,
+            "clamp: .*backend.rs:2": check_clamp,
+        }
+        for pattern, fn in expected.items():
+            hits = fn(root)
+            if not any(re.search(pattern, h) for h in hits):
+                failures.append(f"self-test: /{pattern}/ not caught; got {hits}")
+
+        # false-positive guards: decoys in comments / test modules
+        for fn, decoy in [
+            (check_spans, "commented.out"),
+            (check_sync_imports, "serve/mod.rs:1"),
+            (check_determinism, "solver/mod.rs:1"),
+            (check_metrics, "liquidsvm_test_only"),
+            (check_clamp, "backend.rs:1"),
+        ]:
+            if any(decoy in h for h in fn(root)):
+                failures.append(f"self-test: decoy `{decoy}` wrongly flagged")
+
+    if failures:
+        print("\n".join(failures))
+        print(f"SELF-TEST FAILED ({len(failures)} problems)")
+        return 2
+    print(f"self-test OK: all {len(CHECKS)} violation classes caught, decoys ignored")
+    return 0
+
+
+# ------------------------------------------------------------------ main
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--root",
+        type=Path,
+        default=Path(__file__).resolve().parent.parent,
+        help="repo root (default: the checkout containing this script)",
+    )
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="seed violations into a temp tree and verify they are caught",
+    )
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+
+    findings = run_checks(args.root)
+    if findings:
+        print("\n".join(findings))
+        print(f"FAILED: {len(findings)} invariant violation(s)")
+        return 1
+    n_files = len(rust_files(args.root / "rust" / "src"))
+    print(f"OK: {len(CHECKS)} invariants hold across {n_files} source files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
