@@ -22,7 +22,7 @@ def run(*args):
 def test_repo_satisfies_invariants():
     r = run()
     assert r.returncode == 0, f"invariant violations:\n{r.stdout}{r.stderr}"
-    assert "OK: 5 invariants hold" in r.stdout
+    assert "OK: 6 invariants hold" in r.stdout
 
 
 def test_checker_catches_seeded_violations():

@@ -19,12 +19,13 @@ mod harness;
 
 use std::time::Duration;
 
-use harness::{sized, Snapshot, Table};
+use harness::{scale, sized, Scale, Snapshot, Table};
 use liquid_svm::coordinator::config::BackendChoice;
 use liquid_svm::data::synth;
 use liquid_svm::prelude::*;
 use liquid_svm::runtime::{default_artifact_dir, XlaRuntime};
-use liquid_svm::serve::{run_load, LoadSpec, ServeConfig, Server};
+use liquid_svm::serve::protocol::WireMode;
+use liquid_svm::serve::{run_load, run_swarm, LoadSpec, ServeConfig, Server};
 
 struct Measured {
     rps: f64,
@@ -64,6 +65,67 @@ fn measure(
     // warm-up (thread spin-up, executable caches), then the timed run
     let _ = run_load(&LoadSpec { requests: (spec.requests / 10).max(1), ..spec.clone() }, rows, None);
     let report = run_load(&spec, rows, None).unwrap();
+    let out = Measured {
+        rps: report.rps(),
+        mean_batch: server.stats.mean_batch(),
+        p99_us: report.latency.percentile_us(0.99),
+    };
+    server.shutdown();
+    out
+}
+
+/// Soft open-file limit from `/proc/self/limits` — the c10k sweep
+/// needs one fd per connection on each side plus server/runtime slack.
+/// Unparseable (non-Linux) reads as unlimited.
+fn open_file_limit() -> usize {
+    let Ok(text) = std::fs::read_to_string("/proc/self/limits") else {
+        return usize::MAX;
+    };
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("Max open files") {
+            let soft = rest.split_whitespace().next().unwrap_or("unlimited");
+            return soft.parse().unwrap_or(usize::MAX);
+        }
+    }
+    usize::MAX
+}
+
+/// One timed swarm run against a fresh batched server (batch cap 64 —
+/// the regime where the binary framing's parse savings dominate).
+fn measure_swarm(
+    train: &liquid_svm::data::Dataset,
+    rows: &[Vec<f32>],
+    mode: WireMode,
+    connections: usize,
+    per_conn: usize,
+    pipeline: usize,
+) -> Measured {
+    let cfg = Config::default().folds(2).backend(BackendChoice::Blocked);
+    let model = svm_binary(train, 0.5, &cfg).unwrap();
+    let server = Server::start(ServeConfig {
+        port: 0,
+        max_batch: 64,
+        max_delay: Duration::from_millis(1),
+        workers: 4,
+        model_config: cfg,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    server.registry.insert("m", model);
+
+    let spec = LoadSpec {
+        addr: server.addr().to_string(),
+        model: "m".into(),
+        connections,
+        requests: per_conn,
+        pipeline,
+    };
+    // warm-up at 1/10 the connection count, then the timed run; the
+    // swarm itself bails on any dropped reply (strict accounting)
+    let warm = LoadSpec { connections: (connections / 10).max(1), ..spec.clone() };
+    let _ = run_swarm(&warm, rows, None, mode).unwrap();
+    let report = run_swarm(&spec, rows, None, mode).unwrap();
+    assert_eq!(report.failed, 0, "c10k sweep saw failed replies: {report:?}");
     let out = Measured {
         rps: report.rps(),
         mean_batch: server.stats.mean_batch(),
@@ -138,10 +200,82 @@ fn main() {
             );
         }
     }
+    // ── async c10k sweep: the reactor plane, binary vs text framing ──
+    // Thousands of connections from the event-driven swarm generator
+    // against the epoll serve loop; at batch cap 64 the text rows pay
+    // a float parse/format per value, the binary rows memcpy.
+    let want_conns = sized(200, 2_000, 10_000);
+    let per_conn = 5usize;
+    let limit = open_file_limit();
+    // client fd + server fd per connection, plus listener/pipes/stdio
+    let (conns, constrained) = if want_conns.saturating_mul(2) + 256 > limit {
+        let clamped = (limit.saturating_sub(256) / 2).max(16);
+        println!(
+            "\nSKIP (constrained CI): open-file limit {limit} cannot hold \
+             {want_conns} connections — clamping the c10k sweep to {clamped} \
+             and skipping the binary>=text assertion; raise `ulimit -n` \
+             (scripts/serve_stress.sh does) for the real sweep.\n"
+        );
+        (clamped, true)
+    } else {
+        (want_conns, false)
+    };
+
+    println!("\n=== serve: async c10k sweep ({conns} conns x {per_conn} reqs, batch cap 64) ===\n");
+    let t2 = Table::new(
+        &["mode", "conns", "rps", "mean_batch", "p99", "speedup"],
+        &[8, 7, 10, 10, 9, 8],
+    );
+    // two runs per mode, best-of (the sweep is syscall-bound and
+    // noisy; best-of-2 damps scheduler jitter without hiding a real
+    // ordering inversion)
+    let best = |mode| {
+        let a = measure_swarm(&train, &rows, mode, conns, per_conn, 4);
+        let b = measure_swarm(&train, &rows, mode, conns, per_conn, 4);
+        if a.rps >= b.rps { a } else { b }
+    };
+    let txt = best(WireMode::Text);
+    let bin = best(WireMode::Binary);
+    for (label, m, base) in [("text", &txt, txt.rps), ("binary", &bin, txt.rps)] {
+        t2.row(&[
+            label,
+            &conns.to_string(),
+            &format!("{:.0}", m.rps),
+            &format!("{:.1}", m.mean_batch),
+            &format!("{}us", m.p99_us),
+            &format!("x{:.2}", m.rps / base.max(1e-9)),
+        ]);
+    }
+    let total = (conns * per_conn) as f64;
+    snap.case(
+        "async_c10k_text",
+        Duration::from_secs_f64(total / txt.rps.max(1e-9)),
+        txt.rps,
+        "requests/s",
+    );
+    snap.case(
+        "async_c10k_binary",
+        Duration::from_secs_f64(total / bin.rps.max(1e-9)),
+        bin.rps,
+        "requests/s",
+    );
+
+    // the PR's serving acceptance, checked where CI runs it (--quick):
+    // binary framing must not lose to text at batch cap 64
+    if scale() == Scale::Smoke && !constrained {
+        assert!(
+            bin.rps >= txt.rps,
+            "binary framing slower than text at batch 64: {:.0} vs {:.0} rps",
+            bin.rps,
+            txt.rps
+        );
+    }
     snap.write();
 
     println!(
         "\npaper shape: batched rps climbs with the batch cap; the blocked rung's\n\
-         batched/single ratio is the headline (acceptance: >= 3x)."
+         batched/single ratio is the headline (acceptance: >= 3x).  the c10k\n\
+         sweep's headline is binary >= text rps at batch cap 64 with zero\n\
+         dropped replies."
     );
 }

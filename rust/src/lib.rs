@@ -38,11 +38,12 @@
 #![allow(clippy::type_complexity)]
 #![allow(clippy::new_without_default)]
 // The correctness-tooling plane (DESIGN.md §Static-analysis):
-// `unsafe` is confined to the two modules that genuinely need it —
-// `kernel/simd.rs` (std::arch intrinsics behind runtime detection)
-// and `runtime` (FFI Send/Sync contracts for the PJRT client) — each
-// opting back in with a module-level `allow` next to its safety
-// argument.  Every unsafe block must carry a `// SAFETY:` contract;
+// `unsafe` is confined to the three modules that genuinely need it —
+// `kernel/simd.rs` (std::arch intrinsics behind runtime detection),
+// `runtime` (FFI Send/Sync contracts for the PJRT client), and
+// `serve/poll.rs` (raw epoll/poll + self-pipe syscalls for the serve
+// event loop) — each opting back in with a module-level `allow` next
+// to its safety argument.  Every unsafe block must carry a `// SAFETY:` contract;
 // CI denies `clippy::undocumented_unsafe_blocks` so an uncommented
 // block cannot land.
 #![deny(unsafe_code)]

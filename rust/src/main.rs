@@ -414,6 +414,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_models: args.num("max-models", 8usize)?,
         max_shard_bytes: args.num("max-shard-mb", 256u64)? << 20,
         slow_log_us: args.num("slow-log-us", 0u64)?,
+        io_threads: args.num("io-threads", 0usize)?,
+        max_conns: args.num("max-conns", 0usize)?,
+        rate_limit: args.num("rate-limit", 0u64)?,
         model_config: build_config(args)?,
     };
     let server = Server::start(scfg)?;
@@ -445,8 +448,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// Load generator against a running server (the demo/bench client).
+/// `--binary` negotiates the length-prefixed f32 framing; `--swarm`
+/// multiplexes all connections over a few event-loop threads instead
+/// of one thread each (the c10k mode).
 fn cmd_client(args: &Args) -> Result<()> {
-    use liquid_svm::serve::{run_load, LoadSpec};
+    use liquid_svm::serve::{protocol::WireMode, run_load_mode, run_swarm, LoadSpec};
     let addr = args.get("addr").ok_or_else(|| anyhow!("--addr host:port required"))?;
     let connections: usize = args.num("connections", 16)?;
     let total: usize = args.num("n", 1000)?;
@@ -457,12 +463,24 @@ fn cmd_client(args: &Args) -> Result<()> {
         requests: (total + connections.max(1) - 1) / connections.max(1),
         pipeline: args.num("pipeline", 32usize)?,
     };
+    let mode =
+        if args.get("binary").is_some() { WireMode::Binary } else { WireMode::Text };
     let (_, test_d) = load_dataset(args)?;
     let rows: Vec<Vec<f32>> = (0..test_d.len()).map(|i| test_d.x.row(i).to_vec()).collect();
-    let report = run_load(&spec, &rows, None)?;
+    let report = if args.get("swarm").is_some() {
+        run_swarm(&spec, &rows, None, mode)?
+    } else {
+        run_load_mode(&spec, &rows, None, mode)?
+    };
     println!(
-        "connections={} requests_per_conn={} pipeline={}",
-        spec.connections, spec.requests, spec.pipeline
+        "connections={} requests_per_conn={} pipeline={} mode={}",
+        spec.connections,
+        spec.requests,
+        spec.pipeline,
+        match mode {
+            WireMode::Binary => "binary",
+            WireMode::Text => "text",
+        }
     );
     println!("{}", report.report());
     Ok(())
@@ -633,9 +651,9 @@ USAGE:
   liquidsvm serve [--port P] [--host H] [--models name=a.sol,name2=b.sol.d]
                   [--max-batch B] [--max-delay-ms MS] [--workers W] [--queue-cap Q]
                   [--max-models M] [--max-shard-mb MB] [--backend scalar|blocked|simd|...]
-                  [--slow-log-us US]
+                  [--slow-log-us US] [--io-threads N] [--max-conns C] [--rate-limit R]
   liquidsvm client --addr HOST:PORT --model NAME [--data NAME|--file PATH] [--n N]
-                   [--connections C] [--pipeline P]
+                   [--connections C] [--pipeline P] [--binary] [--swarm]
   liquidsvm convert --in DATA.[csv|libsvm] --out DATA.[csv|libsvm]
   liquidsvm distributed [--data NAME] [--workers W] [--coarse-size N] [--fine-size N]
                   [--trace] [--trace-json PATH.json]
@@ -684,6 +702,20 @@ writes the same breakdown as JSON (implies --trace).  `serve
 reaches N microseconds, and the serve protocol's `metrics` command
 exposes every registered counter/gauge/histogram as Prometheus text
 (`metrics json` for JSON) — see the README observability playbook.
+
+`serve` runs connections on a fixed pool of nonblocking reactor
+threads (`--io-threads`, default min(cores, 4)), so 10k idle
+connections cost 10k slab slots, not 10k threads.  `--max-conns C`
+caps concurrently open connections (excess accepts get one
+`err conn-limit ...` line and a close); `--rate-limit R` grants each
+client IP a token bucket of R predict rows/s with a 1-second burst
+(refusals carry `retry_after_ms`).  `client --binary` negotiates the
+length-prefixed f32 wire format (`tag u8 | len u32 LE | payload`, raw
+little-endian rows/decisions — same predictions as text, no float
+formatting on the hot path); `client --swarm` drives all connections
+from one event-loop thread per core instead of a thread per
+connection, the harness for c10k-scale sweeps — see the README
+serving playbook.
 
 `distributed` with a worker *count* runs the single-process simulation
 of the paper's Spark mode (modelled Table-4 wall-clocks).  With
@@ -817,6 +849,32 @@ mod tests {
         assert!(a.get("trace").is_some() || a.get("trace-json").is_some());
         let a = parse(&["serve", "--slow-log-us", "5000"]).unwrap();
         assert_eq!(a.num("slow-log-us", 0u64).unwrap(), 5000);
+    }
+
+    #[test]
+    fn serve_admission_flags_parse() {
+        let a = parse(&[
+            "serve", "--io-threads", "3", "--max-conns", "5000", "--rate-limit", "200",
+        ])
+        .unwrap();
+        assert_eq!(a.num("io-threads", 0usize).unwrap(), 3);
+        assert_eq!(a.num("max-conns", 0usize).unwrap(), 5000);
+        assert_eq!(a.num("rate-limit", 0u64).unwrap(), 200);
+        // all three default to 0 = auto/unlimited/off
+        let a = parse(&["serve"]).unwrap();
+        assert_eq!(a.num("io-threads", 0usize).unwrap(), 0);
+        assert_eq!(a.num("max-conns", 0usize).unwrap(), 0);
+        assert_eq!(a.num("rate-limit", 0u64).unwrap(), 0);
+    }
+
+    #[test]
+    fn client_mode_flags_parse() {
+        let a = parse(&["client", "--addr", "h:1", "--model", "m", "--binary", "--swarm"]).unwrap();
+        assert!(a.get("binary").is_some());
+        assert!(a.get("swarm").is_some());
+        let a = parse(&["client", "--addr", "h:1", "--model", "m"]).unwrap();
+        assert!(a.get("binary").is_none());
+        assert!(a.get("swarm").is_none());
     }
 
     #[test]

@@ -29,11 +29,35 @@ use crate::sync::{mpsc, Arc, Mutex};
 use super::registry::{RouteTarget, ServedModel};
 use super::worker::BoundedQueue;
 
-/// One pending prediction row and its reply channel.
+/// Where a finished row's result goes: back to a blocking caller over
+/// an mpsc channel (text connections, tests), or into a reactor
+/// mailbox that wakes the owning event loop (the async serve plane,
+/// DESIGN.md §Serving-async).
+pub enum ReplySink {
+    Channel(mpsc::Sender<Result<f32, String>>),
+    Reactor(super::eventloop::ReactorSink),
+}
+
+impl ReplySink {
+    /// Deliver the row's result.  Consuming `self` makes double-send
+    /// unrepresentable; a sink dropped *unsent* still reports "worker
+    /// dropped request" to its waiter (channel: sender drop unblocks
+    /// the receiver; reactor: the sink's Drop pushes an error
+    /// completion), so a discarded row can never strand a client.
+    pub fn send(self, result: Result<f32, String>) {
+        match self {
+            // a vanished receiver is not the worker's problem
+            ReplySink::Channel(tx) => drop(tx.send(result)),
+            ReplySink::Reactor(sink) => sink.send(result),
+        }
+    }
+}
+
+/// One pending prediction row and its reply sink.
 pub struct BatchItem {
     pub features: Vec<f32>,
     pub enqueued: Instant,
-    pub tx: mpsc::Sender<Result<f32, String>>,
+    pub reply: ReplySink,
 }
 
 /// A flushed batch awaiting a worker.
@@ -118,8 +142,24 @@ impl Batcher {
         model: &Arc<ServedModel>,
         features: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<f32, String>>, SubmitError> {
-        let _sp = crate::obs::span("serve.enqueue");
         let (tx, rx) = mpsc::channel();
+        self.submit_with(model, features, ReplySink::Channel(tx)).map(|()| rx)
+    }
+
+    /// [`submit`](Self::submit) with a caller-supplied reply sink — the
+    /// async serve plane passes reactor sinks here so a worker
+    /// completion wakes the owning event loop instead of a parked
+    /// thread.  On error the sink is dropped, which is itself a
+    /// delivery (see [`ReplySink::send`]); callers that want to answer
+    /// the client differently (e.g. `err busy`) respond on their own
+    /// connection state instead.
+    pub fn submit_with(
+        &self,
+        model: &Arc<ServedModel>,
+        features: Vec<f32>,
+        reply: ReplySink,
+    ) -> Result<(), SubmitError> {
+        let _sp = crate::obs::span("serve.enqueue");
         let target = model.route(&features);
         let mut pending = self.pending.lock().unwrap();
         if pending.closed {
@@ -160,7 +200,7 @@ impl Batcher {
         if p.items.is_empty() {
             p.oldest = Instant::now();
         }
-        p.items.push(BatchItem { features, enqueued: Instant::now(), tx });
+        p.items.push(BatchItem { features, enqueued: Instant::now(), reply });
         if p.items.len() >= self.cfg.max_batch {
             let batch = Batch {
                 model: p.model.clone(),
@@ -176,7 +216,7 @@ impl Batcher {
                 return Err(SubmitError::Busy { retry_after_ms: self.retry_after_ms() });
             }
         }
-        Ok(rx)
+        Ok(())
     }
 
     fn retry_after_ms(&self) -> u64 {

@@ -1,0 +1,1229 @@
+//! The async serve plane: a small fixed pool of reactor threads
+//! drives every connection through nonblocking readiness polling
+//! ([`super::poll`]) — no thread-per-connection anywhere
+//! (machine-enforced: `scripts/check_invariants.py` forbids
+//! `thread::spawn` in `serve/` outside this file).
+//!
+//! ## Shape
+//!
+//! - Reactor 0 owns the nonblocking listener.  Every accept passes
+//!   **admission control** ([`Admission`]): a `--max-conns` cap checked
+//!   under one mutex (rejected connections get a clean
+//!   `err conn-limit …` line, never an accept-queue stall) and a
+//!   per-client token bucket (`--rate-limit`, rows/sec) charged per
+//!   predict request.  Admitted sockets are handed round-robin to the
+//!   reactors through their [`Mailbox`]es.
+//! - Each reactor runs an edge-triggered poll loop over its
+//!   connections: buffered partial reads/writes, a per-connection
+//!   state machine ([`Conn`]) that speaks the text protocol by
+//!   default and switches to length-prefixed binary frames when the
+//!   client sends `serve-hello v1 binary` ([`super::protocol`]).
+//! - Predict rows still flow through the shared [`Batcher`] and worker
+//!   pool; a worker completion lands in the owning reactor's mailbox
+//!   via a [`ReactorSink`] and wakes it through a self-pipe.  Replies
+//!   are resolved strictly in request order per connection
+//!   ([`ReplySlot`] queue), so pipelined requests batch in flight yet
+//!   answer deterministically — same contract as the old
+//!   thread-per-connection writer, minus the two threads.
+//!
+//! ## Wakeup discipline
+//!
+//! A sink pushes its completion to the mailbox **before** writing the
+//! wake byte; the reactor drains the wake pipe **before** taking the
+//! mailbox.  Any completion therefore either lands before the drain
+//! (taken this round) or wrote a wake byte after it (taken next
+//! round) — no lost wakeups, no busy polling.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{Arc, Mutex};
+
+use super::batcher::{Batch, Batcher, ReplySink, SubmitError};
+use super::poll::{Event, Poller, WakePipe};
+use super::protocol::{
+    self, ServeFrameTag, WireMode, FRAME_MAX, MAX_LINE,
+};
+use super::registry::{Registry, ServedModel};
+use super::stats::ServeStats;
+use super::worker::{worker_loop, BoundedQueue};
+use super::{dispatch_request, Dispatch};
+
+/// Reserved poll token: the listener (reactor 0 only).
+const LISTENER_TOKEN: u64 = u64::MAX;
+/// Reserved poll token: the reactor's wake pipe.
+const WAKE_TOKEN: u64 = u64::MAX - 1;
+
+// ---------------------------------------------------------------- admission
+
+/// Connection-table and rate-limit seam, shared by the acceptor and
+/// every reactor.  One mutex guards both the open-connection count and
+/// the per-client token buckets, so `accept` racing `close` racing a
+/// rate-limit charge cannot leak a slot or double-release one — the
+/// loom model in `tests/loom_models.rs` (`admission_accept_close_spend`)
+/// explores exactly that interleaving.
+///
+/// Time is passed in explicitly (`now_us`) so the bucket arithmetic is
+/// deterministic under loom and in unit tests.
+#[doc(hidden)]
+#[derive(Debug)]
+pub struct Admission {
+    /// open-connection cap; 0 = unlimited
+    max_conns: usize,
+    /// token-bucket refill rate in rows/sec/client; 0.0 = off.  The
+    /// burst is one second's budget.
+    rate: f64,
+    inner: Mutex<AdmissionInner>,
+}
+
+#[derive(Debug)]
+struct AdmissionInner {
+    open: usize,
+    buckets: HashMap<IpAddr, TokenBucket>,
+}
+
+#[derive(Debug)]
+struct TokenBucket {
+    tokens: f64,
+    last_us: u64,
+}
+
+impl Admission {
+    pub fn new(max_conns: usize, rate_limit: u64) -> Admission {
+        Admission {
+            max_conns,
+            rate: rate_limit as f64,
+            inner: Mutex::new(AdmissionInner { open: 0, buckets: HashMap::new() }),
+        }
+    }
+
+    /// Claim a connection slot; `false` means the cap is reached and
+    /// the caller must reject the socket (it holds no slot).
+    pub fn try_accept(&self) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if self.max_conns > 0 && inner.open >= self.max_conns {
+            return false;
+        }
+        inner.open += 1;
+        true
+    }
+
+    /// Release a claimed slot.  Saturating: a stray double-release
+    /// must not underflow the count and open the cap wide.
+    pub fn release(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.open = inner.open.saturating_sub(1);
+    }
+
+    /// Currently claimed slots.
+    pub fn open(&self) -> usize {
+        self.inner.lock().unwrap().open
+    }
+
+    /// Charge `rows` against `peer`'s token bucket at time `now_us`
+    /// (µs since server start).  `Err(retry_after_ms)` when the bucket
+    /// is too empty.  A request larger than one second's budget costs
+    /// a full bucket instead of being unpassable.
+    pub fn try_spend(&self, peer: IpAddr, rows: u64, now_us: u64) -> Result<(), u64> {
+        if self.rate <= 0.0 {
+            return Ok(());
+        }
+        let burst = self.rate;
+        let mut inner = self.inner.lock().unwrap();
+        let b = inner
+            .buckets
+            .entry(peer)
+            .or_insert(TokenBucket { tokens: burst, last_us: now_us });
+        let dt_s = now_us.saturating_sub(b.last_us) as f64 / 1e6;
+        b.tokens = (b.tokens + dt_s * self.rate).min(burst);
+        b.last_us = now_us;
+        let cost = (rows as f64).min(burst);
+        if b.tokens + 1e-9 >= cost {
+            b.tokens -= cost;
+            Ok(())
+        } else {
+            let retry_ms = (((cost - b.tokens) / self.rate) * 1000.0).ceil() as u64;
+            Err(retry_ms.max(1))
+        }
+    }
+
+    /// Drop buckets idle for over a minute — a server facing churning
+    /// clients must not grow the bucket map without bound.
+    pub fn prune(&self, now_us: u64) {
+        self.inner
+            .lock()
+            .unwrap()
+            .buckets
+            .retain(|_, b| now_us.saturating_sub(b.last_us) < 60_000_000);
+    }
+
+    /// Bucket-map size (tests).
+    pub fn tracked_clients(&self) -> usize {
+        self.inner.lock().unwrap().buckets.len()
+    }
+}
+
+// ------------------------------------------------------------------ mailbox
+
+/// One finished row, addressed back to (connection, request, row).
+pub(crate) struct RowDone {
+    token: u64,
+    req: u64,
+    row: u32,
+    result: Result<f32, String>,
+}
+
+/// A reactor's inbox: worker completions and freshly admitted sockets,
+/// each push followed by a self-pipe wake (see module doc for why this
+/// ordering is lossless).
+pub(crate) struct Mailbox {
+    completions: Mutex<Vec<RowDone>>,
+    incoming: Mutex<Vec<(TcpStream, IpAddr)>>,
+    pipe: WakePipe,
+}
+
+impl Mailbox {
+    pub(crate) fn new() -> std::io::Result<Mailbox> {
+        Ok(Mailbox {
+            completions: Mutex::new(Vec::new()),
+            incoming: Mutex::new(Vec::new()),
+            pipe: WakePipe::new()?,
+        })
+    }
+
+    fn push_done(&self, done: RowDone) {
+        self.completions.lock().unwrap().push(done);
+        self.pipe.wake();
+    }
+
+    fn push_conn(&self, stream: TcpStream, peer: IpAddr) {
+        self.incoming.lock().unwrap().push((stream, peer));
+        self.pipe.wake();
+    }
+
+    /// Nudge the owning reactor (shutdown).
+    pub(crate) fn wake(&self) {
+        self.pipe.wake();
+    }
+}
+
+/// Where a worker drops one row's result for an event-loop connection.
+/// Consumed by [`ReplySink::send`]; if dropped unsent (a discarded
+/// batch at shutdown, a vanished worker), its `Drop` still delivers a
+/// "worker dropped request" completion so the reply slot resolves and
+/// the client gets an answer instead of a hang.
+pub struct ReactorSink {
+    mailbox: Arc<Mailbox>,
+    token: u64,
+    req: u64,
+    row: u32,
+    sent: bool,
+}
+
+impl ReactorSink {
+    fn new(mailbox: Arc<Mailbox>, token: u64, req: u64, row: u32) -> ReactorSink {
+        ReactorSink { mailbox, token, req, row, sent: false }
+    }
+
+    pub(crate) fn send(mut self, result: Result<f32, String>) {
+        self.sent = true;
+        self.mailbox
+            .push_done(RowDone { token: self.token, req: self.req, row: self.row, result });
+    }
+}
+
+impl Drop for ReactorSink {
+    fn drop(&mut self) {
+        if !self.sent {
+            self.mailbox.push_done(RowDone {
+                token: self.token,
+                req: self.req,
+                row: self.row,
+                result: Err("worker dropped request".into()),
+            });
+        }
+    }
+}
+
+// ------------------------------------------------------------------- shared
+
+/// Everything a reactor shares with the server handle and its peers.
+pub(crate) struct Shared {
+    pub registry: Arc<Registry>,
+    pub batcher: Arc<Batcher>,
+    pub stats: Arc<ServeStats>,
+    pub admission: Arc<Admission>,
+    /// stop accepting new connections (shutdown drain phase)
+    pub stop: Arc<AtomicBool>,
+    /// tear down: reactors flush best-effort and exit
+    pub halt: Arc<AtomicBool>,
+    pub mailboxes: Vec<Arc<Mailbox>>,
+    /// time base for the token buckets
+    pub epoch: Instant,
+}
+
+impl Shared {
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+}
+
+// ------------------------------------------------------------ conn machine
+
+/// One reply in a connection's ordered response stream.
+enum ReplySlot {
+    /// fully rendered bytes, ready to enter the write buffer
+    Ready(Vec<u8>),
+    /// a predict request waiting on its rows; `results[i]` fills as
+    /// completions arrive, in any order
+    Pending {
+        req: u64,
+        results: Vec<Option<Result<f32, String>>>,
+        remaining: usize,
+        binary: bool,
+    },
+}
+
+/// Per-connection state machine: receive buffer, parser mode, ordered
+/// reply queue, write buffer.
+struct Conn {
+    stream: TcpStream,
+    peer: IpAddr,
+    mode: WireMode,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    replies: VecDeque<ReplySlot>,
+    next_req: u64,
+    /// current poller write-interest (toggled via `modify` only on change)
+    want_write: bool,
+    /// flush what's buffered, then close (quit, EOF, protocol error)
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, peer: IpAddr) -> Conn {
+        Conn {
+            stream,
+            peer,
+            mode: WireMode::Text,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            replies: VecDeque::new(),
+            next_req: 0,
+            want_write: false,
+            closing: false,
+        }
+    }
+
+    fn push_text(&mut self, line: String) {
+        let mut bytes = line.into_bytes();
+        bytes.push(b'\n');
+        self.replies.push_back(ReplySlot::Ready(bytes));
+    }
+
+    fn push_frame(&mut self, tag: ServeFrameTag, payload: &[u8]) {
+        // payloads we emit are bounded well below FRAME_MAX (decision
+        // blocks are at most as large as the request's feature block)
+        let bytes = protocol::encode_serve_frame(tag, payload)
+            .expect("server-emitted frame within FRAME_MAX");
+        self.replies.push_back(ReplySlot::Ready(bytes));
+    }
+
+    fn push_err(&mut self, code: &str, msg: &str) {
+        match self.mode {
+            WireMode::Text => self.push_text(protocol::err_msg(code, msg)),
+            WireMode::Binary => {
+                self.push_frame(ServeFrameTag::Err, &protocol::encode_err_payload(code, msg))
+            }
+        }
+    }
+
+    /// Render every resolved reply at the queue's front into the write
+    /// buffer.  A pending slot with unfinished rows blocks everything
+    /// behind it — this is what keeps pipelined responses in request
+    /// order.
+    fn render_ready(&mut self) {
+        loop {
+            match self.replies.front_mut() {
+                Some(ReplySlot::Ready(bytes)) => {
+                    self.wbuf.append(bytes);
+                    self.replies.pop_front();
+                }
+                Some(ReplySlot::Pending { remaining, results, binary, .. }) => {
+                    if *remaining > 0 {
+                        break;
+                    }
+                    let bytes = render_predict_reply(results, *binary);
+                    self.wbuf.extend_from_slice(&bytes);
+                    self.replies.pop_front();
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn has_unsent(&self) -> bool {
+        self.wpos < self.wbuf.len() || !self.replies.is_empty()
+    }
+}
+
+/// Resolve a completed predict request to wire bytes.  First row error
+/// wins (matching the old text writer): a sink dropped unsent renders
+/// as `internal`, an execution failure as `predict-failed`.
+fn render_predict_reply(results: &[Option<Result<f32, String>>], binary: bool) -> Vec<u8> {
+    let mut vals = Vec::with_capacity(results.len());
+    for r in results {
+        match r.as_ref().expect("render_predict_reply on complete slot") {
+            Ok(v) => vals.push(*v),
+            Err(e) => {
+                let code =
+                    if e == "worker dropped request" { "internal" } else { "predict-failed" };
+                return match binary {
+                    true => protocol::encode_serve_frame(
+                        ServeFrameTag::Err,
+                        &protocol::encode_err_payload(code, e),
+                    )
+                    .expect("error frame within FRAME_MAX"),
+                    false => {
+                        let mut s = protocol::err_msg(code, e);
+                        s.push('\n');
+                        s.into_bytes()
+                    }
+                };
+            }
+        }
+    }
+    match binary {
+        true => protocol::encode_serve_frame(
+            ServeFrameTag::Decisions,
+            &protocol::f32s_to_bytes(&vals),
+        )
+        .expect("decision block no larger than its request"),
+        false => {
+            let mut s = protocol::ok_values(&vals);
+            s.push('\n');
+            s.into_bytes()
+        }
+    }
+}
+
+// -------------------------------------------------------------------- slab
+
+/// Connection table with generation-tagged tokens: a token is
+/// `slot | gen << 32`, so a completion addressed to a closed (and
+/// possibly recycled) slot is recognized as stale and dropped instead
+/// of answering the wrong client.
+struct Slab {
+    slots: Vec<Option<Conn>>,
+    gens: Vec<u32>,
+    free: Vec<usize>,
+}
+
+impl Slab {
+    fn new() -> Slab {
+        Slab { slots: Vec::new(), gens: Vec::new(), free: Vec::new() }
+    }
+
+    fn insert(&mut self, conn: Conn) -> u64 {
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s] = Some(conn);
+                s
+            }
+            None => {
+                self.slots.push(Some(conn));
+                self.gens.push(0);
+                self.slots.len() - 1
+            }
+        };
+        (slot as u64) | ((self.gens[slot] as u64) << 32)
+    }
+
+    fn parts(token: u64) -> (usize, u32) {
+        ((token & 0xffff_ffff) as usize, (token >> 32) as u32)
+    }
+
+    fn get_mut(&mut self, token: u64) -> Option<&mut Conn> {
+        let (slot, gen) = Slab::parts(token);
+        if slot >= self.slots.len() || self.gens[slot] != gen {
+            return None;
+        }
+        self.slots[slot].as_mut()
+    }
+
+    fn remove(&mut self, token: u64) -> Option<Conn> {
+        let (slot, gen) = Slab::parts(token);
+        if slot >= self.slots.len() || self.gens[slot] != gen {
+            return None;
+        }
+        let conn = self.slots[slot].take();
+        if conn.is_some() {
+            // stale tokens from this slot's previous life must miss
+            self.gens[slot] = self.gens[slot].wrapping_add(1);
+            self.free.push(slot);
+        }
+        conn
+    }
+
+    fn tokens(&self) -> Vec<u64> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.is_some())
+            .map(|(i, _)| (i as u64) | ((self.gens[i] as u64) << 32))
+            .collect()
+    }
+
+    fn len(&self) -> usize {
+        self.slots.iter().filter(|c| c.is_some()).count()
+    }
+}
+
+// ------------------------------------------------------------------ reactor
+
+struct Reactor {
+    idx: usize,
+    poller: Poller,
+    mailbox: Arc<Mailbox>,
+    shared: Arc<Shared>,
+    slab: Slab,
+    /// reactor 0 only: the listening socket
+    listener: Option<TcpListener>,
+    /// reactor 0 only: round-robin cursor over mailboxes
+    next_rr: usize,
+    last_prune_us: u64,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        self.poller
+            .register(self.mailbox.pipe.read_fd(), WAKE_TOKEN, true, false, false)
+            .expect("register wake pipe");
+        if let Some(l) = &self.listener {
+            // level-triggered: connections left in the backlog re-report
+            self.poller
+                .register(l.as_raw_fd(), LISTENER_TOKEN, true, false, false)
+                .expect("register listener");
+        }
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            let _ = self.poller.wait(&mut events, 100);
+            // `Event` is Copy; move them out so `self` is free again
+            let batch: Vec<Event> = std::mem::take(&mut events);
+            for ev in &batch {
+                match ev.token {
+                    WAKE_TOKEN => {} // drained in take_mail below
+                    LISTENER_TOKEN => self.accept_ready(),
+                    token => self.on_conn_event(token, *ev),
+                }
+            }
+            events = batch;
+            self.take_mail();
+            if self.shared.halt.load(Ordering::Acquire) {
+                self.teardown();
+                return;
+            }
+            if self.idx == 0 {
+                let now_us = self.shared.now_us();
+                if now_us.saturating_sub(self.last_prune_us) > 10_000_000 {
+                    self.shared.admission.prune(now_us);
+                    self.last_prune_us = now_us;
+                }
+            }
+        }
+    }
+
+    /// Reactor 0: drain the accept queue, apply admission control,
+    /// distribute admitted sockets round-robin.
+    fn accept_ready(&mut self) {
+        let shared = self.shared.clone();
+        let Some(listener) = &self.listener else { return };
+        if shared.stop.load(Ordering::Acquire) {
+            return; // drain phase: leave the backlog alone, accept no more
+        }
+        loop {
+            match listener.accept() {
+                Ok((stream, addr)) => {
+                    if !shared.admission.try_accept() {
+                        shared.stats.conns_rejected.inc();
+                        // best-effort protocol error before the close —
+                        // nonblocking, a full socket buffer just drops it
+                        let _ = stream.set_nonblocking(true);
+                        let line = format!(
+                            "{}\n",
+                            protocol::err_msg(
+                                "conn-limit",
+                                &format!(
+                                    "max_conns={} retry_after_ms=100",
+                                    shared.admission.max_conns
+                                ),
+                            )
+                        );
+                        let _ = (&stream).write(line.as_bytes());
+                        continue;
+                    }
+                    shared.stats.conns_accepted.inc();
+                    shared.stats.conn_opened();
+                    let target = self.next_rr % shared.mailboxes.len();
+                    self.next_rr = self.next_rr.wrapping_add(1);
+                    shared.mailboxes[target].push_conn(stream, addr.ip());
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                // transient accept errors (EMFILE, ECONNABORTED):
+                // stop this round, poll again
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Adopt a mailbox-delivered socket into this reactor's table.
+    fn adopt(&mut self, stream: TcpStream, peer: IpAddr) {
+        stream.set_nodelay(true).ok();
+        if stream.set_nonblocking(true).is_err() {
+            self.shared.admission.release();
+            self.shared.stats.conn_closed();
+            return;
+        }
+        let fd = stream.as_raw_fd();
+        let token = self.slab.insert(Conn::new(stream, peer));
+        if self.poller.register(fd, token, true, false, true).is_err() {
+            self.slab.remove(token);
+            self.shared.admission.release();
+            self.shared.stats.conn_closed();
+            return;
+        }
+        // the socket may have carried data before registration; treat
+        // adoption as a readable edge
+        self.on_conn_event(
+            token,
+            Event { token, readable: true, writable: false, hangup: false },
+        );
+    }
+
+    fn on_conn_event(&mut self, token: u64, ev: Event) {
+        let shared = self.shared.clone();
+        let mailbox = self.mailbox.clone();
+        let Some(conn) = self.slab.get_mut(token) else { return };
+        let mut dead = false;
+        if ev.readable || ev.hangup {
+            match read_some(conn) {
+                Ok(eof) => {
+                    process_input(conn, &shared, &mailbox, token);
+                    if eof {
+                        conn.closing = true;
+                    }
+                }
+                Err(_) => dead = true,
+            }
+        }
+        if dead || self.pump(token) {
+            self.close_conn(token);
+        }
+    }
+
+    /// Render resolved replies, flush the write buffer, maintain
+    /// write interest.  Returns true when the connection should close.
+    fn pump(&mut self, token: u64) -> bool {
+        let Some(conn) = self.slab.get_mut(token) else { return false };
+        conn.render_ready();
+        if write_some(conn).is_err() {
+            return true;
+        }
+        let unsent = conn.wpos < conn.wbuf.len();
+        if conn.closing && !conn.has_unsent() {
+            return true;
+        }
+        if unsent != conn.want_write {
+            conn.want_write = unsent;
+            let fd = conn.stream.as_raw_fd();
+            let _ = self.poller.modify(fd, token, true, unsent, true);
+        }
+        false
+    }
+
+    fn close_conn(&mut self, token: u64) {
+        if let Some(conn) = self.slab.remove(token) {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            self.shared.admission.release();
+            self.shared.stats.conn_closed();
+            // conn drops here; the socket closes with it
+        }
+    }
+
+    /// Drain the wake pipe, then take the mailbox: adopted sockets and
+    /// worker completions.  Pumps each touched connection once.
+    fn take_mail(&mut self) {
+        self.mailbox.pipe.drain();
+        let incoming = std::mem::take(&mut *self.mailbox.incoming.lock().unwrap());
+        for (stream, peer) in incoming {
+            self.adopt(stream, peer);
+        }
+        let done = std::mem::take(&mut *self.mailbox.completions.lock().unwrap());
+        let mut touched: Vec<u64> = Vec::new();
+        for d in done {
+            if !touched.contains(&d.token) {
+                touched.push(d.token);
+            }
+            self.apply_done(d);
+        }
+        for token in touched {
+            if self.pump(token) {
+                self.close_conn(token);
+            }
+        }
+    }
+
+    /// Route one completion into its connection's pending reply slot.
+    /// A missing connection (closed mid-flight) or missing slot
+    /// (request already answered `err busy`) is not an error — the
+    /// completion is simply dropped.
+    fn apply_done(&mut self, done: RowDone) {
+        let Some(conn) = self.slab.get_mut(done.token) else { return };
+        for slot in conn.replies.iter_mut() {
+            if let ReplySlot::Pending { req, results, remaining, .. } = slot {
+                if *req == done.req {
+                    let i = done.row as usize;
+                    if i < results.len() && results[i].is_none() {
+                        results[i] = Some(done.result);
+                        *remaining -= 1;
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Shutdown: workers are already joined (every pending row has
+    /// completed or error-completed), so render everything, give the
+    /// sockets a short best-effort flush window, and close.
+    fn teardown(&mut self) {
+        self.take_mail();
+        let deadline = Instant::now() + Duration::from_millis(500);
+        loop {
+            let mut unsent = false;
+            for token in self.slab.tokens() {
+                if self.pump(token) {
+                    self.close_conn(token);
+                } else if self.slab.get_mut(token).is_some_and(|c| c.has_unsent()) {
+                    unsent = true;
+                }
+            }
+            if !unsent || Instant::now() >= deadline {
+                break;
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        for token in self.slab.tokens() {
+            self.close_conn(token);
+        }
+        debug_assert_eq!(self.slab.len(), 0);
+    }
+}
+
+// ----------------------------------------------------------- conn handlers
+
+/// Drain the socket to `WouldBlock` (the edge-triggered contract).
+/// `Ok(true)` = orderly EOF.  The receive buffer is capped one frame
+/// above [`FRAME_MAX`]: a peer that streams more without completing a
+/// frame is killed, not buffered.
+fn read_some(conn: &mut Conn) -> std::io::Result<bool> {
+    let mut sp = crate::obs::span("serve.io.read");
+    let mut tmp = [0u8; 16 * 1024];
+    loop {
+        match (&conn.stream).read(&mut tmp) {
+            Ok(0) => return Ok(true),
+            Ok(n) => {
+                sp.add_bytes(n as u64);
+                conn.rbuf.extend_from_slice(&tmp[..n]);
+                if conn.rbuf.len() > FRAME_MAX + protocol::frame_overhead() {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "receive buffer overrun",
+                    ));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Flush the write buffer as far as the socket allows.
+fn write_some(conn: &mut Conn) -> std::io::Result<()> {
+    let mut sp = crate::obs::span("serve.io.write");
+    while conn.wpos < conn.wbuf.len() {
+        match (&conn.stream).write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "socket wrote zero",
+                ))
+            }
+            Ok(n) => {
+                sp.add_bytes(n as u64);
+                conn.wpos += n;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    if conn.wpos == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    } else if conn.wpos > 64 * 1024 {
+        // reclaim flushed prefix so a slow reader doesn't pin old bytes
+        conn.wbuf.drain(..conn.wpos);
+        conn.wpos = 0;
+    }
+    Ok(())
+}
+
+/// Run the connection's parser over whatever is buffered, in its
+/// current mode (a `serve-hello` can switch the mode mid-buffer —
+/// pipelined frames right behind the hello line parse correctly).
+fn process_input(conn: &mut Conn, shared: &Shared, mailbox: &Arc<Mailbox>, token: u64) {
+    loop {
+        if conn.closing {
+            return;
+        }
+        let progressed = match conn.mode {
+            WireMode::Text => step_text(conn, shared, mailbox, token),
+            WireMode::Binary => step_binary(conn, shared, mailbox, token),
+        };
+        if !progressed {
+            return;
+        }
+    }
+}
+
+/// Consume at most one text line.  Returns false when no full line is
+/// buffered.
+fn step_text(conn: &mut Conn, shared: &Shared, mailbox: &Arc<Mailbox>, token: u64) -> bool {
+    let Some(nl) = conn.rbuf.iter().position(|&b| b == b'\n') else {
+        if conn.rbuf.len() > MAX_LINE {
+            conn.push_err("bad-request", "line too long");
+            conn.closing = true;
+        }
+        return false;
+    };
+    if nl > MAX_LINE {
+        conn.push_err("bad-request", "line too long");
+        conn.closing = true;
+        return false;
+    }
+    let line = String::from_utf8_lossy(&conn.rbuf[..nl]).trim().to_string();
+    conn.rbuf.drain(..=nl);
+    if line.is_empty() {
+        return true;
+    }
+    if let Some(mode) = protocol::negotiate_serve_hello(&line) {
+        conn.mode = mode;
+        conn.push_text(protocol::serve_hello_ack(mode));
+        return true;
+    }
+    match dispatch_request(&line, &shared.registry, &shared.stats) {
+        Dispatch::Ready(reply) => conn.push_text(reply),
+        Dispatch::Quit => {
+            conn.push_text(protocol::ok_msg("bye"));
+            conn.closing = true;
+        }
+        Dispatch::Predict { served, name, rows } => {
+            submit_predict(conn, shared, mailbox, token, served, &name, rows, false);
+        }
+    }
+    true
+}
+
+/// Consume at most one binary frame.  Returns false when no complete
+/// frame is buffered.
+fn step_binary(conn: &mut Conn, shared: &Shared, mailbox: &Arc<Mailbox>, token: u64) -> bool {
+    let (tag, len) = match protocol::peek_serve_frame(&conn.rbuf) {
+        None => return false,
+        Some(Err(e)) => {
+            // corrupt framing: after this no byte boundary can be
+            // trusted — answer once and close
+            conn.push_err("bad-frame", &e);
+            conn.closing = true;
+            return false;
+        }
+        Some(Ok(hdr)) => hdr,
+    };
+    let total = protocol::frame_overhead() + len;
+    if conn.rbuf.len() < total {
+        return false;
+    }
+    let payload = conn.rbuf[protocol::frame_overhead()..total].to_vec();
+    conn.rbuf.drain(..total);
+    match tag {
+        ServeFrameTag::Ping => conn.push_frame(ServeFrameTag::Pong, &[]),
+        ServeFrameTag::Quit => {
+            conn.push_frame(ServeFrameTag::Bye, &[]);
+            conn.closing = true;
+        }
+        ServeFrameTag::Predict => handle_binary_predict(conn, shared, mailbox, token, &payload),
+        // server-to-client tags arriving at the server are a protocol
+        // violation, not a crash
+        ServeFrameTag::Decisions | ServeFrameTag::Err | ServeFrameTag::Pong
+        | ServeFrameTag::Bye => {
+            conn.push_err("bad-request", &format!("unexpected frame tag {:#04x}", tag as u8));
+            conn.closing = true;
+        }
+    }
+    true
+}
+
+fn handle_binary_predict(
+    conn: &mut Conn,
+    shared: &Shared,
+    mailbox: &Arc<Mailbox>,
+    token: u64,
+    payload: &[u8],
+) {
+    let frame = {
+        let _sp = crate::obs::span("serve.parse");
+        match protocol::decode_predict_payload(payload) {
+            Ok(f) => f,
+            Err(e) => {
+                conn.push_err("bad-request", &e);
+                return;
+            }
+        }
+    };
+    shared.stats.requests.add(frame.rows as u64);
+    if frame.dim == 0 {
+        shared.stats.errors.add(frame.rows as u64);
+        conn.push_err("bad-request", "predict frame with dim 0");
+        return;
+    }
+    let served = match shared.registry.get(&frame.model) {
+        Ok(m) => m,
+        Err(e) => {
+            shared.stats.errors.add(frame.rows as u64);
+            conn.push_err("unknown-model", &format!("{e:#}"));
+            return;
+        }
+    };
+    if served.dim > 0 && frame.dim != served.dim {
+        shared.stats.errors.add(frame.rows as u64);
+        conn.push_err(
+            "dim-mismatch",
+            &format!("model `{}` expects dim {}, got {}", frame.model, served.dim, frame.dim),
+        );
+        return;
+    }
+    // the zero-copy-ish path: raw LE floats straight from the receive
+    // buffer into batcher rows — no text parse, no per-value format
+    let rows: Vec<Vec<f32>> =
+        frame.data.chunks_exact(frame.dim).map(|c| c.to_vec()).collect();
+    let model = frame.model;
+    submit_predict(conn, shared, mailbox, token, served, &model, rows, true);
+}
+
+/// Common predict tail for both protocols: charge the rate limiter,
+/// open an ordered reply slot, submit every row with a reactor sink.
+#[allow(clippy::too_many_arguments)]
+fn submit_predict(
+    conn: &mut Conn,
+    shared: &Shared,
+    mailbox: &Arc<Mailbox>,
+    token: u64,
+    served: Arc<ServedModel>,
+    name: &str,
+    rows: Vec<Vec<f32>>,
+    binary: bool,
+) {
+    let n = rows.len();
+    if n == 0 {
+        // only reachable from the binary path (text predicts always
+        // carry at least one row): an empty request gets an empty block
+        conn.push_frame(ServeFrameTag::Decisions, &[]);
+        return;
+    }
+    if let Err(retry_ms) = shared.admission.try_spend(conn.peer, n as u64, shared.now_us()) {
+        shared.stats.rate_limited.inc();
+        conn.push_err("rate-limited", &format!("retry_after_ms={retry_ms}"));
+        return;
+    }
+    let req = conn.next_req;
+    conn.next_req += 1;
+    conn.replies.push_back(ReplySlot::Pending {
+        req,
+        results: vec![None; n],
+        remaining: n,
+        binary,
+    });
+    for (i, row) in rows.into_iter().enumerate() {
+        let sink = ReplySink::Reactor(ReactorSink::new(mailbox.clone(), token, req, i as u32));
+        match shared.batcher.submit_with(&served, row, sink) {
+            Ok(()) => {}
+            Err(SubmitError::Busy { retry_after_ms }) => {
+                shared.stats.rejected.inc();
+                // rows already submitted stay in flight; their
+                // completions find the slot replaced and are dropped
+                let bytes = match binary {
+                    true => protocol::encode_serve_frame(
+                        ServeFrameTag::Err,
+                        &protocol::encode_err_payload(
+                            "busy",
+                            &format!("retry_after_ms={retry_after_ms}"),
+                        ),
+                    )
+                    .expect("busy frame within FRAME_MAX"),
+                    false => {
+                        let mut s = protocol::err_busy(retry_after_ms);
+                        s.push('\n');
+                        s.into_bytes()
+                    }
+                };
+                replace_back_slot(conn, req, bytes);
+                return;
+            }
+            Err(SubmitError::Closed) => {
+                shared.stats.errors.add(n as u64);
+                let bytes = match binary {
+                    true => protocol::encode_serve_frame(
+                        ServeFrameTag::Err,
+                        &protocol::encode_err_payload("unavailable", "server shutting down"),
+                    )
+                    .expect("error frame within FRAME_MAX"),
+                    false => {
+                        let mut s = protocol::err_msg("unavailable", "server shutting down");
+                        s.push('\n');
+                        s.into_bytes()
+                    }
+                };
+                replace_back_slot(conn, req, bytes);
+                return;
+            }
+        }
+    }
+    shared.stats.note_model(name, n as u64);
+}
+
+/// Swap the just-opened pending slot (always the newest) for a ready
+/// error reply.
+fn replace_back_slot(conn: &mut Conn, req: u64, bytes: Vec<u8>) {
+    if let Some(slot) = conn.replies.back_mut() {
+        if matches!(slot, ReplySlot::Pending { req: r, .. } if *r == req) {
+            *slot = ReplySlot::Ready(bytes);
+            return;
+        }
+    }
+    debug_assert!(false, "predict slot vanished before its error reply");
+}
+
+// ------------------------------------------------------------ thread pool
+
+/// Spawn the reactor pool.  Reactor 0 owns the listener.  This
+/// function (plus the worker/flusher bootstraps below) is the single
+/// `thread::spawn` site in `serve/`.
+pub(crate) fn spawn_reactors(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+) -> std::io::Result<Vec<thread::JoinHandle<()>>> {
+    let mut handles = Vec::with_capacity(shared.mailboxes.len());
+    let mut listener = Some(listener);
+    for (idx, mailbox) in shared.mailboxes.iter().enumerate() {
+        let reactor = Reactor {
+            idx,
+            poller: Poller::new()?,
+            mailbox: mailbox.clone(),
+            shared: shared.clone(),
+            slab: Slab::new(),
+            listener: if idx == 0 { listener.take() } else { None },
+            next_rr: 0,
+            last_prune_us: 0,
+        };
+        handles.push(
+            thread::Builder::new()
+                .name(format!("serve-io-{idx}"))
+                .spawn(move || reactor.run())
+                .expect("spawn reactor thread"),
+        );
+    }
+    Ok(handles)
+}
+
+/// Spawn the predict worker pool (drains the batch queue).
+pub(crate) fn spawn_workers(
+    workers: usize,
+    queue: Arc<BoundedQueue<Batch>>,
+    stats: Arc<ServeStats>,
+) -> Vec<thread::JoinHandle<()>> {
+    (0..workers.max(1))
+        .map(|i| {
+            let queue = queue.clone();
+            let stats = stats.clone();
+            thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || worker_loop(&queue, &stats))
+                .expect("spawn worker thread")
+        })
+        .collect()
+}
+
+/// Spawn the deadline flusher: ticks at a quarter of the delay bound
+/// so a lone request waits at most ~1.25 × `max_delay`.
+pub(crate) fn spawn_flusher(
+    batcher: Arc<Batcher>,
+    stop: Arc<AtomicBool>,
+    tick: Duration,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name("serve-flusher".into())
+        .spawn(move || {
+            // Acquire pairs with shutdown's Release store: everything
+            // written before the stop was requested is visible here
+            while !stop.load(Ordering::Acquire) {
+                batcher.flush_expired();
+                thread::sleep(tick);
+            }
+        })
+        .expect("spawn flusher thread")
+}
+
+/// Fallback peer address when the OS can't report one.
+pub(crate) fn unknown_peer() -> IpAddr {
+    IpAddr::V4(Ipv4Addr::UNSPECIFIED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ip(last: u8) -> IpAddr {
+        IpAddr::V4(Ipv4Addr::new(10, 0, 0, last))
+    }
+
+    #[test]
+    fn admission_caps_connections() {
+        let a = Admission::new(2, 0);
+        assert!(a.try_accept());
+        assert!(a.try_accept());
+        assert!(!a.try_accept());
+        a.release();
+        assert!(a.try_accept());
+        assert_eq!(a.open(), 2);
+        // zero cap = unlimited
+        let a = Admission::new(0, 0);
+        for _ in 0..100 {
+            assert!(a.try_accept());
+        }
+    }
+
+    #[test]
+    fn admission_release_saturates() {
+        let a = Admission::new(1, 0);
+        a.release(); // stray release on an empty table
+        assert_eq!(a.open(), 0);
+        assert!(a.try_accept());
+        assert!(!a.try_accept());
+    }
+
+    #[test]
+    fn token_bucket_enforces_rate_and_refills() {
+        let a = Admission::new(0, 100); // 100 rows/sec, burst 100
+        // the full burst passes immediately
+        assert!(a.try_spend(ip(1), 100, 0).is_ok());
+        // the bucket is empty: the next row is refused with a hint
+        let retry = a.try_spend(ip(1), 1, 0).unwrap_err();
+        assert!(retry >= 1);
+        // 10ms refills one row's worth at 100 rows/sec
+        assert!(a.try_spend(ip(1), 1, 10_000).is_ok());
+        assert!(a.try_spend(ip(1), 1, 10_000).is_err());
+        // a full second refills the whole burst, never more
+        assert!(a.try_spend(ip(1), 100, 1_500_000).is_ok());
+    }
+
+    #[test]
+    fn token_bucket_is_per_client() {
+        let a = Admission::new(0, 10);
+        assert!(a.try_spend(ip(1), 10, 0).is_ok());
+        assert!(a.try_spend(ip(1), 1, 0).is_err());
+        // a different peer has its own full bucket
+        assert!(a.try_spend(ip(2), 10, 0).is_ok());
+        assert_eq!(a.tracked_clients(), 2);
+    }
+
+    #[test]
+    fn oversized_request_costs_a_full_bucket() {
+        let a = Admission::new(0, 10);
+        // 50 rows > burst 10: passes when the bucket is full (costing
+        // everything), rather than being forever unpassable
+        assert!(a.try_spend(ip(1), 50, 0).is_ok());
+        assert!(a.try_spend(ip(1), 1, 0).is_err());
+        assert!(a.try_spend(ip(1), 50, 1_000_000).is_ok());
+    }
+
+    #[test]
+    fn bucket_prune_drops_idle_clients() {
+        let a = Admission::new(0, 10);
+        let _ = a.try_spend(ip(1), 1, 0);
+        let _ = a.try_spend(ip(2), 1, 30_000_000);
+        a.prune(70_000_000); // ip(1) idle 70s, ip(2) idle 40s
+        assert_eq!(a.tracked_clients(), 1);
+        a.prune(120_000_000);
+        assert_eq!(a.tracked_clients(), 0);
+    }
+
+    #[test]
+    fn rate_limit_disabled_by_default() {
+        let a = Admission::new(0, 0);
+        assert!(a.try_spend(ip(1), u64::MAX, 0).is_ok());
+        assert_eq!(a.tracked_clients(), 0);
+    }
+
+    #[test]
+    fn slab_tokens_are_generation_tagged() {
+        // fabricate conns over a loopback listener
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut slab = Slab::new();
+        let c1 = TcpStream::connect(addr).unwrap();
+        let t1 = slab.insert(Conn::new(c1, ip(1)));
+        assert!(slab.get_mut(t1).is_some());
+        assert!(slab.remove(t1).is_some());
+        // the slot recycles under a new generation: the old token
+        // must miss, the new one must hit
+        let c2 = TcpStream::connect(addr).unwrap();
+        let t2 = slab.insert(Conn::new(c2, ip(2)));
+        assert_ne!(t1, t2);
+        assert!(slab.get_mut(t1).is_none());
+        assert!(slab.remove(t1).is_none());
+        assert!(slab.get_mut(t2).is_some());
+        assert_eq!(slab.len(), 1);
+    }
+
+    #[test]
+    fn render_predict_reply_text_and_binary() {
+        let done = vec![Some(Ok(1.5f32)), Some(Ok(-2.0))];
+        assert_eq!(render_predict_reply(&done, false), b"ok 1.5;-2\n".to_vec());
+        let frame = render_predict_reply(&done, true);
+        let (tag, payload) =
+            protocol::read_serve_frame(&mut std::io::Cursor::new(&frame)).unwrap();
+        assert_eq!(tag, ServeFrameTag::Decisions);
+        assert_eq!(protocol::bytes_to_f32s(&payload).unwrap(), vec![1.5, -2.0]);
+
+        // first error wins; the dropped-sink sentinel maps to `internal`
+        let failed = vec![Some(Ok(1.0f32)), Some(Err("worker dropped request".into()))];
+        let line = String::from_utf8(render_predict_reply(&failed, false)).unwrap();
+        assert!(line.starts_with("err internal "), "`{line}`");
+        let failed = vec![Some(Err("shard gone".into()))];
+        let frame = render_predict_reply(&failed, true);
+        let (tag, payload) =
+            protocol::read_serve_frame(&mut std::io::Cursor::new(&frame)).unwrap();
+        assert_eq!(tag, ServeFrameTag::Err);
+        let (code, msg) = protocol::decode_err_payload(&payload).unwrap();
+        assert_eq!((code.as_str(), msg.as_str()), ("predict-failed", "shard gone"));
+    }
+}

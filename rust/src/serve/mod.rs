@@ -1,20 +1,34 @@
 //! `serve` — a batched, multi-model inference server with cell-routed
-//! sharded bundles.
+//! sharded bundles, driven by a fixed-size event-loop reactor pool.
 //!
 //! liquidSVM splits training from testing via persisted `.sol` models
 //! precisely so prediction can run as its own fast process (paper §2);
 //! this subsystem is that process, grown into a server.  Pipeline:
 //!
 //! ```text
-//! TCP conn ──┐
-//! TCP conn ──┼─► Registry (LRU model cache,  ─► Batcher (per (model, cell),
-//! TCP conn ──┘   .sol + .sol.d bundles,         size/deadline flush,
-//!                hot-reload, shard LRU)          backpressure)
-//!                                                     │  bounded queue
-//!                                             WorkerPool ─► fused predict
-//!                                                     │     (one shard)
-//!                                             per-row replies, in order
+//! 10k+ TCP conns ──► reactor pool (epoll/poll readiness,   ─► Batcher (per (model, cell),
+//!                    nonblocking reads/writes, admission      size/deadline flush,
+//!                    control, text or binary framing)          backpressure)
+//!                          ▲                                       │  bounded queue
+//!                          │ per-row completions             worker pool ─► fused predict
+//!                          └────────── mailbox + wake ◄───────────┘     (one shard)
 //! ```
+//!
+//! Connections do **not** get a thread each: `--io-threads` reactors
+//! ([`eventloop`]) own every socket through nonblocking readiness
+//! polling ([`poll`]), which is what makes 10k+ concurrent
+//! connections a memory problem (one small state machine each)
+//! instead of a scheduler problem (10k stacks).  Admission control
+//! guards the door: a `--max-conns` cap refuses sockets cleanly at
+//! accept time and a per-client token bucket (`--rate-limit`) refuses
+//! predict rows with a `retry_after_ms` hint instead of queueing
+//! without bound.
+//!
+//! Two wire formats share each connection: the line-oriented text
+//! protocol (unchanged), and a length-prefixed binary framing
+//! negotiated by `serve-hello v1 binary` that moves feature rows and
+//! decisions as raw little-endian f32 blocks — no float formatting or
+//! parsing on the hot path ([`protocol`] documents both grammars).
 //!
 //! Concurrent rows — across connections and pipelined within one —
 //! coalesce into shape-bucketed batches before a single fused
@@ -38,34 +52,41 @@
 //! stays queued — clients back off and retry; nothing buffers without
 //! bound.
 //!
-//! [`protocol`] documents the wire format; [`Server::start`] returns a
-//! handle usable in-process (tests bind port 0), and [`run_load`] is
-//! the load generator behind `liquidsvm client`.
+//! [`protocol`] documents the wire formats; [`Server::start`] returns
+//! a handle usable in-process (tests bind port 0); [`run_load`] is the
+//! thread-per-connection load generator behind `liquidsvm client` and
+//! [`swarm::run_swarm`] its event-driven sibling that holds tens of
+//! thousands of sockets open from a handful of threads.
 
 pub mod batcher;
+pub mod eventloop;
+pub mod poll;
 pub mod protocol;
 pub mod registry;
 pub mod stats;
+pub mod swarm;
 pub mod worker;
 
-pub use batcher::{Batch, Batcher, BatcherConfig, SubmitError};
+pub use batcher::{Batch, Batcher, BatcherConfig, ReplySink, SubmitError};
 pub use registry::{Registry, RouteTarget, ServedModel, ShardUsage};
 pub use stats::ServeStats;
-pub use worker::{BoundedQueue, WorkerPool};
+pub use swarm::run_swarm;
+pub use worker::BoundedQueue;
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::thread;
 
 use crate::sync::atomic::{AtomicBool, Ordering};
-use crate::sync::{mpsc, Arc};
+use crate::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::config::Config;
-use protocol::Request;
+use eventloop::{Admission, Mailbox, Shared};
+use protocol::{Request, ServeFrameTag, WireMode};
 
 /// Server configuration (`liquidsvm serve` flags map 1:1 onto this).
 #[derive(Clone, Debug)]
@@ -88,6 +109,14 @@ pub struct ServeConfig {
     /// log any request whose enqueue→response latency reaches this
     /// many µs (0 = off) — the serve-side slow log
     pub slow_log_us: u64,
+    /// reactor (event-loop) threads; 0 = auto (up to 4, bounded by
+    /// the machine's parallelism)
+    pub io_threads: usize,
+    /// open-connection cap enforced at accept time; 0 = unlimited
+    pub max_conns: usize,
+    /// per-client token-bucket rate limit in predict rows/sec (burst =
+    /// one second's budget); 0 = off
+    pub rate_limit: u64,
     /// runtime choices (backend, threads) applied to loaded models
     pub model_config: Config,
 }
@@ -104,8 +133,21 @@ impl Default for ServeConfig {
             max_models: 8,
             max_shard_bytes: registry::DEFAULT_SHARD_BUDGET,
             slow_log_us: 0,
+            io_threads: 0,
+            max_conns: 0,
+            rate_limit: 0,
             model_config: Config::default(),
         }
+    }
+}
+
+impl ServeConfig {
+    /// Resolve `io_threads=0` to the auto default.
+    fn resolved_io_threads(&self) -> usize {
+        if self.io_threads > 0 {
+            return self.io_threads;
+        }
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(1, 4)
     }
 }
 
@@ -118,11 +160,16 @@ pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     queue: Arc<BoundedQueue<Batch>>,
+    shared: Arc<Shared>,
+    /// workers + flusher
     threads: Vec<thread::JoinHandle<()>>,
+    /// the reactor pool, joined last (after `halt`)
+    reactors: Vec<thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind, spawn acceptor + flusher + workers, return immediately.
+    /// Bind, spawn the reactor pool + flusher + workers, return
+    /// immediately.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
         let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
             .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
@@ -141,71 +188,44 @@ impl Server {
             queue.clone(),
         ));
         let stop = Arc::new(AtomicBool::new(false));
+        let halt = Arc::new(AtomicBool::new(false));
 
-        let mut threads =
-            WorkerPool::start(cfg.workers, queue.clone(), stats.clone()).into_handles();
+        let io_threads = cfg.resolved_io_threads();
+        let mailboxes: Vec<Arc<Mailbox>> = (0..io_threads)
+            .map(|_| Mailbox::new().map(Arc::new))
+            .collect::<std::io::Result<_>>()
+            .context("creating reactor wake pipes")?;
+        let shared = Arc::new(Shared {
+            registry: registry.clone(),
+            batcher: batcher.clone(),
+            stats: stats.clone(),
+            admission: Arc::new(Admission::new(cfg.max_conns, cfg.rate_limit)),
+            stop: stop.clone(),
+            halt,
+            mailboxes,
+            epoch: Instant::now(),
+        });
 
-        // deadline flusher: ticks at a quarter of the delay bound so a
-        // lone request waits at most ~1.25 * max_delay
-        {
-            let batcher = batcher.clone();
-            let stop = stop.clone();
-            let tick = (cfg.max_delay / 4).max(Duration::from_micros(250));
-            threads.push(thread::spawn(move || {
-                // Acquire pairs with shutdown's Release store: everything
-                // written before the stop was requested is visible here
-                while !stop.load(Ordering::Acquire) {
-                    batcher.flush_expired();
-                    thread::sleep(tick);
-                }
-            }));
-        }
+        let mut threads = eventloop::spawn_workers(cfg.workers, queue.clone(), stats.clone());
+        let tick = (cfg.max_delay / 4).max(Duration::from_micros(250));
+        threads.push(eventloop::spawn_flusher(batcher.clone(), stop.clone(), tick));
+        let reactors =
+            eventloop::spawn_reactors(listener, shared.clone()).context("spawning reactors")?;
 
-        // acceptor: one thread per connection (batching happens behind
-        // the shared batcher, so connection threads stay cheap readers)
-        {
-            let registry = registry.clone();
-            let batcher = batcher.clone();
-            let stats = stats.clone();
-            let stop = stop.clone();
-            threads.push(thread::spawn(move || {
-                loop {
-                    if stop.load(Ordering::Acquire) {
-                        break;
-                    }
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let registry = registry.clone();
-                            let batcher = batcher.clone();
-                            let stats = stats.clone();
-                            let stop = stop.clone();
-                            thread::spawn(move || {
-                                let _ = handle_conn(stream, registry, batcher, stats, stop);
-                            });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            thread::sleep(Duration::from_millis(5));
-                        }
-                        Err(_) => thread::sleep(Duration::from_millis(5)),
-                    }
-                }
-            }));
-        }
-
-        Ok(Server { registry, batcher, stats, addr, stop, queue, threads })
+        Ok(Server { registry, batcher, stats, addr, stop, queue, shared, threads, reactors })
     }
 
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
 
-    /// Stop acceptor/flusher/workers and join them.  Connection
-    /// threads notice the stop flag on their next read timeout.
+    /// Stop accepting, drain in-flight work, flush replies, join
+    /// everything.
     pub fn shutdown(self) {
         // Release, paired with the Acquire loads in the flusher /
-        // acceptor / connection loops.  With Relaxed on both sides a
-        // thread could observe `stop` while missing writes sequenced
-        // before it (loom catches this: see `stop_flag_publishes` in
+        // reactor loops.  With Relaxed on both sides a thread could
+        // observe `stop` while missing writes sequenced before it
+        // (loom catches this: see `stop_flag_publishes` in
         // tests/loom_models.rs); the flag is a publication edge, not a
         // mere counter.
         self.stop.store(true, Ordering::Release);
@@ -222,130 +242,60 @@ impl Server {
             thread::sleep(Duration::from_millis(1));
         }
         // anything still pending after the deadline fails fast instead
-        // of leaving its waiters blocked forever; this also closes the
-        // batcher, so a connection thread that read a request before
+        // of leaving its waiters blocked forever (a dropped reply sink
+        // delivers a "worker dropped request" completion); this also
+        // closes the batcher, so a reactor that parsed a request before
         // noticing `stop` cannot park a fresh row in a pending map no
-        // flusher will ever visit again (its client would block on the
-        // reply receiver forever)
+        // flusher will ever visit again
         self.batcher.discard_pending();
         self.queue.close();
         for h in self.threads {
             let _ = h.join();
         }
+        // workers are gone: every submitted row has a completion in
+        // some mailbox.  Now halt the reactors — they apply those
+        // completions, flush what the sockets will take, and exit.
+        self.shared.halt.store(true, Ordering::Release);
+        for mb in &self.shared.mailboxes {
+            mb.wake();
+        }
+        for h in self.reactors {
+            let _ = h.join();
+        }
     }
 }
 
-/// One response slot in a connection's ordered reply stream.
-enum Reply {
+/// One parsed request, resolved as far as the shared state allows —
+/// the seam between protocol handling (this module) and connection
+/// scheduling ([`eventloop`]).  `Predict` carries densified rows ready
+/// for the batcher; submission itself is the caller's job because the
+/// reply path differs per transport.
+pub(crate) enum Dispatch {
+    /// a complete response line (no trailing newline)
     Ready(String),
-    /// one receiver per submitted row of a predict request
-    Pending(Vec<mpsc::Receiver<Result<f32, String>>>),
+    Predict { served: Arc<ServedModel>, name: String, rows: Vec<Vec<f32>> },
+    Quit,
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    registry: Arc<Registry>,
-    batcher: Arc<Batcher>,
-    stats: Arc<ServeStats>,
-    stop: Arc<AtomicBool>,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    stream.set_nonblocking(false).ok();
-    stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
-    let mut read_half = stream.try_clone().context("cloning stream")?;
-    let mut write_half = stream;
-
-    // writer thread: resolves replies strictly in request order, so
-    // pipelined requests batch in flight yet answer deterministically
-    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
-    let writer = thread::spawn(move || {
-        let mut out = String::new();
-        for reply in reply_rx {
-            out.clear();
-            match reply {
-                Reply::Ready(line) => out.push_str(&line),
-                Reply::Pending(rxs) => out.push_str(&collect_predictions(rxs)),
-            }
-            out.push('\n');
-            if write_half.write_all(out.as_bytes()).is_err() {
-                break;
-            }
-        }
-    });
-
-    // manual line framing: a read timeout must not drop a partial line
-    // (BufReader::read_line discards its progress on error)
-    let mut chunk = [0u8; 4096];
-    let mut acc: Vec<u8> = Vec::new();
-    'conn: loop {
-        match read_half.read(&mut chunk) {
-            Ok(0) => break,
-            Ok(n) => {
-                acc.extend_from_slice(&chunk[..n]);
-                while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
-                    let line_bytes: Vec<u8> = acc.drain(..=pos).collect();
-                    let line = String::from_utf8_lossy(&line_bytes);
-                    if line.trim().is_empty() {
-                        continue;
-                    }
-                    match handle_request(line.trim(), &registry, &batcher, &stats) {
-                        Some(reply) => {
-                            if reply_tx.send(reply).is_err() {
-                                break 'conn;
-                            }
-                        }
-                        None => {
-                            let _ = reply_tx.send(Reply::Ready(protocol::ok_msg("bye")));
-                            break 'conn;
-                        }
-                    }
-                }
-                if acc.len() > protocol::MAX_LINE {
-                    let _ = reply_tx
-                        .send(Reply::Ready(protocol::err_msg("bad-request", "line too long")));
-                    break;
-                }
-            }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                if stop.load(Ordering::Acquire) {
-                    break;
-                }
-            }
-            Err(_) => break,
-        }
-    }
-    drop(reply_tx);
-    let _ = writer.join();
-    Ok(())
-}
-
-/// Dispatch one request; `None` means the client asked to quit.
-fn handle_request(
-    line: &str,
-    registry: &Registry,
-    batcher: &Batcher,
-    stats: &ServeStats,
-) -> Option<Reply> {
+/// Handle one text-protocol request line.
+pub(crate) fn dispatch_request(line: &str, registry: &Registry, stats: &ServeStats) -> Dispatch {
     let req = {
         let _sp = crate::obs::span("serve.parse");
         match protocol::parse_request(line) {
             Ok(r) => r,
-            Err(msg) => return Some(Reply::Ready(protocol::err_msg("bad-request", &msg))),
+            Err(msg) => return Dispatch::Ready(protocol::err_msg("bad-request", &msg)),
         }
     };
-    let reply = match req {
-        Request::Quit => return None,
-        Request::Ping => Reply::Ready(protocol::ok_msg("pong")),
-        Request::Stats => Reply::Ready(protocol::ok_msg(
+    match req {
+        Request::Quit => Dispatch::Quit,
+        Request::Ping => Dispatch::Ready(protocol::ok_msg("pong")),
+        Request::Stats => Dispatch::Ready(protocol::ok_msg(
             &stats.report(registry.len(), &registry.shard_usage()),
         )),
         Request::Metrics { json } => {
             let fams = metrics_families(registry, stats);
             if json {
-                Reply::Ready(protocol::ok_msg(&crate::obs::registry::json_text(&fams)))
+                Dispatch::Ready(protocol::ok_msg(&crate::obs::registry::json_text(&fams)))
             } else {
                 // the protocol's only multi-line response: the header
                 // announces the payload line count so lockstep readers
@@ -353,7 +303,7 @@ fn handle_request(
                 let body = crate::obs::registry::prometheus_text(&fams);
                 let body = body.trim_end_matches('\n');
                 let n = body.lines().count();
-                Reply::Ready(format!("ok metrics lines={n}\n{body}"))
+                Dispatch::Ready(format!("ok metrics lines={n}\n{body}"))
             }
         }
         Request::Shards { name } => match registry.get(&name) {
@@ -371,7 +321,7 @@ fn handle_request(
                             )
                         })
                         .collect();
-                    Reply::Ready(protocol::ok_msg(&format!(
+                    Dispatch::Ready(protocol::ok_msg(&format!(
                         "name={} shards={} resident={} resident_bytes={} total_bytes={} \
                          cell:hits:resident {}",
                         name,
@@ -382,12 +332,12 @@ fn handle_request(
                         per_cell.join(" ")
                     )))
                 }
-                None => Reply::Ready(protocol::err_msg(
+                None => Dispatch::Ready(protocol::err_msg(
                     "not-sharded",
                     &format!("model `{name}` is not a sharded bundle"),
                 )),
             },
-            Err(e) => Reply::Ready(protocol::err_msg("unknown-model", &format!("{e:#}"))),
+            Err(e) => Dispatch::Ready(protocol::err_msg("unknown-model", &format!("{e:#}"))),
         },
         Request::Load { name, path } => match registry.load(&name, Path::new(&path)) {
             Ok(m) => {
@@ -395,15 +345,18 @@ fn handle_request(
                     Some(b) => format!("shards={}", b.manifest().n_cells()),
                     None => format!("units={}", m.model.units.len()),
                 };
-                Reply::Ready(protocol::ok_msg(&format!("loaded {name} dim={} {detail}", m.dim)))
+                Dispatch::Ready(protocol::ok_msg(&format!(
+                    "loaded {name} dim={} {detail}",
+                    m.dim
+                )))
             }
-            Err(e) => Reply::Ready(protocol::err_msg("load-failed", &format!("{e:#}"))),
+            Err(e) => Dispatch::Ready(protocol::err_msg("load-failed", &format!("{e:#}"))),
         },
         Request::Unload { name } => {
             if registry.unload(&name) {
-                Reply::Ready(protocol::ok_msg(&format!("unloaded {name}")))
+                Dispatch::Ready(protocol::ok_msg(&format!("unloaded {name}")))
             } else {
-                Reply::Ready(protocol::err_msg("unknown-model", &format!("no model `{name}`")))
+                Dispatch::Ready(protocol::err_msg("unknown-model", &format!("no model `{name}`")))
             }
         }
         Request::Predict { model, rows } => {
@@ -412,10 +365,10 @@ fn handle_request(
                 Ok(m) => m,
                 Err(e) => {
                     stats.errors.add(rows.len() as u64);
-                    return Some(Reply::Ready(protocol::err_msg(
+                    return Dispatch::Ready(protocol::err_msg(
                         "unknown-model",
                         &format!("{e:#}"),
-                    )));
+                    ));
                 }
             };
             // resolve every wire row to a dense feature vector before
@@ -444,42 +397,20 @@ fn handle_request(
                 };
                 if let Some(msg) = err {
                     stats.errors.add(total_rows);
-                    return Some(Reply::Ready(protocol::err_msg("dim-mismatch", &msg)));
+                    return Dispatch::Ready(protocol::err_msg("dim-mismatch", &msg));
                 }
                 let dim = if served.dim > 0 { served.dim } else { row.min_dim() };
                 match row.densify(dim) {
                     Ok(v) => dense_rows.push(v),
                     Err(msg) => {
                         stats.errors.add(total_rows);
-                        return Some(Reply::Ready(protocol::err_msg("dim-mismatch", &msg)));
+                        return Dispatch::Ready(protocol::err_msg("dim-mismatch", &msg));
                     }
                 }
             }
-            let mut rxs = Vec::with_capacity(dense_rows.len());
-            for row in dense_rows {
-                match batcher.submit(&served, row) {
-                    Ok(rx) => rxs.push(rx),
-                    Err(SubmitError::Busy { retry_after_ms }) => {
-                        stats.rejected.inc();
-                        // rows already submitted from this request stay
-                        // in flight; their receivers are dropped here
-                        // and the worker's sends fail silently
-                        return Some(Reply::Ready(protocol::err_busy(retry_after_ms)));
-                    }
-                    Err(SubmitError::Closed) => {
-                        stats.errors.add(total_rows);
-                        return Some(Reply::Ready(protocol::err_msg(
-                            "unavailable",
-                            "server shutting down",
-                        )));
-                    }
-                }
-            }
-            stats.note_model(&model, rxs.len() as u64);
-            Reply::Pending(rxs)
+            Dispatch::Predict { served, name: model, rows: dense_rows }
         }
-    };
-    Some(reply)
+    }
 }
 
 /// Scrape-time metric families for this server: the process-global
@@ -538,6 +469,26 @@ fn metrics_families(
         "Padding rows added to reach shape buckets",
         stats.padded_rows.get(),
     ));
+    fams.push(Family::counter(
+        "liquidsvm_serve_conns_accepted",
+        "Connections admitted by the event loop",
+        stats.conns_accepted.get(),
+    ));
+    fams.push(Family::counter(
+        "liquidsvm_serve_conns_rejected",
+        "Connections refused at accept time by the max-conns cap",
+        stats.conns_rejected.get(),
+    ));
+    fams.push(Family::counter(
+        "liquidsvm_serve_conns_rate_limited",
+        "Predict requests refused by the per-client token bucket",
+        stats.rate_limited.get(),
+    ));
+    fams.push(Family::gauge(
+        "liquidsvm_serve_conns_open",
+        "Currently open connections",
+        stats.conns_open() as f64,
+    ));
     fams.push(Family::gauge(
         "liquidsvm_serve_shard_resident_bytes",
         "Bytes of lazily loaded bundle shards currently resident",
@@ -549,18 +500,6 @@ fn metrics_families(
         &stats.latency,
     ));
     fams
-}
-
-fn collect_predictions(rxs: Vec<mpsc::Receiver<Result<f32, String>>>) -> String {
-    let mut vals = Vec::with_capacity(rxs.len());
-    for rx in rxs {
-        match rx.recv() {
-            Ok(Ok(v)) => vals.push(v),
-            Ok(Err(e)) => return protocol::err_msg("predict-failed", &e),
-            Err(_) => return protocol::err_msg("internal", "worker dropped request"),
-        }
-    }
-    protocol::ok_values(&vals)
 }
 
 // ------------------------------------------------------------ client
@@ -582,7 +521,7 @@ pub struct LoadSpec {
 /// Aggregated result of a load run.
 #[derive(Debug, Default)]
 pub struct LoadReport {
-    /// request lines written (including busy retries)
+    /// request lines/frames written (including busy retries)
     pub sent: usize,
     /// successful predictions
     pub ok: usize,
@@ -619,10 +558,23 @@ impl LoadReport {
 }
 
 /// Fire `connections × requests` single-row predict requests at a
-/// server, cycling through `rows`.  Busy responses back off and retry
-/// until answered.  When `expected` is given (aligned with `rows`),
-/// every prediction is checked against it.
+/// server over the text protocol, cycling through `rows`.  Busy
+/// responses back off and retry until answered.  When `expected` is
+/// given (aligned with `rows`), every prediction is checked against
+/// it.
 pub fn run_load(spec: &LoadSpec, rows: &[Vec<f32>], expected: Option<&[f32]>) -> Result<LoadReport> {
+    run_load_mode(spec, rows, expected, WireMode::Text)
+}
+
+/// [`run_load`] with an explicit wire mode: `WireMode::Binary`
+/// negotiates `serve-hello v1 binary` on every connection and moves
+/// rows/decisions as length-prefixed f32 frames (`client --binary`).
+pub fn run_load_mode(
+    spec: &LoadSpec,
+    rows: &[Vec<f32>],
+    expected: Option<&[f32]>,
+    mode: WireMode,
+) -> Result<LoadReport> {
     if rows.is_empty() {
         bail!("no feature rows to send");
     }
@@ -639,7 +591,7 @@ pub fn run_load(spec: &LoadSpec, rows: &[Vec<f32>], expected: Option<&[f32]>) ->
         let handles: Vec<_> = (0..connections)
             .map(|c| {
                 scope.spawn(move || {
-                    run_connection(spec, rows, expected, c * spec.requests, pipeline)
+                    run_connection(spec, rows, expected, c * spec.requests, pipeline, mode)
                 })
             })
             .collect();
@@ -658,12 +610,22 @@ pub fn run_load(spec: &LoadSpec, rows: &[Vec<f32>], expected: Option<&[f32]>) ->
     Ok(report)
 }
 
+/// Pull a `retry_after_ms=N` hint out of a busy/rate-limit message.
+pub(crate) fn parse_retry_ms(msg: &str) -> u64 {
+    msg.split("retry_after_ms=")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
 fn run_connection(
     spec: &LoadSpec,
     rows: &[Vec<f32>],
     expected: Option<&[f32]>,
     base_idx: usize,
     pipeline: usize,
+    mode: WireMode,
 ) -> Result<LoadReport> {
     let stream = TcpStream::connect(&spec.addr)
         .with_context(|| format!("connecting {}", spec.addr))?;
@@ -671,6 +633,18 @@ fn run_connection(
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut st = LoadReport::default();
+
+    if mode == WireMode::Binary {
+        writer.write_all(format!("{}\n", protocol::serve_hello_line(mode)).as_bytes())?;
+        let mut ack = String::new();
+        if reader.read_line(&mut ack)? == 0 {
+            bail!("server closed connection during hello");
+        }
+        let acked = protocol::parse_serve_hello_ack(ack.trim()).map_err(|e| anyhow!(e))?;
+        if acked != WireMode::Binary {
+            bail!("server refused binary mode (acked {acked:?})");
+        }
+    }
 
     let mut done = 0usize;
     while done < spec.requests {
@@ -684,38 +658,90 @@ fn run_connection(
                 bail!("request rejected busy 500 times; server saturated");
             }
             let t0 = Instant::now();
-            let mut msg = String::new();
+            let mut msg: Vec<u8> = Vec::new();
             for &ri in &outstanding {
-                let row: Vec<String> = rows[ri].iter().map(|v| format!("{v}")).collect();
-                msg.push_str(&format!("predict {} {}\n", spec.model, row.join(",")));
+                match mode {
+                    WireMode::Text => {
+                        let row: Vec<String> =
+                            rows[ri].iter().map(|v| format!("{v}")).collect();
+                        msg.extend_from_slice(
+                            format!("predict {} {}\n", spec.model, row.join(",")).as_bytes(),
+                        );
+                    }
+                    WireMode::Binary => {
+                        let payload = protocol::encode_predict_payload(
+                            &spec.model,
+                            rows[ri].len(),
+                            1,
+                            &rows[ri],
+                        )
+                        .map_err(|e| anyhow!(e))?;
+                        msg.extend_from_slice(
+                            &protocol::encode_serve_frame(ServeFrameTag::Predict, &payload)
+                                .map_err(|e| anyhow!(e))?,
+                        );
+                    }
+                }
             }
-            writer.write_all(msg.as_bytes())?;
+            writer.write_all(&msg)?;
             st.sent += outstanding.len();
 
             let mut retry = Vec::new();
             let mut backoff_ms = 0u64;
             let mut line = String::new();
             for &ri in &outstanding {
-                line.clear();
-                if reader.read_line(&mut line)? == 0 {
-                    bail!("server closed connection");
-                }
-                match protocol::parse_response(&line) {
-                    protocol::Response::Ok(body) => {
-                        let vals = protocol::parse_values(&body).map_err(|e| anyhow!(e))?;
-                        st.ok += 1;
-                        if let Some(exp) = expected {
-                            if vals.len() != 1 || vals[0] != exp[ri] {
-                                st.mismatches += 1;
+                match mode {
+                    WireMode::Text => {
+                        line.clear();
+                        if reader.read_line(&mut line)? == 0 {
+                            bail!("server closed connection");
+                        }
+                        match protocol::parse_response(&line) {
+                            protocol::Response::Ok(body) => {
+                                let vals =
+                                    protocol::parse_values(&body).map_err(|e| anyhow!(e))?;
+                                st.ok += 1;
+                                if let Some(exp) = expected {
+                                    if vals.len() != 1 || vals[0] != exp[ri] {
+                                        st.mismatches += 1;
+                                    }
+                                }
                             }
+                            protocol::Response::Busy { retry_after_ms } => {
+                                st.rejected += 1;
+                                backoff_ms = backoff_ms.max(retry_after_ms);
+                                retry.push(ri);
+                            }
+                            protocol::Response::Err { .. } => st.failed += 1,
                         }
                     }
-                    protocol::Response::Busy { retry_after_ms } => {
-                        st.rejected += 1;
-                        backoff_ms = backoff_ms.max(retry_after_ms);
-                        retry.push(ri);
+                    WireMode::Binary => {
+                        let (tag, payload) = protocol::read_serve_frame(&mut reader)?;
+                        match tag {
+                            ServeFrameTag::Decisions => {
+                                let vals = protocol::bytes_to_f32s(&payload)
+                                    .map_err(|e| anyhow!(e))?;
+                                st.ok += 1;
+                                if let Some(exp) = expected {
+                                    if vals.len() != 1 || vals[0] != exp[ri] {
+                                        st.mismatches += 1;
+                                    }
+                                }
+                            }
+                            ServeFrameTag::Err => {
+                                let (code, emsg) = protocol::decode_err_payload(&payload)
+                                    .map_err(|e| anyhow!(e))?;
+                                if code == "busy" {
+                                    st.rejected += 1;
+                                    backoff_ms = backoff_ms.max(parse_retry_ms(&emsg));
+                                    retry.push(ri);
+                                } else {
+                                    st.failed += 1;
+                                }
+                            }
+                            other => bail!("unexpected reply frame {other:?}"),
+                        }
                     }
-                    protocol::Response::Err { .. } => st.failed += 1,
                 }
             }
             st.latency.record(t0.elapsed());
@@ -726,7 +752,16 @@ fn run_connection(
         }
         done += chunk;
     }
-    // polite teardown so the server thread exits promptly
-    let _ = writer.write_all(b"quit\n");
+    // polite teardown so the server releases the admission slot promptly
+    match mode {
+        WireMode::Text => {
+            let _ = writer.write_all(b"quit\n");
+        }
+        WireMode::Binary => {
+            if let Ok(frame) = protocol::encode_serve_frame(ServeFrameTag::Quit, &[]) {
+                let _ = writer.write_all(&frame);
+            }
+        }
+    }
     Ok(st)
 }

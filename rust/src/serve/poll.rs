@@ -1,0 +1,540 @@
+//! Readiness polling for the async serve plane: a thin, safe wrapper
+//! over the OS readiness syscall (`epoll` on Linux, POSIX `poll(2)`
+//! elsewhere) plus the self-pipe used to wake a reactor from another
+//! thread.
+//!
+//! Semantics exposed upward:
+//! - [`Poller::register`] / [`Poller::modify`] express *interest*
+//!   (readable / writable) for an fd under a caller-chosen token;
+//!   [`Poller::wait`] reports readiness as [`Event`]s carrying that
+//!   token back.
+//! - On Linux the `edge` flag arms edge-triggered delivery (EPOLLET);
+//!   the portable fallback is level-triggered and ignores the flag.
+//!   Callers stay correct under both by always draining to
+//!   `WouldBlock` and keeping write interest armed only while output
+//!   is actually buffered (DESIGN.md §Serving-async).
+//! - [`WakePipe`] is the classic self-pipe trick: `wake()` writes one
+//!   byte (EAGAIN means a wake is already pending — exactly the
+//!   coalescing we want), and the reactor drains the pipe before it
+//!   takes its mailbox, so a completion pushed before the wake byte is
+//!   never missed.
+
+// One of the three modules allowed to opt back into `unsafe` (the
+// crate root denies it): the readiness syscalls take raw pointers the
+// type system cannot vouch for.  The surface is raw `extern "C"`
+// declarations — the crate links no FFI helper crates; libc symbols
+// come in via std — and every unsafe block carries a SAFETY contract
+// (CI denies `clippy::undocumented_unsafe_blocks`); see DESIGN.md
+// §Serving-async.
+#![allow(unsafe_code)]
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+/// Upper bound on events returned by a single [`Poller::wait`] call.
+/// Readiness is a level/edge signal, not a queue: anything not
+/// reported this round is reported on the next call.
+pub const MAX_EVENTS: usize = 256;
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token the fd was registered under.
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer hangup or socket error: the connection should be read to
+    /// EOF and torn down.
+    pub hangup: bool,
+}
+
+// ---------------------------------------------------------------- Linux: epoll
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Raw epoll + pipe syscall bindings.  Numeric constants are the
+    //! stable Linux userspace ABI (uapi headers); they are identical
+    //! on every Linux architecture this crate targets.
+
+    /// Mirror of the kernel's `struct epoll_event`.  The x86-64 ABI
+    /// declares it packed (a 12-byte struct); other architectures use
+    /// natural alignment.  Fields must be copied to locals before
+    /// use — references into a packed struct are UB.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EPOLLET: u32 = 1 << 31;
+
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    pub const F_GETFL: i32 = 3;
+    pub const F_SETFL: i32 = 4;
+    pub const O_NONBLOCK: i32 = 0o4000;
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+        pub fn pipe(fds: *mut i32) -> i32;
+        // fcntl is variadic in C; the F_GETFL/F_SETFL commands we use
+        // take at most one int argument, for which the fixed-arity
+        // declaration matches the platform calling convention.
+        pub fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+        pub fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    }
+}
+
+/// Edge- or level-triggered readiness poller over one `epoll`
+/// instance.  `register`/`modify`/`deregister` may be called from any
+/// thread (the kernel serializes `epoll_ctl`); `wait` belongs to the
+/// owning reactor.
+#[cfg(target_os = "linux")]
+pub struct Poller {
+    epfd: RawFd,
+    buf: Vec<sys::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        // SAFETY: epoll_create1 takes a flag word and returns a fresh
+        // fd (or -1); no pointers cross the boundary.
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Poller {
+            epfd,
+            buf: vec![sys::EpollEvent { events: 0, data: 0 }; MAX_EVENTS],
+        })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = sys::EpollEvent { events, data: token };
+        // SAFETY: `ev` is a live, correctly laid-out epoll_event for
+        // the duration of the call; the kernel copies it out before
+        // returning (it is also passed, ignored, for EPOLL_CTL_DEL to
+        // stay compatible with pre-2.6.9 kernels that reject NULL).
+        let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn interest_bits(readable: bool, writable: bool, edge: bool) -> u32 {
+        let mut bits = 0u32;
+        if readable {
+            bits |= sys::EPOLLIN | sys::EPOLLRDHUP;
+        }
+        if writable {
+            bits |= sys::EPOLLOUT;
+        }
+        if edge {
+            bits |= sys::EPOLLET;
+        }
+        bits
+    }
+
+    pub fn register(
+        &self,
+        fd: RawFd,
+        token: u64,
+        readable: bool,
+        writable: bool,
+        edge: bool,
+    ) -> io::Result<()> {
+        self.ctl(
+            sys::EPOLL_CTL_ADD,
+            fd,
+            Self::interest_bits(readable, writable, edge),
+            token,
+        )
+    }
+
+    pub fn modify(
+        &self,
+        fd: RawFd,
+        token: u64,
+        readable: bool,
+        writable: bool,
+        edge: bool,
+    ) -> io::Result<()> {
+        self.ctl(
+            sys::EPOLL_CTL_MOD,
+            fd,
+            Self::interest_bits(readable, writable, edge),
+            token,
+        )
+    }
+
+    pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Block up to `timeout_ms` (-1 = forever) and append readiness
+    /// reports to `events` (cleared first).  EINTR is reported as
+    /// zero events, never as an error.
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout_ms: i32) -> io::Result<usize> {
+        events.clear();
+        // SAFETY: `buf` points at MAX_EVENTS properly-sized
+        // epoll_event slots owned by self; the kernel writes at most
+        // `maxevents` entries and we read back only the first `n`.
+        let n = unsafe {
+            sys::epoll_wait(
+                self.epfd,
+                self.buf.as_mut_ptr(),
+                self.buf.len() as i32,
+                timeout_ms,
+            )
+        };
+        if n < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(err);
+        }
+        for slot in self.buf.iter().take(n as usize) {
+            // Copy packed fields to locals before use: forming a
+            // reference to them (e.g. in a format or comparison that
+            // autorefs) would be UB on x86-64.
+            let ev: sys::EpollEvent = *slot;
+            let bits = ev.events;
+            let token = ev.data;
+            events.push(Event {
+                token,
+                readable: bits & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0,
+                writable: bits & sys::EPOLLOUT != 0,
+                hangup: bits & (sys::EPOLLERR | sys::EPOLLHUP | sys::EPOLLRDHUP) != 0,
+            });
+        }
+        Ok(n as usize)
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Poller {
+    fn drop(&mut self) {
+        // SAFETY: epfd is a live fd owned exclusively by this Poller;
+        // closing it is the last use.
+        unsafe { sys::close(self.epfd) };
+    }
+}
+
+// ------------------------------------------------- portable: POSIX poll(2)
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    //! POSIX `poll(2)` + pipe bindings for non-Linux unix targets.
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    pub const F_GETFL: i32 = 3;
+    pub const F_SETFL: i32 = 4;
+    pub const O_NONBLOCK: i32 = 0x0004;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+        pub fn pipe(fds: *mut i32) -> i32;
+        // fcntl is variadic in C; see the Linux binding for why the
+        // fixed-arity declaration is sound for F_GETFL/F_SETFL.
+        pub fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+        pub fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    }
+}
+
+/// Level-triggered fallback poller over POSIX `poll(2)`.  The `edge`
+/// flag is accepted and ignored: callers already drain to `WouldBlock`
+/// and drop write interest once their buffers empty, which is correct
+/// (if mildly chattier) under level-triggered delivery.
+#[cfg(not(target_os = "linux"))]
+pub struct Poller {
+    interest: crate::sync::Mutex<std::collections::HashMap<RawFd, (u64, bool, bool)>>,
+}
+
+#[cfg(not(target_os = "linux"))]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller {
+            interest: crate::sync::Mutex::new(std::collections::HashMap::new()),
+        })
+    }
+
+    pub fn register(
+        &self,
+        fd: RawFd,
+        token: u64,
+        readable: bool,
+        writable: bool,
+        edge: bool,
+    ) -> io::Result<()> {
+        let _ = edge; // level-triggered fallback: see type-level doc
+        self.interest
+            .lock()
+            .unwrap()
+            .insert(fd, (token, readable, writable));
+        Ok(())
+    }
+
+    pub fn modify(
+        &self,
+        fd: RawFd,
+        token: u64,
+        readable: bool,
+        writable: bool,
+        edge: bool,
+    ) -> io::Result<()> {
+        self.register(fd, token, readable, writable, edge)
+    }
+
+    pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+        self.interest.lock().unwrap().remove(&fd);
+        Ok(())
+    }
+
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout_ms: i32) -> io::Result<usize> {
+        events.clear();
+        let mut fds: Vec<sys::PollFd> = Vec::new();
+        let mut tokens: Vec<u64> = Vec::new();
+        for (&fd, &(token, readable, writable)) in self.interest.lock().unwrap().iter() {
+            let mut ev = 0i16;
+            if readable {
+                ev |= sys::POLLIN;
+            }
+            if writable {
+                ev |= sys::POLLOUT;
+            }
+            fds.push(sys::PollFd {
+                fd,
+                events: ev,
+                revents: 0,
+            });
+            tokens.push(token);
+        }
+        if fds.is_empty() {
+            return Ok(0);
+        }
+        // SAFETY: `fds` is a live, contiguous pollfd array of exactly
+        // `nfds` entries; the kernel writes only the revents fields.
+        let n = unsafe { sys::poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms) };
+        if n < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(err);
+        }
+        for (pfd, &token) in fds.iter().zip(tokens.iter()) {
+            let bits = pfd.revents;
+            if bits == 0 {
+                continue;
+            }
+            events.push(Event {
+                token,
+                readable: bits & POLLIN_HUP != 0,
+                writable: bits & sys::POLLOUT != 0,
+                hangup: bits & (sys::POLLERR | sys::POLLHUP) != 0,
+            });
+        }
+        Ok(events.len())
+    }
+}
+
+// A peer hangup surfaces as POLLHUP (possibly without POLLIN); treat
+// it as readable so the state machine reads to EOF and tears down.
+#[cfg(not(target_os = "linux"))]
+const POLLIN_HUP: i16 = sys::POLLIN | sys::POLLHUP;
+
+// ------------------------------------------------------------- wake pipe
+
+/// Self-pipe used to interrupt a blocked [`Poller::wait`] from another
+/// thread.  Both ends are nonblocking; the read end is registered with
+/// the reactor's poller under a reserved token.
+pub struct WakePipe {
+    read_fd: RawFd,
+    write_fd: RawFd,
+}
+
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        let mut fds = [0i32; 2];
+        // SAFETY: pipe writes exactly two fds into the provided
+        // 2-element array.
+        let rc = unsafe { sys::pipe(fds.as_mut_ptr()) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let pipe = WakePipe {
+            read_fd: fds[0],
+            write_fd: fds[1],
+        };
+        set_nonblocking(pipe.read_fd)?;
+        set_nonblocking(pipe.write_fd)?;
+        Ok(pipe)
+    }
+
+    pub fn read_fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Nudge the owning reactor.  Infallible by design: EAGAIN on a
+    /// full pipe means a wake byte is already pending, which is all a
+    /// waker needs.  Callers must publish their payload (push to the
+    /// mailbox) *before* calling wake; the reactor drains the pipe
+    /// before taking the mailbox, so the payload is never missed.
+    pub fn wake(&self) {
+        let b = [1u8];
+        // SAFETY: writes one byte from a live stack buffer to a
+        // nonblocking fd this pipe owns; short writes and EAGAIN are
+        // both acceptable (see above).
+        let _ = unsafe { sys::write(self.write_fd, b.as_ptr(), 1) };
+    }
+
+    /// Consume all pending wake bytes (called by the reactor before it
+    /// takes its mailbox).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            // SAFETY: reads into a live 64-byte stack buffer from a
+            // nonblocking fd this pipe owns.
+            let n = unsafe { sys::read(self.read_fd, buf.as_mut_ptr(), buf.len()) };
+            if n <= 0 {
+                break;
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        // SAFETY: both fds are live and owned exclusively by this
+        // pipe; closing them is the last use.
+        unsafe {
+            sys::close(self.read_fd);
+            sys::close(self.write_fd);
+        }
+    }
+}
+
+fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+    // SAFETY: F_GETFL takes no argument (0 passed as the unused slot)
+    // and F_SETFL takes one int; fd is live and owned by the caller.
+    let flags = unsafe { sys::fcntl(fd, sys::F_GETFL, 0) };
+    if flags < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    // SAFETY: as above; setting O_NONBLOCK on a pipe end is always
+    // valid.
+    let rc = unsafe { sys::fcntl(fd, sys::F_SETFL, flags | sys::O_NONBLOCK) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+// Miri interprets no FFI, so the syscall-backed tests run natively only.
+#[cfg(all(test, not(miri)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wake_pipe_roundtrip_and_coalescing() {
+        let pipe = WakePipe::new().unwrap();
+        // Many wakes coalesce into "some bytes pending" — drain never
+        // blocks and leaves the pipe empty.
+        for _ in 0..10_000 {
+            pipe.wake();
+        }
+        pipe.drain();
+        pipe.drain(); // idempotent on an empty pipe
+    }
+
+    #[test]
+    fn poller_reports_wake_pipe_readable() {
+        let mut poller = Poller::new().unwrap();
+        let pipe = WakePipe::new().unwrap();
+        poller
+            .register(pipe.read_fd(), 42, true, false, false)
+            .unwrap();
+
+        let mut events = Vec::new();
+        // Nothing pending: a zero timeout returns no events.
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.iter().all(|e| e.token != 42 || !e.readable));
+
+        pipe.wake();
+        poller.wait(&mut events, 1000).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 42 && e.readable),
+            "wake byte must surface as readability on the read end"
+        );
+
+        pipe.drain();
+        poller.deregister(pipe.read_fd()).unwrap();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.iter().all(|e| e.token != 42));
+    }
+
+    #[test]
+    fn edge_triggered_registration_fires_once_per_arrival() {
+        let mut poller = Poller::new().unwrap();
+        let pipe = WakePipe::new().unwrap();
+        poller
+            .register(pipe.read_fd(), 7, true, false, true)
+            .unwrap();
+        pipe.wake();
+        let mut events = Vec::new();
+        poller.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+        // After draining, no further readiness is reported.
+        pipe.drain();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.iter().all(|e| e.token != 7 || !e.readable));
+    }
+
+    #[test]
+    fn modify_toggles_write_interest() {
+        let mut poller = Poller::new().unwrap();
+        let pipe = WakePipe::new().unwrap();
+        // The write end of an empty pipe is always writable.
+        poller
+            .register(pipe.write_fd, 9, false, true, false)
+            .unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 9 && e.writable));
+        // Drop write interest: no more reports for this fd.
+        poller.modify(pipe.write_fd, 9, false, false, false).unwrap();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.iter().all(|e| e.token != 9 || !e.writable));
+    }
+}

@@ -233,6 +233,286 @@ pub fn parse_hello_ack(line: &str) -> Result<WireMode, String> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Binary *serve* protocol.
+//
+// Same `tag u8 | len u32 LE | payload` grammar as the train wire
+// above — one frame reader, one set of bounds — but with its own tag
+// space (0x10..) so a serve stream can never be confused with a train
+// stream, negotiated per connection by a `serve-hello` line.  A client
+// that never sends the hello speaks the text protocol unchanged; a
+// hello requesting anything other than exactly `binary` falls back to
+// text (forward compatibility: an old server answering a new client
+// degrades to text instead of hanging).
+
+const SERVE_HELLO_PREFIX: &str = "serve-hello v1";
+
+/// The client's opening line: `serve-hello v1 <text|binary>`.
+pub fn serve_hello_line(mode: WireMode) -> String {
+    match mode {
+        WireMode::Text => format!("{SERVE_HELLO_PREFIX} text"),
+        WireMode::Binary => format!("{SERVE_HELLO_PREFIX} binary"),
+    }
+}
+
+/// Server acknowledgement: `ok serve-hello v1 <mode>` — echoes the
+/// *accepted* mode, which is what the stream speaks from then on.
+pub fn serve_hello_ack(mode: WireMode) -> String {
+    ok_msg(&serve_hello_line(mode))
+}
+
+/// Classify a first line from a serve connection.
+///
+/// - `None`: not a serve-hello at all — treat the line as a plain text
+///   request (full backward compatibility with pre-hello clients).
+/// - `Some(Binary)`: an exact `serve-hello v1 binary` request.
+/// - `Some(Text)`: any other serve-hello — unknown modes and future
+///   extensions fall back to text rather than erroring out.
+pub fn negotiate_serve_hello(line: &str) -> Option<WireMode> {
+    let rest = line.trim().strip_prefix(SERVE_HELLO_PREFIX)?;
+    if !rest.is_empty() && !rest.starts_with(' ') {
+        return None; // e.g. "serve-hello v12..." — not our version token
+    }
+    match rest.trim() {
+        "binary" => Some(WireMode::Binary),
+        _ => Some(WireMode::Text),
+    }
+}
+
+/// Parse the server's `ok serve-hello v1 <mode>` acknowledgement
+/// (client side).
+pub fn parse_serve_hello_ack(line: &str) -> Result<WireMode, String> {
+    match parse_response(line) {
+        Response::Ok(body) => match negotiate_serve_hello(&body) {
+            Some(mode) => Ok(mode),
+            None => Err(format!("malformed serve-hello ack `{line}`")),
+        },
+        Response::Busy { .. } => Err("server busy".into()),
+        Response::Err { code, msg } => Err(format!("handshake rejected: {code} {msg}")),
+    }
+}
+
+/// Frame type tags of the binary serve protocol.  Deliberately
+/// disjoint from [`FrameTag`] (1–5): a frame from the wrong plane is
+/// an immediate `InvalidData`, not a misparse.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ServeFrameTag {
+    /// client → server: one predict request
+    /// (`name_len u8 | name | dim u32 LE | n_rows u32 LE | n_rows*dim f32 LE`)
+    Predict = 0x10,
+    /// server → client: raw-LE f32 decision block, one value per row,
+    /// request order preserved
+    Decisions = 0x11,
+    /// server → client: request-scoped error
+    /// (`code_len u8 | code | msg`, both UTF-8); the connection stays up
+    Err = 0x12,
+    /// client → server: liveness probe (empty payload)
+    Ping = 0x13,
+    /// server → client: liveness answer (empty payload)
+    Pong = 0x14,
+    /// client → server: clean end of session (empty payload)
+    Quit = 0x15,
+    /// server → client: goodbye, connection closes after this frame
+    Bye = 0x16,
+}
+
+impl ServeFrameTag {
+    pub fn from_u8(b: u8) -> Option<ServeFrameTag> {
+        Some(match b {
+            0x10 => ServeFrameTag::Predict,
+            0x11 => ServeFrameTag::Decisions,
+            0x12 => ServeFrameTag::Err,
+            0x13 => ServeFrameTag::Ping,
+            0x14 => ServeFrameTag::Pong,
+            0x15 => ServeFrameTag::Quit,
+            0x16 => ServeFrameTag::Bye,
+            _ => return None,
+        })
+    }
+}
+
+/// Nonblocking header peek over a partial receive buffer.
+///
+/// - `None`: fewer than 5 bytes buffered — read more.
+/// - `Some(Err(_))`: unknown tag or oversized length prefix.  Decided
+///   from the 5-byte header alone, **before any allocation** — the
+///   event loop kills the connection without ever buffering the
+///   claimed payload.
+/// - `Some(Ok((tag, len)))`: a well-formed header; the frame is
+///   complete once `5 + len` bytes are buffered.
+pub fn peek_serve_frame(buf: &[u8]) -> Option<Result<(ServeFrameTag, usize), String>> {
+    if buf.len() < 5 {
+        return None;
+    }
+    let tag = match ServeFrameTag::from_u8(buf[0]) {
+        Some(t) => t,
+        None => return Some(Err(format!("unknown serve frame tag {}", buf[0]))),
+    };
+    let len = u32::from_le_bytes([buf[1], buf[2], buf[3], buf[4]]) as usize;
+    if len > FRAME_MAX {
+        return Some(Err(format!(
+            "frame length {len} exceeds FRAME_MAX {FRAME_MAX}"
+        )));
+    }
+    Some(Ok((tag, len)))
+}
+
+/// Encode one serve frame.  Same bounds as [`encode_frame`].
+pub fn encode_serve_frame(tag: ServeFrameTag, payload: &[u8]) -> Result<Vec<u8>, String> {
+    if payload.len() > FRAME_MAX {
+        return Err(format!(
+            "frame payload {} exceeds FRAME_MAX {FRAME_MAX}",
+            payload.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(5 + payload.len());
+    out.push(tag as u8);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    Ok(out)
+}
+
+/// Blocking serve-frame read (client side; the server never blocks on
+/// a frame — it uses [`peek_serve_frame`] over its receive buffer).
+/// Error taxonomy matches [`read_frame`]: truncation is
+/// `UnexpectedEof`, unknown tag / oversized prefix is `InvalidData`
+/// decided before any allocation.
+pub fn read_serve_frame(r: &mut impl std::io::Read) -> std::io::Result<(ServeFrameTag, Vec<u8>)> {
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head)?;
+    let (tag, len) = match peek_serve_frame(&head) {
+        Some(Ok(hdr)) => hdr,
+        Some(Err(e)) => return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e)),
+        None => unreachable!("peek over a full 5-byte header"),
+    };
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok((tag, payload))
+}
+
+/// Decoded body of a [`ServeFrameTag::Predict`] frame: `rows × dim`
+/// features, row-major, exactly as sent (bit-exact — no text
+/// round-trip anywhere on the binary path).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictFrame {
+    pub model: String,
+    pub dim: usize,
+    pub rows: usize,
+    /// `rows * dim` values, row-major.
+    pub data: Vec<f32>,
+}
+
+/// Encode a Predict payload.  `data.len()` must equal `rows * dim`.
+pub fn encode_predict_payload(
+    model: &str,
+    dim: usize,
+    rows: usize,
+    data: &[f32],
+) -> Result<Vec<u8>, String> {
+    if model.len() > u8::MAX as usize {
+        return Err(format!("model name {} bytes exceeds 255", model.len()));
+    }
+    if rows > u32::MAX as usize || dim > u32::MAX as usize {
+        return Err(format!("predict shape {rows}x{dim} exceeds u32"));
+    }
+    let expect = rows
+        .checked_mul(dim)
+        .ok_or_else(|| format!("predict shape {rows}x{dim} overflows"))?;
+    if data.len() != expect {
+        return Err(format!(
+            "predict data {} values, shape says {rows}x{dim}={expect}",
+            data.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(1 + model.len() + 8 + data.len() * 4);
+    out.push(model.len() as u8);
+    out.extend_from_slice(model.as_bytes());
+    out.extend_from_slice(&(dim as u32).to_le_bytes());
+    out.extend_from_slice(&(rows as u32).to_le_bytes());
+    out.extend_from_slice(&f32s_to_bytes(data));
+    Ok(out)
+}
+
+/// Decode a Predict payload.  Every length is cross-checked: the
+/// feature block must be *exactly* `rows * dim * 4` bytes (computed
+/// with overflow checks), so a lying header can neither over-read nor
+/// leave trailing garbage unaccounted for.
+pub fn decode_predict_payload(payload: &[u8]) -> Result<PredictFrame, String> {
+    if payload.is_empty() {
+        return Err("empty predict payload".into());
+    }
+    let name_len = payload[0] as usize;
+    let head = 1 + name_len + 8;
+    if payload.len() < head {
+        return Err(format!(
+            "predict payload {} bytes, header needs {head}",
+            payload.len()
+        ));
+    }
+    let model = std::str::from_utf8(&payload[1..1 + name_len])
+        .map_err(|_| "model name is not UTF-8".to_string())?
+        .to_string();
+    let at = 1 + name_len;
+    let dim = u32::from_le_bytes([payload[at], payload[at + 1], payload[at + 2], payload[at + 3]])
+        as usize;
+    let rows = u32::from_le_bytes([
+        payload[at + 4],
+        payload[at + 5],
+        payload[at + 6],
+        payload[at + 7],
+    ]) as usize;
+    let values = rows
+        .checked_mul(dim)
+        .ok_or_else(|| format!("predict shape {rows}x{dim} overflows"))?;
+    let body_bytes = values
+        .checked_mul(4)
+        .ok_or_else(|| format!("predict shape {rows}x{dim} overflows"))?;
+    if payload.len() - head != body_bytes {
+        return Err(format!(
+            "predict body {} bytes, shape {rows}x{dim} needs {body_bytes}",
+            payload.len() - head
+        ));
+    }
+    let data = bytes_to_f32s(&payload[head..])?;
+    Ok(PredictFrame {
+        model,
+        dim,
+        rows,
+        data,
+    })
+}
+
+/// Encode an Err payload (`code_len u8 | code | msg`).  Codes match
+/// the text protocol (`busy`, `unknown-model`, `dim-mismatch`, ...).
+pub fn encode_err_payload(code: &str, msg: &str) -> Vec<u8> {
+    let code = &code.as_bytes()[..code.len().min(u8::MAX as usize)];
+    let mut out = Vec::with_capacity(1 + code.len() + msg.len());
+    out.push(code.len() as u8);
+    out.extend_from_slice(code);
+    out.extend_from_slice(msg.as_bytes());
+    out
+}
+
+/// Decode an Err payload back into `(code, msg)`.
+pub fn decode_err_payload(payload: &[u8]) -> Result<(String, String), String> {
+    if payload.is_empty() {
+        return Err("empty err payload".into());
+    }
+    let code_len = payload[0] as usize;
+    if payload.len() < 1 + code_len {
+        return Err(format!(
+            "err payload {} bytes, code_len says {code_len}",
+            payload.len()
+        ));
+    }
+    let code = std::str::from_utf8(&payload[1..1 + code_len])
+        .map_err(|_| "err code is not UTF-8".to_string())?
+        .to_string();
+    let msg = String::from_utf8_lossy(&payload[1 + code_len..]).into_owned();
+    Ok((code, msg))
+}
+
 /// One prediction row off the wire: dense (`v1,v2,...`) or sparse
 /// (`idx:val` pairs, 1-based like LIBSVM).  Sparse rows densify at the
 /// server boundary against the target model's dimension — the serving
@@ -677,5 +957,205 @@ mod tests {
         assert_eq!(parse_hello_ack(&hello_ack(WireMode::Text)).unwrap(), WireMode::Text);
         assert!(parse_hello_ack(&err_msg("bad-hello", "nope")).is_err());
         assert!(parse_hello_ack(&err_busy(5)).is_err());
+    }
+
+    // -------------------------------------- serve framing (fuzz/property)
+
+    #[test]
+    fn serve_frame_roundtrip_all_tags() {
+        for tag in [
+            ServeFrameTag::Predict,
+            ServeFrameTag::Decisions,
+            ServeFrameTag::Err,
+            ServeFrameTag::Ping,
+            ServeFrameTag::Pong,
+            ServeFrameTag::Quit,
+            ServeFrameTag::Bye,
+        ] {
+            let payload = b"serve bytes".to_vec();
+            let buf = encode_serve_frame(tag, &payload).unwrap();
+            let (t, len) = peek_serve_frame(&buf).unwrap().unwrap();
+            assert_eq!((t, len), (tag, payload.len()));
+            let (t, p) = read_serve_frame(&mut Cursor::new(&buf)).unwrap();
+            assert_eq!((t, p), (tag, payload));
+        }
+    }
+
+    #[test]
+    fn serve_frame_roundtrip_random_payloads() {
+        // property: encode ∘ read is identity for arbitrary payloads,
+        // including back-to-back frames on one stream (pipelining)
+        let mut rng = Rng::new(0xace5);
+        for round in 0..50 {
+            let n_frames = 1 + (round % 4);
+            let mut buf = Vec::new();
+            let mut sent = Vec::new();
+            for _ in 0..n_frames {
+                let len = rng.below(4096);
+                let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+                let tag = ServeFrameTag::from_u8(0x10 + rng.below(7) as u8).unwrap();
+                buf.extend_from_slice(&encode_serve_frame(tag, &payload).unwrap());
+                sent.push((tag, payload));
+            }
+            let mut cur = Cursor::new(&buf);
+            for (tag, payload) in &sent {
+                let (t, p) = read_serve_frame(&mut cur).unwrap();
+                assert_eq!((&t, &p), (tag, payload));
+            }
+            assert_eq!(
+                read_serve_frame(&mut cur).unwrap_err().kind(),
+                std::io::ErrorKind::UnexpectedEof
+            );
+        }
+    }
+
+    #[test]
+    fn serve_frames_truncation_and_peek() {
+        let full = encode_serve_frame(ServeFrameTag::Predict, b"0123456789").unwrap();
+        for cut in 0..full.len() {
+            // blocking reader: truncation is a clean UnexpectedEof
+            let err = read_serve_frame(&mut Cursor::new(&full[..cut])).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "cut at {cut}");
+            // nonblocking peek: a short header asks for more bytes, a
+            // full header parses even with a partial payload
+            match peek_serve_frame(&full[..cut]) {
+                None => assert!(cut < 5, "cut at {cut}"),
+                Some(Ok((tag, len))) => {
+                    assert!(cut >= 5);
+                    assert_eq!((tag, len), (ServeFrameTag::Predict, 10));
+                }
+                Some(Err(e)) => panic!("well-formed header rejected: {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn serve_oversized_prefix_rejected_before_allocation() {
+        // decided from 5 bytes alone — no payload allocation happens
+        let mut head = vec![ServeFrameTag::Predict as u8];
+        head.extend_from_slice(&u32::MAX.to_le_bytes());
+        let e = peek_serve_frame(&head).unwrap().unwrap_err();
+        assert!(e.contains("FRAME_MAX"));
+        assert_eq!(
+            read_serve_frame(&mut Cursor::new(&head)).unwrap_err().kind(),
+            std::io::ErrorKind::InvalidData
+        );
+        // the writer enforces the same cap
+        assert!(encode_serve_frame(ServeFrameTag::Decisions, &vec![0u8; FRAME_MAX + 1]).is_err());
+    }
+
+    #[test]
+    fn serve_garbage_tags_and_soup_never_panic() {
+        // tags outside 0x10..=0x16 — including the *train* tags 1..=5,
+        // which must not leak into the serve plane — are InvalidData
+        for bad in [0u8, 1, 5, 0x0f, 0x17, 255] {
+            let mut buf = vec![bad];
+            buf.extend_from_slice(&0u32.to_le_bytes());
+            assert!(matches!(peek_serve_frame(&buf), Some(Err(_))), "tag {bad}");
+        }
+        let mut rng = Rng::new(0xd00d);
+        for _ in 0..200 {
+            let len = rng.below(64);
+            let soup: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let _ = peek_serve_frame(&soup);
+            let _ = read_serve_frame(&mut Cursor::new(&soup));
+            let _ = decode_predict_payload(&soup);
+            let _ = decode_err_payload(&soup);
+        }
+    }
+
+    #[test]
+    fn predict_payload_roundtrip_bit_exact() {
+        let mut rng = Rng::new(0x7e57);
+        for _ in 0..50 {
+            let rows = 1 + rng.below(8);
+            let dim = 1 + rng.below(16);
+            let data: Vec<f32> = (0..rows * dim)
+                .map(|_| f32::from_bits(rng.next_u64() as u32))
+                .collect();
+            let payload = encode_predict_payload("banana", dim, rows, &data).unwrap();
+            let frame = decode_predict_payload(&payload).unwrap();
+            assert_eq!(frame.model, "banana");
+            assert_eq!((frame.rows, frame.dim), (rows, dim));
+            assert!(frame
+                .data
+                .iter()
+                .zip(&data)
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        // zero rows is legal (an empty predict gets an empty decision block)
+        let payload = encode_predict_payload("m", 3, 0, &[]).unwrap();
+        let frame = decode_predict_payload(&payload).unwrap();
+        assert_eq!((frame.rows, frame.dim, frame.data.len()), (0, 3, 0));
+    }
+
+    #[test]
+    fn predict_payload_lying_headers_rejected() {
+        let good = encode_predict_payload("m", 2, 3, &[0.0; 6]).unwrap();
+        assert!(decode_predict_payload(&good).is_ok());
+        // truncated body: shape says 6 values, body has fewer
+        assert!(decode_predict_payload(&good[..good.len() - 4]).is_err());
+        // trailing garbage: body longer than the shape admits
+        let mut long = good.clone();
+        long.extend_from_slice(&[0; 4]);
+        assert!(decode_predict_payload(&long).is_err());
+        // rows*dim u32 overflow must not wrap into a small allocation
+        let mut evil = vec![1u8, b'm'];
+        evil.extend_from_slice(&u32::MAX.to_le_bytes()); // dim
+        evil.extend_from_slice(&u32::MAX.to_le_bytes()); // rows
+        assert!(decode_predict_payload(&evil).is_err());
+        // non-UTF-8 model name
+        let mut bad_name = vec![1u8, 0xff];
+        bad_name.extend_from_slice(&1u32.to_le_bytes());
+        bad_name.extend_from_slice(&1u32.to_le_bytes());
+        bad_name.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(decode_predict_payload(&bad_name).is_err());
+        // encoder cross-checks shape against data length
+        assert!(encode_predict_payload("m", 2, 3, &[0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn err_payload_roundtrip() {
+        let payload = encode_err_payload("busy", "retry_after_ms=4");
+        assert_eq!(
+            decode_err_payload(&payload).unwrap(),
+            ("busy".into(), "retry_after_ms=4".into())
+        );
+        let payload = encode_err_payload("dim-mismatch", "");
+        assert_eq!(decode_err_payload(&payload).unwrap().0, "dim-mismatch");
+        assert!(decode_err_payload(&[]).is_err());
+        assert!(decode_err_payload(&[200u8, b'x']).is_err()); // code_len lies
+    }
+
+    #[test]
+    fn serve_hello_negotiation_falls_back_to_text() {
+        // exact binary request upgrades; anything else serve-hello
+        // shaped degrades to text; non-hello lines are plain requests
+        assert_eq!(
+            negotiate_serve_hello(&serve_hello_line(WireMode::Binary)),
+            Some(WireMode::Binary)
+        );
+        assert_eq!(
+            negotiate_serve_hello(&serve_hello_line(WireMode::Text)),
+            Some(WireMode::Text)
+        );
+        assert_eq!(negotiate_serve_hello("serve-hello v1 gzip"), Some(WireMode::Text));
+        assert_eq!(negotiate_serve_hello("serve-hello v1"), Some(WireMode::Text));
+        assert_eq!(negotiate_serve_hello("serve-hello v12 binary"), None);
+        assert_eq!(negotiate_serve_hello("ping"), None);
+        assert_eq!(negotiate_serve_hello("predict m 1,2"), None);
+        assert_eq!(negotiate_serve_hello("train-hello v1 binary"), None);
+
+        assert_eq!(
+            parse_serve_hello_ack(&serve_hello_ack(WireMode::Binary)).unwrap(),
+            WireMode::Binary
+        );
+        assert_eq!(
+            parse_serve_hello_ack(&serve_hello_ack(WireMode::Text)).unwrap(),
+            WireMode::Text
+        );
+        assert!(parse_serve_hello_ack(&err_busy(3)).is_err());
+        assert!(parse_serve_hello_ack(&err_msg("bad", "no")).is_err());
+        assert!(parse_serve_hello_ack(&ok_msg("pong")).is_err());
     }
 }

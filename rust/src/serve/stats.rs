@@ -37,6 +37,16 @@ pub struct ServeStats {
     pub padded_rows: Counter,
     /// batches whose predict exceeded the slow-log threshold
     pub slow: Counter,
+    /// connections admitted by the event loop
+    pub conns_accepted: Counter,
+    /// connections refused at the door (`--max-conns` cap)
+    pub conns_rejected: Counter,
+    /// predict requests refused by the per-client token bucket
+    pub rate_limited: Counter,
+    /// currently-open connections (gauge; inc on admit, dec on close).
+    /// Telemetry only — the admission seam's own count, under its
+    /// mutex, is what enforces the cap.
+    conns_open: AtomicU64,
     /// enqueue → response-ready latency per row
     pub latency: LatencyHistogram,
     /// prediction rows routed per model name (BTreeMap: the `stats`
@@ -63,6 +73,10 @@ impl ServeStats {
             batched_rows: Counter::new(),
             padded_rows: Counter::new(),
             slow: Counter::new(),
+            conns_accepted: Counter::new(),
+            conns_rejected: Counter::new(),
+            rate_limited: Counter::new(),
+            conns_open: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
             per_model: Mutex::new(BTreeMap::new()),
             slow_log_us: AtomicU64::new(0),
@@ -78,6 +92,33 @@ impl ServeStats {
     /// Current slow-log threshold in µs (0 = off).
     pub fn slow_log_us(&self) -> u64 {
         self.slow_log_us.load(Ordering::Relaxed)
+    }
+
+    /// Event-loop bookkeeping: a connection was admitted.
+    pub fn conn_opened(&self) {
+        self.conns_open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Event-loop bookkeeping: an admitted connection closed.
+    /// Saturating — a stray double-close must not wrap the gauge.
+    pub fn conn_closed(&self) {
+        let mut cur = self.conns_open.load(Ordering::Relaxed);
+        while cur > 0 {
+            match self.conns_open.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Currently-open connections (gauge).
+    pub fn conns_open(&self) -> u64 {
+        self.conns_open.load(Ordering::Relaxed)
     }
 
     /// Mean real rows per fused predict call.
@@ -123,7 +164,8 @@ impl ServeStats {
                 .join(",")
         };
         format!(
-            "models={} uptime_s={} requests={} rejected={} errors={} slow={} batches={} \
+            "models={} uptime_s={} requests={} rejected={} errors={} slow={} \
+             conns={} conns_accepted={} conns_rejected={} rate_limited={} batches={} \
              rows={} pad_rows={} mean_batch={:.1} rps={:.1} {} mean_us={} \
              shards={}/{} shard_bytes={}/{} shard_hits={} shard_loads={} shard_evictions={} \
              model_rows={} {}",
@@ -133,6 +175,10 @@ impl ServeStats {
             self.rejected.get(),
             self.errors.get(),
             self.slow.get(),
+            self.conns_open(),
+            self.conns_accepted.get(),
+            self.conns_rejected.get(),
+            self.rate_limited.get(),
             self.batches.get(),
             self.batched_rows.get(),
             self.padded_rows.get(),
@@ -180,8 +226,15 @@ mod tests {
         s.note_model("cov", 3);
         s.note_model("banana", 2);
         let r = s.report(3, &usage);
+        s.conns_accepted.add(4);
+        s.conns_rejected.inc();
+        s.rate_limited.add(2);
+        s.conn_opened();
+        s.conn_opened();
+        s.conn_closed();
         for key in [
             "models=3", "uptime_s=", "requests=10", "slow=0", "batches=2", "rows=10",
+            "conns=1", "conns_accepted=4", "conns_rejected=1", "rate_limited=2",
             "pad_rows=6", "mean_batch=5.0",
             "p50_us=", "p95_us=", "p99_us=", "max_us=", "gram_hits=", "gram_allocs=",
             "xla_calls=", "solver_sweeps=", "shrink_active=", "unshrink_passes=",
@@ -203,5 +256,17 @@ mod tests {
     #[test]
     fn mean_batch_handles_empty() {
         assert_eq!(ServeStats::new().mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn conn_gauge_saturates_at_zero() {
+        let s = ServeStats::new();
+        s.conn_closed(); // stray close on an empty gauge must not wrap
+        assert_eq!(s.conns_open(), 0);
+        s.conn_opened();
+        assert_eq!(s.conns_open(), 1);
+        s.conn_closed();
+        s.conn_closed();
+        assert_eq!(s.conns_open(), 0);
     }
 }

@@ -1,0 +1,428 @@
+//! Event-driven load generator: the client-side mirror of
+//! [`super::eventloop`].  Where [`super::run_load`] spends one thread
+//! per connection (fine up to a few hundred), `run_swarm` multiplexes
+//! *all* its connections over a handful of poller threads — the same
+//! readiness machinery the server uses ([`super::poll`]) — which is
+//! what lets one bench process hold 10k+ sockets open against the
+//! server and prove the c10k acceptance bar (`benches/table_serve.rs`
+//! `async_c10k_*`, `scripts/serve_stress.sh`).
+//!
+//! Accounting is strict on purpose: every request written must come
+//! back as a prediction, a busy (retried), or an error — a server
+//! that closes a connection with requests still outstanding fails the
+//! whole run.  "Zero dropped replies" is checked here, not eyeballed.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::AsRawFd;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::poll::Poller;
+use super::protocol::{self, ServeFrameTag, WireMode};
+use super::{parse_retry_ms, LoadReport, LoadSpec};
+
+/// Hard wall-clock bound on a swarm run; a wedged server must fail
+/// the bench, not hang it.
+const SWARM_DEADLINE: Duration = Duration::from_secs(300);
+
+/// One multiplexed connection's state machine.
+struct SwarmConn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// row indices not yet written (busy retries come back here)
+    to_send: VecDeque<usize>,
+    /// requests written, replies pending — FIFO, the server answers
+    /// in order
+    inflight: VecDeque<(usize, Instant)>,
+    /// binary mode: the hello ack line hasn't arrived yet
+    awaiting_ack: bool,
+    /// refused (busy / rate-limited): don't resend before this
+    stall_until: Option<Instant>,
+    quit_sent: bool,
+    want_write: bool,
+    done: bool,
+}
+
+/// Fire `connections × requests` single-row predicts using a few
+/// event-loop threads instead of `connections` blocking threads
+/// (`client --swarm`).  Semantics match [`super::run_load_mode`]:
+/// busy responses are retried until answered, predictions are checked
+/// against `expected` when given.
+pub fn run_swarm(
+    spec: &LoadSpec,
+    rows: &[Vec<f32>],
+    expected: Option<&[f32]>,
+    mode: WireMode,
+) -> Result<LoadReport> {
+    if rows.is_empty() {
+        bail!("no feature rows to send");
+    }
+    if let Some(exp) = expected {
+        if exp.len() != rows.len() {
+            bail!("expected values misaligned: {} vs {} rows", exp.len(), rows.len());
+        }
+    }
+    let connections = spec.connections.max(1);
+    let threads = thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 8)
+        .min(connections);
+    let t0 = Instant::now();
+    let mut report = LoadReport::default();
+    let results: Vec<Result<LoadReport>> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                // connection c belongs to thread c % threads
+                let conn_ids: Vec<usize> =
+                    (0..connections).filter(|c| c % threads == t).collect();
+                scope.spawn(move || swarm_thread(spec, rows, expected, mode, &conn_ids))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("swarm thread panicked")).collect()
+    });
+    for r in results {
+        let r = r?;
+        report.sent += r.sent;
+        report.ok += r.ok;
+        report.rejected += r.rejected;
+        report.failed += r.failed;
+        report.mismatches += r.mismatches;
+        report.latency.merge(&r.latency);
+    }
+    report.elapsed = t0.elapsed();
+    // the strict bar: nothing written may vanish — every request is
+    // answered (ok/busy-retried/err), so ok + failed covers them all
+    let answered = report.ok + report.failed;
+    let expected_replies = connections * spec.requests;
+    if answered != expected_replies {
+        bail!(
+            "dropped replies: {answered} answered of {expected_replies} requests ({})",
+            report.report()
+        );
+    }
+    Ok(report)
+}
+
+fn swarm_thread(
+    spec: &LoadSpec,
+    rows: &[Vec<f32>],
+    expected: Option<&[f32]>,
+    mode: WireMode,
+    conn_ids: &[usize],
+) -> Result<LoadReport> {
+    let mut poller = Poller::new().context("swarm poller")?;
+    let mut st = LoadReport::default();
+    let mut conns: Vec<SwarmConn> = Vec::with_capacity(conn_ids.len());
+    for &c in conn_ids {
+        let stream = connect_retry(&spec.addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true).context("nonblocking swarm socket")?;
+        let mut conn = SwarmConn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            to_send: (0..spec.requests)
+                .map(|k| (c * spec.requests + k) % rows.len())
+                .collect(),
+            inflight: VecDeque::new(),
+            awaiting_ack: mode == WireMode::Binary,
+            stall_until: None,
+            quit_sent: false,
+            want_write: true,
+            done: false,
+        };
+        if mode == WireMode::Binary {
+            conn.wbuf
+                .extend_from_slice(format!("{}\n", protocol::serve_hello_line(mode)).as_bytes());
+        }
+        fill(&mut conn, spec, rows, mode, &mut st)?;
+        let idx = conns.len();
+        poller
+            .register(conn.stream.as_raw_fd(), idx as u64, true, true, false)
+            .context("registering swarm socket")?;
+        conns.push(conn);
+    }
+
+    let deadline = Instant::now() + SWARM_DEADLINE;
+    let mut events = Vec::new();
+    let mut done = 0usize;
+    while done < conns.len() {
+        if Instant::now() >= deadline {
+            bail!("swarm run exceeded {}s deadline ({})", SWARM_DEADLINE.as_secs(), st.report());
+        }
+        poller.wait(&mut events, 100).context("swarm poll wait")?;
+        let readable: Vec<usize> = events
+            .iter()
+            .filter(|ev| ev.readable || ev.hangup)
+            .map(|ev| ev.token as usize)
+            .collect();
+        for idx in readable {
+            let conn = &mut conns[idx];
+            if conn.done {
+                continue;
+            }
+            if let Err(e) = drain_reads(conn, rows.len(), expected, mode, &mut st) {
+                bail!("connection {idx}: {e:#}");
+            }
+        }
+        // one cheap sweep per round advances every connection: expired
+        // stalls refill, parsed replies free pipeline slots, buffered
+        // bytes flush, write interest tracks the buffer
+        for (idx, conn) in conns.iter_mut().enumerate() {
+            if conn.done {
+                continue;
+            }
+            fill(conn, spec, rows, mode, &mut st)?;
+            flush_writes(conn)?;
+            let unsent = conn.wpos < conn.wbuf.len();
+            if unsent != conn.want_write {
+                conn.want_write = unsent;
+                let _ = poller.modify(conn.stream.as_raw_fd(), idx as u64, true, unsent, false);
+            }
+            if conn.quit_sent && !unsent && conn.inflight.is_empty() && conn.rbuf.is_empty() {
+                poller.deregister(conn.stream.as_raw_fd()).ok();
+                conn.done = true;
+                done += 1;
+            }
+        }
+    }
+    Ok(st)
+}
+
+/// Connect with retries: a 10k-connection ramp can momentarily
+/// overflow accept queues, which surfaces as transient refusals.
+fn connect_retry(addr: &str) -> Result<TcpStream> {
+    let mut last = None;
+    for _ in 0..50 {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    Err(anyhow!("connecting {addr}: {}", last.expect("at least one attempt")))
+}
+
+/// Queue requests up to the pipeline budget; once everything is
+/// answered, queue the quit.
+fn fill(
+    conn: &mut SwarmConn,
+    spec: &LoadSpec,
+    rows: &[Vec<f32>],
+    mode: WireMode,
+    st: &mut LoadReport,
+) -> Result<()> {
+    if let Some(until) = conn.stall_until {
+        if Instant::now() < until {
+            return Ok(());
+        }
+        conn.stall_until = None;
+    }
+    let pipeline = spec.pipeline.max(1);
+    while conn.inflight.len() < pipeline {
+        let Some(ri) = conn.to_send.pop_front() else { break };
+        match mode {
+            WireMode::Text => {
+                let row: Vec<String> = rows[ri].iter().map(|v| format!("{v}")).collect();
+                conn.wbuf.extend_from_slice(
+                    format!("predict {} {}\n", spec.model, row.join(",")).as_bytes(),
+                );
+            }
+            WireMode::Binary => {
+                let payload =
+                    protocol::encode_predict_payload(&spec.model, rows[ri].len(), 1, &rows[ri])
+                        .map_err(|e| anyhow!(e))?;
+                conn.wbuf.extend_from_slice(
+                    &protocol::encode_serve_frame(ServeFrameTag::Predict, &payload)
+                        .map_err(|e| anyhow!(e))?,
+                );
+            }
+        }
+        conn.inflight.push_back((ri, Instant::now()));
+        st.sent += 1;
+    }
+    if !conn.quit_sent && conn.to_send.is_empty() && conn.inflight.is_empty() {
+        match mode {
+            WireMode::Text => conn.wbuf.extend_from_slice(b"quit\n"),
+            WireMode::Binary => conn.wbuf.extend_from_slice(
+                &protocol::encode_serve_frame(ServeFrameTag::Quit, &[])
+                    .map_err(|e| anyhow!(e))?,
+            ),
+        }
+        conn.quit_sent = true;
+    }
+    Ok(())
+}
+
+/// Read everything the socket has, then parse replies out of the
+/// buffer.  An EOF with work still outstanding is a dropped reply —
+/// an error, not a statistic.
+fn drain_reads(
+    conn: &mut SwarmConn,
+    n_rows: usize,
+    expected: Option<&[f32]>,
+    mode: WireMode,
+    st: &mut LoadReport,
+) -> Result<()> {
+    let mut tmp = [0u8; 16 * 1024];
+    loop {
+        match (&conn.stream).read(&mut tmp) {
+            Ok(0) => {
+                parse_replies(conn, n_rows, expected, mode, st)?;
+                if conn.inflight.is_empty() && conn.to_send.is_empty() && conn.quit_sent {
+                    return Ok(()); // orderly close after bye
+                }
+                bail!(
+                    "server closed with {} in flight, {} unsent",
+                    conn.inflight.len(),
+                    conn.to_send.len()
+                );
+            }
+            Ok(n) => conn.rbuf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    parse_replies(conn, n_rows, expected, mode, st)
+}
+
+fn parse_replies(
+    conn: &mut SwarmConn,
+    n_rows: usize,
+    expected: Option<&[f32]>,
+    mode: WireMode,
+    st: &mut LoadReport,
+) -> Result<()> {
+    loop {
+        // the hello ack is a text line even on binary connections
+        if mode == WireMode::Text || conn.awaiting_ack {
+            let Some(nl) = conn.rbuf.iter().position(|&b| b == b'\n') else { return Ok(()) };
+            let line = String::from_utf8_lossy(&conn.rbuf[..nl]).trim().to_string();
+            conn.rbuf.drain(..=nl);
+            if line.is_empty() {
+                continue;
+            }
+            if conn.awaiting_ack {
+                let acked =
+                    protocol::parse_serve_hello_ack(&line).map_err(|e| anyhow!(e))?;
+                if acked != WireMode::Binary {
+                    bail!("server refused binary mode (acked {acked:?})");
+                }
+                conn.awaiting_ack = false;
+                continue;
+            }
+            match protocol::parse_response(&line) {
+                protocol::Response::Ok(body) => {
+                    let Some((ri, sent_at)) = conn.inflight.pop_front() else {
+                        continue; // the bye reply to our quit
+                    };
+                    st.latency.record(sent_at.elapsed());
+                    let vals = protocol::parse_values(&body).map_err(|e| anyhow!(e))?;
+                    st.ok += 1;
+                    if let Some(exp) = expected {
+                        if vals.len() != 1 || vals[0] != exp[ri % n_rows] {
+                            st.mismatches += 1;
+                        }
+                    }
+                }
+                protocol::Response::Busy { retry_after_ms } => {
+                    let Some((ri, _)) = conn.inflight.pop_front() else {
+                        bail!("busy response with nothing in flight");
+                    };
+                    st.rejected += 1;
+                    conn.to_send.push_back(ri);
+                    conn.stall_until =
+                        Some(Instant::now() + Duration::from_millis(retry_after_ms.max(1)));
+                }
+                protocol::Response::Err { code, msg } => {
+                    let Some((ri, _)) = conn.inflight.pop_front() else {
+                        bail!("server error before any request: {code} {msg}");
+                    };
+                    if code == "rate-limited" {
+                        st.rejected += 1;
+                        conn.to_send.push_back(ri);
+                        conn.stall_until = Some(
+                            Instant::now() + Duration::from_millis(parse_retry_ms(&msg).max(1)),
+                        );
+                    } else {
+                        st.failed += 1;
+                    }
+                }
+            }
+        } else {
+            let (tag, len) = match protocol::peek_serve_frame(&conn.rbuf) {
+                None => return Ok(()),
+                Some(Err(e)) => bail!("bad reply frame: {e}"),
+                Some(Ok(hdr)) => hdr,
+            };
+            let total = protocol::frame_overhead() + len;
+            if conn.rbuf.len() < total {
+                return Ok(());
+            }
+            let payload = conn.rbuf[protocol::frame_overhead()..total].to_vec();
+            conn.rbuf.drain(..total);
+            match tag {
+                ServeFrameTag::Bye => continue,
+                ServeFrameTag::Decisions => {
+                    let Some((ri, sent_at)) = conn.inflight.pop_front() else {
+                        bail!("decision frame with nothing in flight");
+                    };
+                    st.latency.record(sent_at.elapsed());
+                    let vals = protocol::bytes_to_f32s(&payload).map_err(|e| anyhow!(e))?;
+                    st.ok += 1;
+                    if let Some(exp) = expected {
+                        if vals.len() != 1 || vals[0] != exp[ri % n_rows] {
+                            st.mismatches += 1;
+                        }
+                    }
+                }
+                ServeFrameTag::Err => {
+                    let Some((ri, _)) = conn.inflight.pop_front() else {
+                        bail!("error frame with nothing in flight");
+                    };
+                    let (code, msg) =
+                        protocol::decode_err_payload(&payload).map_err(|e| anyhow!(e))?;
+                    if code == "busy" || code == "rate-limited" {
+                        st.rejected += 1;
+                        conn.to_send.push_back(ri);
+                        conn.stall_until = Some(
+                            Instant::now() + Duration::from_millis(parse_retry_ms(&msg).max(1)),
+                        );
+                    } else {
+                        st.failed += 1;
+                    }
+                }
+                other => bail!("unexpected reply frame {other:?}"),
+            }
+        }
+    }
+}
+
+/// Flush buffered output as far as the socket allows.
+fn flush_writes(conn: &mut SwarmConn) -> Result<()> {
+    while conn.wpos < conn.wbuf.len() {
+        match (&conn.stream).write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => bail!("socket wrote zero"),
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    if conn.wpos == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    }
+    Ok(())
+}

@@ -21,9 +21,8 @@
 //! the model config's `max_gram_mb` (see DESIGN.md §Compute-plane).
 
 use std::collections::VecDeque;
-use std::thread;
 
-use crate::sync::{Arc, Condvar, Mutex};
+use crate::sync::{Condvar, Mutex};
 
 use crate::data::matrix::Matrix;
 
@@ -123,9 +122,8 @@ pub(crate) fn process_batch(batch: Batch, stats: &ServeStats) {
         batch.items.into_iter().partition(|it| it.features.len() == dim);
     for item in stale {
         stats.errors.inc();
-        let _ = item
-            .tx
-            .send(Err(format!("row dim {} != model dim {dim} (model reloaded?)", item.features.len())));
+        let msg = format!("row dim {} != model dim {dim} (model reloaded?)", item.features.len());
+        item.reply.send(Err(msg));
     }
     let n = items.len();
     if n == 0 {
@@ -156,7 +154,7 @@ pub(crate) fn process_batch(batch: Batch, stats: &ServeStats) {
             // a client actually experienced), once per offending batch
             let slow_us = stats.slow_log_us();
             let mut slow_max = 0u64;
-            for (item, &p) in items.iter().zip(&preds) {
+            for (item, &p) in items.into_iter().zip(&preds) {
                 let lat = item.enqueued.elapsed();
                 if slow_us > 0 && lat.as_micros() as u64 >= slow_us {
                     stats.slow.inc();
@@ -164,7 +162,7 @@ pub(crate) fn process_batch(batch: Batch, stats: &ServeStats) {
                 }
                 stats.latency.record(lat);
                 // receiver gone = client disconnected mid-flight; drop silently
-                let _ = item.tx.send(Ok(p));
+                item.reply.send(Ok(p));
             }
             if slow_max > 0 {
                 eprintln!(
@@ -177,60 +175,33 @@ pub(crate) fn process_batch(batch: Batch, stats: &ServeStats) {
             // e.g. a shard file vanished or failed its checksum
             stats.errors.add(n as u64);
             for item in items {
-                let _ = item.tx.send(Err(e.clone()));
+                item.reply.send(Err(e.clone()));
             }
         }
         Err(_) => {
             stats.errors.add(n as u64);
             for item in items {
-                let _ = item.tx.send(Err("predict panicked on this batch".into()));
+                item.reply.send(Err("predict panicked on this batch".into()));
             }
         }
     }
 }
 
-/// Threads draining the batch queue.
-pub struct WorkerPool {
-    handles: Vec<thread::JoinHandle<()>>,
-}
-
-impl WorkerPool {
-    pub fn start(
-        workers: usize,
-        queue: Arc<BoundedQueue<Batch>>,
-        stats: Arc<ServeStats>,
-    ) -> WorkerPool {
-        let handles = (0..workers.max(1))
-            .map(|_| {
-                let queue = queue.clone();
-                let stats = stats.clone();
-                thread::spawn(move || {
-                    while let Some(batch) = queue.pop() {
-                        process_batch(batch, &stats);
-                    }
-                })
-            })
-            .collect();
-        WorkerPool { handles }
-    }
-
-    /// Wait for all workers to drain (call after closing the queue).
-    pub fn join(self) {
-        for h in self.handles {
-            let _ = h.join();
-        }
-    }
-
-    /// Surrender the worker threads to a caller that joins them
-    /// together with its own (the server's shutdown path).
-    pub fn into_handles(self) -> Vec<thread::JoinHandle<()>> {
-        self.handles
+/// Body of one worker thread: drain the batch queue until it closes.
+/// Spawned by the event loop's thread bootstrap (`eventloop.rs` is the
+/// single spawn site in `serve/`, machine-enforced by
+/// `scripts/check_invariants.py`).
+pub(crate) fn worker_loop(queue: &BoundedQueue<Batch>, stats: &ServeStats) {
+    while let Some(batch) = queue.pop() {
+        process_batch(batch, stats);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sync::Arc;
+    use std::thread;
 
     #[test]
     fn bucket_rounds_to_powers_of_two() {

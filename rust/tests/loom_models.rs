@@ -322,6 +322,48 @@ fn single_flight_admits_one_reloader() {
     });
 }
 
+// ------------------------------------- serve: admission control seam
+
+/// The event loop's connection-table seam (`serve/eventloop.rs`):
+/// accept racing close racing a token-bucket charge and a prune tick.
+/// One mutex guards the open count and the buckets, so in every
+/// interleaving the cap admits at most one of the two racing accepts
+/// *while a slot is held*, no slot leaks (the table drains to zero
+/// once both connections close), and a stray extra `release` cannot
+/// underflow the count and open the cap wide.
+#[test]
+fn admission_accept_close_spend() {
+    use liquid_svm::serve::eventloop::Admission;
+    loom::model(|| {
+        let adm = Arc::new(Admission::new(1, 10));
+        let peer = std::net::IpAddr::V4(std::net::Ipv4Addr::new(10, 0, 0, 1));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let adm = Arc::clone(&adm);
+            handles.push(loom::thread::spawn(move || {
+                if adm.try_accept() {
+                    // an admitted connection charges the bucket, then
+                    // closes: accept and release must pair exactly once
+                    let _ = adm.try_spend(peer, 1, 0);
+                    adm.release();
+                    true
+                } else {
+                    false
+                }
+            }));
+        }
+        // the reactor's periodic prune races both connections
+        adm.prune(1);
+        let admitted: Vec<bool> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(admitted.iter().any(|&a| a), "an empty table must admit someone");
+        assert_eq!(adm.open(), 0, "every accept paired with exactly one release");
+        // a stray double-close must saturate, not wrap the count open
+        adm.release();
+        assert_eq!(adm.open(), 0);
+        assert!(adm.try_accept(), "released capacity must be reusable");
+    });
+}
+
 // ------------------------------------------------ obs: span table
 
 /// Concurrent span recording: two threads and main merge rows into

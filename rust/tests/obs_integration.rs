@@ -143,6 +143,10 @@ fn serve_metrics_exposition_covers_every_registered_metric() {
         "liquidsvm_serve_batches",
         "liquidsvm_serve_batched_rows",
         "liquidsvm_serve_padded_rows",
+        "liquidsvm_serve_conns_accepted",
+        "liquidsvm_serve_conns_rejected",
+        "liquidsvm_serve_conns_rate_limited",
+        "liquidsvm_serve_conns_open",
         "liquidsvm_serve_shard_resident_bytes",
         "liquidsvm_serve_request_latency_us",
     ] {
@@ -218,7 +222,8 @@ fn stats_line_parses_token_by_token() {
 
     // integer-valued keys
     for key in [
-        "models", "uptime_s", "requests", "rejected", "errors", "slow", "batches", "rows",
+        "models", "uptime_s", "requests", "rejected", "errors", "slow", "conns",
+        "conns_accepted", "conns_rejected", "rate_limited", "batches", "rows",
         "pad_rows", "p50_us", "p95_us", "p99_us", "max_us", "mean_us", "shard_hits",
         "shard_loads", "shard_evictions", "gram_hits", "gram_misses", "gram_allocs", "xla_calls",
         "solver_sweeps", "shrink_active", "unshrink_passes", "cell_units", "cell_train_us",

@@ -1,0 +1,333 @@
+//! End-to-end tests of the async serving plane (DESIGN.md
+//! §Serving-async): binary-vs-text prediction parity over real TCP,
+//! hello negotiation and fallback, frame-level error handling on
+//! hostile input, the admission-control seams (`max_conns` cap and
+//! per-client rate limit), and the event-driven swarm load generator.
+//!
+//! These tests ride the same frozen surface as `serve_integration.rs`
+//! — `Server::start` + raw `TcpStream`s — so they exercise the epoll
+//! reactor path exactly as an external client would.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use liquid_svm::data::synth;
+use liquid_svm::prelude::*;
+use liquid_svm::serve::protocol::{
+    self, decode_err_payload, encode_predict_payload, encode_serve_frame, parse_serve_hello_ack,
+    read_serve_frame, serve_hello_line, ServeFrameTag, WireMode,
+};
+use liquid_svm::serve::{run_load_mode, run_swarm, LoadSpec, ServeConfig, Server};
+
+fn train_banana() -> SvmModel {
+    let d = synth::banana_binary(150, 71);
+    svm_binary(&d, 0.5, &Config::default().folds(2)).unwrap()
+}
+
+fn small_cfg() -> ServeConfig {
+    ServeConfig {
+        port: 0,
+        max_batch: 8,
+        max_delay: Duration::from_millis(1),
+        workers: 2,
+        ..ServeConfig::default()
+    }
+}
+
+/// Start a server with `cfg` and a trained banana model under the
+/// name `banana`.
+fn serve_banana(cfg: ServeConfig) -> Server {
+    let server = Server::start(cfg).unwrap();
+    server.registry.insert("banana", train_banana());
+    server
+}
+
+/// A raw binary-mode client: negotiates the hello, then speaks
+/// length-prefixed frames only.
+struct BinClient {
+    stream: TcpStream,
+}
+
+impl BinClient {
+    fn connect(addr: std::net::SocketAddr) -> BinClient {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut c = BinClient { stream };
+        c.stream
+            .write_all(format!("{}\n", serve_hello_line(WireMode::Binary)).as_bytes())
+            .unwrap();
+        let mut reader = BufReader::new(c.stream.try_clone().unwrap());
+        let mut ack = String::new();
+        reader.read_line(&mut ack).unwrap();
+        assert_eq!(parse_serve_hello_ack(ack.trim()).unwrap(), WireMode::Binary, "{ack}");
+        c
+    }
+
+    fn send(&mut self, tag: ServeFrameTag, payload: &[u8]) {
+        let frame = encode_serve_frame(tag, payload).unwrap();
+        self.stream.write_all(&frame).unwrap();
+    }
+
+    fn recv(&mut self) -> (ServeFrameTag, Vec<u8>) {
+        read_serve_frame(&mut self.stream).unwrap()
+    }
+
+    #[allow(clippy::result_large_err)]
+    fn predict(
+        &mut self,
+        model: &str,
+        dim: usize,
+        rows: &[f32],
+    ) -> Result<Vec<f32>, (String, String)> {
+        let n = if dim == 0 { 0 } else { rows.len() / dim };
+        let payload = encode_predict_payload(model, dim, n, rows).unwrap();
+        self.send(ServeFrameTag::Predict, &payload);
+        match self.recv() {
+            (ServeFrameTag::Decisions, body) => Ok(protocol::bytes_to_f32s(&body).unwrap()),
+            (ServeFrameTag::Err, body) => Err(decode_err_payload(&body).unwrap()),
+            (tag, _) => panic!("unexpected reply tag {tag:?}"),
+        }
+    }
+}
+
+/// A line-oriented text client (no hello: text is the default).
+struct TextClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TextClient {
+    fn connect(addr: std::net::SocketAddr) -> TextClient {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        TextClient { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn roundtrip(&mut self, req: &str) -> String {
+        writeln!(self.writer, "{req}").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    }
+}
+
+/// The acceptance gate: binary-mode decisions are bit-identical to
+/// the text protocol's and to in-process `predict`, row by row.
+#[test]
+fn binary_and_text_predictions_are_bit_identical() {
+    let model = train_banana();
+    let test = synth::banana_binary(24, 72);
+    let expect = model.predict(&test.x);
+    let server = Server::start(small_cfg()).unwrap();
+    server.registry.insert("banana", model);
+
+    let mut bin = BinClient::connect(server.addr());
+    let mut txt = TextClient::connect(server.addr());
+
+    // per-row: one frame vs one line
+    for i in 0..test.len() {
+        let row = test.x.row(i);
+        let got_bin = bin.predict("banana", 2, row).unwrap();
+        assert_eq!(got_bin.len(), 1);
+        let resp = txt.roundtrip(&format!("predict banana {},{}", row[0], row[1]));
+        let got_txt: f32 =
+            resp.strip_prefix("ok ").unwrap_or_else(|| panic!("{resp}")).parse().unwrap();
+        assert_eq!(got_bin[0].to_bits(), expect[i].to_bits(), "row {i} binary vs direct");
+        assert_eq!(got_txt.to_bits(), expect[i].to_bits(), "row {i} text vs direct");
+    }
+
+    // one multi-row frame answers every row in order, still bit-exact
+    let flat: Vec<f32> = (0..test.len()).flat_map(|i| test.x.row(i).to_vec()).collect();
+    let got = bin.predict("banana", 2, &flat).unwrap();
+    assert_eq!(got.len(), expect.len());
+    for (i, (g, e)) in got.iter().zip(expect.iter()).enumerate() {
+        assert_eq!(g.to_bits(), e.to_bits(), "batched row {i}");
+    }
+
+    // ping still works in both modes after the traffic
+    bin.send(ServeFrameTag::Ping, &[]);
+    assert_eq!(bin.recv().0, ServeFrameTag::Pong);
+    assert_eq!(txt.roundtrip("ping"), "ok pong");
+    server.shutdown();
+}
+
+/// Hello negotiation: an unknown mode falls back to text (the ack
+/// says so), and a connection that never sends a hello is plain text.
+#[test]
+fn hello_negotiation_falls_back_to_text() {
+    let server = serve_banana(small_cfg());
+
+    let mut c = TextClient::connect(server.addr());
+    let ack = c.roundtrip("serve-hello v1 quantum");
+    assert_eq!(parse_serve_hello_ack(&ack).unwrap(), WireMode::Text, "{ack}");
+    assert!(c.roundtrip("predict banana 0.1,0.2").starts_with("ok "), "text after fallback");
+
+    // no hello at all: first line is treated as a normal request
+    let mut c2 = TextClient::connect(server.addr());
+    assert_eq!(c2.roundtrip("ping"), "ok pong");
+    server.shutdown();
+}
+
+/// Quit frame gets a Bye frame and an orderly close.
+#[test]
+fn binary_quit_answers_bye_then_eof() {
+    let server = serve_banana(small_cfg());
+    let mut bin = BinClient::connect(server.addr());
+    bin.send(ServeFrameTag::Quit, &[]);
+    assert_eq!(bin.recv().0, ServeFrameTag::Bye);
+    let mut rest = Vec::new();
+    bin.stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "bytes after bye: {rest:?}");
+    server.shutdown();
+}
+
+/// Hostile input on the binary path: an unknown tag and an oversized
+/// length header each produce one Err frame and a clean close — no
+/// hang, no partial garbage — and the server keeps serving others.
+#[test]
+fn bad_frames_close_cleanly_without_killing_the_server() {
+    let server = serve_banana(small_cfg());
+
+    // unknown tag
+    let mut c = BinClient::connect(server.addr());
+    c.stream.write_all(&[0x7f, 4, 0, 0, 0, 1, 2, 3, 4]).unwrap();
+    let (tag, body) = c.recv();
+    assert_eq!(tag, ServeFrameTag::Err);
+    let (code, _msg) = decode_err_payload(&body).unwrap();
+    assert_eq!(code, "bad-frame");
+    let mut rest = Vec::new();
+    c.stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+
+    // length header beyond FRAME_MAX: refused from the 5-byte peek,
+    // before any payload allocation
+    let mut c = BinClient::connect(server.addr());
+    let huge = (protocol::FRAME_MAX as u32) + 1;
+    let mut frame = vec![ServeFrameTag::Predict as u8];
+    frame.extend_from_slice(&huge.to_le_bytes());
+    c.stream.write_all(&frame).unwrap();
+    let (tag, body) = c.recv();
+    assert_eq!(tag, ServeFrameTag::Err);
+    let (code, _msg) = decode_err_payload(&body).unwrap();
+    assert_eq!(code, "bad-frame");
+
+    // a decodable frame with a lying shape gets a bad-request, and
+    // the connection survives it (shape errors are not framing errors)
+    let mut c = BinClient::connect(server.addr());
+    let err = c.predict("banana", 0, &[]).unwrap_err();
+    assert_eq!(err.0, "bad-request", "{err:?}");
+    assert!(c.predict("banana", 2, &[0.1, 0.2]).is_ok(), "conn survives shape error");
+
+    // the server is still healthy for everyone else
+    let mut txt = TextClient::connect(server.addr());
+    assert_eq!(txt.roundtrip("ping"), "ok pong");
+    server.shutdown();
+}
+
+/// `max_conns` admission: excess accepts get `err conn-limit …` and a
+/// close; a freed slot is reusable.
+#[test]
+fn max_conns_cap_rejects_and_recovers() {
+    let server = serve_banana(ServeConfig { max_conns: 2, ..small_cfg() });
+
+    let mut a = TextClient::connect(server.addr());
+    assert_eq!(a.roundtrip("ping"), "ok pong");
+    let mut b = TextClient::connect(server.addr());
+    assert_eq!(b.roundtrip("ping"), "ok pong");
+
+    // third connection: one protocol error line, then EOF
+    let mut c = TextClient::connect(server.addr());
+    let mut line = String::new();
+    c.reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("err conn-limit"), "{line}");
+    assert!(line.contains("retry_after_ms="), "{line}");
+    let mut rest = String::new();
+    c.reader.read_to_string(&mut rest).unwrap();
+    assert!(rest.is_empty(), "bytes after conn-limit: {rest:?}");
+
+    // free a slot and retry: the reactor notices the close and
+    // releases admission (event-driven, so allow it a moment)
+    drop(b);
+    let mut admitted = false;
+    for _ in 0..200 {
+        let mut d = TextClient::connect(server.addr());
+        let _ = writeln!(d.writer, "ping"); // may race the reject-close
+        let mut first = String::new();
+        match d.reader.read_line(&mut first) {
+            Ok(_) if first.trim() == "ok pong" => {
+                admitted = true;
+                break;
+            }
+            _ => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    assert!(admitted, "slot never recycled after close");
+    assert_eq!(a.roundtrip("ping"), "ok pong", "survivor conn unaffected");
+    server.shutdown();
+}
+
+/// Per-client token bucket: a burst beyond the budget is refused with
+/// a machine-readable retry hint, on both wire formats.
+#[test]
+fn rate_limit_refuses_with_retry_hint() {
+    let server = serve_banana(ServeConfig { rate_limit: 4, ..small_cfg() });
+
+    // text: the full burst (4 rows/s) passes, the next row is refused
+    let mut txt = TextClient::connect(server.addr());
+    let resp = txt.roundtrip("predict banana 0.1,0.2;0.3,0.4;0.5,0.6;0.7,0.8");
+    assert!(resp.starts_with("ok "), "{resp}");
+    let resp = txt.roundtrip("predict banana 0.9,1.0");
+    assert!(resp.starts_with("err rate-limited"), "{resp}");
+    assert!(resp.contains("retry_after_ms="), "{resp}");
+    // the connection survives the refusal
+    assert_eq!(txt.roundtrip("ping"), "ok pong");
+    drop(txt);
+
+    // binary, from the same client IP: bucket is shared, still dry
+    let mut bin = BinClient::connect(server.addr());
+    let err = bin.predict("banana", 2, &[0.1, 0.2]).unwrap_err();
+    assert_eq!(err.0, "rate-limited", "{err:?}");
+    assert!(err.1.contains("retry_after_ms="), "{err:?}");
+    server.shutdown();
+}
+
+/// The swarm generator round-trips a few hundred connections from a
+/// handful of event-loop threads with strict accounting: every
+/// request is answered, every answer matches in-process predict.
+#[test]
+fn swarm_accounts_for_every_reply_in_both_modes() {
+    let model = train_banana();
+    let test = synth::banana_binary(40, 73);
+    let rows: Vec<Vec<f32>> = (0..test.len()).map(|i| test.x.row(i).to_vec()).collect();
+    let expect = model.predict(&test.x);
+    let server = Server::start(ServeConfig { workers: 4, ..small_cfg() }).unwrap();
+    server.registry.insert("banana", model);
+
+    for mode in [WireMode::Text, WireMode::Binary] {
+        let spec = LoadSpec {
+            addr: server.addr().to_string(),
+            model: "banana".into(),
+            connections: 64,
+            requests: 8,
+            pipeline: 4,
+        };
+        let report = run_swarm(&spec, &rows, Some(&expect), mode).unwrap();
+        assert_eq!(report.ok, 64 * 8, "{mode:?}: {report:?}");
+        assert_eq!(report.failed, 0, "{mode:?}: {report:?}");
+        assert_eq!(report.mismatches, 0, "{mode:?}: {report:?}");
+    }
+
+    // and the thread-per-connection loader agrees in binary mode
+    let spec = LoadSpec {
+        addr: server.addr().to_string(),
+        model: "banana".into(),
+        connections: 4,
+        requests: 16,
+        pipeline: 2,
+    };
+    let report = run_load_mode(&spec, &rows, Some(&expect), WireMode::Binary).unwrap();
+    assert_eq!(report.ok, 4 * 16, "{report:?}");
+    assert_eq!(report.mismatches, 0, "{report:?}");
+    server.shutdown();
+}

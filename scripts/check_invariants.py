@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Project-invariant lint pass for liquid_svm (DESIGN.md §Static-analysis).
 
-Five whole-project invariants that rustc and clippy cannot see, checked
+Six whole-project invariants that rustc and clippy cannot see, checked
 with nothing but the Python standard library so the pass runs in any
 container (no Rust toolchain required) and in CI's `invariants` job:
 
@@ -24,6 +24,10 @@ container (no Rust toolchain required) and in CI's `invariants` job:
                   ‖x‖²+‖y‖²−2⟨x,y⟩ cancellation form clamps negative
                   rounding residue at the source (`.max(0.0)` on the
                   same expression), so no kernel ever sees d² < 0.
+  6. serve-spawn— no `thread::spawn` / `thread::Builder` in src/serve/
+                  outside eventloop.rs: the serve plane is event-driven
+                  (no thread-per-connection); every serve thread comes
+                  from the reactor/worker bootstrap in eventloop.rs.
 
 `--self-test` seeds one violation of each class into a temp tree and
 asserts the checker catches it (and that commented-out decoys do NOT
@@ -229,12 +233,36 @@ def check_clamp(root: Path) -> list[str]:
     return out
 
 
+def check_serve_spawn(root: Path) -> list[str]:
+    """Invariant 6: the serve plane never spawns per-connection
+    threads — serve/eventloop.rs is the single spawn site."""
+    serve = root / "rust" / "src" / "serve"
+    if not serve.is_dir():
+        return []
+    out = []
+    for path in rust_files(serve):
+        if path.name == "eventloop.rs":
+            continue
+        body = strip_tests(path.read_text())
+        for lineno, line in code_lines(body):
+            if re.search(r"\bthread::(spawn|Builder)\b", line):
+                out.append(
+                    f"serve-spawn: {rel(path, root)}:{lineno}: thread spawn "
+                    f"in serve/ outside eventloop.rs — the serve plane is "
+                    f"event-driven (10k conns must not mean 10k threads); "
+                    f"all serve threads come from the bootstrap in "
+                    f"serve/eventloop.rs"
+                )
+    return out
+
+
 CHECKS = [
     ("metrics", check_metrics),
     ("spans", check_spans),
     ("determinism", check_determinism),
     ("sync-shim", check_sync_imports),
     ("clamp", check_clamp),
+    ("serve-spawn", check_serve_spawn),
 ]
 
 
@@ -302,6 +330,17 @@ def self_test() -> int:
             "let good = (xn + yn - 2.0 * dot).max(0.0);\n"
             "let bad = xn + yn - 2.0 * dot;\n",
         )
+        # class 6: a per-connection thread spawned in serve/ (the
+        # commented decoy must NOT be flagged; eventloop.rs is exempt)
+        write(
+            src / "serve" / "worker.rs",
+            "// std::thread::spawn in a comment is fine\n"
+            "std::thread::spawn(|| handle_conn(stream));\n",
+        )
+        write(
+            src / "serve" / "eventloop.rs",
+            "let h = std::thread::Builder::new().spawn(run_reactor);\n",
+        )
 
         expected = {
             "metrics: .*`ORPHAN_COUNTER` is registered 0 times": check_metrics,
@@ -310,6 +349,7 @@ def self_test() -> int:
             "determinism: .*SystemTime::now": check_determinism,
             "sync-shim: .*serve/mod.rs:2": check_sync_imports,
             "clamp: .*backend.rs:2": check_clamp,
+            r"serve-spawn: .*serve/worker.rs:2": check_serve_spawn,
         }
         for pattern, fn in expected.items():
             hits = fn(root)
@@ -323,6 +363,8 @@ def self_test() -> int:
             (check_determinism, "solver/mod.rs:1"),
             (check_metrics, "liquidsvm_test_only"),
             (check_clamp, "backend.rs:1"),
+            (check_serve_spawn, "worker.rs:1"),
+            (check_serve_spawn, "eventloop.rs:1"),
         ]:
             if any(decoy in h for h in fn(root)):
                 failures.append(f"self-test: decoy `{decoy}` wrongly flagged")

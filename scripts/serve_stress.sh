@@ -1,0 +1,72 @@
+#!/usr/bin/env bash
+# c10k stress of the async serving plane (DESIGN.md §Serving-async):
+# one `liquidsvm serve` process on an ephemeral loopback port, then the
+# event-driven swarm client drives thousands of concurrent connections
+# through both wire formats.  The swarm keeps strict per-request
+# accounting and exits non-zero on ANY dropped reply, so this script's
+# contract is simply: both runs finish, and both report failed=0.
+#
+# CI runs this as the serve-stress job after a release build; locally:
+#   cargo build --release --manifest-path rust/Cargo.toml
+#   bash scripts/serve_stress.sh [CONNS] [REQS_PER_CONN]
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=rust/target/release/liquidsvm
+[ -x "$BIN" ] || { echo "error: $BIN not built (cargo build --release)" >&2; exit 2; }
+
+CONNS="${1:-10000}"
+REQS="${2:-5}"
+
+# each connection needs a client fd and a server fd, plus slack for
+# the listener, wake pipes, logs, and the runtime
+NEED=$((CONNS * 2 + 512))
+ulimit -n "$NEED" 2>/dev/null || true
+HAVE="$(ulimit -n)"
+if [ "$HAVE" != "unlimited" ] && [ "$HAVE" -lt "$NEED" ]; then
+  CONNS=$(( (HAVE - 512) / 2 ))
+  [ "$CONNS" -ge 100 ] || { echo "error: open-file limit $HAVE too low even for a reduced sweep" >&2; exit 2; }
+  echo "warning: open-file limit $HAVE < $NEED, reducing sweep to $CONNS connections" >&2
+fi
+echo "== sweep: $CONNS connections x $REQS requests (ulimit -n $(ulimit -n))"
+
+WORK="$(mktemp -d)"
+PIDS=()
+cleanup() {
+  for pid in "${PIDS[@]:-}"; do kill "$pid" 2>/dev/null || true; done
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+echo "== train + save the model under stress"
+"$BIN" train --data banana --n 400 --seed 33 --folds 2 --scenario binary \
+  --save "$WORK/stress.sol"
+
+echo "== start the server (ephemeral port, 10k-conn admission headroom)"
+"$BIN" serve --port 0 --models "stress=$WORK/stress.sol" \
+  --max-batch 64 --workers 4 > "$WORK/serve.log" &
+PIDS+=($!)
+for _ in $(seq 1 100); do
+  grep -q "serving on " "$WORK/serve.log" && break
+  sleep 0.1
+done
+ADDR="$(sed -n 's/^serving on //p' "$WORK/serve.log" | head -n1)"
+[ -n "$ADDR" ] || { echo "error: server did not report an address" >&2; cat "$WORK/serve.log" >&2; exit 1; }
+echo "   serving on $ADDR"
+
+TOTAL=$((CONNS * REQS))
+run_leg() { # $1 = label, extra client flags follow
+  local label="$1"; shift
+  echo "== swarm leg: $label"
+  "$BIN" client --addr "$ADDR" --model stress --data banana --n "$TOTAL" \
+    --connections "$CONNS" --pipeline 4 --swarm "$@" | tee "$WORK/$label.log"
+  # the swarm already hard-fails on dropped replies; belt-and-braces,
+  # hold the printed accounting to zero failures too
+  grep -q " failed=0 " "$WORK/$label.log" || { echo "error: $label leg reported failures" >&2; exit 1; }
+}
+
+run_leg text
+run_leg binary --binary
+
+echo "serve-stress OK: $CONNS conns x $REQS reqs, both wire formats, zero dropped replies"
